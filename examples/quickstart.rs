@@ -1,0 +1,64 @@
+//! Quickstart: the CHIME reproduction in ~60 lines.
+//!
+//! 1. Functional path — load the AOT-compiled tiny MLLM (build once with
+//!    `make artifacts`) and serve a real VQA request through PJRT:
+//!    image + prompt -> autoregressive tokens, Python nowhere in sight.
+//! 2. Timing path — simulate the same inference for a paper-scale model
+//!    (FastVLM 0.6B) on the CHIME hardware and print the headline
+//!    numbers next to the Jetson baseline.
+//!
+//! Run: cargo run --release --example quickstart
+
+use chime::baselines::jetson;
+use chime::config::{ChimeConfig, JetsonSpec, MllmConfig};
+use chime::runtime::{FunctionalMllm, Manifest};
+use chime::sim;
+
+fn main() -> anyhow::Result<()> {
+    // ---------- 1. functional inference over the AOT artifacts ----------
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mllm = FunctionalMllm::load(&dir)?;
+        let cfg = &mllm.manifest.config;
+        println!(
+            "functional model: d={} layers={} vocab={} (seed {})",
+            cfg.d_model, cfg.n_layers, cfg.vocab, cfg.seed
+        );
+        let image = mllm.manifest.synthetic_image();
+        let prompt = mllm.manifest.parity.prompt.clone();
+        let gen = mllm.generate(&image, &prompt, 12)?;
+        println!(
+            "generated {:?}\n  encode {:.2} ms, prefill {:.2} ms, decode {:.2} ms",
+            gen.tokens,
+            gen.encode_ns as f64 / 1e6,
+            gen.prefill_ns as f64 / 1e6,
+            gen.decode_ns as f64 / 1e6
+        );
+        mllm.verify_parity()?;
+        println!("parity vs python AOT oracle: OK\n");
+    } else {
+        println!("(artifacts not built — run `make artifacts` for the functional demo)\n");
+    }
+
+    // ---------- 2. paper-scale timing on the CHIME simulator -------------
+    let cfg = ChimeConfig::default();
+    let model = MllmConfig::fastvlm_0_6b();
+    let stats = sim::simulate(&model, &cfg);
+    let jet = jetson::run(&model, &cfg.workload, &JetsonSpec::default());
+    println!(
+        "CHIME  {}: {:.0} tok/s, {:.0} tok/J, {:.2} W (VQA 512x512, 128 in / 488 out)",
+        model.name,
+        stats.tokens_per_s(),
+        stats.tokens_per_j(),
+        stats.avg_power_w()
+    );
+    println!(
+        "Jetson {}: {:.1} tok/s, {:.2} tok/J  ->  speedup {:.1}x, energy {:.0}x",
+        model.name,
+        jet.tokens_per_s(),
+        jet.tokens_per_j(),
+        stats.tokens_per_s() / jet.tokens_per_s(),
+        stats.tokens_per_j() / jet.tokens_per_j()
+    );
+    Ok(())
+}

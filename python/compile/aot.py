@@ -1,0 +1,158 @@
+"""AOT compile path: lower each MLLM entry point to HLO *text* + manifest.
+
+Python runs ONCE here (`make artifacts`); the Rust coordinator then loads
+`artifacts/*.hlo.txt` via the xla crate's PJRT CPU client and never calls
+back into Python.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Weights are baked into the artifacts as constants from a fixed seed, so the
+Rust binary is fully self-contained. `manifest.json` records every entry
+point's signature plus a greedy-decode parity oracle the Rust integration
+tests assert against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `as_hlo_text(True)` = print_large_constants: the default printer elides
+    big literals as `constant({...})`, which the Rust-side text parser
+    would silently read back as zeros — the baked weights MUST be dumped
+    in full for the artifact to be self-contained.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def _sig(specs):
+    out = []
+    for name, s in specs:
+        out.append({
+            "name": name,
+            "dtype": str(np.dtype(s.dtype)),
+            "shape": list(s.shape),
+        })
+    return out
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entry_points(w, cfg):
+    """Entry-point name -> (callable over arrays only, [(arg name, spec)])."""
+    kv_shape = (cfg.n_layers, cfg.n_heads, cfg.max_len, cfg.d_head)
+    img = _spec((cfg.img_size, cfg.img_size, cfg.img_channels))
+    feats = _spec((cfg.n_vis_tokens, cfg.d_model))
+    ids = _spec((cfg.prompt_len,), jnp.int32)
+    scalar_i32 = _spec((), jnp.int32)
+    kv = _spec(kv_shape)
+    return {
+        "vision_encoder": (
+            lambda image: (M.vision_encoder(w, cfg, image),),
+            [("image", img)],
+        ),
+        "connector": (
+            lambda f: (M.connector(w, cfg, f),),
+            [("features", feats)],
+        ),
+        "prefill": (
+            lambda pseudo, text_ids: M.prefill(w, cfg, pseudo, text_ids),
+            [("pseudo_tokens", feats), ("text_ids", ids)],
+        ),
+        "decode_step": (
+            lambda tok, pos, k, v: M.decode_step(w, cfg, tok, pos, k, v),
+            [("token", scalar_i32), ("position", scalar_i32),
+             ("k_cache", kv), ("v_cache", kv)],
+        ),
+        "model": (
+            lambda image, text_ids: (M.model_smoke(w, cfg, image, text_ids),),
+            [("image", img), ("text_ids", ids)],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", help="path of the model smoke artifact "
+                                  "(directory of --out receives the rest)")
+    ap.add_argument("--outdir", help="artifact output directory")
+    ap.add_argument("--parity-steps", type=int, default=16,
+                    help="greedy steps recorded in the parity oracle")
+    args = ap.parse_args()
+    outdir = args.outdir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    os.makedirs(outdir, exist_ok=True)
+
+    cfg = M.DEFAULT_CONFIG
+    w = M.init_weights(cfg)
+    entries = build_entry_points(w, cfg)
+
+    manifest = {
+        "format": "hlo-text-v1",
+        "config": {
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "n_layers": cfg.n_layers,
+            "d_ffn": cfg.d_ffn, "vocab": cfg.vocab,
+            "img_size": cfg.img_size, "img_channels": cfg.img_channels,
+            "patch": cfg.patch, "n_vis_tokens": cfg.n_vis_tokens,
+            "prompt_len": cfg.prompt_len, "max_len": cfg.max_len,
+            "prefill_len": cfg.prefill_len, "seed": cfg.seed,
+        },
+        "entry_points": {},
+    }
+
+    for name, (fn, arg_specs) in entries.items():
+        specs = [s for _, s in arg_specs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        manifest["entry_points"][name] = {
+            "file": fname,
+            "inputs": _sig(arg_specs),
+            "outputs": [{"dtype": str(np.dtype(o.dtype)), "shape": list(o.shape)}
+                        for o in outs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Parity oracle: deterministic image + prompt -> expected greedy tokens.
+    image = M.synthetic_image(cfg)
+    toks = M.generate(w, cfg, image, M.DEFAULT_PROMPT, args.parity_steps)
+    manifest["parity"] = {
+        "image": "synthetic_v1 ((i*W+j)*C+c) % 11 / 11 - 0.5",
+        "prompt": [int(t) for t in M.DEFAULT_PROMPT],
+        "n_steps": args.parity_steps,
+        "expected_tokens": toks,
+    }
+
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}; parity tokens = {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""CHIME fused near-memory kernels (Paper Table I) as Pallas kernels.
+
+All kernels run interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); each is validated against the pure-jnp oracle in ref.py.
+"""
+
+from .attn_stream import fused_attn_stream
+from .ffn_act import fused_ffn_act
+from .norm import fused_norm
+from .qkv_proj import fused_qkv_proj
+from . import ref
+
+__all__ = [
+    "fused_attn_stream",
+    "fused_ffn_act",
+    "fused_norm",
+    "fused_qkv_proj",
+    "ref",
+]

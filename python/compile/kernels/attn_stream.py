@@ -1,0 +1,113 @@
+"""FUSED_ATTN_STREAM Pallas kernel — streaming online-softmax attention.
+
+Paper Table I:
+    for each tile (K_t^T, V_t):
+        PE: GEMM(Q . K_t^T) -> SFPE: OnlineSoftmaxUpdate
+        -> PE: GEMM(Scores_t . V_t) with accumulate -> Out
+
+This is the paper's FlashAttention-style DRAM-NMP kernel: the attention
+score matrix is never materialized; each KV tile streams from the KV-cache
+tiers through the PE (GEMM) -> SFPE (online softmax) -> PE (GEMM-accumulate)
+pipeline, with the running max / running sum / accumulator living in the PU
+shared memory (here: the fori_loop carry in VMEM-resident values).
+
+Masking supports both phases of the two-cut-point dataflow:
+  * kv_len masks the valid prefix of a fixed-capacity KV buffer (decode
+    steps append at position kv_len-1);
+  * causal aligns the query block to the END of the prefix (query row i is
+    global position kv_len - Sq + i), covering prefill and decode with one
+    kernel, exactly as the mapping framework reuses one fused kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# KV tile ("row-buffer burst") size. 64 keeps the tile MXU/lane aligned
+# while staying small enough that padded tiny-model buffers stay exact.
+DEFAULT_KV_TILE = 64
+
+
+def _make_kernel(scale, causal, sq, dh, skv, kv_tile):
+    n_tiles = skv // kv_tile
+
+    def kernel(len_ref, q_ref, k_ref, v_ref, o_ref):
+        kv_len = len_ref[0, 0]
+        q = q_ref[0]  # [Sq, Dh]
+
+        def body(t, carry):
+            m, l, acc = carry
+            kt = k_ref[0, pl.ds(t * kv_tile, kv_tile), :]  # [Tk, Dh]
+            vt = v_ref[0, pl.ds(t * kv_tile, kv_tile), :]
+            # PE: GEMM(Q . K_t^T)
+            s = jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale
+            col = t * kv_tile + jax.lax.broadcasted_iota(jnp.int32, (sq, kv_tile), 1)
+            mask = col < kv_len
+            if causal:
+                row = jax.lax.broadcasted_iota(jnp.int32, (sq, kv_tile), 0) + (kv_len - sq)
+                mask = mask & (col <= row)
+            s = jnp.where(mask, s, NEG_INF)
+            # SFPE: OnlineSoftmaxUpdate
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            # PE: GEMM(Scores_t . V_t) with accumulate
+            acc_new = acc * alpha + jnp.dot(p, vt, preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((sq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((sq, 1), jnp.float32)
+        acc0 = jnp.zeros((sq, dh), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+        o_ref[0] = acc / jnp.maximum(l, 1e-30)
+
+    return kernel
+
+
+def _pad_axis(a, axis, mult):
+    pad = (-a.shape[axis]) % mult
+    if pad:
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        a = jnp.pad(a, widths)
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "kv_tile"))
+def fused_attn_stream(q, k, v, kv_len, *, scale, causal=False,
+                      kv_tile=DEFAULT_KV_TILE):
+    """q: [H, Sq, Dh]; k, v: [H, Skv, Dh]; kv_len: int32 valid KV prefix.
+
+    Returns [H, Sq, Dh]. Rows beyond the causal-valid region are padding
+    garbage only if the caller passes padded queries; real rows always
+    attend to >= 1 column.
+    """
+    h, sq, dh = q.shape
+    skv = k.shape[1]
+    tk = min(kv_tile, skv) if skv % min(kv_tile, skv) == 0 else skv
+    kp = _pad_axis(k, 1, tk)
+    vp = _pad_axis(v, 1, tk)
+    skv_p = kp.shape[1]
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+    kernel = _make_kernel(scale, causal, sq, dh, skv_p, tk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, sq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, skv_p, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, skv_p, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, dh), jnp.float32),
+        interpret=True,
+    )(kv_len_arr, q, kp, vp)
+    return out

@@ -1,0 +1,75 @@
+"""FUSED_FFN_ACT Pallas kernel.
+
+Paper Table I:
+    PE: GEMM(X . W1) -> Add(b1) -> ACT -> PE: GEMM(Y . W2) -> SFPE: Add(b2)
+
+This is the RRAM-NMP kernel: both GEMMs chain inside one kernel body so the
+intermediate activation Y never leaves the logic die (the paper's 1 MB
+PU SRAM; here the VMEM-resident temporary). W1/W2 play the role of weights
+resident in the stacked RRAM arrays — their BlockSpecs pin the full weight
+panel per grid step, and only the activation row tile streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 64
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+}
+
+
+def _make_kernel(activation):
+    act = _ACTS[activation]
+
+    def kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+        # PE: GEMM -> SFPE: Add -> SFPE: ACT, intermediate stays local.
+        y = act(jnp.dot(x_ref[...], w1_ref[...],
+                        preferred_element_type=jnp.float32) + b1_ref[...])
+        # PE: GEMM -> SFPE: Add -> Out (streams back over the cut point).
+        o_ref[...] = jnp.dot(y, w2_ref[...],
+                             preferred_element_type=jnp.float32) + b2_ref[...]
+
+    return kernel
+
+
+def _pad_rows(a, mult):
+    pad = (-a.shape[0]) % mult
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "row_tile"))
+def fused_ffn_act(x, w1, b1, w2, b2, *, activation="gelu",
+                  row_tile=DEFAULT_ROW_TILE):
+    """x: [S, D]; w1: [D, F]; w2: [F, Dout]. Returns [S, Dout]."""
+    s, d = x.shape
+    f = w1.shape[1]
+    dout = w2.shape[1]
+    ts = min(row_tile, s) if s % min(row_tile, s) == 0 else s
+    xp = _pad_rows(x, ts)
+    sp = xp.shape[0]
+    out = pl.pallas_call(
+        _make_kernel(activation),
+        grid=(sp // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ts, dout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, dout), jnp.float32),
+        interpret=True,
+    )(xp, w1, b1, w2, b2)
+    return out[:s]

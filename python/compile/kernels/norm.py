@@ -1,0 +1,53 @@
+"""FUSED_NORM Pallas kernel.
+
+Paper Table I:
+    SFPE: Reduce -> Normalize -> Scale (x g) -> Shift (+ b) -> Out
+
+LayerNorm executed entirely in the SFPE lane (256-way SIMD in the paper's
+DRAM-NMP): one row tile per grid step, reductions along the feature axis,
+no write-back of the centered intermediate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 64
+
+
+def _make_kernel(eps):
+    def kernel(x_ref, g_ref, b_ref, o_ref):
+        x = x_ref[...]
+        mean = jnp.mean(x, axis=-1, keepdims=True)            # SFPE: Reduce
+        var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps)                        # Normalize
+        o_ref[...] = (x - mean) * inv * g_ref[...] + b_ref[...]  # Scale+Shift
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_tile"))
+def fused_norm(x, g, b, *, eps=1e-5, row_tile=DEFAULT_ROW_TILE):
+    """x: [S, D]; g, b: [D]. Returns LayerNorm(x) * g + b."""
+    s, d = x.shape
+    ts = min(row_tile, s) if s % min(row_tile, s) == 0 else s
+    pad = (-s) % ts
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    sp = xp.shape[0]
+    out = pl.pallas_call(
+        _make_kernel(eps),
+        grid=(sp // ts,),
+        in_specs=[
+            pl.BlockSpec((ts, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ts, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, d), jnp.float32),
+        interpret=True,
+    )(xp, g, b)
+    return out[:s]

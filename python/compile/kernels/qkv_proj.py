@@ -1,0 +1,75 @@
+"""FUSED_QKV_PROJ Pallas kernel.
+
+Paper Table I:
+    PE: GEMM(X . Wq) -> SFPE: Add(bq) -> Q
+    PE: GEMM(X . Wk) -> SFPE: Add(bk) -> K^T
+    PE: GEMM(X . Wv) -> SFPE: Add(bv) -> V
+
+Hardware mapping (DESIGN.md §3): the grid walks row tiles of X the way the
+DRAM-NMP row buffers stream activation tiles into the PE MRFs; the three
+projections are fused in one kernel body so Q/K/V never round-trip through
+HBM between the GEMM and the bias add (SFPE stage). Weight blocks stay
+resident per grid step — the analogue of QKV weights pinned in DRAM MATs.
+
+interpret=True throughout: CPU PJRT cannot execute Mosaic custom-calls;
+real-TPU perf is estimated in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile: sized so an X tile + QKV weight panel fit a PU shared-memory
+# sized VMEM budget at the functional model dims; padded shapes below keep
+# the grid exact.
+DEFAULT_ROW_TILE = 64
+
+
+def _kernel(x_ref, wq_ref, bq_ref, wk_ref, bk_ref, wv_ref, bv_ref,
+            q_ref, k_ref, v_ref):
+    x = x_ref[...]
+    # PE GEMM -> SFPE bias-add, fused per projection; f32 accumulate
+    # mirrors the FP16-in / accumulator-out tensor-core design.
+    q_ref[...] = jnp.dot(x, wq_ref[...], preferred_element_type=jnp.float32) + bq_ref[...]
+    k_ref[...] = jnp.dot(x, wk_ref[...], preferred_element_type=jnp.float32) + bk_ref[...]
+    v_ref[...] = jnp.dot(x, wv_ref[...], preferred_element_type=jnp.float32) + bv_ref[...]
+
+
+def _pad_rows(a, mult):
+    s = a.shape[0]
+    pad = (-s) % mult
+    if pad:
+        a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def fused_qkv_proj(x, wq, bq, wk, bk, wv, bv, *, row_tile=DEFAULT_ROW_TILE):
+    """x: [S, D]; wq: [D, Dq]; wk/wv: [D, Dkv]. Returns (q, k, v)."""
+    s, d = x.shape
+    dq = wq.shape[1]
+    dkv = wk.shape[1]
+    ts = min(row_tile, s) if s % min(row_tile, s) == 0 else s
+    xp = _pad_rows(x, ts)
+    sp = xp.shape[0]
+    grid = (sp // ts,)
+    full = lambda cols: pl.BlockSpec((d, cols), lambda i: (0, 0))
+    bias = lambda cols: pl.BlockSpec((cols,), lambda i: (0,))
+    row = lambda cols: pl.BlockSpec((ts, cols), lambda i: (i, 0))
+    q, k, v = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[row(d), full(dq), bias(dq), full(dkv), bias(dkv), full(dkv), bias(dkv)],
+        out_specs=[row(dq), row(dkv), row(dkv)],
+        out_shape=[
+            jax.ShapeDtypeStruct((sp, dq), jnp.float32),
+            jax.ShapeDtypeStruct((sp, dkv), jnp.float32),
+            jax.ShapeDtypeStruct((sp, dkv), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, wq, bq, wk, bk, wv, bv)
+    return q[:s], k[:s], v[:s]

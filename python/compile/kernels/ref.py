@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the CHIME fused near-memory kernels.
+
+These implement Table I of the paper (FUSED_QKV_PROJ, FUSED_ATTN_STREAM,
+FUSED_FFN_ACT, FUSED_NORM) as straightforward dense jnp math. They are the
+CORE correctness signal: every Pallas kernel in this package must match its
+oracle to float32 tolerance (see python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Large-negative used instead of -inf so that online-softmax bookkeeping in
+# the streaming kernel never produces inf - inf = nan. Fully-masked rows are
+# padding and are sliced away by callers.
+NEG_INF = -1e30
+
+
+def qkv_proj_ref(x, wq, bq, wk, bk, wv, bv):
+    """FUSED_QKV_PROJ: three GEMMs + bias adds (PE: GEMM -> SFPE: Add)."""
+    q = x @ wq + bq
+    k = x @ wk + bk
+    v = x @ wv + bv
+    return q, k, v
+
+
+def attn_ref(q, k, v, scale, kv_len, causal=False):
+    """FUSED_ATTN_STREAM oracle: full (non-streamed) masked softmax attention.
+
+    q: [H, Sq, Dh]; k, v: [H, Skv, Dh]; kv_len: valid prefix of the KV
+    buffer (int); causal aligns the query block to the END of the valid
+    prefix (position of q row i is kv_len - Sq + i), which covers both
+    prefill (Sq == kv_len) and single-token decode (Sq == 1).
+    """
+    _, sq, _ = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    col = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+    mask = col < kv_len
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0) + (kv_len - sq)
+        mask = mask & (col <= row)
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def ffn_ref(x, w1, b1, w2, b2, activation="gelu"):
+    """FUSED_FFN_ACT oracle: GEMM -> Add -> ACT -> GEMM -> Add (the fused
+    kernel never materializes the intermediate; the oracle does)."""
+    h = x @ w1 + b1
+    if activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu":
+        h = jax.nn.relu(h)
+    elif activation == "silu":
+        h = jax.nn.silu(h)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return h @ w2 + b2
+
+
+def norm_ref(x, g, b, eps=1e-5):
+    """FUSED_NORM oracle: SFPE Reduce -> Normalize -> Scale -> Shift."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * g + b

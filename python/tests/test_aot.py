@@ -1,0 +1,80 @@
+"""AOT artifact tests: lowering succeeds, HLO text is id-safe, manifest is
+consistent with the model config."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def entries():
+    cfg = M.DEFAULT_CONFIG
+    w = M.init_weights(cfg)
+    return aot.build_entry_points(w, cfg), cfg
+
+
+def test_entry_points_complete(entries):
+    eps, _ = entries
+    assert set(eps) == {"vision_encoder", "connector", "prefill",
+                        "decode_step", "model"}
+
+
+@pytest.mark.parametrize("name", ["connector", "decode_step"])
+def test_lowering_produces_parseable_hlo_text(entries, name):
+    eps, _ = entries
+    fn, arg_specs = eps[name]
+    lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # The whole point of the text interchange: no 64-bit-id proto issues,
+    # and the entry computation returns a tuple (return_tuple=True).
+    assert "tuple" in text or ")" in text
+
+
+def test_manifest_artifacts_on_disk():
+    """If `make artifacts` has run, the manifest must agree with the files
+    and the model config (skipped otherwise — pytest runs pre-artifact in
+    some CI orders)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    with open(mpath) as f:
+        man = json.load(f)
+    assert man["format"] == "hlo-text-v1"
+    cfg = M.DEFAULT_CONFIG
+    assert man["config"]["d_model"] == cfg.d_model
+    assert man["config"]["seed"] == cfg.seed
+    assert man["config"]["prefill_len"] == cfg.prefill_len
+    for name, ep in man["entry_points"].items():
+        path = os.path.join(root, ep["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule")
+    parity = man["parity"]
+    assert len(parity["expected_tokens"]) == parity["n_steps"]
+    assert parity["prompt"] == [int(t) for t in M.DEFAULT_PROMPT]
+
+
+def test_parity_tokens_match_live_model():
+    """Manifest parity oracle must reproduce from source (guards stale
+    artifacts after model edits)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    with open(mpath) as f:
+        man = json.load(f)
+    if man["config"]["seed"] != M.DEFAULT_CONFIG.seed:
+        pytest.skip("artifacts built from a different seed")
+    cfg = M.DEFAULT_CONFIG
+    w = M.init_weights(cfg)
+    n = min(4, man["parity"]["n_steps"])  # a prefix is enough, keeps CI fast
+    toks = M.generate(w, cfg, M.synthetic_image(cfg), M.DEFAULT_PROMPT, n)
+    assert toks == man["parity"]["expected_tokens"][:n]

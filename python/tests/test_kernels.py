@@ -1,0 +1,189 @@
+"""Kernel-vs-oracle correctness: every Table I fused Pallas kernel must
+match its pure-jnp reference (ref.py) to float32 tolerance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (fused_attn_stream, fused_ffn_act, fused_norm,
+                             fused_qkv_proj, ref)
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(key, *shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def assert_close(a, b, atol=ATOL, rtol=RTOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# FUSED_QKV_PROJ
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,dkv", [
+    (1, 8, 8), (7, 16, 8), (32, 64, 64), (33, 64, 16), (128, 32, 24),
+])
+def test_qkv_proj_matches_ref(s, d, dkv):
+    ks = _keys(s * d + dkv, 7)
+    x = _rand(ks[0], s, d)
+    wq, bq = _rand(ks[1], d, d, scale=0.2), _rand(ks[2], d, scale=0.1)
+    wk, bk = _rand(ks[3], d, dkv, scale=0.2), _rand(ks[4], dkv, scale=0.1)
+    wv, bv = _rand(ks[5], d, dkv, scale=0.2), _rand(ks[6], dkv, scale=0.1)
+    got = fused_qkv_proj(x, wq, bq, wk, bk, wv, bv)
+    want = ref.qkv_proj_ref(x, wq, bq, wk, bk, wv, bv)
+    for g, w in zip(got, want):
+        assert_close(g, w)
+
+
+def test_qkv_proj_row_tiling_invariance():
+    """Different row tiles must not change the numbers (pure schedule)."""
+    ks = _keys(0, 7)
+    s, d = 48, 32
+    x = _rand(ks[0], s, d)
+    args = (x, _rand(ks[1], d, d), _rand(ks[2], d), _rand(ks[3], d, d),
+            _rand(ks[4], d), _rand(ks[5], d, d), _rand(ks[6], d))
+    a = fused_qkv_proj(*args, row_tile=16)
+    b = fused_qkv_proj(*args, row_tile=48)
+    for x1, x2 in zip(a, b):
+        assert_close(x1, x2, atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FUSED_ATTN_STREAM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,sq,skv,dh,kv_len,causal", [
+    (1, 1, 8, 8, 8, False),
+    (4, 16, 16, 16, 16, True),          # prefill: square causal
+    (4, 1, 64, 16, 33, False),          # decode: 1 query over prefix
+    (2, 8, 40, 8, 24, True),            # causal block at end of prefix
+    (8, 32, 128, 32, 128, True),
+    (3, 5, 21, 8, 13, False),           # ragged everything
+])
+def test_attn_stream_matches_ref(h, sq, skv, dh, kv_len, causal):
+    ks = _keys(h * skv + sq, 3)
+    q = _rand(ks[0], h, sq, dh)
+    k = _rand(ks[1], h, skv, dh)
+    v = _rand(ks[2], h, skv, dh)
+    scale = 1.0 / np.sqrt(dh)
+    got = fused_attn_stream(q, k, v, kv_len, scale=scale, causal=causal,
+                            kv_tile=8)
+    want = ref.attn_ref(q, k, v, scale, kv_len, causal=causal)
+    assert_close(got, want)
+
+
+def test_attn_stream_tile_invariance():
+    """Streaming tile size is a schedule knob, not a numeric one."""
+    ks = _keys(7, 3)
+    q, k, v = (_rand(ks[0], 2, 8, 16), _rand(ks[1], 2, 64, 16),
+               _rand(ks[2], 2, 64, 16))
+    outs = [np.asarray(fused_attn_stream(q, k, v, 50, scale=0.25,
+                                         causal=True, kv_tile=t))
+            for t in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5, rtol=1e-5)
+
+
+def test_attn_stream_kv_len_masks_tail():
+    """Entries beyond kv_len must not influence the output (KV-cache
+    append-only discipline: garbage past the valid prefix is invisible)."""
+    ks = _keys(11, 3)
+    q = _rand(ks[0], 2, 1, 8)
+    k = _rand(ks[1], 2, 32, 8)
+    v = _rand(ks[2], 2, 32, 8)
+    base = fused_attn_stream(q, k, v, 10, scale=0.5)
+    k_dirty = k.at[:, 10:].set(1e6)
+    v_dirty = v.at[:, 10:].set(-1e6)
+    dirty = fused_attn_stream(q, k_dirty, v_dirty, 10, scale=0.5)
+    assert_close(base, dirty, atol=1e-6, rtol=1e-6)
+
+
+def test_attn_stream_causal_blocks_future():
+    """Row i must ignore columns > i when causal (prefill semantics)."""
+    ks = _keys(13, 3)
+    s = 12
+    q = _rand(ks[0], 1, s, 8)
+    k = _rand(ks[1], 1, s, 8)
+    v = _rand(ks[2], 1, s, 8)
+    full = fused_attn_stream(q, k, v, s, scale=0.3, causal=True)
+    # Recompute each row with only its visible prefix: must agree.
+    for i in (0, 3, s - 1):
+        pre = fused_attn_stream(q[:, i:i + 1], k[:, :i + 1], v[:, :i + 1],
+                                i + 1, scale=0.3, causal=False)
+        assert_close(full[:, i:i + 1], pre, atol=1e-5, rtol=1e-5)
+
+
+def test_attn_stream_uniform_when_keys_equal():
+    """Equal keys -> uniform weights -> output = mean of valid values."""
+    h, skv, dh = 2, 16, 8
+    q = jnp.ones((h, 1, dh))
+    k = jnp.ones((h, skv, dh))
+    v = jnp.arange(h * skv * dh, dtype=jnp.float32).reshape(h, skv, dh)
+    out = fused_attn_stream(q, k, v, 8, scale=1.0)
+    want = v[:, :8].mean(axis=1, keepdims=True)
+    assert_close(out, want)
+
+
+# ---------------------------------------------------------------------------
+# FUSED_FFN_ACT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,f", [(1, 8, 16), (16, 64, 256), (33, 32, 48)])
+@pytest.mark.parametrize("act", ["gelu", "relu", "silu"])
+def test_ffn_act_matches_ref(s, d, f, act):
+    ks = _keys(s + d + f, 5)
+    x = _rand(ks[0], s, d)
+    w1, b1 = _rand(ks[1], d, f, scale=0.2), _rand(ks[2], f, scale=0.1)
+    w2, b2 = _rand(ks[3], f, d, scale=0.2), _rand(ks[4], d, scale=0.1)
+    got = fused_ffn_act(x, w1, b1, w2, b2, activation=act)
+    want = ref.ffn_ref(x, w1, b1, w2, b2, activation=act)
+    assert_close(got, want)
+
+
+def test_ffn_act_rectangular_out():
+    ks = _keys(5, 5)
+    x = _rand(ks[0], 8, 16)
+    w1, b1 = _rand(ks[1], 16, 32), _rand(ks[2], 32)
+    w2, b2 = _rand(ks[3], 32, 24), _rand(ks[4], 24)
+    got = fused_ffn_act(x, w1, b1, w2, b2)
+    assert got.shape == (8, 24)
+    assert_close(got, ref.ffn_ref(x, w1, b1, w2, b2))
+
+
+# ---------------------------------------------------------------------------
+# FUSED_NORM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d", [(1, 8), (16, 64), (33, 32), (128, 16)])
+def test_norm_matches_ref(s, d):
+    ks = _keys(s * d, 3)
+    x = _rand(ks[0], s, d, scale=3.0)
+    g = _rand(ks[1], d) + 1.0
+    b = _rand(ks[2], d)
+    assert_close(fused_norm(x, g, b), ref.norm_ref(x, g, b))
+
+
+def test_norm_output_is_normalized():
+    x = _rand(_keys(1, 1)[0], 8, 64, scale=10.0) + 5.0
+    out = np.asarray(fused_norm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)
+
+
+def test_norm_scale_shift_applied():
+    x = _rand(_keys(2, 1)[0], 4, 16)
+    g = jnp.full(16, 2.0)
+    b = jnp.full(16, 0.5)
+    base = np.asarray(fused_norm(x, jnp.ones(16), jnp.zeros(16)))
+    scaled = np.asarray(fused_norm(x, g, b))
+    np.testing.assert_allclose(scaled, base * 2.0 + 0.5, atol=1e-5)

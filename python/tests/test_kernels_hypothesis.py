@@ -1,0 +1,100 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/parameter space.
+
+Property: for every valid shape/dtype draw, the fused kernel equals the
+pure-jnp oracle (ref.py) — the invariant that makes the streaming/fusion
+schedule a pure performance transform.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (fused_attn_stream, fused_ffn_act, fused_norm,
+                             fused_qkv_proj, ref)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(seed, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 96),
+    d=st.sampled_from([8, 16, 32, 64]),
+    dkv=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+    row_tile=st.sampled_from([8, 16, 32, 64]),
+)
+def test_qkv_proj_property(s, d, dkv, seed, row_tile):
+    x = _arr(seed, s, d)
+    wq, bq = _arr(seed + 1, d, d, scale=0.2), _arr(seed + 2, d, scale=0.1)
+    wk, bk = _arr(seed + 3, d, dkv, scale=0.2), _arr(seed + 4, dkv, scale=0.1)
+    wv, bv = _arr(seed + 5, d, dkv, scale=0.2), _arr(seed + 6, dkv, scale=0.1)
+    got = fused_qkv_proj(x, wq, bq, wk, bk, wv, bv, row_tile=row_tile)
+    want = ref.qkv_proj_ref(x, wq, bq, wk, bk, wv, bv)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=3e-5, rtol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 6),
+    sq=st.integers(1, 24),
+    extra_kv=st.integers(0, 40),
+    dh=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    kv_tile=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attn_stream_property(h, sq, extra_kv, dh, causal, kv_tile, seed):
+    # kv_len >= sq so every (causal) query row sees >= 1 valid column.
+    kv_len = sq + extra_kv
+    skv = kv_len + (seed % 5)  # buffer may exceed the valid prefix
+    q = _arr(seed, h, sq, dh)
+    k = _arr(seed + 1, h, skv, dh)
+    v = _arr(seed + 2, h, skv, dh)
+    scale = 1.0 / np.sqrt(dh)
+    got = fused_attn_stream(q, k, v, kv_len, scale=scale, causal=causal,
+                            kv_tile=kv_tile)
+    want = ref.attn_ref(q, k, v, scale, kv_len, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 64),
+    d=st.sampled_from([8, 16, 64]),
+    f=st.sampled_from([16, 48, 128]),
+    act=st.sampled_from(["gelu", "relu", "silu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_act_property(s, d, f, act, seed):
+    x = _arr(seed, s, d)
+    w1, b1 = _arr(seed + 1, d, f, scale=0.2), _arr(seed + 2, f, scale=0.1)
+    w2, b2 = _arr(seed + 3, f, d, scale=0.2), _arr(seed + 4, d, scale=0.1)
+    got = fused_ffn_act(x, w1, b1, w2, b2, activation=act)
+    want = ref.ffn_ref(x, w1, b1, w2, b2, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 80),
+    d=st.sampled_from([8, 16, 64, 128]),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**16),
+)
+def test_norm_property(s, d, scale, seed):
+    x = _arr(seed, s, d, scale=scale)
+    g = _arr(seed + 1, d) + 1.0
+    b = _arr(seed + 2, d)
+    got = fused_norm(x, g, b)
+    want = ref.norm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,77 @@
+//! Hot-path micro-benchmarks for the §Perf optimization pass (L3):
+//! the simulator's inner loops (plan -> decode kernels -> chiplet costs),
+//! the mapping fusion pass, the serving tick, and the substrates.
+
+use chime::config::{ChimeConfig, MllmConfig};
+use chime::coordinator::pipeline::{schedule_tick, StepWork};
+use chime::mapping::{fusion, Plan};
+use chime::model::backbone;
+use chime::sim::SimEngine;
+use chime::util::bench::Bench;
+use chime::util::{Json, Prng};
+
+fn main() {
+    println!("== CHIME hot-path benches ==\n");
+    let mut b = Bench::new();
+    let cfg = ChimeConfig::default();
+
+    // --- simulator hot loop ------------------------------------------------
+    let model = MllmConfig::mobilevlm_3b();
+    let plan = Plan::build(&model, &cfg.hardware, &cfg.workload);
+    let mut engine = SimEngine::new(&cfg.hardware, &plan);
+    let pos = plan.trace.prefill_len();
+
+    b.bench("decode_ops_generation(3B)", || backbone::decode_ops(&model.llm, pos));
+    let ops = backbone::decode_ops(&model.llm, pos);
+    b.bench("fusion_pass(3B step)", || fusion::fuse_ops(&ops, 1));
+    let kernels = plan.decode_kernels(pos);
+    b.bench("sim_decode_step(3B)", || engine.run_kernels(&kernels));
+    b.bench("plan_decode_kernels(3B)", || plan.decode_kernels(pos));
+    let mut tmpl = plan.decode_template();
+    b.bench("plan_patch_template(3B) [opt]", || {
+        plan.patch_decode_template(&mut tmpl, pos);
+        tmpl.kernels.len()
+    });
+    plan.patch_decode_template(&mut tmpl, pos);
+    b.bench("sim_decode_step_template(3B) [opt]", || engine.run_kernels(&tmpl.kernels));
+
+    // Full-inference simulation (short decode for bounded bench time).
+    let mut short = cfg.clone();
+    short.workload.output_tokens = 32;
+    b.bench("simulate_inference(0.6B, 32 tok)", || {
+        chime::sim::simulate(&MllmConfig::fastvlm_0_6b(), &short)
+    });
+
+    // --- coordinator -------------------------------------------------------
+    let mut prng = Prng::new(1);
+    let jobs: Vec<StepWork> = (0..8)
+        .map(|id| StepWork {
+            id,
+            dram_ns: prng.uniform(1e5, 1e6),
+            rram_ns: prng.uniform(1e5, 1e6),
+        })
+        .collect();
+    b.bench("johnson_schedule_tick(8 jobs)", || schedule_tick(&jobs));
+
+    // --- substrates ---------------------------------------------------------
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest_text {
+        b.bench("json_parse(manifest)", || Json::parse(&text).unwrap());
+    }
+    let blob = {
+        let mut p = Prng::new(7);
+        let arr: Vec<Json> = (0..1000)
+            .map(|i| {
+                Json::obj(vec![
+                    ("id", (i as i64).into()),
+                    ("x", p.f64().into()),
+                    ("name", format!("row-{i}").into()),
+                ])
+            })
+            .collect();
+        Json::Arr(arr)
+    };
+    b.bench("json_serialize(1k rows)", || blob.pretty());
+
+    print!("{}", b.summary());
+}

@@ -1,0 +1,31 @@
+//! Paper-results benchmarks: one bench per evaluation table/figure.
+//!
+//! Each bench times the end-to-end regeneration of an experiment (the
+//! same code `chime results` runs) AND prints the reproduced rows, so
+//! `cargo bench` doubles as the artifact-regeneration harness
+//! (deliverable (d) in DESIGN.md).
+
+use chime::results;
+use chime::util::bench::Bench;
+
+fn main() {
+    println!("== CHIME paper benches (one per table/figure) ==\n");
+    let mut b = Bench::quick();
+
+    // Print each experiment once (the reproduced numbers), then time it.
+    for (id, runner) in [
+        ("fig1_breakdown", results::fig1::run as fn() -> results::Experiment),
+        ("fig6_speedup_energy", results::fig6::run),
+        ("table5_platforms", results::table5::run),
+        ("fig7_area_power", results::fig7::run),
+        ("fig8_seqlen", results::fig8::run),
+        ("fig9_memcfg", results::fig9::run),
+    ] {
+        let e = runner();
+        println!("{}", e.text);
+        b.bench(id, runner);
+        println!();
+    }
+
+    print!("{}", b.summary());
+}

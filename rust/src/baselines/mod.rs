@@ -1,0 +1,9 @@
+//! Baseline platform models for the paper's comparisons: Jetson Orin NX
+//! (GPU), FACIL (near-bank DRAM PIM), and the M3D DRAM-only CHIME
+//! ablation (implemented inside the simulator via
+//! `sim::simulate_dram_only` / `mapping::Plan::build_dram_only`).
+
+pub mod facil;
+pub mod jetson;
+
+pub use jetson::BaselineStats;

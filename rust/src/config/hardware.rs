@@ -1,0 +1,546 @@
+//! Hardware configuration: the paper's Tables III & IV (M3D DRAM / M3D
+//! RRAM device, system, and NMP parameters), the UCIe link, plus the
+//! baseline platform envelopes (Jetson Orin NX, FACIL) used by Table V.
+//!
+//! Every number that comes straight from the paper is marked `// paper:`.
+//! A small set of *calibration* factors (utilization, per-layer sync
+//! overhead) is needed because the paper publishes device constants and
+//! endpoint results but not its simulator internals; these are documented
+//! inline and recorded in EXPERIMENTS.md (DESIGN.md §6).
+
+/// M3D DRAM device + system parameters (paper Table IV).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    /// paper: 200 vertically stacked layers.
+    pub layers: usize,
+    /// paper: 5 in-memory tiers (L1..L5 / Tier-0..Tier-4).
+    pub tiers: usize,
+    /// paper: read/write latency = (3 + 0.8 * L) ns for layer L.
+    pub latency_base_ns: f64,
+    pub latency_per_layer_ns: f64,
+    /// paper: 0.429 pJ/bit read/write energy.
+    pub energy_pj_per_bit: f64,
+    /// paper: 32 Kb row buffer per bank.
+    pub row_buffer_bits: usize,
+    /// paper: 1k x 1k MATs, 200 MATs/bank -> 200 Mb bank.
+    pub mat_bits: usize,
+    pub mats_per_bank: usize,
+    /// paper: 16 channels/chip, 16 banks/channel, 64b data I/O per channel.
+    pub channels: usize,
+    pub banks_per_channel: usize,
+    pub channel_io_bits: usize,
+    /// paper: 1.25 GB capacity per tier (5 tiers -> 6.25 GB chip).
+    pub tier_capacity_bytes: u64,
+    /// paper: 121 mm^2 chip area.
+    pub chip_area_mm2: f64,
+    /// CALIBRATION: monolithic inter-tier vias expose far more internal
+    /// bandwidth to the on-logic-die NMP than the 64b/channel external
+    /// interface — the central claim of M3D DRAM (paper §II-C). This
+    /// multiplier scales the external channel I/O to the internal MIV
+    /// streaming bandwidth seen by the PU cluster.
+    pub miv_internal_bw_mult: f64,
+    /// CALIBRATION: sustained fraction of peak streaming bandwidth for
+    /// GEMV-style weight/KV streams (row activation gaps, bank conflicts).
+    pub stream_utilization: f64,
+    /// CALIBRATION: per-bit streaming energy derate vs the Table IV
+    /// random-access pJ/bit — one row activation amortizes over the full
+    /// 32 Kb row buffer under sequential weight/KV streaming. Needed to
+    /// reconcile the published pJ/bit with the paper's ~2 W endpoint.
+    pub array_energy_scale: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            layers: 200,
+            tiers: 5,
+            latency_base_ns: 3.0,
+            latency_per_layer_ns: 0.8,
+            energy_pj_per_bit: 0.429,
+            row_buffer_bits: 32 * 1024,
+            mat_bits: 1024 * 1024,
+            mats_per_bank: 200,
+            channels: 16,
+            banks_per_channel: 16,
+            channel_io_bits: 64,
+            tier_capacity_bytes: 1_250_000_000,
+            chip_area_mm2: 121.0,
+            miv_internal_bw_mult: 33.5,
+            stream_utilization: 0.88,
+            array_energy_scale: 0.25,
+        }
+    }
+}
+
+impl DramConfig {
+    /// Layers per tier (tier 0 = bottom = fastest).
+    pub fn layers_per_tier(&self) -> usize {
+        self.layers / self.tiers
+    }
+
+    /// Representative access latency of a tier: mid-layer of the tier's
+    /// layer range under the paper's (3 + 0.8 L) ns staircase model.
+    pub fn tier_latency_ns(&self, tier: usize) -> f64 {
+        let lpt = self.layers_per_tier();
+        let mid_layer = tier * lpt + lpt / 2;
+        self.latency_base_ns + self.latency_per_layer_ns * mid_layer as f64
+    }
+
+    /// External channel-I/O bandwidth (GB/s): channels * 64b * 1 GHz.
+    pub fn external_bw_gbps(&self, freq_ghz: f64) -> f64 {
+        self.channels as f64 * self.channel_io_bits as f64 / 8.0 * freq_ghz
+    }
+
+    /// Internal MIV streaming bandwidth to the NMP (GB/s), before the
+    /// tier-latency occupancy penalty.
+    pub fn internal_bw_gbps(&self, freq_ghz: f64) -> f64 {
+        self.external_bw_gbps(freq_ghz) * self.miv_internal_bw_mult * self.stream_utilization
+    }
+
+    /// Effective streaming bandwidth out of a given tier (GB/s): row-buffer
+    /// refills from slower (higher) tiers eat into stream occupancy.
+    /// time(N bytes) = N / BW_int + rows(N) * t_access(tier) / banks —
+    /// folded here into an equivalent bandwidth.
+    pub fn tier_stream_bw_gbps(&self, tier: usize, freq_ghz: f64) -> f64 {
+        let bw = self.internal_bw_gbps(freq_ghz); // GB/s == bytes/ns
+        let row_bytes = self.row_buffer_bits as f64 / 8.0;
+        // Row activations overlap across the banks of a channel but the
+        // channels' streams serialize at the PU ingest ports, so the
+        // activation penalty amortizes over channels, not channels*banks.
+        let chans = self.channels as f64;
+        let act_ns_per_byte = self.tier_latency_ns(tier) / (row_bytes * chans);
+        1.0 / (1.0 / bw + act_ns_per_byte)
+    }
+
+    pub fn chip_capacity_bytes(&self) -> u64 {
+        self.tier_capacity_bytes * self.tiers as u64
+    }
+}
+
+/// M3D RRAM device + system parameters (paper Table III).
+#[derive(Debug, Clone)]
+pub struct RramConfig {
+    /// paper: 8 stacked RRAM layers above the logic die.
+    pub layers: usize,
+    /// paper: read 2.3 ns, write 11 ns.
+    pub read_latency_ns: f64,
+    pub write_latency_ns: f64,
+    /// paper: read 0.4 pJ/bit, write 1.33 pJ/bit.
+    pub read_energy_pj_per_bit: f64,
+    pub write_energy_pj_per_bit: f64,
+    /// paper: 1k x 1k units, 256 units/tile, 64 H-trees/tile.
+    pub unit_bits: usize,
+    pub units_per_tile: usize,
+    pub htrees_per_tile: usize,
+    /// paper: 8 controllers, 16 channels/controller, 4 tiles/channel.
+    pub controllers: usize,
+    pub channels_per_controller: usize,
+    pub tiles_per_channel: usize,
+    /// Table III says "Chip Capacity 2 GB", but its own organization row
+    /// (8 controllers x 16 channels x 4 tiles x 256 units x 1 Mb
+    /// = 2 GB) describes ONE layer; the narrative requires MobileVLM-3B's
+    /// 3.4 GB of FFN weights resident in RRAM, so we read the capacity as
+    /// per-layer: 8 layers x 2 GB = 16 GB (see DESIGN.md §2).
+    pub chip_capacity_bytes: u64,
+    pub internal_parallelism: usize,
+    /// paper: peak interface BW = 512 GB/s (8 controllers x 512 bit x 1 GHz).
+    pub interface_bits_per_controller: usize,
+    /// Typical 1T1R endurance budget (writes/cell). The paper manages RRAM
+    /// with a write-once KV offload policy precisely because endurance is
+    /// limited; 1e6 is the consensus figure for HfO2 1T1R at this node.
+    pub endurance_writes: u64,
+    /// CALIBRATION: near-layer parallel reads (each pair of PUs owns one
+    /// RRAM layer; weights stream to the PE groups without serializing on
+    /// one shared bus) scale the single-interface peak.
+    pub near_layer_bw_mult: f64,
+    /// CALIBRATION: sustained fraction of peak for resident-weight streams.
+    pub stream_utilization: f64,
+    /// CALIBRATION: per-bit streaming energy derate (synchronous wide
+    /// H-tree reads amortize peripheral energy; see DramConfig).
+    pub array_energy_scale: f64,
+}
+
+impl Default for RramConfig {
+    fn default() -> Self {
+        RramConfig {
+            layers: 8,
+            read_latency_ns: 2.3,
+            write_latency_ns: 11.0,
+            read_energy_pj_per_bit: 0.4,
+            write_energy_pj_per_bit: 1.33,
+            unit_bits: 1024 * 1024,
+            units_per_tile: 256,
+            htrees_per_tile: 64,
+            controllers: 8,
+            channels_per_controller: 16,
+            tiles_per_channel: 4,
+            chip_capacity_bytes: 16_000_000_000,
+            internal_parallelism: 128,
+            interface_bits_per_controller: 512,
+            endurance_writes: 1_000_000,
+            near_layer_bw_mult: 5.5,
+            stream_utilization: 0.85,
+            array_energy_scale: 0.25,
+        }
+    }
+}
+
+impl RramConfig {
+    /// Interface peak bandwidth (GB/s) = controllers * 512b * freq.
+    pub fn interface_bw_gbps(&self, freq_ghz: f64) -> f64 {
+        self.controllers as f64 * self.interface_bits_per_controller as f64 / 8.0 * freq_ghz
+    }
+
+    /// Effective read-stream bandwidth to the PE groups (GB/s).
+    pub fn read_stream_bw_gbps(&self, freq_ghz: f64) -> f64 {
+        self.interface_bw_gbps(freq_ghz) * self.near_layer_bw_mult * self.stream_utilization
+    }
+
+    /// Effective write bandwidth (GB/s): writes are slower (11 ns vs 2.3 ns)
+    /// and not parallelized across layers for a single stream.
+    pub fn write_stream_bw_gbps(&self, freq_ghz: f64) -> f64 {
+        self.interface_bw_gbps(freq_ghz) * self.stream_utilization
+            * (self.read_latency_ns / self.write_latency_ns)
+    }
+}
+
+/// Near-memory-processor parameters (paper Tables III & IV, NMP sections).
+#[derive(Debug, Clone)]
+pub struct NmpConfig {
+    /// paper: 16 PUs on each logic die.
+    pub pus: usize,
+    /// paper: 16 PEs per PU.
+    pub pes_per_pu: usize,
+    /// paper: tensor core 2x2 MACs (DRAM NMP) / 4x4 MACs (RRAM NMP).
+    pub mac_rows: usize,
+    pub mac_cols: usize,
+    /// paper: SFPE 256-way SIMD (DRAM NMP); RRAM NMP has none.
+    pub sfpe_simd_lanes: usize,
+    /// paper: double-buffered SRAM per PE (1 KB DRAM / 8 KB RRAM).
+    pub pe_sram_bytes: usize,
+    /// paper: PU shared memory (20 KB DRAM / 80 KB RRAM).
+    pub pu_shared_bytes: usize,
+    /// paper: peak performance (2 TFLOPS DRAM NMP / 32 TFLOPS RRAM NMP).
+    pub peak_tflops: f64,
+    /// paper: peak power (0.671 W DRAM NMP / 2.584 W RRAM NMP).
+    pub peak_power_w: f64,
+    /// paper: die area (121 mm^2 DRAM stack footprint / 33.6 mm^2 RRAM).
+    pub die_area_mm2: f64,
+    /// paper: 1 GHz, 7 nm logic, FP16.
+    pub freq_ghz: f64,
+    /// CALIBRATION: fixed per-fused-kernel dispatch cost on the NMP
+    /// (controller sequencing + SFPE/PE pipeline fill). The paper's
+    /// 233–533 TPS envelope implies a per-step floor beyond pure
+    /// streaming; see DESIGN.md §6.
+    pub kernel_dispatch_ns: f64,
+    /// CALIBRATION: idle fraction of peak power burned while the chiplet
+    /// waits on its partner (leakage + clocking).
+    pub idle_power_frac: f64,
+}
+
+impl NmpConfig {
+    /// DRAM-chiplet NMP (paper Table IV).
+    pub fn dram_default() -> Self {
+        NmpConfig {
+            pus: 16,
+            pes_per_pu: 16,
+            mac_rows: 2,
+            mac_cols: 2,
+            sfpe_simd_lanes: 256,
+            pe_sram_bytes: 1024,
+            pu_shared_bytes: 20 * 1024,
+            peak_tflops: 2.0,
+            peak_power_w: 0.671,
+            die_area_mm2: 28.71,
+            freq_ghz: 1.0,
+            kernel_dispatch_ns: 9_000.0,
+            idle_power_frac: 0.2,
+        }
+    }
+
+    /// RRAM-chiplet NMP (paper Table III).
+    pub fn rram_default() -> Self {
+        NmpConfig {
+            pus: 16,
+            pes_per_pu: 16,
+            mac_rows: 4,
+            mac_cols: 4,
+            sfpe_simd_lanes: 0,
+            pe_sram_bytes: 8 * 1024,
+            pu_shared_bytes: 80 * 1024,
+            peak_tflops: 32.0,
+            peak_power_w: 2.584,
+            die_area_mm2: 24.85,
+            freq_ghz: 1.0,
+            kernel_dispatch_ns: 9_000.0,
+            idle_power_frac: 0.2,
+        }
+    }
+
+    /// Peak MAC throughput in FLOP/ns (2 flops per MAC).
+    pub fn peak_flops_per_ns(&self) -> f64 {
+        self.peak_tflops * 1e3
+    }
+
+    /// SFPE elementwise throughput in elements/ns (all PUs).
+    pub fn sfpe_elems_per_ns(&self) -> f64 {
+        if self.sfpe_simd_lanes == 0 {
+            // RRAM NMP routes elementwise tails through PE accumulators.
+            (self.pus * self.pes_per_pu) as f64 * self.freq_ghz
+        } else {
+            (self.sfpe_simd_lanes * self.pus) as f64 * self.freq_ghz
+        }
+    }
+}
+
+/// UCIe 2.5D link parameters (paper §III-A and the ISSCC'25 reference:
+/// 32 GB/s per module, 0.6 pJ/bit; the package integrates several modules).
+#[derive(Debug, Clone)]
+pub struct UcieConfig {
+    /// Aggregate link bandwidth between the two chiplets (GB/s).
+    pub bandwidth_gbps: f64,
+    /// paper ref [23]: 0.6 pJ/bit.
+    pub energy_pj_per_bit: f64,
+    /// Fixed DMA transaction latency (ns) per transfer.
+    pub dma_latency_ns: f64,
+    /// paper Fig 7: "the UCIe link draws about 1 W" while active.
+    pub active_power_w: f64,
+}
+
+impl Default for UcieConfig {
+    fn default() -> Self {
+        UcieConfig {
+            bandwidth_gbps: 128.0,
+            energy_pj_per_bit: 0.6,
+            dma_latency_ns: 80.0,
+            active_power_w: 1.0,
+        }
+    }
+}
+
+/// Logic-die area breakdown fractions (paper Fig 7(a)/(b)).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub dram_peripheral_frac: f64, // paper: 51.5%
+    pub dram_ucie_frac: f64,       // paper: 22.3%
+    pub dram_pu_frac: f64,         // paper: 26.2%
+    pub rram_pu_frac: f64,         // paper: 34.0%
+    pub dram_logic_die_mm2: f64,   // paper: 28.71 mm^2
+    pub rram_logic_die_mm2: f64,   // paper: 24.85 mm^2
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            dram_peripheral_frac: 0.515,
+            dram_ucie_frac: 0.223,
+            dram_pu_frac: 0.262,
+            rram_pu_frac: 0.340,
+            dram_logic_die_mm2: 28.71,
+            rram_logic_die_mm2: 24.85,
+        }
+    }
+}
+
+/// Full CHIME platform description.
+#[derive(Debug, Clone)]
+pub struct ChimeHardware {
+    pub dram: DramConfig,
+    pub rram: RramConfig,
+    pub dram_nmp: NmpConfig,
+    pub rram_nmp: NmpConfig,
+    pub ucie: UcieConfig,
+    pub area: AreaModel,
+}
+
+impl Default for ChimeHardware {
+    fn default() -> Self {
+        ChimeHardware {
+            dram: DramConfig::default(),
+            rram: RramConfig::default(),
+            dram_nmp: NmpConfig::dram_default(),
+            rram_nmp: NmpConfig::rram_default(),
+            ucie: UcieConfig::default(),
+            area: AreaModel::default(),
+        }
+    }
+}
+
+impl ChimeHardware {
+    /// Total logic-die area (Table V: 28.71 & 24.85 mm^2).
+    pub fn total_die_area_mm2(&self) -> f64 {
+        self.area.dram_logic_die_mm2 + self.area.rram_logic_die_mm2
+    }
+
+    /// DRAM-only ablation platform (Fig 9): the RRAM chiplet is removed and
+    /// FFN weights live in (and stream from) M3D DRAM, contending with
+    /// attention for the same internal bandwidth. KV tiering still applies.
+    /// Same-silicon-budget comparison: the single logic die re-provisions
+    /// the combined PU budget (it must run the FFN too), so its NMP power
+    /// envelope is the sum of both chiplets' NMPs.
+    pub fn dram_only(&self) -> ChimeHardware {
+        let mut hw = self.clone();
+        // No second chiplet: no UCIe hop, but FFN streams share DRAM.
+        hw.ucie.bandwidth_gbps = f64::INFINITY;
+        hw.ucie.active_power_w = 0.0;
+        hw.ucie.dma_latency_ns = 0.0;
+        hw.dram_nmp.peak_power_w = self.dram_nmp.peak_power_w + self.rram_nmp.peak_power_w;
+        hw
+    }
+}
+
+/// Jetson Orin NX envelope (paper Table V + [31]); see
+/// `baselines::jetson` for the performance model that consumes this.
+#[derive(Debug, Clone)]
+pub struct JetsonSpec {
+    /// LPDDR5 bandwidth: 102.4 GB/s.
+    pub dram_bw_gbps: f64,
+    /// Dense FP16 peak (GPU, sparsity off) ~ 50 TOPS -> ~25 TFLOPS FP16;
+    /// usable dense FP16 on Ampere mobile ~ 17 TFLOPS.
+    pub peak_fp16_tflops: f64,
+    /// paper Table V: power 10-40 W envelope; measured MLLM inference draw.
+    pub power_low_w: f64,
+    pub power_high_w: f64,
+    /// paper Table V: ~200 mm^2 die at 8 nm, <= 0.92 GHz.
+    pub die_area_mm2: f64,
+    pub freq_ghz: f64,
+    /// CALIBRATION: sustained fraction of DRAM bandwidth for small-batch
+    /// decode (GEMV-heavy, launch-gapped).
+    pub bw_utilization: f64,
+    /// CALIBRATION: sustained fraction of peak FLOPs (prefill/encoder).
+    pub flops_utilization: f64,
+    /// CALIBRATION: fixed per-decode-step overhead (kernel launches,
+    /// framework scheduling) that flattens Jetson TPS across model sizes
+    /// (paper Fig 6(b): 7–11 TPS on 0.5B..2.7B alike).
+    pub step_overhead_ms: f64,
+}
+
+impl Default for JetsonSpec {
+    fn default() -> Self {
+        JetsonSpec {
+            dram_bw_gbps: 102.4,
+            peak_fp16_tflops: 17.0,
+            power_low_w: 10.0,
+            power_high_w: 40.0,
+            die_area_mm2: 200.0,
+            freq_ghz: 0.92,
+            bw_utilization: 0.85,
+            flops_utilization: 0.35,
+            step_overhead_ms: 75.0,
+        }
+    }
+}
+
+/// FACIL (HPCA'25) near-bank DRAM PIM envelope (paper Table V).
+#[derive(Debug, Clone)]
+pub struct FacilSpec {
+    /// Near-bank LPDDR PIM: internal bandwidth available to bank-level MACs.
+    pub internal_bw_gbps: f64,
+    /// SoC side handles non-GEMV kernels over the external interface.
+    pub external_bw_gbps: f64,
+    /// paper Table V envelope: 5.7-38.5 W, <= 3.2 GHz, ~200 mm^2, 15 nm.
+    pub power_low_w: f64,
+    pub power_high_w: f64,
+    pub die_area_mm2: f64,
+    pub freq_ghz: f64,
+    /// CALIBRATION: fraction of decode bytes eligible for in-bank execution
+    /// (FACIL accelerates FC/GEMV; attention softmax & co stay on the SoC).
+    pub pim_coverage: f64,
+    /// CALIBRATION: per-step overhead for SoC<->PIM orchestration.
+    pub step_overhead_ms: f64,
+    /// CALIBRATION: sustained utilization of internal bandwidth.
+    pub bw_utilization: f64,
+}
+
+impl Default for FacilSpec {
+    fn default() -> Self {
+        FacilSpec {
+            internal_bw_gbps: 512.0,
+            external_bw_gbps: 68.0,
+            power_low_w: 5.7,
+            power_high_w: 38.5,
+            die_area_mm2: 200.0,
+            freq_ghz: 3.2,
+            pim_coverage: 0.6,
+            step_overhead_ms: 40.0,
+            bw_utilization: 0.55,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_tier_latency_staircase() {
+        let d = DramConfig::default();
+        // Tier 0 mid-layer = 20 -> 3 + 0.8*20 = 19 ns.
+        assert!((d.tier_latency_ns(0) - 19.0).abs() < 1e-9);
+        // Tier 4 mid-layer = 180 -> 147 ns.
+        assert!((d.tier_latency_ns(4) - 147.0).abs() < 1e-9);
+        // Monotone in tier.
+        for t in 1..d.tiers {
+            assert!(d.tier_latency_ns(t) > d.tier_latency_ns(t - 1));
+        }
+    }
+
+    #[test]
+    fn dram_bandwidths_ordered() {
+        let d = DramConfig::default();
+        let ext = d.external_bw_gbps(1.0);
+        assert!((ext - 128.0).abs() < 1e-9); // 16 ch x 8 B x 1 GHz
+        let int = d.internal_bw_gbps(1.0);
+        assert!(int > ext, "MIV internal must exceed external I/O");
+        // Faster tiers stream faster.
+        assert!(d.tier_stream_bw_gbps(0, 1.0) > d.tier_stream_bw_gbps(4, 1.0));
+        // All tiers stay below the pure internal bandwidth.
+        for t in 0..d.tiers {
+            assert!(d.tier_stream_bw_gbps(t, 1.0) <= int);
+        }
+    }
+
+    #[test]
+    fn rram_interface_bw_matches_paper() {
+        let r = RramConfig::default();
+        // paper: 8 controllers x 512 bit x 1 GHz = 512 GB/s.
+        assert!((r.interface_bw_gbps(1.0) - 512.0).abs() < 1e-9);
+        assert!(r.read_stream_bw_gbps(1.0) > r.interface_bw_gbps(1.0));
+        assert!(r.write_stream_bw_gbps(1.0) < r.read_stream_bw_gbps(1.0));
+    }
+
+    #[test]
+    fn nmp_defaults_match_tables() {
+        let d = NmpConfig::dram_default();
+        assert_eq!(d.peak_tflops, 2.0);
+        assert_eq!(d.peak_power_w, 0.671);
+        assert_eq!((d.mac_rows, d.mac_cols), (2, 2));
+        let r = NmpConfig::rram_default();
+        assert_eq!(r.peak_tflops, 32.0);
+        assert_eq!(r.peak_power_w, 2.584);
+        assert_eq!((r.mac_rows, r.mac_cols), (4, 4));
+        assert_eq!(r.sfpe_simd_lanes, 0);
+        assert!(r.sfpe_elems_per_ns() > 0.0);
+    }
+
+    #[test]
+    fn area_fractions_sum_to_one() {
+        let a = AreaModel::default();
+        let total = a.dram_peripheral_frac + a.dram_ucie_frac + a.dram_pu_frac;
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_only_removes_link() {
+        let hw = ChimeHardware::default();
+        let d = hw.dram_only();
+        assert_eq!(d.ucie.active_power_w, 0.0);
+        assert!(d.ucie.bandwidth_gbps.is_infinite());
+    }
+
+    #[test]
+    fn total_die_area_matches_table_v() {
+        let hw = ChimeHardware::default();
+        assert!((hw.total_die_area_mm2() - 53.56).abs() < 0.01);
+    }
+}

@@ -1,0 +1,121 @@
+//! Configuration system: hardware (Tables III/IV), model zoo (Table II),
+//! and workload defaults, with JSON file overrides for experiments.
+
+pub mod hardware;
+pub mod models;
+
+pub use hardware::{
+    AreaModel, ChimeHardware, DramConfig, FacilSpec, JetsonSpec, NmpConfig, RramConfig,
+    UcieConfig,
+};
+pub use models::{Connector, ConnectorKind, LlmConfig, MllmConfig, VisionEncoder, VisionKind};
+
+use crate::util::Json;
+
+/// Default VQA workload (paper §IV-A1): 512x512 image, 128 text tokens in,
+/// 488 output tokens.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub image_size: usize,
+    pub text_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { image_size: 512, text_tokens: 128, output_tokens: 488 }
+    }
+}
+
+/// Root configuration for a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct ChimeConfig {
+    pub hardware: ChimeHardware,
+    pub workload: WorkloadConfig,
+}
+
+impl ChimeConfig {
+    /// Apply a JSON override file. Only recognized scalar knobs are applied;
+    /// unknown keys raise an error so typos do not silently no-op.
+    pub fn apply_overrides(&mut self, json: &Json) -> Result<(), String> {
+        let obj = json.as_obj().ok_or("config overrides must be a JSON object")?;
+        for (k, v) in obj {
+            let num = || {
+                v.as_f64()
+                    .ok_or_else(|| format!("override {k:?} must be a number"))
+            };
+            match k.as_str() {
+                "dram.miv_internal_bw_mult" => self.hardware.dram.miv_internal_bw_mult = num()?,
+                "dram.stream_utilization" => self.hardware.dram.stream_utilization = num()?,
+                "rram.near_layer_bw_mult" => self.hardware.rram.near_layer_bw_mult = num()?,
+                "rram.stream_utilization" => self.hardware.rram.stream_utilization = num()?,
+                "rram.endurance_writes" => {
+                    self.hardware.rram.endurance_writes = num()? as u64
+                }
+                "ucie.bandwidth_gbps" => self.hardware.ucie.bandwidth_gbps = num()?,
+                "ucie.active_power_w" => self.hardware.ucie.active_power_w = num()?,
+                "nmp.kernel_dispatch_ns" => {
+                    let x = num()?;
+                    self.hardware.dram_nmp.kernel_dispatch_ns = x;
+                    self.hardware.rram_nmp.kernel_dispatch_ns = x;
+                }
+                "workload.image_size" => self.workload.image_size = num()? as usize,
+                "workload.text_tokens" => self.workload.text_tokens = num()? as usize,
+                "workload.output_tokens" => self.workload.output_tokens = num()? as usize,
+                other => return Err(format!("unknown config override {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON file path.
+    pub fn with_override_file(mut self, path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config {path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| e.to_string())?;
+        self.apply_overrides(&json)?;
+        Ok(self)
+    }
+
+    /// Serialize the effective calibration knobs (for EXPERIMENTS.md).
+    pub fn calibration_json(&self) -> Json {
+        Json::obj(vec![
+            ("dram.miv_internal_bw_mult", self.hardware.dram.miv_internal_bw_mult.into()),
+            ("dram.stream_utilization", self.hardware.dram.stream_utilization.into()),
+            ("rram.near_layer_bw_mult", self.hardware.rram.near_layer_bw_mult.into()),
+            ("rram.stream_utilization", self.hardware.rram.stream_utilization.into()),
+            ("ucie.bandwidth_gbps", self.hardware.ucie.bandwidth_gbps.into()),
+            ("nmp.kernel_dispatch_ns", self.hardware.dram_nmp.kernel_dispatch_ns.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_workload_matches_paper() {
+        let w = WorkloadConfig::default();
+        assert_eq!((w.image_size, w.text_tokens, w.output_tokens), (512, 128, 488));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = ChimeConfig::default();
+        let j = Json::parse(
+            r#"{"dram.miv_internal_bw_mult": 8.0, "workload.output_tokens": 64}"#,
+        )
+        .unwrap();
+        c.apply_overrides(&j).unwrap();
+        assert_eq!(c.hardware.dram.miv_internal_bw_mult, 8.0);
+        assert_eq!(c.workload.output_tokens, 64);
+    }
+
+    #[test]
+    fn unknown_override_is_error() {
+        let mut c = ChimeConfig::default();
+        let j = Json::parse(r#"{"dram.typo": 1}"#).unwrap();
+        assert!(c.apply_overrides(&j).is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! Model zoo: the paper's Table II MLLM configurations plus the tiny
+//! functional-path model that matches `artifacts/manifest.json`.
+//!
+//! Timing/energy depend only on tensor shapes and byte counts, so each
+//! model is described by its public architecture dimensions (FP16 weights,
+//! per the paper's "FP16 format" NMP configuration).
+
+/// Vision-encoder family (paper Fig 5(a)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VisionKind {
+    /// ViT without downsampling: N patch tokens out (MobileVLM; CLIP-L/14).
+    Vit,
+    /// Pyramid ViT, four-stage downsampling.
+    Pvt,
+    /// FastViT-HD: five-stage downsampling, M << N tokens out (FastVLM).
+    FastVitHd,
+}
+
+/// Vision-encoder cost model: token count + aggregate compute/weights.
+#[derive(Debug, Clone)]
+pub struct VisionEncoder {
+    pub kind: VisionKind,
+    /// Output visual tokens fed to the connector.
+    pub out_tokens: usize,
+    /// Hidden width of the final stage (for activation sizing).
+    pub d_out: usize,
+    /// Total encoder parameters (bytes = params * 2, FP16).
+    pub params: u64,
+    /// Forward GFLOPs at the paper's 512x512 (or native) input.
+    pub gflops: f64,
+}
+
+impl VisionEncoder {
+    pub fn weight_bytes(&self) -> u64 {
+        self.params * 2
+    }
+}
+
+/// Connector family (paper Fig 5(a)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnectorKind {
+    /// Lightweight MLP projector (FastVLM).
+    Mlp,
+    /// Lightweight Downsample Projector (MobileVLM): conv + 2x2 downsample.
+    Ldp,
+    /// Cross-attention connector (visual KV, text Q).
+    CrossAttn,
+}
+
+#[derive(Debug, Clone)]
+pub struct Connector {
+    pub kind: ConnectorKind,
+    /// Token count after the connector (LDP downsamples 4x).
+    pub out_tokens: usize,
+    pub params: u64,
+    pub gflops: f64,
+}
+
+impl Connector {
+    pub fn weight_bytes(&self) -> u64 {
+        self.params * 2
+    }
+}
+
+/// LLM backbone architecture (decoder-only transformer).
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// GQA: number of KV heads (== n_heads for MHA).
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    /// 2 for GELU MLP (up+down), 3 for SwiGLU (gate+up+down).
+    pub ffn_matrices: usize,
+    pub vocab: usize,
+    /// Tied input/output embeddings (Qwen2-0.5B/1.5B tie; LLaMA does not).
+    pub tied_embeddings: bool,
+    /// FP16 = 2 bytes.
+    pub bytes_per_param: usize,
+}
+
+impl LlmConfig {
+    pub fn d_q(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.d_head
+    }
+
+    /// QKV + output-projection weight bytes for one layer.
+    pub fn attn_weight_bytes_per_layer(&self) -> u64 {
+        let q = self.d_model * self.d_q();
+        let k = self.d_model * self.d_kv();
+        let v = self.d_model * self.d_kv();
+        let o = self.d_q() * self.d_model;
+        ((q + k + v + o) * self.bytes_per_param) as u64
+    }
+
+    /// FFN weight bytes for one layer.
+    pub fn ffn_weight_bytes_per_layer(&self) -> u64 {
+        (self.ffn_matrices * self.d_model * self.d_ffn * self.bytes_per_param) as u64
+    }
+
+    /// LayerNorm/RMSNorm parameter bytes for one layer (two norms).
+    pub fn norm_weight_bytes_per_layer(&self) -> u64 {
+        (2 * self.d_model * self.bytes_per_param) as u64
+    }
+
+    /// Unembedding (lm_head) weight bytes — streamed every decode step.
+    pub fn lm_head_bytes(&self) -> u64 {
+        (self.vocab * self.d_model * self.bytes_per_param) as u64
+    }
+
+    /// Embedding-table bytes (same array as lm_head when tied).
+    pub fn embedding_bytes(&self) -> u64 {
+        (self.vocab * self.d_model * self.bytes_per_param) as u64
+    }
+
+    /// KV-cache bytes appended per token per layer (K + V).
+    pub fn kv_bytes_per_token_per_layer(&self) -> u64 {
+        (2 * self.d_kv() * self.bytes_per_param) as u64
+    }
+
+    /// KV-cache bytes per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.kv_bytes_per_token_per_layer() * self.n_layers as u64
+    }
+
+    /// Total backbone parameters (weights only, excl. embeddings).
+    pub fn backbone_params(&self) -> u64 {
+        let per_layer = (self.attn_weight_bytes_per_layer()
+            + self.ffn_weight_bytes_per_layer()
+            + self.norm_weight_bytes_per_layer()) / self.bytes_per_param as u64;
+        per_layer * self.n_layers as u64
+    }
+
+    /// Total parameters including embeddings (and untied lm_head).
+    pub fn total_params(&self) -> u64 {
+        let emb = (self.vocab * self.d_model) as u64;
+        let emb_total = if self.tied_embeddings { emb } else { 2 * emb };
+        self.backbone_params() + emb_total
+    }
+}
+
+/// A full MLLM (Table II row).
+#[derive(Debug, Clone)]
+pub struct MllmConfig {
+    pub name: String,
+    pub family: String,
+    pub vision: VisionEncoder,
+    pub connector: Connector,
+    pub llm: LlmConfig,
+}
+
+impl MllmConfig {
+    /// Visual tokens entering the LLM (post-connector).
+    pub fn visual_tokens(&self) -> usize {
+        self.connector.out_tokens
+    }
+
+    /// Total model parameters (encoder + connector + backbone).
+    pub fn total_params(&self) -> u64 {
+        self.vision.params + self.connector.params + self.llm.total_params()
+    }
+
+    // ---- Table II presets --------------------------------------------------
+
+    /// FastVLM 0.6B = FastViT-HD + lightweight MLP + Qwen2-0.5B.
+    pub fn fastvlm_0_6b() -> Self {
+        MllmConfig {
+            name: "fastvlm-0.6b".into(),
+            family: "FastVLM".into(),
+            vision: VisionEncoder {
+                kind: VisionKind::FastVitHd,
+                // FastViT-HD downsamples 64x: (512/64)^2 = 64 tokens.
+                out_tokens: 64,
+                d_out: 1536,
+                params: 125_000_000,
+                gflops: 28.0,
+            },
+            connector: Connector {
+                kind: ConnectorKind::Mlp,
+                out_tokens: 64,
+                params: 3_000_000,
+                gflops: 0.4,
+            },
+            llm: LlmConfig {
+                d_model: 896,
+                n_layers: 24,
+                n_heads: 14,
+                n_kv_heads: 2,
+                d_head: 64,
+                d_ffn: 4864,
+                ffn_matrices: 3, // SwiGLU
+                vocab: 151_936,
+                tied_embeddings: true,
+                bytes_per_param: 2,
+            },
+        }
+    }
+
+    /// FastVLM 1.7B = FastViT-HD + lightweight MLP + Qwen2-1.5B.
+    pub fn fastvlm_1_7b() -> Self {
+        MllmConfig {
+            name: "fastvlm-1.7b".into(),
+            family: "FastVLM".into(),
+            vision: VisionEncoder {
+                kind: VisionKind::FastVitHd,
+                out_tokens: 64,
+                d_out: 1536,
+                params: 125_000_000,
+                gflops: 28.0,
+            },
+            connector: Connector {
+                kind: ConnectorKind::Mlp,
+                out_tokens: 64,
+                params: 5_000_000,
+                gflops: 0.6,
+            },
+            llm: LlmConfig {
+                d_model: 1536,
+                n_layers: 28,
+                n_heads: 12,
+                n_kv_heads: 2,
+                d_head: 128,
+                d_ffn: 8960,
+                ffn_matrices: 3,
+                vocab: 151_936,
+                tied_embeddings: true,
+                bytes_per_param: 2,
+            },
+        }
+    }
+
+    /// MobileVLM 1.7B = CLIP ViT-L/14 + LDP + MobileLLaMA-1.4B.
+    pub fn mobilevlm_1_7b() -> Self {
+        MllmConfig {
+            name: "mobilevlm-1.7b".into(),
+            family: "MobileVLM".into(),
+            vision: VisionEncoder {
+                kind: VisionKind::Vit,
+                // ViT-L/14 @ 336: 576 patch tokens, no downsampling.
+                out_tokens: 576,
+                d_out: 1024,
+                params: 304_000_000,
+                gflops: 162.0,
+            },
+            connector: Connector {
+                kind: ConnectorKind::Ldp,
+                // LDP downsamples 2x2 -> 144 pseudo tokens.
+                out_tokens: 144,
+                params: 12_000_000,
+                gflops: 1.4,
+            },
+            llm: LlmConfig {
+                d_model: 2048,
+                n_layers: 24,
+                n_heads: 16,
+                n_kv_heads: 16,
+                d_head: 128,
+                d_ffn: 5632,
+                ffn_matrices: 3,
+                vocab: 32_000,
+                tied_embeddings: false,
+                bytes_per_param: 2,
+            },
+        }
+    }
+
+    /// MobileVLM 3B = CLIP ViT-L/14 + LDP + MobileLLaMA-2.7B.
+    pub fn mobilevlm_3b() -> Self {
+        MllmConfig {
+            name: "mobilevlm-3b".into(),
+            family: "MobileVLM".into(),
+            vision: VisionEncoder {
+                kind: VisionKind::Vit,
+                out_tokens: 576,
+                d_out: 1024,
+                params: 304_000_000,
+                gflops: 162.0,
+            },
+            connector: Connector {
+                kind: ConnectorKind::Ldp,
+                out_tokens: 144,
+                params: 17_000_000,
+                gflops: 1.9,
+            },
+            llm: LlmConfig {
+                d_model: 2560,
+                n_layers: 32,
+                n_heads: 20,
+                n_kv_heads: 20,
+                d_head: 128,
+                d_ffn: 6912,
+                ffn_matrices: 3,
+                vocab: 32_000,
+                tied_embeddings: false,
+                bytes_per_param: 2,
+            },
+        }
+    }
+
+    /// The tiny functional-path model (must mirror python/compile/model.py
+    /// and artifacts/manifest.json).
+    pub fn tiny() -> Self {
+        MllmConfig {
+            name: "tiny".into(),
+            family: "Tiny".into(),
+            vision: VisionEncoder {
+                kind: VisionKind::Vit,
+                out_tokens: 16,
+                d_out: 64,
+                params: 120_000,
+                gflops: 0.0005,
+            },
+            connector: Connector {
+                kind: ConnectorKind::Mlp,
+                out_tokens: 16,
+                params: 16_384,
+                gflops: 0.0001,
+            },
+            llm: LlmConfig {
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads: 4,
+                d_head: 16,
+                d_ffn: 256,
+                ffn_matrices: 2, // GELU MLP in the functional model
+                vocab: 256,
+                tied_embeddings: true,
+                bytes_per_param: 2,
+            },
+        }
+    }
+
+    /// All four Table II evaluation models, paper order.
+    pub fn paper_models() -> Vec<MllmConfig> {
+        vec![
+            Self::fastvlm_0_6b(),
+            Self::fastvlm_1_7b(),
+            Self::mobilevlm_1_7b(),
+            Self::mobilevlm_3b(),
+        ]
+    }
+
+    /// Look up by name (accepts the `chime` CLI spellings).
+    pub fn by_name(name: &str) -> Option<MllmConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "fastvlm-0.6b" | "fastvlm0.6b" | "fastvlm-0.6" => Some(Self::fastvlm_0_6b()),
+            "fastvlm-1.7b" | "fastvlm1.7b" | "fastvlm-1.7" => Some(Self::fastvlm_1_7b()),
+            "mobilevlm-1.7b" | "mobilevlm1.7b" => Some(Self::mobilevlm_1_7b()),
+            "mobilevlm-3b" | "mobilevlm3b" => Some(Self::mobilevlm_3b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_near_nameplate() {
+        // Backbone + embeddings should land near the advertised sizes.
+        let m = MllmConfig::fastvlm_0_6b();
+        let p = m.llm.total_params() as f64 / 1e9;
+        assert!((0.4..0.6).contains(&p), "qwen2-0.5b params {p}B");
+
+        let m = MllmConfig::fastvlm_1_7b();
+        let p = m.llm.total_params() as f64 / 1e9;
+        assert!((1.3..1.8).contains(&p), "qwen2-1.5b params {p}B");
+
+        let m = MllmConfig::mobilevlm_1_7b();
+        let p = m.llm.total_params() as f64 / 1e9;
+        assert!((1.2..1.6).contains(&p), "mobilellama-1.4b params {p}B");
+
+        let m = MllmConfig::mobilevlm_3b();
+        let p = m.llm.total_params() as f64 / 1e9;
+        assert!((2.4..3.0).contains(&p), "mobilellama-2.7b params {p}B");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv() {
+        let qwen = MllmConfig::fastvlm_0_6b().llm;
+        let llama = MllmConfig::mobilevlm_1_7b().llm;
+        // Qwen2 GQA: kv width 2*64=128 << q width 896.
+        assert_eq!(qwen.d_kv(), 128);
+        assert_eq!(qwen.d_q(), 896);
+        // MHA: kv == q width.
+        assert_eq!(llama.d_kv(), llama.d_q());
+        assert!(qwen.kv_bytes_per_token() < llama.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn weight_accounting_consistent() {
+        let llm = MllmConfig::mobilevlm_3b().llm;
+        // SwiGLU: 3 matrices.
+        assert_eq!(
+            llm.ffn_weight_bytes_per_layer(),
+            (3 * 2560 * 6912 * 2) as u64
+        );
+        // MHA QKVO: 4 * d^2.
+        assert_eq!(
+            llm.attn_weight_bytes_per_layer(),
+            (4 * 2560 * 2560 * 2) as u64
+        );
+    }
+
+    #[test]
+    fn connector_downsampling() {
+        let mv = MllmConfig::mobilevlm_1_7b();
+        assert_eq!(mv.vision.out_tokens, 576);
+        assert_eq!(mv.visual_tokens(), 144); // LDP 4x reduction
+        let fv = MllmConfig::fastvlm_0_6b();
+        assert_eq!(fv.visual_tokens(), 64); // encoder-side compression
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for m in MllmConfig::paper_models() {
+            assert_eq!(MllmConfig::by_name(&m.name).unwrap().name, m.name);
+        }
+        assert!(MllmConfig::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_functional_model() {
+        let t = MllmConfig::tiny();
+        assert_eq!(t.llm.d_model, 64);
+        assert_eq!(t.llm.n_layers, 2);
+        assert_eq!(t.llm.vocab, 256);
+        assert_eq!(t.visual_tokens(), 16);
+    }
+}

@@ -1,0 +1,143 @@
+//! Decode batcher: continuous (token-level) batching for edge serving.
+//!
+//! Active requests are decoded in interleaved ticks: each tick advances
+//! every active request by one token, with the tick's chiplet work
+//! pipelined via Johnson's rule (`pipeline`). New requests join as slots
+//! free up (the paper's "variable sequences ... without rebuilds").
+
+use super::pipeline::{schedule_tick, StepWork};
+
+/// A slot in the running batch.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub request_idx: usize,
+    pub remaining_tokens: usize,
+}
+
+/// Batch policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Max concurrent decode streams (KV-capacity bound on edge).
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4 }
+    }
+}
+
+/// Continuous batcher state machine (engine-agnostic: the engine supplies
+/// per-slot step costs, the batcher owns membership + tick scheduling).
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    pub slots: Vec<Slot>,
+}
+
+/// Result of scheduling one decode tick.
+#[derive(Debug, Clone)]
+pub struct TickPlan {
+    /// Slot order (by `request_idx`) after Johnson's rule.
+    pub order: Vec<usize>,
+    /// Pipelined tick time (ns).
+    pub pipelined_ns: f64,
+    /// Serial tick time (ns) — what a non-pipelined coordinator would pay.
+    pub serial_ns: f64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, slots: Vec::new() }
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.slots.len() < self.policy.max_batch
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Join a request with its decode budget.
+    pub fn join(&mut self, request_idx: usize, tokens: usize) -> bool {
+        if !self.has_capacity() {
+            return false;
+        }
+        self.slots.push(Slot { request_idx, remaining_tokens: tokens });
+        true
+    }
+
+    /// Plan one tick given per-slot (dram_ns, rram_ns) costs, then retire
+    /// slots that produced their last token. Returns the plan and the
+    /// request indices that finished this tick.
+    pub fn tick(&mut self, costs: &[(f64, f64)]) -> (TickPlan, Vec<usize>) {
+        assert_eq!(costs.len(), self.slots.len(), "one cost pair per slot");
+        let jobs: Vec<StepWork> = self
+            .slots
+            .iter()
+            .zip(costs)
+            .map(|(s, &(d, r))| StepWork { id: s.request_idx, dram_ns: d, rram_ns: r })
+            .collect();
+        let (order, pipelined_ns, serial_ns) = schedule_tick(&jobs);
+        let plan = TickPlan {
+            order: order.iter().map(|j| j.id).collect(),
+            pipelined_ns,
+            serial_ns,
+        };
+        let mut finished = Vec::new();
+        for s in &mut self.slots {
+            s.remaining_tokens -= 1;
+            if s.remaining_tokens == 0 {
+                finished.push(s.request_idx);
+            }
+        }
+        self.slots.retain(|s| s.remaining_tokens > 0);
+        (plan, finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_respected() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2 });
+        assert!(b.join(0, 4));
+        assert!(b.join(1, 4));
+        assert!(!b.join(2, 4));
+        assert_eq!(b.active(), 2);
+    }
+
+    #[test]
+    fn tick_retires_finished_slots() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4 });
+        b.join(7, 1);
+        b.join(8, 2);
+        let (_, finished) = b.tick(&[(1.0, 1.0), (1.0, 1.0)]);
+        assert_eq!(finished, vec![7]);
+        assert_eq!(b.active(), 1);
+        let (_, finished) = b.tick(&[(1.0, 1.0)]);
+        assert_eq!(finished, vec![8]);
+        assert_eq!(b.active(), 0);
+    }
+
+    #[test]
+    fn tick_pipelines_multi_request_work() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4 });
+        b.join(0, 10);
+        b.join(1, 10);
+        b.join(2, 10);
+        let (plan, _) = b.tick(&[(10.0, 20.0), (10.0, 20.0), (10.0, 20.0)]);
+        assert!(plan.pipelined_ns < plan.serial_ns);
+        assert_eq!(plan.order.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tick_requires_matching_costs() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.join(0, 2);
+        b.tick(&[]); // wrong arity
+    }
+}

@@ -1,0 +1,293 @@
+//! The serving engine: joins the admission queue, the continuous batcher,
+//! the two-cut-point pipeline scheduler, and one of two backends:
+//!
+//! * **Simulated** — paper-scale models on the CHIME hardware simulator,
+//!   virtual time (drives every throughput/latency experiment);
+//! * **Functional** — the tiny AOT-compiled MLLM on PJRT, real tokens and
+//!   wall-clock time, with simulated CHIME energy attached per request.
+//!
+//! Python never runs on this path; the functional backend only loads
+//! pre-built `artifacts/*.hlo.txt`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+use crate::mapping::Plan;
+use crate::runtime::FunctionalMllm;
+use crate::sim::{PhaseStats, SimEngine};
+use crate::util::Prng;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::ServingMetrics;
+use super::queue::AdmissionQueue;
+use super::request::{ServeRequest, ServeResponse};
+
+/// Virtual-time simulated serving engine (paper-scale models).
+pub struct SimulatedServer {
+    pub cfg: ChimeConfig,
+    pub model: MllmConfig,
+    plan: Plan,
+    engine: SimEngine,
+    policy: BatchPolicy,
+    /// §Perf: reusable decode schedule, patched per slot position.
+    template: crate::mapping::planner::DecodeTemplate,
+}
+
+struct ActiveRequest {
+    req: ServeRequest,
+    admitted_ns: f64,
+    prefill_done_ns: Option<f64>,
+    pos: usize,
+    produced: usize,
+    energy_j: f64,
+}
+
+impl SimulatedServer {
+    pub fn new(model: &MllmConfig, cfg: &ChimeConfig, policy: BatchPolicy) -> Self {
+        let plan = Plan::build(model, &cfg.hardware, &cfg.workload);
+        let engine = SimEngine::new(&cfg.hardware, &plan);
+        let template = plan.decode_template();
+        SimulatedServer { cfg: cfg.clone(), model: model.clone(), plan, engine, policy, template }
+    }
+
+    /// Serve a request stream in virtual time. Requests must be sorted by
+    /// arrival. Returns completions in finish order + aggregate metrics.
+    pub fn serve(&mut self, mut requests: Vec<ServeRequest>) -> (Vec<ServeResponse>, ServingMetrics) {
+        requests.sort_by(|a, b| a.arrival_ns.partial_cmp(&b.arrival_ns).unwrap());
+        let queue = AdmissionQueue::new(usize::MAX / 2);
+        let mut batcher = Batcher::new(self.policy.clone());
+        let mut active: BTreeMap<usize, ActiveRequest> = BTreeMap::new();
+        let mut responses = Vec::new();
+        let mut metrics = ServingMetrics::new();
+        let mut clock_ns = 0.0_f64;
+        let mut next_arrival = 0usize;
+        let mut arrivals: BTreeMap<u64, f64> = BTreeMap::new();
+
+        loop {
+            // Admit arrivals that have happened by `clock`.
+            while next_arrival < requests.len()
+                && requests[next_arrival].arrival_ns <= clock_ns
+            {
+                let r = requests[next_arrival].clone();
+                arrivals.insert(r.id, r.arrival_ns);
+                queue.admit(r).ok();
+                next_arrival += 1;
+            }
+            // Fill free slots from the queue.
+            while batcher.has_capacity() && !queue.is_empty() {
+                let mut batch = queue.try_pop_batch(1);
+                if let Some(req) = batch.pop() {
+                    let idx = req.id as usize;
+                    let tokens = req.max_new_tokens.max(1);
+                    batcher.join(idx, tokens + 1); // +1 tick for prefill
+                    active.insert(
+                        idx,
+                        ActiveRequest {
+                            admitted_ns: clock_ns.max(req.arrival_ns),
+                            req,
+                            prefill_done_ns: None,
+                            pos: 0,
+                            produced: 0,
+                            energy_j: 0.0,
+                        },
+                    );
+                }
+            }
+
+            if batcher.active() == 0 {
+                if next_arrival >= requests.len() {
+                    break; // drained
+                }
+                // Idle: jump to the next arrival.
+                clock_ns = clock_ns.max(requests[next_arrival].arrival_ns);
+                continue;
+            }
+
+            // Price each slot's step on the shared hardware state.
+            let slot_ids: Vec<usize> = batcher.slots.iter().map(|s| s.request_idx).collect();
+            let mut costs = Vec::with_capacity(slot_ids.len());
+            for &idx in &slot_ids {
+                let a = active.get_mut(&idx).unwrap();
+                let stats: PhaseStats = if a.prefill_done_ns.is_none() {
+                    // Encode + prefill as this slot's first "step".
+                    let mut s = self.engine.run_kernels(&self.plan.encode_kernels);
+                    s.merge(&self.engine.run_kernels(&self.plan.prefill_kernels));
+                    s
+                } else {
+                    let pos = self.plan.trace.prefill_len() + a.pos;
+                    self.plan.patch_decode_template(&mut self.template, pos);
+                    self.engine.run_kernels(&self.template.kernels)
+                };
+                a.energy_j += stats.energy.total_joules();
+                costs.push((stats.dram_busy_ns, stats.rram_busy_ns + stats.ucie_ns));
+            }
+
+            // One pipelined tick across the batch.
+            let (plan_tick, finished) = batcher.tick(&costs);
+            clock_ns += plan_tick.pipelined_ns;
+
+            // Advance request state.
+            for &idx in &slot_ids {
+                let a = active.get_mut(&idx).unwrap();
+                if a.prefill_done_ns.is_none() {
+                    a.prefill_done_ns = Some(clock_ns);
+                } else {
+                    a.pos += 1;
+                    a.produced += 1;
+                }
+            }
+            for idx in finished {
+                let a = active.remove(&idx).unwrap();
+                let arrival = arrivals[&a.req.id];
+                let resp = ServeResponse {
+                    id: a.req.id,
+                    tokens: vec![0; a.produced],
+                    queue_ns: a.admitted_ns - arrival,
+                    ttft_ns: a.prefill_done_ns.unwrap_or(clock_ns) - a.admitted_ns,
+                    service_ns: clock_ns - a.admitted_ns,
+                    energy_j: a.energy_j,
+                };
+                metrics.record(arrival, &resp);
+                responses.push(resp);
+            }
+        }
+        (responses, metrics)
+    }
+}
+
+/// Functional serving engine: real tokens from the AOT artifacts.
+pub struct FunctionalServer {
+    pub mllm: FunctionalMllm,
+    /// Tiny-model simulator used to attach CHIME energy estimates.
+    sim_cfg: ChimeConfig,
+}
+
+impl FunctionalServer {
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<FunctionalServer> {
+        let mllm = FunctionalMllm::load(artifacts_dir)?;
+        let mut sim_cfg = ChimeConfig::default();
+        sim_cfg.workload = WorkloadConfig {
+            image_size: mllm.manifest.config.img_size,
+            text_tokens: mllm.manifest.config.prompt_len,
+            output_tokens: 1, // rescaled per request below
+        };
+        Ok(FunctionalServer { mllm, sim_cfg })
+    }
+
+    /// Deterministic per-request image from the seed.
+    pub fn image_for_seed(&self, seed: u64) -> Vec<f32> {
+        let c = &self.mllm.manifest.config;
+        let n = c.img_size * c.img_size * c.img_channels;
+        let mut prng = Prng::new(seed);
+        (0..n).map(|_| prng.f32() - 0.5).collect()
+    }
+
+    /// Serve requests sequentially (single PJRT stream), real wall time.
+    pub fn serve(&mut self, requests: &[ServeRequest]) -> Result<(Vec<ServeResponse>, ServingMetrics)> {
+        let mut responses = Vec::new();
+        let mut metrics = ServingMetrics::new();
+        let t0 = std::time::Instant::now();
+        // Simulated CHIME energy per generated token for the tiny model.
+        let mut wcfg = self.sim_cfg.clone();
+        wcfg.workload.output_tokens = 8;
+        let tiny = MllmConfig::tiny();
+        let ref_stats = crate::sim::simulate_with_workload(&tiny, &wcfg, &wcfg.workload);
+        let energy_per_token = ref_stats.total_energy_j() / ref_stats.output_tokens as f64;
+
+        for req in requests {
+            let now_ns = t0.elapsed().as_nanos() as f64;
+            let queue_ns = (now_ns - req.arrival_ns).max(0.0);
+            let image = self.image_for_seed(req.image_seed);
+            let gen = self.mllm.generate(&image, &req.prompt, req.max_new_tokens)?;
+            let resp = ServeResponse {
+                id: req.id,
+                tokens: gen.tokens.clone(),
+                queue_ns,
+                ttft_ns: (gen.encode_ns + gen.prefill_ns) as f64,
+                service_ns: (gen.encode_ns + gen.prefill_ns + gen.decode_ns) as f64,
+                energy_j: energy_per_token * gen.tokens.len() as f64,
+            };
+            metrics.record(req.arrival_ns, &resp);
+            responses.push(resp);
+        }
+        Ok((responses, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(n: usize, arrival_gap_ns: f64, tokens: usize) -> Vec<ServeRequest> {
+        (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: tokens,
+                arrival_ns: i as f64 * arrival_gap_ns,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn simulated_server_completes_all() {
+        let mut cfg = ChimeConfig::default();
+        cfg.workload.output_tokens = 8;
+        let mut srv = SimulatedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, BatchPolicy::default());
+        let (resps, metrics) = srv.serve(reqs(6, 1e6, 8));
+        assert_eq!(resps.len(), 6);
+        assert_eq!(metrics.completed, 6);
+        assert_eq!(metrics.tokens, 48);
+        for r in &resps {
+            assert!(r.service_ns > 0.0);
+            assert!(r.ttft_ns > 0.0);
+            assert!(r.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn batching_increases_system_throughput() {
+        let mut cfg = ChimeConfig::default();
+        cfg.workload.output_tokens = 16;
+        let burst = || reqs(8, 0.0, 16); // all arrive at t=0
+        let mut solo = SimulatedServer::new(
+            &MllmConfig::mobilevlm_3b(),
+            &cfg,
+            BatchPolicy { max_batch: 1 },
+        );
+        let (_, m1) = solo.serve(burst());
+        let mut batched = SimulatedServer::new(
+            &MllmConfig::mobilevlm_3b(),
+            &cfg,
+            BatchPolicy { max_batch: 4 },
+        );
+        let (_, m4) = batched.serve(burst());
+        // Gain is bounded by (D+R)/max(D,R): with the 3B model's FFN-heavy
+        // RRAM side the theoretical ceiling is ~1.6x; a short 16-token run
+        // with prefill amortization lands lower. Require a real gain.
+        assert!(
+            m4.tokens_per_s() > m1.tokens_per_s() * 1.05,
+            "batch4 {} vs batch1 {}",
+            m4.tokens_per_s(),
+            m1.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn queueing_shows_up_under_burst() {
+        let mut cfg = ChimeConfig::default();
+        cfg.workload.output_tokens = 4;
+        let mut srv = SimulatedServer::new(
+            &MllmConfig::fastvlm_0_6b(),
+            &cfg,
+            BatchPolicy { max_batch: 1 },
+        );
+        let (_, mut metrics) = srv.serve(reqs(5, 0.0, 4));
+        // With batch 1 and simultaneous arrivals, later requests queue.
+        assert!(metrics.mean_queue_ns() > 0.0);
+        assert!(metrics.latency_percentile_ns(99.0) > metrics.latency_percentile_ns(10.0));
+    }
+}

@@ -1,0 +1,127 @@
+//! Serving metrics registry: latency distributions, throughput, energy.
+
+use crate::util::stats::{percentile, Summary};
+
+use super::request::ServeResponse;
+
+/// Aggregated serving metrics over a set of completed requests.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub completed: u64,
+    pub tokens: u64,
+    latency_ns: Vec<f64>,
+    ttft_ns: Vec<f64>,
+    queue_ns: Vec<f64>,
+    pub energy_j: f64,
+    pub service: Summary,
+    /// Virtual/wall span covered (max completion - min arrival), ns.
+    first_arrival_ns: f64,
+    last_completion_ns: f64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            first_arrival_ns: f64::INFINITY,
+            last_completion_ns: 0.0,
+            ..Default::default()
+        }
+    }
+
+    pub fn record(&mut self, arrival_ns: f64, r: &ServeResponse) {
+        self.completed += 1;
+        self.tokens += r.tokens.len() as u64;
+        self.latency_ns.push(r.total_latency_ns());
+        self.ttft_ns.push(r.queue_ns + r.ttft_ns);
+        self.queue_ns.push(r.queue_ns);
+        self.energy_j += r.energy_j;
+        self.service.push(r.service_ns);
+        self.first_arrival_ns = self.first_arrival_ns.min(arrival_ns);
+        self.last_completion_ns = self
+            .last_completion_ns
+            .max(arrival_ns + r.total_latency_ns());
+    }
+
+    pub fn span_ns(&self) -> f64 {
+        (self.last_completion_ns - self.first_arrival_ns).max(0.0)
+    }
+
+    /// System throughput over the covered span (tokens/s).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.span_ns() <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.span_ns() / 1e9)
+    }
+
+    /// Requests/s over the covered span.
+    pub fn requests_per_s(&self) -> f64 {
+        if self.span_ns() <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.span_ns() / 1e9)
+    }
+
+    pub fn latency_percentile_ns(&mut self, p: f64) -> f64 {
+        percentile(&mut self.latency_ns, p)
+    }
+
+    pub fn ttft_percentile_ns(&mut self, p: f64) -> f64 {
+        percentile(&mut self.ttft_ns, p)
+    }
+
+    pub fn mean_queue_ns(&self) -> f64 {
+        if self.queue_ns.is_empty() {
+            return 0.0;
+        }
+        self.queue_ns.iter().sum::<f64>() / self.queue_ns.len() as f64
+    }
+
+    pub fn tokens_per_j(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, q: f64, ttft: f64, svc: f64, n: usize) -> ServeResponse {
+        ServeResponse {
+            id,
+            tokens: vec![0; n],
+            queue_ns: q,
+            ttft_ns: ttft,
+            service_ns: svc,
+            energy_j: 0.001,
+        }
+    }
+
+    #[test]
+    fn throughput_over_span() {
+        let mut m = ServingMetrics::new();
+        // Two requests, 10 tokens each, finishing 1 s after first arrival.
+        m.record(0.0, &resp(0, 0.0, 1e8, 5e8, 10));
+        m.record(2e8, &resp(1, 0.0, 1e8, 8e8, 10));
+        assert_eq!(m.tokens, 20);
+        let span = m.span_ns();
+        assert_eq!(span, 1e9);
+        assert!((m.tokens_per_s() - 20.0).abs() < 1e-9);
+        assert!((m.requests_per_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_and_energy() {
+        let mut m = ServingMetrics::new();
+        for i in 0..10 {
+            m.record(i as f64, &resp(i, 10.0, 50.0, 100.0 + i as f64, 2));
+        }
+        assert!(m.latency_percentile_ns(50.0) > 100.0);
+        assert!(m.latency_percentile_ns(99.0) >= m.latency_percentile_ns(50.0));
+        assert!((m.tokens_per_j() - 20.0 / 0.01).abs() < 1e-9);
+        assert_eq!(m.mean_queue_ns(), 10.0);
+    }
+}

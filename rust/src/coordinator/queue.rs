@@ -1,0 +1,152 @@
+//! Admission queue with bounded capacity and backpressure.
+//!
+//! Edge devices cannot buffer unbounded work: beyond `capacity` the queue
+//! rejects new requests (the caller sheds load or retries). Thread-safe —
+//! producers (request sources) and the consumer (the serving loop) share
+//! it behind a mutex + condvar.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::request::ServeRequest;
+
+/// Rejection reason surfaced to producers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Queue at capacity (backpressure).
+    Full,
+    /// Queue shut down.
+    Closed,
+}
+
+struct Inner {
+    items: VecDeque<ServeRequest>,
+    closed: bool,
+}
+
+/// Bounded MPSC admission queue.
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    capacity: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Try to admit a request. Non-blocking: backpressure is immediate.
+    pub fn admit(&self, req: ServeRequest) -> Result<(), AdmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(AdmitError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(AdmitError::Full);
+        }
+        g.items.push_back(req);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `n` requests, blocking until at least one is available or
+    /// the queue is closed (returns an empty vec then).
+    pub fn pop_batch(&self, n: usize) -> Vec<ServeRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let take = n.min(g.items.len());
+                return g.items.drain(..take).collect();
+            }
+            if g.closed {
+                return Vec::new();
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking drain of up to `n`.
+    pub fn try_pop_batch(&self, n: usize) -> Vec<ServeRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.items.len());
+        g.items.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: admits fail, blocked consumers wake with empties.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> ServeRequest {
+        ServeRequest { id, prompt: vec![], image_seed: 0, max_new_tokens: 4, arrival_ns: 0.0 }
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.admit(req(0)).is_ok());
+        assert!(q.admit(req(1)).is_ok());
+        assert_eq!(q.admit(req(2)), Err(AdmitError::Full));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = AdmissionQueue::new(10);
+        for i in 0..5 {
+            q.admit(req(i)).unwrap();
+        }
+        let batch = q.try_pop_batch(3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_rejects_and_wakes() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_empty());
+        assert_eq!(q.admit(req(9)), Err(AdmitError::Closed));
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let q = Arc::new(AdmissionQueue::new(1000));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    q.admit(req(t * 1000 + i)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.len(), 400);
+    }
+}

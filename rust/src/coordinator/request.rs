@@ -1,0 +1,64 @@
+//! Serving request/response types for the CHIME coordinator.
+
+/// An inbound VQA request.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    /// Prompt token ids (functional path uses them; timing path uses the
+    /// length).
+    pub prompt: Vec<i32>,
+    /// Deterministic image seed; the functional engine synthesizes pixels
+    /// from it so requests differ without shipping real images.
+    pub image_seed: u64,
+    pub max_new_tokens: usize,
+    /// Arrival timestamp (ns, virtual or wall clock per engine mode).
+    pub arrival_ns: f64,
+}
+
+/// Completion record for one request.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time from arrival to admission (queueing).
+    pub queue_ns: f64,
+    /// Time to first token (encode + prefill after admission).
+    pub ttft_ns: f64,
+    /// Total service time (admission -> last token).
+    pub service_ns: f64,
+    /// Simulated energy for the request (J; 0 in functional-only mode).
+    pub energy_j: f64,
+}
+
+impl ServeResponse {
+    pub fn total_latency_ns(&self) -> f64 {
+        self.queue_ns + self.service_ns
+    }
+
+    pub fn decode_tps(&self) -> f64 {
+        if self.service_ns <= self.ttft_ns || self.tokens.is_empty() {
+            return 0.0;
+        }
+        self.tokens.len() as f64 / ((self.service_ns - self.ttft_ns) / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_accounting() {
+        let r = ServeResponse {
+            id: 1,
+            tokens: vec![1, 2, 3, 4],
+            queue_ns: 100.0,
+            ttft_ns: 50.0,
+            service_ns: 250.0,
+            energy_j: 0.0,
+        };
+        assert_eq!(r.total_latency_ns(), 350.0);
+        let tps = r.decode_tps();
+        assert!((tps - 4.0 / (200.0 / 1e9)).abs() < 1e-3);
+    }
+}

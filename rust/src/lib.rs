@@ -1,0 +1,35 @@
+//! # CHIME — chiplet-based heterogeneous near-memory acceleration for
+//! edge multimodal-LLM inference (paper reproduction).
+//!
+//! Reproduction of Chen, Tian, Pan, Li, Xu & Rosing (CS.AR 2025). The
+//! crate provides, as a library:
+//!
+//! - [`config`]: the paper's hardware (Tables III/IV) and model (Table II)
+//!   configurations plus calibration knobs;
+//! - [`model`]: an operator-level MLLM workload model (vision encoder,
+//!   connector, transformer backbone, VQA traces);
+//! - [`mapping`]: the paper's mapping framework — workload-aware data
+//!   layout, endurance-aware KV-cache tiering, kernel locality-aware
+//!   fusion (Table I);
+//! - [`sim`]: the CHIME hardware simulator — tiered M3D DRAM, M3D RRAM
+//!   with endurance accounting, UCIe link, NMP timing, two-cut-point
+//!   pipeline;
+//! - [`baselines`]: Jetson Orin NX, FACIL, and the DRAM-only ablation;
+//! - [`runtime`]: PJRT functional runtime loading the AOT-compiled JAX
+//!   artifacts (the tiny MLLM) — Python never runs on the request path;
+//! - [`coordinator`]: the L3 serving coordinator (request queue, batcher,
+//!   pipelined engine joining functional execution with simulated timing);
+//! - [`results`]: the paper-results harness — one module per table/figure.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured numbers.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod mapping;
+pub mod model;
+pub mod results;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,344 @@
+//! `chime` — CLI for the CHIME reproduction.
+//!
+//! Subcommands:
+//!   info      — print model zoo (Table II) and hardware configs (III/IV)
+//!   simulate  — run one model's VQA inference on the CHIME simulator
+//!   serve     — serve a request stream (simulated or functional backend)
+//!   sweep     — sequence-length sweep (Fig 8)
+//!   results   — regenerate paper tables/figures (--fig N | --all)
+//!   parity    — verify the PJRT functional path against the AOT oracle
+
+use chime::baselines::{facil, jetson};
+use chime::config::{ChimeConfig, FacilSpec, JetsonSpec, MllmConfig};
+use chime::coordinator::{BatchPolicy, FunctionalServer, ServeRequest, SimulatedServer};
+use chime::model::workload::RequestStream;
+use chime::results;
+use chime::runtime::Manifest;
+use chime::sim;
+use chime::util::stats::{fmt_bytes, fmt_ns};
+use chime::util::{table, Args, Json, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("results") => cmd_results(&args),
+        Some("parity") => cmd_parity(&args),
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    println!(
+        "chime — CHIME paper reproduction (chiplet heterogeneous near-memory MLLM inference)
+
+USAGE: chime <command> [options]
+
+COMMANDS:
+  info      [--models] [--hardware]           Table II / III / IV configs
+  simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
+  serve     [--backend sim|functional] [--model NAME] [--requests N]
+            [--rate R] [--batch B] [--tokens N]
+  sweep     [--model NAME] [--json]           Fig 8 sequence-length sweep
+  results   [--fig 1|6|7|8|9|table5] [--all] [--json]
+  parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
+
+MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
+    );
+}
+
+fn resolve_model(args: &Args) -> Result<MllmConfig, i32> {
+    let name = args.get_or("model", "fastvlm-0.6b");
+    MllmConfig::by_name(name).ok_or_else(|| {
+        eprintln!("unknown model {name:?}");
+        2
+    })
+}
+
+fn config_from(args: &Args) -> ChimeConfig {
+    let mut cfg = ChimeConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = cfg
+            .with_override_file(path)
+            .unwrap_or_else(|e| panic!("config: {e}"));
+    }
+    cfg.workload.output_tokens = args.get_usize("out", cfg.workload.output_tokens);
+    cfg.workload.text_tokens = args.get_usize("text", cfg.workload.text_tokens);
+    cfg
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let both = !args.flag("models") && !args.flag("hardware");
+    if args.flag("models") || both {
+        let mut t = Table::new(
+            "Table II — MLLM model zoo",
+            &["model", "vision", "connector", "d_model", "layers", "heads(kv)",
+              "d_ffn", "vocab", "params"],
+        );
+        for m in MllmConfig::paper_models().iter().chain([MllmConfig::tiny()].iter()) {
+            t.row(vec![
+                m.name.clone(),
+                format!("{:?}", m.vision.kind),
+                format!("{:?}", m.connector.kind),
+                m.llm.d_model.to_string(),
+                m.llm.n_layers.to_string(),
+                format!("{}({})", m.llm.n_heads, m.llm.n_kv_heads),
+                m.llm.d_ffn.to_string(),
+                m.llm.vocab.to_string(),
+                format!("{:.2}B", m.total_params() as f64 / 1e9),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    if args.flag("hardware") || both {
+        let hw = ChimeConfig::default().hardware;
+        let mut t = Table::new("Tables III/IV — CHIME hardware", &["parameter", "value"]);
+        t.row(vec!["dram.layers".into(), hw.dram.layers.to_string()]);
+        t.row(vec!["dram.tiers".into(), hw.dram.tiers.to_string()]);
+        t.row(vec!["dram.tier0 latency".into(), format!("{:.1} ns", hw.dram.tier_latency_ns(0))]);
+        t.row(vec!["dram.tier4 latency".into(), format!("{:.1} ns", hw.dram.tier_latency_ns(4))]);
+        t.row(vec!["dram.capacity".into(), fmt_bytes(hw.dram.chip_capacity_bytes() as f64)]);
+        t.row(vec!["dram.internal bw".into(), format!("{:.0} GB/s", hw.dram.internal_bw_gbps(1.0))]);
+        t.row(vec!["rram.layers".into(), hw.rram.layers.to_string()]);
+        t.row(vec!["rram.capacity".into(), fmt_bytes(hw.rram.chip_capacity_bytes as f64)]);
+        t.row(vec!["rram.interface bw".into(), format!("{:.0} GB/s", hw.rram.interface_bw_gbps(1.0))]);
+        t.row(vec!["rram.read stream bw".into(), format!("{:.0} GB/s", hw.rram.read_stream_bw_gbps(1.0))]);
+        t.row(vec!["dram_nmp.peak".into(), format!("{} TFLOPS / {} W", hw.dram_nmp.peak_tflops, hw.dram_nmp.peak_power_w)]);
+        t.row(vec!["rram_nmp.peak".into(), format!("{} TFLOPS / {} W", hw.rram_nmp.peak_tflops, hw.rram_nmp.peak_power_w)]);
+        t.row(vec!["ucie.bandwidth".into(), format!("{} GB/s", hw.ucie.bandwidth_gbps)]);
+        t.row(vec!["total die area".into(), format!("{:.2} mm2", hw.total_die_area_mm2())]);
+        print!("{}", t.render());
+    }
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cfg = config_from(args);
+    let models = if args.flag("all") {
+        MllmConfig::paper_models()
+    } else {
+        match resolve_model(args) {
+            Ok(m) => vec![m],
+            Err(c) => return c,
+        }
+    };
+    let mut t = Table::new(
+        "CHIME simulation",
+        &["model", "mode", "TTFT", "total", "TPS", "tok/J", "power (W)", "KV offloaded"],
+    );
+    let mut json_rows = Vec::new();
+    for m in &models {
+        let (stats, mode) = if args.flag("dram-only") {
+            (sim::simulate_dram_only(m, &cfg), "dram-only")
+        } else {
+            (sim::simulate(m, &cfg), "chime")
+        };
+        t.row(vec![
+            m.name.clone(),
+            mode.into(),
+            fmt_ns(stats.ttft_ns()),
+            fmt_ns(stats.total_time_ns()),
+            table::f(stats.tokens_per_s(), 1),
+            table::f(stats.tokens_per_j(), 1),
+            table::f(stats.avg_power_w(), 2),
+            fmt_bytes(stats.kv_offloaded_bytes as f64),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", m.name.as_str().into()),
+            ("mode", mode.into()),
+            ("ttft_ns", stats.ttft_ns().into()),
+            ("total_ns", stats.total_time_ns().into()),
+            ("tps", stats.tokens_per_s().into()),
+            ("tok_per_j", stats.tokens_per_j().into()),
+            ("power_w", stats.avg_power_w().into()),
+        ]));
+    }
+    if args.flag("json") {
+        println!("{}", Json::Arr(json_rows).pretty());
+    } else {
+        print!("{}", t.render());
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let n = args.get_usize("requests", 16);
+    let rate = args.get_f64("rate", 2.0);
+    let batch = args.get_usize("batch", 4);
+    let backend = args.get_or("backend", "sim");
+    match backend {
+        "functional" => {
+            let dir = std::path::PathBuf::from(
+                args.get_or("artifacts", Manifest::default_dir().to_str().unwrap()),
+            );
+            let mut srv = match FunctionalServer::load(&dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("functional backend unavailable: {e:#}");
+                    return 1;
+                }
+            };
+            let cfgm = srv.mllm.manifest.config.clone_fields();
+            let mut stream = RequestStream::new(7, rate, cfgm.0, args.get_usize("tokens", 8), cfgm.1);
+            let reqs: Vec<ServeRequest> = stream
+                .take(n)
+                .into_iter()
+                .map(|r| ServeRequest {
+                    id: r.id,
+                    prompt: r.prompt,
+                    image_seed: r.image_seed,
+                    max_new_tokens: r.max_new_tokens,
+                    arrival_ns: 0.0,
+                })
+                .collect();
+            let (resps, mut metrics) = srv.serve(&reqs).expect("serving failed");
+            let p50 = metrics.latency_percentile_ns(50.0);
+            let p99 = metrics.latency_percentile_ns(99.0);
+            println!(
+                "functional backend: {} requests, {} tokens, p50 latency {}, p99 {}, {:.1} tok/s",
+                metrics.completed,
+                metrics.tokens,
+                fmt_ns(p50),
+                fmt_ns(p99),
+                metrics.tokens_per_s(),
+            );
+            for r in resps.iter().take(4) {
+                println!("  req {} -> {:?}", r.id, r.tokens);
+            }
+            0
+        }
+        _ => {
+            let model = match resolve_model(args) {
+                Ok(m) => m,
+                Err(c) => return c,
+            };
+            let cfg = config_from(args);
+            let tokens = args.get_usize("tokens", 64);
+            let mut stream = RequestStream::new(7, rate, cfg.workload.text_tokens, tokens, model.llm.vocab);
+            let reqs: Vec<ServeRequest> = stream
+                .take(n)
+                .into_iter()
+                .map(|r| ServeRequest {
+                    id: r.id,
+                    prompt: r.prompt,
+                    image_seed: r.image_seed,
+                    max_new_tokens: r.max_new_tokens,
+                    arrival_ns: r.arrival_ns,
+                })
+                .collect();
+            let mut srv = SimulatedServer::new(&model, &cfg, BatchPolicy { max_batch: batch });
+            let (_, mut metrics) = srv.serve(reqs);
+            let p50 = metrics.latency_percentile_ns(50.0);
+            let p99 = metrics.latency_percentile_ns(99.0);
+            println!(
+                "simulated CHIME serving {} (batch {batch}): {} reqs, {} tokens, \
+                 {:.1} tok/s system, p50 latency {}, p99 {}, {:.1} tok/J",
+                model.name,
+                metrics.completed,
+                metrics.tokens,
+                metrics.tokens_per_s(),
+                fmt_ns(p50),
+                fmt_ns(p99),
+                metrics.tokens_per_j(),
+            );
+            0
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let e = results::fig8::run();
+    if args.flag("json") {
+        println!("{}", e.json.pretty());
+    } else {
+        print!("{}", e.text);
+    }
+    0
+}
+
+fn cmd_results(args: &Args) -> i32 {
+    let experiments = if args.flag("all") || args.get("fig").is_none() {
+        results::run_all()
+    } else {
+        match results::run_one(args.get("fig").unwrap_or("")) {
+            Some(e) => vec![e],
+            None => {
+                eprintln!("unknown experiment id (use 1, 6, 7, 8, 9, table5)");
+                return 2;
+            }
+        }
+    };
+    if args.flag("json") {
+        let obj: Vec<Json> = experiments
+            .iter()
+            .map(|e| Json::obj(vec![("id", e.id.into()), ("data", e.json.clone())]))
+            .collect();
+        println!("{}", Json::Arr(obj).pretty());
+    } else {
+        for e in &experiments {
+            println!("{}", e.text);
+        }
+    }
+    // Also report the baseline ranges alongside (CLI convenience).
+    if args.flag("baselines") {
+        let cfg = ChimeConfig::default();
+        for m in MllmConfig::paper_models() {
+            let j = jetson::run(&m, &cfg.workload, &JetsonSpec::default());
+            let f = facil::run(&m, &cfg.workload, &FacilSpec::default());
+            println!(
+                "{}: jetson {:.1} tok/s, facil {:.1} tok/s",
+                m.name,
+                j.tokens_per_s(),
+                f.tokens_per_s()
+            );
+        }
+    }
+    0
+}
+
+fn cmd_parity(args: &Args) -> i32 {
+    let dir = std::path::PathBuf::from(
+        args.get_or("artifacts", Manifest::default_dir().to_str().unwrap()),
+    );
+    match chime::runtime::FunctionalMllm::load(&dir) {
+        Ok(m) => match m.verify_parity() {
+            Ok(()) => {
+                println!(
+                    "PARITY OK — rust PJRT greedy decode matches the python AOT oracle ({} tokens)",
+                    m.manifest.parity.n_steps
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("{e:#}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e:#} (run `make artifacts`)");
+            1
+        }
+    }
+}
+
+/// Tiny helper so serve --backend functional can size prompts.
+trait CloneFields {
+    fn clone_fields(&self) -> (usize, usize);
+}
+impl CloneFields for chime::runtime::artifact::ModelMeta {
+    fn clone_fields(&self) -> (usize, usize) {
+        (self.prompt_len, self.vocab)
+    }
+}

@@ -1,0 +1,203 @@
+//! ❸ Kernel locality-aware fusion (paper §III-C, Table I).
+//!
+//! Groups the model's operator stream into fused near-memory kernels whose
+//! boundaries coincide with chiplet boundaries. Intermediates inside a
+//! fused kernel never leave the logic die; only AttnOut / FFNOut cross
+//! the package (the two cut points).
+
+use crate::model::OpCost;
+use crate::sim::kernels::{FusedKernel, FusedKind, Placement};
+
+use super::layout::place_op;
+
+/// Fuse an operator list (one phase: encode / prefill / one decode step)
+/// into the Table I kernel schedule. `m_rows` is the activation row count
+/// of the phase (prefill length, or 1 for decode).
+pub fn fuse_ops(ops: &[OpCost], m_rows: usize) -> Vec<FusedKernel> {
+    let mut kernels: Vec<FusedKernel> = Vec::new();
+
+    let mut push = |kind: FusedKind, group: Vec<OpCost>, cut_in: bool, cut_out: bool| {
+        if group.is_empty() {
+            return;
+        }
+        let placement = place_op(&group[0]);
+        debug_assert!(
+            group.iter().all(|o| place_op(o) == placement),
+            "fusion must never span a chiplet boundary ({:?})",
+            kind
+        );
+        let layer = group[0].layer;
+        kernels_push(&mut kernels, FusedKernel {
+            kind,
+            placement,
+            layer,
+            m_rows,
+            ops: group,
+            cut_in,
+            cut_out,
+        });
+    };
+
+    let mut i = 0;
+    while i < ops.len() {
+        let op = &ops[i];
+        match op.name {
+            // Vision encoder block: preprocess + trunk fuse on DRAM.
+            "vision.preprocess" => {
+                let mut group = vec![op.clone()];
+                while i + 1 < ops.len() && ops[i + 1].name.starts_with("vision.") {
+                    i += 1;
+                    group.push(ops[i].clone());
+                }
+                push(FusedKind::VisionBlock, group, false, false);
+            }
+            n if n.starts_with("vision.") => {
+                push(FusedKind::VisionBlock, vec![op.clone()], false, false);
+            }
+            n if n.starts_with("connector.") => {
+                push(FusedKind::ConnectorBlock, vec![op.clone()], false, false);
+            }
+            "embed" => push(FusedKind::Embed, vec![op.clone()], false, false),
+            "norm.attn" => push(FusedKind::FusedNorm, vec![op.clone()], false, false),
+            "qkv_proj" => push(FusedKind::FusedQkvProj, vec![op.clone()], false, false),
+            // FUSED_ATTN_STREAM absorbs the output projection and the
+            // residual add: scores, online softmax, PV accumulate, O-proj,
+            // and the residual all stay in PU shared memory. Its output is
+            // AttnOut — cut point #1.
+            "attn_stream" => {
+                let mut group = vec![op.clone()];
+                while i + 1 < ops.len()
+                    && matches!(ops[i + 1].name, "attn_out_proj" | "residual.attn")
+                {
+                    i += 1;
+                    group.push(ops[i].clone());
+                }
+                push(FusedKind::FusedAttnStream, group, false, true);
+            }
+            // FUSED_FFN_ACT absorbs the pre-FFN norm: AttnOut arrives over
+            // UCIe (cut_in), is normalized in place, chained through both
+            // GEMMs + activation, and FFNOut streams back (cut_out).
+            "norm.ffn" => {
+                let mut group = vec![op.clone()];
+                if i + 1 < ops.len() && ops[i + 1].name == "ffn_act" {
+                    i += 1;
+                    group.push(ops[i].clone());
+                }
+                push(FusedKind::FusedFfnAct, group, true, true);
+            }
+            "ffn_act" => push(FusedKind::FusedFfnAct, vec![op.clone()], true, true),
+            "residual.ffn" => {
+                push(FusedKind::Elementwise, vec![op.clone()], false, false)
+            }
+            // Final norm + unembedding fuse into the LM head GEMV.
+            "norm.final" => {
+                let mut group = vec![op.clone()];
+                if i + 1 < ops.len() && ops[i + 1].name == "lm_head" {
+                    i += 1;
+                    group.push(ops[i].clone());
+                }
+                push(FusedKind::LmHead, group, false, false);
+            }
+            "lm_head" => push(FusedKind::LmHead, vec![op.clone()], false, false),
+            other => panic!("fusion pass: unknown operator {other:?}"),
+        }
+        i += 1;
+    }
+    kernels
+}
+
+fn kernels_push(kernels: &mut Vec<FusedKernel>, k: FusedKernel) {
+    kernels.push(k);
+}
+
+/// Fusion invariants (enforced in tests + proptests):
+/// 1. every kernel's ops share one placement;
+/// 2. cut_in/cut_out appear only on chiplet-boundary kernels;
+/// 3. the kernel sequence alternates chiplets only at cut points.
+pub fn validate(kernels: &[FusedKernel]) -> Result<(), String> {
+    let mut prev_placement: Option<Placement> = None;
+    let mut prev_cut_out = false;
+    for k in kernels {
+        for op in &k.ops {
+            if place_op(op) != k.placement {
+                return Err(format!(
+                    "kernel {:?} contains op {} placed on the other chiplet",
+                    k.kind, op.name
+                ));
+            }
+        }
+        if let Some(p) = prev_placement {
+            if p != k.placement && !(prev_cut_out || k.cut_in) {
+                return Err(format!(
+                    "chiplet switch into {:?} without a cut point",
+                    k.kind
+                ));
+            }
+        }
+        prev_placement = Some(k.placement);
+        prev_cut_out = k.cut_out;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MllmConfig;
+    use crate::model::backbone;
+
+    #[test]
+    fn decode_step_fuses_to_table_i_schedule() {
+        let llm = MllmConfig::fastvlm_0_6b().llm;
+        let ops = backbone::decode_ops(&llm, 50);
+        let kernels = fuse_ops(&ops, 1);
+        validate(&kernels).unwrap();
+        // Per layer: NORM, QKV, ATTN(+proj+res), FFN(+norm), ELEMENTWISE
+        // = 5 kernels; plus EMBED and LM_HEAD.
+        assert_eq!(kernels.len(), 2 + 5 * llm.n_layers);
+        let ffn: Vec<_> = kernels
+            .iter()
+            .filter(|k| k.kind == FusedKind::FusedFfnAct)
+            .collect();
+        assert_eq!(ffn.len(), llm.n_layers);
+        for k in &ffn {
+            assert_eq!(k.placement, Placement::RramChiplet);
+            assert!(k.cut_in && k.cut_out);
+            // The pre-FFN norm was absorbed.
+            assert_eq!(k.ops.len(), 2);
+        }
+    }
+
+    #[test]
+    fn attn_kernel_absorbs_projection_and_residual() {
+        let llm = MllmConfig::tiny().llm;
+        let ops = backbone::decode_ops(&llm, 3);
+        let kernels = fuse_ops(&ops, 1);
+        let attn = kernels
+            .iter()
+            .find(|k| k.kind == FusedKind::FusedAttnStream)
+            .unwrap();
+        let names: Vec<_> = attn.ops.iter().map(|o| o.name).collect();
+        assert_eq!(names, vec!["attn_stream", "attn_out_proj", "residual.attn"]);
+        assert!(attn.cut_out, "AttnOut is cut point #1");
+    }
+
+    #[test]
+    fn exactly_two_cut_points_per_layer() {
+        let llm = MllmConfig::mobilevlm_1_7b().llm;
+        let ops = backbone::decode_ops(&llm, 7);
+        let kernels = fuse_ops(&ops, 1);
+        let cuts_out = kernels.iter().filter(|k| k.cut_out).count();
+        // AttnOut + FFNOut per layer = 2 cut-point producers per layer.
+        assert_eq!(cuts_out, 2 * llm.n_layers);
+    }
+
+    #[test]
+    fn prefill_fusion_carries_m_rows() {
+        let llm = MllmConfig::tiny().llm;
+        let ops = backbone::prefill_ops(&llm, 32);
+        let kernels = fuse_ops(&ops, 32);
+        assert!(kernels.iter().all(|k| k.m_rows == 32));
+        validate(&kernels).unwrap();
+    }
+}

@@ -1,0 +1,191 @@
+//! ❶ Workload-aware data layout (paper §III-C).
+//!
+//! Static placement of model components onto the heterogeneous memories,
+//! governed by the strict two-cut-point dataflow: everything except the
+//! FFN lives with the DRAM chiplet (QKV/O weights, embeddings, encoder +
+//! connector weights, KV cache); FFN weights are resident in RRAM. The
+//! only activations that may cross UCIe are AttnOut and FFNOut.
+
+use crate::config::{ChimeHardware, MllmConfig};
+use crate::model::{OpCost, OpKind, Stage};
+use crate::sim::kernels::Placement;
+use crate::sim::memory::dram::WeightClass;
+
+/// Placement rule for a single operator (the two-cut-point partitioning).
+pub fn place_op(op: &OpCost) -> Placement {
+    match (op.stage, op.name) {
+        // The FFN block (pre-norm + both GEMMs + activation) is the only
+        // RRAM-side work in steady state.
+        (Stage::Backbone, "ffn_act") | (Stage::Backbone, "norm.ffn") => Placement::RramChiplet,
+        // Everything else — attention, norms, projections, encoder,
+        // connector, lm_head, embeddings — executes near DRAM.
+        _ => Placement::DramChiplet,
+    }
+}
+
+/// Static weight-placement plan for one model.
+#[derive(Debug, Clone)]
+pub struct WeightLayout {
+    /// Bytes placed in the M3D DRAM tiers (attention/QKV/O + embeddings +
+    /// encoder + connector).
+    pub dram_weight_bytes: u64,
+    /// DRAM bytes by heat class, in placement-priority order (hottest
+    /// first -> fastest tiers). Sums to `dram_weight_bytes`.
+    pub dram_classes: Vec<(WeightClass, u64)>,
+    /// Bytes resident in M3D RRAM (FFN weights [+ untied lm_head spill]).
+    pub rram_weight_bytes: u64,
+    /// Bytes that fit in neither (0 for all Table II models).
+    pub spill_bytes: u64,
+}
+
+impl WeightLayout {
+    /// Compute the layout for `model` on `hw`. DRAM-side weights are
+    /// packed bottom-up into the fastest tiers; FFN weights go to RRAM.
+    /// If a weight class overflows its home device, it spills to the
+    /// other; only then does `spill_bytes` become nonzero.
+    pub fn plan(model: &MllmConfig, hw: &ChimeHardware) -> WeightLayout {
+        let llm = &model.llm;
+        let attn = llm.n_layers as u64
+            * (llm.attn_weight_bytes_per_layer() + llm.norm_weight_bytes_per_layer());
+        let lm_head = if llm.tied_embeddings { 0 } else { llm.lm_head_bytes() };
+        let embed = llm.embedding_bytes();
+        let visconn = model.vision.weight_bytes() + model.connector.weight_bytes();
+        let mut classes = vec![
+            (WeightClass::Attn, attn),
+            (WeightClass::LmHead, lm_head),
+            (WeightClass::Embed, embed),
+            (WeightClass::VisionConn, visconn),
+        ];
+        let mut dram: u64 = classes.iter().map(|(_, b)| b).sum();
+        let mut rram = llm.ffn_weight_bytes_per_layer() * llm.n_layers as u64;
+
+        let dram_cap = hw.dram.chip_capacity_bytes();
+        let rram_cap = hw.rram.chip_capacity_bytes;
+        let mut spill = 0u64;
+
+        if rram > rram_cap {
+            // FFN overflow migrates back to DRAM (never happens for the
+            // Table II models; guards custom configs).
+            let over = rram - rram_cap;
+            rram = rram_cap;
+            dram += over;
+            classes.insert(1, (WeightClass::Ffn, over));
+        }
+        if dram > dram_cap {
+            let over = dram - dram_cap;
+            dram = dram_cap;
+            let free_rram = rram_cap - rram;
+            let to_rram = over.min(free_rram);
+            rram += to_rram;
+            spill = over - to_rram;
+            // Trim the coldest classes to what actually fits.
+            let mut drop = over;
+            for (_, b) in classes.iter_mut().rev() {
+                let cut = drop.min(*b);
+                *b -= cut;
+                drop -= cut;
+                if drop == 0 { break; }
+            }
+        }
+        classes.retain(|(_, b)| *b > 0);
+        WeightLayout {
+            dram_weight_bytes: dram,
+            dram_classes: classes,
+            rram_weight_bytes: rram,
+            spill_bytes: spill,
+        }
+    }
+
+    /// DRAM-only ablation layout (Fig 9): *all* weights stream from DRAM.
+    /// FFN joins the hot set (it streams every token), placed after the
+    /// attention weights.
+    pub fn plan_dram_only(model: &MllmConfig, hw: &ChimeHardware) -> WeightLayout {
+        let full = Self::plan(model, hw);
+        let ffn = full.rram_weight_bytes;
+        let total = full.dram_weight_bytes + ffn;
+        let dram_cap = hw.dram.chip_capacity_bytes();
+        let dram = total.min(dram_cap);
+        let mut classes = full.dram_classes.clone();
+        classes.insert(1, (WeightClass::Ffn, ffn));
+        // Trim coldest classes to capacity.
+        let mut drop = total.saturating_sub(dram_cap);
+        for (_, b) in classes.iter_mut().rev() {
+            let cut = drop.min(*b);
+            *b -= cut;
+            drop -= cut;
+            if drop == 0 { break; }
+        }
+        classes.retain(|(_, b)| *b > 0);
+        WeightLayout {
+            dram_weight_bytes: dram,
+            dram_classes: classes,
+            rram_weight_bytes: 0,
+            spill_bytes: total - dram,
+        }
+    }
+}
+
+/// Sanity: is this operator allowed to carry weights on its placement?
+/// (KV reads are DRAM/tier business; FFN weights must not stream over
+/// UCIe — that is the whole point of the layout.)
+pub fn placement_consistent(op: &OpCost) -> bool {
+    match place_op(op) {
+        Placement::RramChiplet => op.kind != OpKind::Attention && op.kv_read_bytes == 0,
+        Placement::DramChiplet => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChimeHardware;
+    use crate::model::backbone;
+
+    #[test]
+    fn ffn_goes_to_rram_everything_else_dram() {
+        let llm = MllmConfig::fastvlm_0_6b().llm;
+        let ops = backbone::decode_ops(&llm, 10);
+        for op in &ops {
+            let p = place_op(op);
+            if op.name == "ffn_act" || op.name == "norm.ffn" {
+                assert_eq!(p, Placement::RramChiplet, "{}", op.name);
+            } else {
+                assert_eq!(p, Placement::DramChiplet, "{}", op.name);
+            }
+            assert!(placement_consistent(op), "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn table_ii_models_fit_without_spill() {
+        let hw = ChimeHardware::default();
+        for m in MllmConfig::paper_models() {
+            let l = WeightLayout::plan(&m, &hw);
+            assert_eq!(l.spill_bytes, 0, "{} spills", m.name);
+            assert!(l.rram_weight_bytes <= hw.rram.chip_capacity_bytes);
+            assert!(l.dram_weight_bytes <= hw.dram.chip_capacity_bytes());
+        }
+    }
+
+    #[test]
+    fn ffn_weights_dominate_rram_share() {
+        let hw = ChimeHardware::default();
+        let m = MllmConfig::mobilevlm_3b();
+        let l = WeightLayout::plan(&m, &hw);
+        let ffn = m.llm.ffn_weight_bytes_per_layer() * m.llm.n_layers as u64;
+        assert_eq!(l.rram_weight_bytes, ffn);
+    }
+
+    #[test]
+    fn dram_only_moves_everything() {
+        let hw = ChimeHardware::default();
+        let m = MllmConfig::fastvlm_1_7b();
+        let het = WeightLayout::plan(&m, &hw);
+        let solo = WeightLayout::plan_dram_only(&m, &hw);
+        assert_eq!(solo.rram_weight_bytes, 0);
+        assert_eq!(
+            solo.dram_weight_bytes + solo.spill_bytes,
+            het.dram_weight_bytes + het.rram_weight_bytes
+        );
+    }
+}

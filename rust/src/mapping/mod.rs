@@ -1,0 +1,11 @@
+//! The CHIME mapping framework (paper §III-C): ❶ workload-aware data
+//! layout, ❷ endurance-aware KV-cache tiering, ❸ kernel locality-aware
+//! fusion, composed by the planner into executable schedules.
+
+pub mod fusion;
+pub mod layout;
+pub mod planner;
+pub mod tiering;
+
+pub use layout::WeightLayout;
+pub use planner::Plan;

@@ -1,0 +1,211 @@
+//! End-to-end mapping plan: MLLM + workload -> placed, fused, scheduled
+//! kernel lists for every phase (the mapping framework's output, consumed
+//! by the simulation engine and the coordinator).
+
+use crate::config::{ChimeHardware, MllmConfig, WorkloadConfig};
+use crate::model::workload::{inference_ops, VqaTrace};
+use crate::model::{backbone, OpCost};
+use crate::sim::kernels::FusedKernel;
+
+use super::fusion::{fuse_ops, validate};
+use super::layout::WeightLayout;
+
+/// A reusable decode-step kernel schedule (see `Plan::decode_template`).
+pub struct DecodeTemplate {
+    pub kernels: Vec<FusedKernel>,
+    /// Indices of the position-dependent FUSED_ATTN_STREAM kernels.
+    attn_idx: Vec<usize>,
+}
+
+/// A fully-resolved execution plan for one model on CHIME.
+pub struct Plan {
+    pub model: MllmConfig,
+    pub layout: WeightLayout,
+    pub trace: VqaTrace,
+    /// Encoder + connector kernels (run once per inference).
+    pub encode_kernels: Vec<FusedKernel>,
+    /// Prefill kernels over the full prompt.
+    pub prefill_kernels: Vec<FusedKernel>,
+}
+
+impl Plan {
+    /// Build the plan. Panics only on internal fusion invariant violations
+    /// (validated here so downstream code can trust the schedule).
+    pub fn build(model: &MllmConfig, hw: &ChimeHardware, w: &WorkloadConfig) -> Plan {
+        let trace = VqaTrace::new(model, w);
+        let ops = inference_ops(model, &trace);
+        let encode_kernels = fuse_ops(&ops.encode, model.vision.out_tokens.max(1));
+        let prefill_kernels = fuse_ops(&ops.prefill, trace.prefill_len());
+        validate(&encode_kernels).expect("encode fusion invariant");
+        validate(&prefill_kernels).expect("prefill fusion invariant");
+        Plan {
+            model: model.clone(),
+            layout: WeightLayout::plan(model, hw),
+            trace,
+            encode_kernels,
+            prefill_kernels,
+        }
+    }
+
+    /// DRAM-only ablation plan: same fusion, all weights in DRAM, FFN
+    /// kernels re-placed onto the DRAM chiplet (no second chiplet).
+    pub fn build_dram_only(model: &MllmConfig, hw: &ChimeHardware, w: &WorkloadConfig) -> Plan {
+        let mut plan = Self::build(model, hw, w);
+        plan.layout = WeightLayout::plan_dram_only(model, hw);
+        for k in plan
+            .encode_kernels
+            .iter_mut()
+            .chain(plan.prefill_kernels.iter_mut())
+        {
+            k.placement = crate::sim::kernels::Placement::DramChiplet;
+            k.cut_in = false;
+            k.cut_out = false;
+        }
+        plan
+    }
+
+    /// Kernels for decode step at global position `pos` (prefix pos+1
+    /// after append). Generated on demand — the schedule depends on the
+    /// growing KV prefix.
+    pub fn decode_kernels(&self, pos: usize) -> Vec<FusedKernel> {
+        let ops = backbone::decode_ops(&self.model.llm, pos);
+        fuse_ops(&ops, 1)
+    }
+
+    /// §Perf hot path: a reusable decode-step schedule. Only the
+    /// attention kernels depend on the step position (KV reads, score
+    /// FLOPs, online-softmax work all scale with the kv_len prefix), so
+    /// the template is fused once and `patch_decode_template` updates
+    /// just those fields — avoiding the per-step op-list rebuild + fusion
+    /// pass that dominated the simulator profile (EXPERIMENTS.md §Perf).
+    pub fn decode_template(&self) -> DecodeTemplate {
+        let kernels = self.decode_kernels(0); // kv_len = 1 reference
+        let attn_idx: Vec<usize> = kernels
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.kind == crate::sim::kernels::FusedKind::FusedAttnStream)
+            .map(|(i, _)| i)
+            .collect();
+        DecodeTemplate { kernels, attn_idx }
+    }
+
+    /// DRAM-only variant of the template (Fig 9 ablation).
+    pub fn decode_template_dram_only(&self) -> DecodeTemplate {
+        let mut t = self.decode_template();
+        for k in &mut t.kernels {
+            k.placement = crate::sim::kernels::Placement::DramChiplet;
+            k.cut_in = false;
+            k.cut_out = false;
+        }
+        t
+    }
+
+    /// Re-target a decode template at global position `pos`.
+    pub fn patch_decode_template(&self, t: &mut DecodeTemplate, pos: usize) {
+        let llm = &self.model.llm;
+        let kv_len = pos + 1;
+        let b = llm.bytes_per_param;
+        for &i in &t.attn_idx {
+            let k = &mut t.kernels[i];
+            // ops[0] is the attn_stream op (see fusion::fuse_ops grouping).
+            let op = &mut k.ops[0];
+            debug_assert_eq!(op.name, "attn_stream");
+            op.flops = 2.0 * 2.0 * (llm.n_heads * kv_len * llm.d_head) as f64;
+            op.kv_read_bytes = (2 * kv_len * llm.d_kv() * b) as u64;
+            op.sfpe_elems = (llm.n_heads * kv_len) as u64;
+        }
+    }
+
+    /// DRAM-only variant of a decode step.
+    pub fn decode_kernels_dram_only(&self, pos: usize) -> Vec<FusedKernel> {
+        let mut ks = self.decode_kernels(pos);
+        for k in &mut ks {
+            k.placement = crate::sim::kernels::Placement::DramChiplet;
+            k.cut_in = false;
+            k.cut_out = false;
+        }
+        ks
+    }
+
+    /// Total weight bytes streamed per decode step (roofline sanity).
+    pub fn decode_weight_bytes(&self) -> u64 {
+        self.decode_kernels(self.trace.prefill_len())
+            .iter()
+            .map(|k| k.weight_bytes())
+            .sum()
+    }
+
+    /// All operators of a decode step (for baselines that price raw ops).
+    pub fn decode_raw_ops(&self, pos: usize) -> Vec<OpCost> {
+        backbone::decode_ops(&self.model.llm, pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChimeConfig;
+    use crate::sim::kernels::Placement;
+
+    #[test]
+    fn plan_builds_for_all_models() {
+        let cfg = ChimeConfig::default();
+        for m in MllmConfig::paper_models() {
+            let p = Plan::build(&m, &cfg.hardware, &cfg.workload);
+            assert!(!p.prefill_kernels.is_empty());
+            assert!(!p.encode_kernels.is_empty());
+            assert_eq!(p.layout.spill_bytes, 0);
+            let dk = p.decode_kernels(p.trace.prefill_len());
+            assert!(dk.iter().any(|k| k.placement == Placement::RramChiplet));
+        }
+    }
+
+    #[test]
+    fn dram_only_plan_has_single_placement() {
+        let cfg = ChimeConfig::default();
+        let m = MllmConfig::mobilevlm_3b();
+        let p = Plan::build_dram_only(&m, &cfg.hardware, &cfg.workload);
+        let dk = p.decode_kernels_dram_only(200);
+        assert!(dk.iter().all(|k| k.placement == Placement::DramChiplet));
+        assert!(dk.iter().all(|k| !k.cut_in && !k.cut_out));
+        assert_eq!(p.layout.rram_weight_bytes, 0);
+    }
+
+    #[test]
+    fn template_path_matches_fresh_fusion() {
+        // §Perf regression guard: the patched template must be
+        // numerically identical to rebuilding the schedule from scratch.
+        let cfg = ChimeConfig::default();
+        for m in [MllmConfig::fastvlm_0_6b(), MllmConfig::mobilevlm_3b()] {
+            let p = Plan::build(&m, &cfg.hardware, &cfg.workload);
+            let mut tmpl = p.decode_template();
+            for pos in [p.trace.prefill_len(), p.trace.prefill_len() + 137, 4000] {
+                p.patch_decode_template(&mut tmpl, pos);
+                let fresh = p.decode_kernels(pos);
+                assert_eq!(tmpl.kernels.len(), fresh.len());
+                for (a, b) in tmpl.kernels.iter().zip(&fresh) {
+                    assert_eq!(a.kind, b.kind);
+                    assert_eq!(a.placement, b.placement);
+                    assert_eq!(a.weight_bytes(), b.weight_bytes());
+                    assert_eq!(a.kv_read_bytes(), b.kv_read_bytes());
+                    assert_eq!(a.kv_write_bytes(), b.kv_write_bytes());
+                    assert_eq!(a.sfpe_elems(), b.sfpe_elems());
+                    assert!((a.flops() - b.flops()).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_weight_bytes_match_model_accounting() {
+        let cfg = ChimeConfig::default();
+        let m = MllmConfig::fastvlm_0_6b();
+        let p = Plan::build(&m, &cfg.hardware, &cfg.workload);
+        let llm = &m.llm;
+        let expect = llm.n_layers as u64
+            * (llm.attn_weight_bytes_per_layer() + llm.ffn_weight_bytes_per_layer())
+            + llm.lm_head_bytes()
+            + (llm.d_model * llm.bytes_per_param) as u64;
+        assert_eq!(p.decode_weight_bytes(), expect);
+    }
+}

@@ -1,0 +1,187 @@
+//! Transformer-backbone operator generation (prefill and decode phases).
+//!
+//! Operator order within a layer follows the paper's two-cut-point
+//! dataflow: [norm -> qkv -> attention -> out-proj -> residual] on the
+//! DRAM chiplet, then [norm -> ffn -> residual] on the RRAM chiplet, with
+//! `attn_out` / `ffn_out` the only tensors crossing UCIe.
+
+use crate::config::LlmConfig;
+use crate::model::{gemm_cost, OpCost, OpKind, Stage};
+
+/// Operators for one decoder layer processing `m` query tokens against a
+/// KV prefix of `kv_len` tokens (after this step's append).
+pub fn layer_ops(llm: &LlmConfig, layer: usize, m: usize, kv_len: usize) -> Vec<OpCost> {
+    let b = llm.bytes_per_param;
+    let d = llm.d_model;
+    let dq = llm.d_q();
+    let dkv = llm.d_kv();
+    let mut ops = Vec::with_capacity(9);
+
+    // FUSED_NORM (pre-attention).
+    let mut norm1 = OpCost::new("norm.attn", OpKind::Norm, Stage::Backbone);
+    norm1.sfpe_elems = (m * d) as u64;
+    norm1.act_in_bytes = (m * d * b) as u64;
+    norm1.act_out_bytes = (m * d * b) as u64;
+    ops.push(norm1);
+
+    // FUSED_QKV_PROJ: three GEMMs sharing the x tile.
+    let mut qkv = gemm_cost("qkv_proj", Stage::Backbone, m, d, dq + 2 * dkv, b);
+    qkv.name = "qkv_proj";
+    ops.push(qkv);
+
+    // FUSED_ATTN_STREAM: Q.K^T + online softmax + P.V over the prefix.
+    let mut attn = OpCost::new("attn_stream", OpKind::Attention, Stage::Backbone);
+    // GQA: each of n_heads query heads scans kv_len keys of d_head.
+    attn.flops = 2.0 * 2.0 * (llm.n_heads * m * kv_len * llm.d_head) as f64;
+    attn.kv_read_bytes = (2 * kv_len * dkv * b) as u64; // K and V prefix
+    attn.kv_write_bytes = (m as u64) * llm.kv_bytes_per_token_per_layer();
+    attn.act_in_bytes = (m * dq * b) as u64;
+    attn.act_out_bytes = (m * dq * b) as u64;
+    attn.sfpe_elems = (llm.n_heads * m * kv_len) as u64; // online softmax
+    ops.push(attn);
+
+    // Attention output projection (DRAM side, feeds the cut point).
+    ops.push(gemm_cost("attn_out_proj", Stage::Backbone, m, dq, d, b));
+
+    // Residual add (SFPE). Its output IS AttnOut — the tensor that crosses
+    // cut point #1 — so it carries the hidden-state activation bytes.
+    let mut res1 = OpCost::new("residual.attn", OpKind::Elementwise, Stage::Backbone);
+    res1.sfpe_elems = (m * d) as u64;
+    res1.act_in_bytes = (2 * m * d * b) as u64;
+    res1.act_out_bytes = (m * d * b) as u64;
+    ops.push(res1);
+
+    // FUSED_NORM (pre-FFN). Placed with the FFN on the RRAM side so only
+    // attn_out crosses the link (the norm consumes it in place).
+    let mut norm2 = OpCost::new("norm.ffn", OpKind::Norm, Stage::Backbone);
+    norm2.sfpe_elems = (m * d) as u64;
+    norm2.act_in_bytes = (m * d * b) as u64;
+    norm2.act_out_bytes = (m * d * b) as u64;
+    ops.push(norm2);
+
+    // FUSED_FFN_ACT: all ffn matrices chained in one fused kernel
+    // (gate/up/down for SwiGLU; up/down for GELU MLP).
+    let mut ffn = OpCost::new("ffn_act", OpKind::Gemm, Stage::Backbone);
+    ffn.flops = 2.0 * (llm.ffn_matrices * m * d * llm.d_ffn) as f64;
+    ffn.weight_bytes = llm.ffn_weight_bytes_per_layer();
+    ffn.act_in_bytes = (m * d * b) as u64;
+    ffn.act_out_bytes = (m * d * b) as u64;
+    ffn.sfpe_elems = (m * llm.d_ffn) as u64; // activation function
+    ops.push(ffn);
+
+    // Residual add (back on the DRAM side after FFNOut returns).
+    let mut res2 = OpCost::new("residual.ffn", OpKind::Elementwise, Stage::Backbone);
+    res2.sfpe_elems = (m * d) as u64;
+    res2.act_in_bytes = (2 * m * d * b) as u64;
+    res2.act_out_bytes = (m * d * b) as u64;
+    ops.push(res2);
+
+    for op in &mut ops {
+        op.layer = Some(layer);
+    }
+    ops
+}
+
+/// Final norm + unembedding GEMV producing logits for `m` positions
+/// (decode: m = 1; prefill prices only the last position's logits).
+pub fn lm_head_ops(llm: &LlmConfig, m: usize) -> Vec<OpCost> {
+    let b = llm.bytes_per_param;
+    let mut norm = OpCost::new("norm.final", OpKind::Norm, Stage::LmHead);
+    norm.sfpe_elems = (m * llm.d_model) as u64;
+    let mut head = gemm_cost("lm_head", Stage::LmHead, m, llm.d_model, llm.vocab, b);
+    head.stage = Stage::LmHead;
+    vec![norm, head]
+}
+
+/// Token-embedding gather for `m` tokens.
+pub fn embed_ops(llm: &LlmConfig, m: usize) -> Vec<OpCost> {
+    let b = llm.bytes_per_param;
+    let mut emb = OpCost::new("embed", OpKind::Embed, Stage::Backbone);
+    emb.weight_bytes = (m * llm.d_model * b) as u64; // m rows gathered
+    emb.act_out_bytes = (m * llm.d_model * b) as u64;
+    vec![emb]
+}
+
+/// All backbone ops for a prefill over `s` tokens (KV appended for all s).
+pub fn prefill_ops(llm: &LlmConfig, s: usize) -> Vec<OpCost> {
+    let mut ops = embed_ops(llm, s);
+    for l in 0..llm.n_layers {
+        ops.extend(layer_ops(llm, l, s, s));
+    }
+    ops.extend(lm_head_ops(llm, 1));
+    ops
+}
+
+/// All backbone ops for one decode step at position `pos` (0-indexed
+/// global position; the KV prefix after append is pos + 1).
+pub fn decode_ops(llm: &LlmConfig, pos: usize) -> Vec<OpCost> {
+    let mut ops = embed_ops(llm, 1);
+    for l in 0..llm.n_layers {
+        ops.extend(layer_ops(llm, l, 1, pos + 1));
+    }
+    ops.extend(lm_head_ops(llm, 1));
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MllmConfig;
+
+    #[test]
+    fn decode_streams_all_weights_once() {
+        let llm = MllmConfig::mobilevlm_3b().llm;
+        let ops = decode_ops(&llm, 100);
+        let weight_bytes: u64 = ops.iter().map(|o| o.weight_bytes).sum();
+        // Every backbone weight + lm_head + 1 embedding row must stream.
+        let expect = llm.n_layers as u64
+            * (llm.attn_weight_bytes_per_layer() + llm.ffn_weight_bytes_per_layer())
+            + llm.lm_head_bytes()
+            + (llm.d_model * llm.bytes_per_param) as u64;
+        assert_eq!(weight_bytes, expect);
+    }
+
+    #[test]
+    fn decode_kv_traffic_grows_with_position() {
+        let llm = MllmConfig::fastvlm_0_6b().llm;
+        let kv_at = |pos: usize| -> u64 {
+            decode_ops(&llm, pos).iter().map(|o| o.kv_read_bytes).sum()
+        };
+        assert!(kv_at(1000) > kv_at(100));
+        // Linear in prefix length (pos+1).
+        let a = kv_at(99);
+        let b = kv_at(199);
+        assert_eq!(b * 100, a * 200);
+    }
+
+    #[test]
+    fn prefill_flops_quadratic_in_attention() {
+        let llm = MllmConfig::fastvlm_0_6b().llm;
+        let attn_flops = |s: usize| -> f64 {
+            prefill_ops(&llm, s)
+                .iter()
+                .filter(|o| o.kind == OpKind::Attention)
+                .map(|o| o.flops)
+                .sum()
+        };
+        let f1 = attn_flops(128);
+        let f2 = attn_flops(256);
+        assert!((f2 / f1 - 4.0).abs() < 0.01, "ratio {}", f2 / f1);
+    }
+
+    #[test]
+    fn every_step_appends_kv_once_per_layer() {
+        let llm = MllmConfig::fastvlm_1_7b().llm;
+        let ops = decode_ops(&llm, 10);
+        let writes: u64 = ops.iter().map(|o| o.kv_write_bytes).sum();
+        assert_eq!(writes, llm.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn layer_indices_assigned() {
+        let llm = MllmConfig::tiny().llm;
+        let ops = decode_ops(&llm, 5);
+        let max_layer = ops.iter().filter_map(|o| o.layer).max().unwrap();
+        assert_eq!(max_layer, llm.n_layers - 1);
+    }
+}

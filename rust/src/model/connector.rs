@@ -1,0 +1,56 @@
+//! Connector operator generation (paper Fig 5(a)): projects visual
+//! features into the language domain, producing pseudo tokens.
+
+use crate::config::{Connector, ConnectorKind};
+use crate::model::{OpCost, OpKind, Stage};
+
+/// Operators for projecting `in_tokens` visual features through the
+/// connector. Runs on the DRAM chiplet (latency-critical, small).
+pub fn connector_ops(conn: &Connector, in_tokens: usize, d_llm: usize) -> Vec<OpCost> {
+    let mut ops = Vec::new();
+
+    let mut proj = OpCost::new(
+        match conn.kind {
+            ConnectorKind::Mlp => "connector.mlp",
+            ConnectorKind::Ldp => "connector.ldp",
+            ConnectorKind::CrossAttn => "connector.cross_attn",
+        },
+        match conn.kind {
+            ConnectorKind::CrossAttn => OpKind::Attention,
+            _ => OpKind::Gemm,
+        },
+        Stage::Connector,
+    );
+    proj.flops = conn.gflops * 1e9;
+    proj.weight_bytes = conn.weight_bytes();
+    proj.act_in_bytes = (in_tokens * d_llm * 2) as u64;
+    proj.act_out_bytes = (conn.out_tokens * d_llm * 2) as u64;
+    // LDP's depthwise convs + the downsample are elementwise-heavy.
+    proj.sfpe_elems = match conn.kind {
+        ConnectorKind::Ldp => (in_tokens * d_llm * 4) as u64,
+        _ => (conn.out_tokens * d_llm) as u64,
+    };
+    ops.push(proj);
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MllmConfig;
+
+    #[test]
+    fn ldp_downsamples_tokens() {
+        let m = MllmConfig::mobilevlm_1_7b();
+        let ops = connector_ops(&m.connector, m.vision.out_tokens, m.llm.d_model);
+        let out = ops.last().unwrap().act_out_bytes;
+        let inp = ops.last().unwrap().act_in_bytes;
+        assert!(out < inp, "LDP must reduce token volume");
+    }
+
+    #[test]
+    fn mlp_preserves_tokens() {
+        let m = MllmConfig::fastvlm_0_6b();
+        assert_eq!(m.connector.out_tokens, m.vision.out_tokens);
+    }
+}

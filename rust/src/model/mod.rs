@@ -1,0 +1,119 @@
+//! Operator-level MLLM workload model.
+//!
+//! The simulator prices *operators* (GEMM / streaming attention / norm /
+//! elementwise), each annotated with FLOPs and byte traffic by source
+//! (weights, KV cache, activations). The mapping framework then places
+//! operators on chiplets and fuses them into the paper's Table I kernels;
+//! the chiplet models turn (FLOPs, bytes, placement) into time and energy.
+
+pub mod backbone;
+pub mod connector;
+pub mod vision;
+pub mod workload;
+
+/// Operator class — determines which execution unit prices it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matmul (weight-stationary GEMM/GEMV on PEs).
+    Gemm,
+    /// Streaming attention over the KV cache (PE-SFPE pipeline).
+    Attention,
+    /// LayerNorm/RMSNorm (SFPE reduce-normalize-scale-shift).
+    Norm,
+    /// Residual adds, activation glue (SFPE elementwise).
+    Elementwise,
+    /// Embedding-row gather (single row stream).
+    Embed,
+}
+
+/// Pipeline stage an operator belongs to (used for Fig 1 breakdowns and
+/// the mapping framework's workload-aware layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    VisionEncoder,
+    Connector,
+    Backbone,
+    LmHead,
+}
+
+/// One operator's resource footprint.
+#[derive(Debug, Clone)]
+pub struct OpCost {
+    pub name: &'static str,
+    pub kind: OpKind,
+    pub stage: Stage,
+    /// Which backbone layer (for per-layer scheduling); None outside layers.
+    pub layer: Option<usize>,
+    /// Multiply-accumulate work, in FLOPs (2 * MACs).
+    pub flops: f64,
+    /// Weight bytes that must stream from the weight store.
+    pub weight_bytes: u64,
+    /// KV-cache bytes read (attention over the valid prefix).
+    pub kv_read_bytes: u64,
+    /// KV-cache bytes appended this step.
+    pub kv_write_bytes: u64,
+    /// Activation bytes consumed / produced at the operator boundary.
+    pub act_in_bytes: u64,
+    pub act_out_bytes: u64,
+    /// Elementwise/SFPE element count (softmax, norms, residuals).
+    pub sfpe_elems: u64,
+}
+
+impl OpCost {
+    pub fn new(name: &'static str, kind: OpKind, stage: Stage) -> Self {
+        OpCost {
+            name,
+            kind,
+            stage,
+            layer: None,
+            flops: 0.0,
+            weight_bytes: 0,
+            kv_read_bytes: 0,
+            kv_write_bytes: 0,
+            act_in_bytes: 0,
+            act_out_bytes: 0,
+            sfpe_elems: 0,
+        }
+    }
+
+    /// Total bytes the operator moves (for roofline-style baselines).
+    pub fn total_bytes(&self) -> u64 {
+        self.weight_bytes
+            + self.kv_read_bytes
+            + self.kv_write_bytes
+            + self.act_in_bytes
+            + self.act_out_bytes
+    }
+}
+
+/// A GEMM helper: y[m,n] = x[m,k] @ w[k,n], FP16 weights.
+pub fn gemm_cost(
+    name: &'static str,
+    stage: Stage,
+    m: usize,
+    k: usize,
+    n: usize,
+    bytes_per_param: usize,
+) -> OpCost {
+    let mut op = OpCost::new(name, OpKind::Gemm, stage);
+    op.flops = 2.0 * m as f64 * k as f64 * n as f64;
+    op.weight_bytes = (k * n * bytes_per_param) as u64;
+    op.act_in_bytes = (m * k * bytes_per_param) as u64;
+    op.act_out_bytes = (m * n * bytes_per_param) as u64;
+    op
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_cost_accounting() {
+        let op = gemm_cost("t", Stage::Backbone, 4, 8, 16, 2);
+        assert_eq!(op.flops, 2.0 * 4.0 * 8.0 * 16.0);
+        assert_eq!(op.weight_bytes, 8 * 16 * 2);
+        assert_eq!(op.act_in_bytes, 4 * 8 * 2);
+        assert_eq!(op.act_out_bytes, 4 * 16 * 2);
+        assert_eq!(op.total_bytes(), (8 * 16 + 4 * 8 + 4 * 16) as u64 * 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! VQA workload/trace generation (paper §IV-A1: 512x512 image + 128 text
+//! tokens in, 488 output tokens by default) plus request-stream generation
+//! for the serving coordinator.
+
+use crate::config::{MllmConfig, WorkloadConfig};
+use crate::model::{backbone, connector, vision, OpCost};
+use crate::util::Prng;
+
+/// A single VQA inference, resolved against a model (token accounting).
+#[derive(Debug, Clone)]
+pub struct VqaTrace {
+    pub model_name: String,
+    pub image_size: usize,
+    pub text_tokens: usize,
+    pub visual_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl VqaTrace {
+    pub fn new(model: &MllmConfig, w: &WorkloadConfig) -> Self {
+        VqaTrace {
+            model_name: model.name.clone(),
+            image_size: w.image_size,
+            text_tokens: w.text_tokens,
+            visual_tokens: model.visual_tokens(),
+            output_tokens: w.output_tokens,
+        }
+    }
+
+    /// Prompt length entering prefill (pseudo tokens + text tokens).
+    pub fn prefill_len(&self) -> usize {
+        self.visual_tokens + self.text_tokens
+    }
+
+    /// Final context length after generation.
+    pub fn final_len(&self) -> usize {
+        self.prefill_len() + self.output_tokens
+    }
+}
+
+/// The full operator trace for one inference: encoder + connector ops,
+/// prefill ops, then one op-list per decode step.
+pub struct InferenceOps {
+    pub encode: Vec<OpCost>,
+    pub prefill: Vec<OpCost>,
+    /// decode[i] = ops for generating output token i (position = prefill+i).
+    pub decode: Vec<Vec<OpCost>>,
+}
+
+/// Expand a trace into operator lists (the simulator's input).
+pub fn inference_ops(model: &MllmConfig, trace: &VqaTrace) -> InferenceOps {
+    let mut encode = vision::encoder_ops(&model.vision, trace.image_size);
+    encode.extend(connector::connector_ops(
+        &model.connector,
+        model.vision.out_tokens,
+        model.llm.d_model,
+    ));
+    let prefill = backbone::prefill_ops(&model.llm, trace.prefill_len());
+    let decode = (0..trace.output_tokens)
+        .map(|i| backbone::decode_ops(&model.llm, trace.prefill_len() + i))
+        .collect();
+    InferenceOps { encode, prefill, decode }
+}
+
+/// One serving request (functional path: drives the PJRT engine; timing
+/// path: drives the simulator through the same coordinator).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset (ns from stream start).
+    pub arrival_ns: f64,
+    /// Prompt token ids (functional path uses real ids; timing path uses
+    /// only the length).
+    pub prompt: Vec<i32>,
+    /// Image seed (functional path synthesizes a deterministic image).
+    pub image_seed: u64,
+    /// Requested output tokens.
+    pub max_new_tokens: usize,
+}
+
+/// Poisson request-stream generator for serving experiments.
+pub struct RequestStream {
+    prng: Prng,
+    next_id: u64,
+    clock_ns: f64,
+    rate_per_s: f64,
+    prompt_len: usize,
+    max_new_tokens: usize,
+    vocab: usize,
+}
+
+impl RequestStream {
+    pub fn new(seed: u64, rate_per_s: f64, prompt_len: usize, max_new_tokens: usize,
+               vocab: usize) -> Self {
+        RequestStream {
+            prng: Prng::new(seed),
+            next_id: 0,
+            clock_ns: 0.0,
+            rate_per_s,
+            prompt_len,
+            max_new_tokens,
+            vocab,
+        }
+    }
+
+    /// Generate the next request (exponential inter-arrival).
+    pub fn next_request(&mut self) -> Request {
+        self.clock_ns += self.prng.exponential(self.rate_per_s) * 1e9;
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt = (0..self.prompt_len)
+            .map(|_| self.prng.range(0, self.vocab) as i32)
+            .collect();
+        Request {
+            id,
+            arrival_ns: self.clock_ns,
+            prompt,
+            image_seed: self.prng.next_u64(),
+            max_new_tokens: self.max_new_tokens,
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn trace_token_accounting() {
+        let m = MllmConfig::fastvlm_0_6b();
+        let t = VqaTrace::new(&m, &WorkloadConfig::default());
+        assert_eq!(t.prefill_len(), 64 + 128);
+        assert_eq!(t.final_len(), 64 + 128 + 488);
+    }
+
+    #[test]
+    fn inference_ops_shape() {
+        let m = MllmConfig::tiny();
+        let w = WorkloadConfig { image_size: 16, text_tokens: 16, output_tokens: 4 };
+        let t = VqaTrace::new(&m, &w);
+        let ops = inference_ops(&m, &t);
+        assert!(!ops.encode.is_empty());
+        assert!(!ops.prefill.is_empty());
+        assert_eq!(ops.decode.len(), 4);
+        // Later decode steps scan longer KV prefixes.
+        let kv = |step: &Vec<OpCost>| -> u64 { step.iter().map(|o| o.kv_read_bytes).sum() };
+        assert!(kv(&ops.decode[3]) > kv(&ops.decode[0]));
+    }
+
+    #[test]
+    fn request_stream_deterministic_and_monotone() {
+        let mut a = RequestStream::new(9, 100.0, 16, 8, 256);
+        let mut b = RequestStream::new(9, 100.0, 16, 8, 256);
+        let ra = a.take(20);
+        let rb = b.take(20);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.arrival_ns, y.arrival_ns);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        for w in ra.windows(2) {
+            assert!(w[1].arrival_ns >= w[0].arrival_ns);
+        }
+    }
+
+    #[test]
+    fn request_rate_roughly_matches() {
+        let mut s = RequestStream::new(1, 50.0, 4, 4, 256);
+        let reqs = s.take(2000);
+        let span_s = reqs.last().unwrap().arrival_ns / 1e9;
+        let rate = 2000.0 / span_s;
+        assert!((rate - 50.0).abs() < 5.0, "rate {rate}");
+    }
+}

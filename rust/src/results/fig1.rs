@@ -1,0 +1,101 @@
+//! Fig 1(b): MLLM execution-time breakdown by stage (encoder / connector /
+//! backbone) and Fig 1(c): backbone op-class breakdown, both on the GPU
+//! baseline (the paper's motivation profile).
+//!
+//! Paper claims: backbone 85.4–95.7% of time across connectors; within
+//! the backbone, MHA 44%, FFN 29.36%, elementwise 26.41%.
+
+use crate::baselines::jetson;
+use crate::config::{JetsonSpec, MllmConfig, WorkloadConfig};
+use crate::model::Stage;
+use crate::util::{table, Json, Table};
+
+use super::Experiment;
+
+pub fn run() -> Experiment {
+    let w = WorkloadConfig::default();
+    let spec = JetsonSpec::default();
+
+    let mut t = Table::new(
+        "Fig 1(b) — execution-time breakdown by stage (GPU baseline)",
+        &["model", "encoder", "connector", "backbone"],
+    );
+    let mut rows = Vec::new();
+    for m in MllmConfig::paper_models() {
+        let b = jetson::stage_breakdown(&m, &w, &spec);
+        let get = |s: Stage| b.iter().find(|(x, _)| *x == s).map(|(_, f)| *f).unwrap_or(0.0);
+        t.row(vec![
+            m.name.clone(),
+            table::pct(get(Stage::VisionEncoder)),
+            table::pct(get(Stage::Connector)),
+            table::pct(get(Stage::Backbone)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("model", m.name.as_str().into()),
+            ("encoder", get(Stage::VisionEncoder).into()),
+            ("connector", get(Stage::Connector).into()),
+            ("backbone", get(Stage::Backbone).into()),
+        ]));
+    }
+
+    // Fig 1(c): decode-time op breakdown on a GPT-2-class backbone.
+    let m = MllmConfig::mobilevlm_1_7b();
+    let stats = jetson::run(&m, &w, &spec);
+    let total: f64 = stats.decode_breakdown.iter().map(|(_, ns)| ns).sum();
+    let mut t2 = Table::new(
+        "Fig 1(c) — backbone op-class breakdown (GPU decode)",
+        &["op class", "share"],
+    );
+    let mut ops = Vec::new();
+    for (label, ns) in &stats.decode_breakdown {
+        t2.row(vec![label.to_string(), table::pct(ns / total)]);
+        ops.push(Json::obj(vec![
+            ("op", (*label).into()),
+            ("share", (ns / total).into()),
+        ]));
+    }
+
+    let text = format!("{}\n{}", t.render(), t2.render());
+    Experiment {
+        id: "fig1",
+        text,
+        json: Json::obj(vec![
+            ("stages", Json::Arr(rows)),
+            ("backbone_ops", Json::Arr(ops)),
+            ("paper", Json::obj(vec![
+                ("backbone_share", "85.4-95.7%".into()),
+                ("mha", (0.44).into()),
+                ("ffn", (0.2936).into()),
+                ("elementwise", (0.2641).into()),
+            ])),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backbone_dominates() {
+        let e = run();
+        for row in e.json.get("stages").as_arr().unwrap() {
+            let b = row.get("backbone").as_f64().unwrap();
+            assert!(b > 0.8, "backbone share {b}");
+        }
+    }
+
+    #[test]
+    fn op_shares_sum_to_one() {
+        let e = run();
+        let total: f64 = e
+            .json
+            .get("backbone_ops")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|o| o.get("share").as_f64().unwrap())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,135 @@
+//! Fig 6: CHIME vs Jetson Orin NX across the four Table II models.
+//! (a) speedup + energy-efficiency gain; (b) throughput (TPS) + power.
+//!
+//! Paper claims: ~41x mean speedup (31–54x), ~185x mean energy gain
+//! (113–246x); CHIME 233–533 TPS @ ~2 W vs Jetson 7–11 TPS.
+
+use crate::baselines::jetson;
+use crate::config::{ChimeConfig, JetsonSpec, MllmConfig};
+use crate::sim;
+use crate::util::{table, Json, Table};
+
+use super::Experiment;
+
+pub struct Fig6Row {
+    pub model: String,
+    pub chime_tps: f64,
+    pub chime_tok_per_j: f64,
+    pub chime_power_w: f64,
+    pub jetson_tps: f64,
+    pub jetson_tok_per_j: f64,
+    pub jetson_power_w: f64,
+    pub speedup: f64,
+    pub energy_gain: f64,
+}
+
+pub fn compute() -> Vec<Fig6Row> {
+    let cfg = ChimeConfig::default();
+    let spec = JetsonSpec::default();
+    MllmConfig::paper_models()
+        .iter()
+        .map(|m| {
+            let c = sim::simulate(m, &cfg);
+            let j = jetson::run(m, &cfg.workload, &spec);
+            Fig6Row {
+                model: m.name.clone(),
+                chime_tps: c.tokens_per_s(),
+                chime_tok_per_j: c.tokens_per_j(),
+                chime_power_w: c.avg_power_w(),
+                jetson_tps: j.tokens_per_s(),
+                jetson_tok_per_j: j.tokens_per_j(),
+                jetson_power_w: j.avg_power_w,
+                speedup: c.tokens_per_s() / j.tokens_per_s(),
+                energy_gain: c.tokens_per_j() / j.tokens_per_j(),
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Experiment {
+    let rows = compute();
+    let mut t = Table::new(
+        "Fig 6 — CHIME vs Jetson Orin NX (default VQA: 512x512, 128 in, 488 out)",
+        &["model", "chime TPS", "jetson TPS", "speedup", "chime tok/J",
+          "jetson tok/J", "energy gain", "chime W", "jetson W"],
+    );
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            table::f(r.chime_tps, 1),
+            table::f(r.jetson_tps, 1),
+            table::x(r.speedup),
+            table::f(r.chime_tok_per_j, 1),
+            table::f(r.jetson_tok_per_j, 2),
+            table::x(r.energy_gain),
+            table::f(r.chime_power_w, 2),
+            table::f(r.jetson_power_w, 1),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", r.model.as_str().into()),
+            ("chime_tps", r.chime_tps.into()),
+            ("jetson_tps", r.jetson_tps.into()),
+            ("speedup", r.speedup.into()),
+            ("chime_tok_per_j", r.chime_tok_per_j.into()),
+            ("jetson_tok_per_j", r.jetson_tok_per_j.into()),
+            ("energy_gain", r.energy_gain.into()),
+            ("chime_power_w", r.chime_power_w.into()),
+        ]));
+    }
+    let mean_speedup = rows.iter().map(|r| r.speedup).sum::<f64>() / rows.len() as f64;
+    let mean_gain = rows.iter().map(|r| r.energy_gain).sum::<f64>() / rows.len() as f64;
+    let summary = format!(
+        "mean speedup {:.1}x (paper ~41x, 31-54x); mean energy gain {:.1}x (paper ~185x, 113-246x)",
+        mean_speedup, mean_gain
+    );
+    Experiment {
+        id: "fig6",
+        text: format!("{}\n{}\n", t.render(), summary),
+        json: Json::obj(vec![
+            ("rows", Json::Arr(json_rows)),
+            ("mean_speedup", mean_speedup.into()),
+            ("mean_energy_gain", mean_gain.into()),
+            ("paper", Json::obj(vec![
+                ("speedup_range", "31-54x".into()),
+                ("energy_range", "113-246x".into()),
+                ("chime_tps_range", "233-533".into()),
+                ("jetson_tps_range", "7.4-11".into()),
+            ])),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedups_in_paper_ballpark() {
+        for r in compute() {
+            assert!(
+                (15.0..80.0).contains(&r.speedup),
+                "{}: speedup {} out of shape",
+                r.model,
+                r.speedup
+            );
+            assert!(r.energy_gain > 50.0, "{}: gain {}", r.model, r.energy_gain);
+        }
+    }
+
+    #[test]
+    fn smaller_family_member_gains_more() {
+        // Paper: "gains are larger for the smaller variants in each family".
+        let rows = compute();
+        let get = |n: &str| rows.iter().find(|r| r.model == n).unwrap().speedup;
+        assert!(get("fastvlm-0.6b") > get("fastvlm-1.7b"));
+        assert!(get("mobilevlm-1.7b") > get("mobilevlm-3b"));
+    }
+
+    #[test]
+    fn chime_power_in_edge_envelope() {
+        for r in compute() {
+            assert!(r.chime_power_w < 4.0, "{}: {} W", r.model, r.chime_power_w);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Fig 7: CHIME logic-die area breakdown (a: DRAM die, b: RRAM die) and
+//! power breakdown (c: FastVLM 0.6B, d: MobileVLM 1.7B).
+//!
+//! Paper claims: DRAM die — peripherals 51.5%, UCIe PHY 22.3%, PUs 26.2%;
+//! RRAM die — PU share 34.0%; power — RRAM dominates (it runs the FFN),
+//! UCIe ~1 W, power stable across models.
+
+use crate::config::{ChimeConfig, MllmConfig};
+use crate::sim;
+use crate::sim::energy::Component;
+use crate::util::{table, Json, Table};
+
+use super::Experiment;
+
+pub fn run() -> Experiment {
+    let cfg = ChimeConfig::default();
+    let area = &cfg.hardware.area;
+
+    // (a)/(b) Area breakdowns are design constants (Synopsys synthesis in
+    // the paper; Table-derived constants here).
+    let mut ta = Table::new(
+        "Fig 7(a) — M3D DRAM logic-die area breakdown",
+        &["block", "share", "mm2"],
+    );
+    let dram_total = area.dram_logic_die_mm2;
+    for (name, frac) in [
+        ("peripherals", area.dram_peripheral_frac),
+        ("UCIe PHY", area.dram_ucie_frac),
+        ("PUs", area.dram_pu_frac),
+    ] {
+        ta.row(vec![name.into(), table::pct(frac), table::f(dram_total * frac, 2)]);
+    }
+    let mut tb = Table::new(
+        "Fig 7(b) — M3D RRAM logic-die area breakdown",
+        &["block", "share", "mm2"],
+    );
+    let rram_total = area.rram_logic_die_mm2;
+    let rram_pu = area.rram_pu_frac;
+    let rram_ucie = area.dram_ucie_frac * dram_total / rram_total; // same PHY macro
+    let rram_periph = 1.0 - rram_pu - rram_ucie;
+    for (name, frac) in [
+        ("peripherals", rram_periph),
+        ("UCIe PHY", rram_ucie),
+        ("PUs", rram_pu),
+    ] {
+        tb.row(vec![name.into(), table::pct(frac), table::f(rram_total * frac, 2)]);
+    }
+
+    // (c)/(d) Power breakdowns from the simulator's energy ledger.
+    let mut power_rows = Vec::new();
+    let mut text = format!("{}\n{}", ta.render(), tb.render());
+    for (fig, model) in [("c", MllmConfig::fastvlm_0_6b()), ("d", MllmConfig::mobilevlm_1_7b())] {
+        let stats = sim::simulate(&model, &cfg);
+        let ledger = stats.energy();
+        let time_ns = stats.total_time_ns();
+        let mut t = Table::new(
+            &format!("Fig 7({fig}) — power breakdown, {}", model.name),
+            &["component", "avg W", "share"],
+        );
+        let total_w = ledger.avg_power_w(time_ns);
+        let mut comps = Vec::new();
+        for (c, frac) in ledger.breakdown() {
+            let w = total_w * frac;
+            t.row(vec![c.name().into(), table::f(w, 3), table::pct(frac)]);
+            comps.push(Json::obj(vec![
+                ("component", c.name().into()),
+                ("watts", w.into()),
+                ("share", frac.into()),
+            ]));
+        }
+        t.row(vec!["TOTAL".into(), table::f(total_w, 3), table::pct(1.0)]);
+        text.push_str(&format!("\n{}", t.render()));
+        power_rows.push(Json::obj(vec![
+            ("model", model.name.as_str().into()),
+            ("total_w", total_w.into()),
+            ("components", Json::Arr(comps)),
+            ("rram_share",
+             (ledger.get(Component::RramArray) + ledger.get(Component::RramNmp))
+                 .map_share(&ledger)),
+        ]));
+    }
+
+    Experiment {
+        id: "fig7",
+        text,
+        json: Json::obj(vec![
+            ("area_dram", Json::obj(vec![
+                ("peripherals", area.dram_peripheral_frac.into()),
+                ("ucie", area.dram_ucie_frac.into()),
+                ("pus", area.dram_pu_frac.into()),
+            ])),
+            ("area_rram_pu_share", rram_pu.into()),
+            ("power", Json::Arr(power_rows)),
+            ("paper", Json::obj(vec![
+                ("dram_peripheral", (0.515).into()),
+                ("dram_ucie", (0.223).into()),
+                ("dram_pu", (0.262).into()),
+                ("rram_pu", (0.34).into()),
+                ("ucie_power_w", (1.0).into()),
+            ])),
+        ]),
+    }
+}
+
+// Small helper: share of total as Json.
+trait ShareExt {
+    fn map_share(self, ledger: &crate::sim::energy::EnergyLedger) -> Json;
+}
+impl ShareExt for f64 {
+    fn map_share(self, ledger: &crate::sim::energy::EnergyLedger) -> Json {
+        Json::Num(self / ledger.total_pj().max(1e-30))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_fractions_match_paper_constants() {
+        let e = run();
+        let a = e.json.get("area_dram");
+        assert!((a.get("peripherals").as_f64().unwrap() - 0.515).abs() < 1e-9);
+        assert!((a.get("ucie").as_f64().unwrap() - 0.223).abs() < 1e-9);
+        assert!((a.get("pus").as_f64().unwrap() - 0.262).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_stable_across_models() {
+        // Paper: "power stays stable across models".
+        let e = run();
+        let p = e.json.get("power").as_arr().unwrap();
+        let w0 = p[0].get("total_w").as_f64().unwrap();
+        let w1 = p[1].get("total_w").as_f64().unwrap();
+        assert!((w0 / w1 - 1.0).abs() < 0.5, "power {w0} vs {w1} not stable");
+    }
+
+    #[test]
+    fn rram_side_dominates_power() {
+        // Paper: "RRAM dominates because it runs the data-intensive FFN".
+        let e = run();
+        for model in e.json.get("power").as_arr().unwrap() {
+            let share = model.get("rram_share").as_f64().unwrap();
+            let comps = model.get("components").as_arr().unwrap();
+            let dram_share: f64 = comps
+                .iter()
+                .filter(|c| c.get("component").as_str().unwrap().starts_with("dram"))
+                .map(|c| c.get("share").as_f64().unwrap())
+                .sum();
+            assert!(share > dram_share, "rram {share} <= dram {dram_share}");
+        }
+    }
+}

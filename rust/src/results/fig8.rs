@@ -1,0 +1,139 @@
+//! Fig 8: sequence-length sensitivity — latency (a) and energy per
+//! inference (b) as text length grows 128 -> 4k tokens.
+//!
+//! Paper claims: both grow roughly linearly (about an order of magnitude
+//! from 128 to 4k); larger models have steeper slopes; gaps narrow at
+//! short contexts (encoder/connector amortization) and widen at long
+//! contexts (decode dominates).
+
+use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+use crate::sim;
+use crate::util::{table, Json, Table};
+
+use super::Experiment;
+
+pub const LENGTHS: [usize; 6] = [128, 256, 512, 1024, 2048, 4096];
+
+pub struct SweepPoint {
+    pub model: String,
+    pub text_len: usize,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub kv_offloaded_mb: f64,
+}
+
+pub fn compute() -> Vec<SweepPoint> {
+    let cfg = ChimeConfig::default();
+    let mut out = Vec::new();
+    for m in MllmConfig::paper_models() {
+        for &len in &LENGTHS {
+            let w = WorkloadConfig {
+                image_size: cfg.workload.image_size,
+                text_tokens: len,
+                output_tokens: cfg.workload.output_tokens,
+            };
+            let s = sim::simulate_with_workload(&m, &cfg, &w);
+            out.push(SweepPoint {
+                model: m.name.clone(),
+                text_len: len,
+                latency_ms: s.total_time_ns() / 1e6,
+                energy_j: s.total_energy_j(),
+                kv_offloaded_mb: s.kv_offloaded_bytes as f64 / 1e6,
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Experiment {
+    let points = compute();
+    let mut t = Table::new(
+        "Fig 8 — sequence-length sensitivity (128 -> 4k text tokens, 488 out)",
+        &["model", "text len", "latency (ms)", "energy (J)", "KV offloaded (MB)"],
+    );
+    let mut json_rows = Vec::new();
+    for p in &points {
+        t.row(vec![
+            p.model.clone(),
+            p.text_len.to_string(),
+            table::f(p.latency_ms, 1),
+            table::f(p.energy_j, 3),
+            table::f(p.kv_offloaded_mb, 1),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", p.model.as_str().into()),
+            ("text_len", p.text_len.into()),
+            ("latency_ms", p.latency_ms.into()),
+            ("energy_j", p.energy_j.into()),
+            ("kv_offloaded_mb", p.kv_offloaded_mb.into()),
+        ]));
+    }
+    Experiment {
+        id: "fig8",
+        text: t.render(),
+        json: Json::obj(vec![
+            ("points", Json::Arr(json_rows)),
+            ("paper", Json::obj(vec![
+                ("scaling", "near-linear, ~order of magnitude 128->4k".into()),
+                ("slope", "larger models steeper".into()),
+            ])),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series<'a>(points: &'a [SweepPoint], model: &str) -> Vec<&'a SweepPoint> {
+        points.iter().filter(|p| p.model == model).collect()
+    }
+
+    #[test]
+    fn latency_monotone_in_length() {
+        let pts = compute();
+        for m in ["fastvlm-0.6b", "mobilevlm-3b"] {
+            let s = series(&pts, m);
+            for w in s.windows(2) {
+                assert!(w[1].latency_ms > w[0].latency_ms, "{m} not monotone");
+            }
+        }
+    }
+
+    #[test]
+    fn growth_accelerates_with_length() {
+        // Decode streams the KV prefix every step, so latency grows
+        // superlinearly-in-context overall but each doubling should at
+        // least grow, and 4k should be several x the 128 point.
+        let pts = compute();
+        for m in ["fastvlm-1.7b", "mobilevlm-3b"] {
+            let s = series(&pts, m);
+            let first = s.first().unwrap().latency_ms;
+            let last = s.last().unwrap().latency_ms;
+            assert!(last / first > 1.5, "{m}: {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn larger_model_steeper_slope() {
+        let pts = compute();
+        let small = series(&pts, "fastvlm-0.6b");
+        let big = series(&pts, "mobilevlm-3b");
+        let slope = |s: &[&SweepPoint]| {
+            (s.last().unwrap().latency_ms - s[0].latency_ms)
+                / (s.last().unwrap().text_len - s[0].text_len) as f64
+        };
+        assert!(slope(&big) > slope(&small));
+    }
+
+    #[test]
+    fn energy_tracks_latency() {
+        let pts = compute();
+        for m in ["mobilevlm-1.7b"] {
+            let s = series(&pts, m);
+            for w in s.windows(2) {
+                assert!(w[1].energy_j > w[0].energy_j, "{m} energy not monotone");
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Paper-results harness: regenerates every table and figure of the
+//! paper's evaluation section (DESIGN.md §5 per-experiment index).
+//!
+//! Each module prints the same rows/series the paper reports and returns
+//! a JSON blob for EXPERIMENTS.md. Absolute numbers come from this repo's
+//! simulator; the *shape* (orderings, ratios, crossovers) is the
+//! reproduction target.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table5;
+
+use crate::util::Json;
+
+/// One experiment's rendered output.
+pub struct Experiment {
+    pub id: &'static str,
+    pub text: String,
+    pub json: Json,
+}
+
+/// Run every experiment (the `chime results --all` path).
+pub fn run_all() -> Vec<Experiment> {
+    vec![
+        fig1::run(),
+        fig6::run(),
+        table5::run(),
+        fig7::run(),
+        fig8::run(),
+        fig9::run(),
+        ablations::run(),
+    ]
+}
+
+/// Run one experiment by id ("1", "6", "7", "8", "9", "table5").
+pub fn run_one(id: &str) -> Option<Experiment> {
+    match id {
+        "1" | "fig1" => Some(fig1::run()),
+        "6" | "fig6" => Some(fig6::run()),
+        "7" | "fig7" => Some(fig7::run()),
+        "8" | "fig8" => Some(fig8::run()),
+        "9" | "fig9" => Some(fig9::run()),
+        "5" | "table5" => Some(table5::run()),
+        "ablations" | "a" => Some(ablations::run()),
+        _ => None,
+    }
+}

@@ -1,0 +1,154 @@
+//! Table V: platform comparison — Jetson Orin NX vs FACIL vs CHIME on
+//! throughput, power, energy efficiency, and hardware efficiency
+//! (token/s/mm²).
+//!
+//! Paper claims: CHIME 233–533 tok/s @ ~2 W, 116.5–266.5 tok/J,
+//! 4.35–9.95 tok/s/mm²; FACIL 7.7–19.3 tok/s; Jetson 7.4–11 tok/s;
+//! CHIME/FACIL throughput 12.1–69.2x (cross-paired extremes).
+
+use crate::baselines::{facil, jetson};
+use crate::config::{ChimeConfig, FacilSpec, JetsonSpec, MllmConfig};
+use crate::sim;
+use crate::util::{table, Json, Table};
+
+use super::Experiment;
+
+pub struct PlatformRange {
+    pub platform: &'static str,
+    pub tps_min: f64,
+    pub tps_max: f64,
+    pub power_min: f64,
+    pub power_max: f64,
+    pub tok_j_min: f64,
+    pub tok_j_max: f64,
+    pub area_mm2: f64,
+}
+
+pub fn compute() -> Vec<PlatformRange> {
+    let cfg = ChimeConfig::default();
+    let jspec = JetsonSpec::default();
+    let fspec = FacilSpec::default();
+    let models = MllmConfig::paper_models();
+
+    let mut chime = PlatformRange {
+        platform: "CHIME",
+        tps_min: f64::MAX, tps_max: 0.0, power_min: f64::MAX, power_max: 0.0,
+        tok_j_min: f64::MAX, tok_j_max: 0.0,
+        area_mm2: cfg.hardware.total_die_area_mm2(),
+    };
+    let mut jet = PlatformRange {
+        platform: "Jetson Orin NX",
+        tps_min: f64::MAX, tps_max: 0.0, power_min: f64::MAX, power_max: 0.0,
+        tok_j_min: f64::MAX, tok_j_max: 0.0, area_mm2: jspec.die_area_mm2,
+    };
+    let mut fac = PlatformRange {
+        platform: "FACIL",
+        tps_min: f64::MAX, tps_max: 0.0, power_min: f64::MAX, power_max: 0.0,
+        tok_j_min: f64::MAX, tok_j_max: 0.0, area_mm2: fspec.die_area_mm2,
+    };
+
+    for m in &models {
+        let c = sim::simulate(m, &cfg);
+        fold(&mut chime, c.tokens_per_s(), c.avg_power_w(), c.tokens_per_j());
+        let j = jetson::run(m, &cfg.workload, &jspec);
+        fold(&mut jet, j.tokens_per_s(), j.avg_power_w, j.tokens_per_j());
+        let f = facil::run(m, &cfg.workload, &fspec);
+        fold(&mut fac, f.tokens_per_s(), f.avg_power_w, f.tokens_per_j());
+    }
+    vec![jet, fac, chime]
+}
+
+fn fold(r: &mut PlatformRange, tps: f64, power: f64, tok_j: f64) {
+    r.tps_min = r.tps_min.min(tps);
+    r.tps_max = r.tps_max.max(tps);
+    r.power_min = r.power_min.min(power);
+    r.power_max = r.power_max.max(power);
+    r.tok_j_min = r.tok_j_min.min(tok_j);
+    r.tok_j_max = r.tok_j_max.max(tok_j);
+}
+
+pub fn run() -> Experiment {
+    let rows = compute();
+    let mut t = Table::new(
+        "Table V — edge AI platform comparison (ranges over Table II models)",
+        &["platform", "TPS", "power (W)", "tok/J", "tok/s/mm2", "area (mm2)"],
+    );
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        t.row(vec![
+            r.platform.to_string(),
+            format!("{:.1}-{:.1}", r.tps_min, r.tps_max),
+            format!("{:.1}-{:.1}", r.power_min, r.power_max),
+            format!("{:.2}-{:.2}", r.tok_j_min, r.tok_j_max),
+            format!("{:.3}-{:.3}", r.tps_min / r.area_mm2, r.tps_max / r.area_mm2),
+            table::f(r.area_mm2, 2),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("platform", r.platform.into()),
+            ("tps_min", r.tps_min.into()),
+            ("tps_max", r.tps_max.into()),
+            ("power_min", r.power_min.into()),
+            ("power_max", r.power_max.into()),
+            ("tok_j_min", r.tok_j_min.into()),
+            ("tok_j_max", r.tok_j_max.into()),
+            ("hw_eff_min", (r.tps_min / r.area_mm2).into()),
+            ("hw_eff_max", (r.tps_max / r.area_mm2).into()),
+        ]));
+    }
+    let chime = &rows[2];
+    let fac = &rows[1];
+    let summary = format!(
+        "CHIME/FACIL throughput: {:.1}x-{:.1}x (paper 12.1-69.2x, cross-paired extremes)",
+        chime.tps_min / fac.tps_max,
+        chime.tps_max / fac.tps_min
+    );
+    Experiment {
+        id: "table5",
+        text: format!("{}\n{}\n", t.render(), summary),
+        json: Json::obj(vec![
+            ("rows", Json::Arr(json_rows)),
+            ("paper", Json::obj(vec![
+                ("chime_tps", "233-533".into()),
+                ("facil_tps", "7.7-19.3".into()),
+                ("jetson_tps", "7.4-11".into()),
+                ("chime_tok_j", "116.5-266.5".into()),
+                ("chime_hw_eff", "4.35-9.95".into()),
+            ])),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_paper() {
+        let rows = compute();
+        let (jet, fac, chime) = (&rows[0], &rows[1], &rows[2]);
+        // CHIME >> FACIL >= Jetson on every axis the paper ranks.
+        assert!(chime.tps_min > fac.tps_max);
+        assert!(fac.tps_max > jet.tps_max);
+        assert!(chime.tok_j_min > fac.tok_j_max);
+        assert!(chime.power_max < jet.power_min);
+    }
+
+    #[test]
+    fn chime_facil_ratio_in_band() {
+        let rows = compute();
+        let lo = rows[2].tps_min / rows[1].tps_max;
+        let hi = rows[2].tps_max / rows[1].tps_min;
+        // Paper: 12.1x-69.2x.
+        assert!(lo > 5.0 && hi < 120.0, "ratio band {lo}-{hi}");
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn hardware_efficiency_order_of_magnitude() {
+        let rows = compute();
+        let chime = &rows[2];
+        let eff = chime.tps_max / chime.area_mm2;
+        // Paper: 4.35-9.95 tok/s/mm2.
+        assert!((2.0..20.0).contains(&eff), "hw eff {eff}");
+    }
+}

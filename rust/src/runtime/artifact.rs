@@ -1,0 +1,229 @@
+//! Artifact manifest: signatures + parity oracle for the AOT-compiled
+//! entry points (`artifacts/manifest.json`, produced by
+//! `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Tensor signature of one entry-point input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: j.get("name").as_str().unwrap_or("").to_string(),
+            dtype: j
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor sig missing dtype"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensor sig missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Functional-model config mirrored from python (TinyMLLMConfig).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub img_size: usize,
+    pub img_channels: usize,
+    pub n_vis_tokens: usize,
+    pub prompt_len: usize,
+    pub max_len: usize,
+    pub prefill_len: usize,
+    pub seed: i64,
+}
+
+/// Greedy-decode parity oracle recorded at AOT time.
+#[derive(Debug, Clone)]
+pub struct ParityOracle {
+    pub prompt: Vec<i32>,
+    pub n_steps: usize,
+    pub expected_tokens: Vec<i32>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelMeta,
+    pub entry_points: BTreeMap<String, EntryPoint>,
+    pub parity: ParityOracle,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if j.get("format").as_str() != Some("hlo-text-v1") {
+            bail!("unsupported manifest format {:?}", j.get("format"));
+        }
+
+        let c = j.get("config");
+        let u = |k: &str| -> Result<usize> {
+            c.get(k).as_usize().ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let config = ModelMeta {
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            d_head: u("d_head")?,
+            n_layers: u("n_layers")?,
+            vocab: u("vocab")?,
+            img_size: u("img_size")?,
+            img_channels: u("img_channels")?,
+            n_vis_tokens: u("n_vis_tokens")?,
+            prompt_len: u("prompt_len")?,
+            max_len: u("max_len")?,
+            prefill_len: u("prefill_len")?,
+            seed: c.get("seed").as_i64().unwrap_or(0),
+        };
+
+        let mut entry_points = BTreeMap::new();
+        let eps = j
+            .get("entry_points")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing entry_points"))?;
+        for (name, ep) in eps {
+            let file = dir.join(
+                ep.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry {name} missing file"))?,
+            );
+            let sigs = |k: &str| -> Result<Vec<TensorSig>> {
+                ep.get(k)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("entry {name} missing {k}"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect()
+            };
+            entry_points.insert(
+                name.clone(),
+                EntryPoint { name: name.clone(), file, inputs: sigs("inputs")?, outputs: sigs("outputs")? },
+            );
+        }
+
+        let p = j.get("parity");
+        let toks = |k: &str| -> Result<Vec<i32>> {
+            p.get(k)
+                .as_arr()
+                .ok_or_else(|| anyhow!("parity missing {k}"))?
+                .iter()
+                .map(|v| v.as_i64().map(|x| x as i32).ok_or_else(|| anyhow!("bad token")))
+                .collect()
+        };
+        let parity = ParityOracle {
+            prompt: toks("prompt")?,
+            n_steps: p.get("n_steps").as_usize().unwrap_or(0),
+            expected_tokens: toks("expected_tokens")?,
+        };
+
+        Ok(Manifest { dir: dir.to_path_buf(), config, entry_points, parity })
+    }
+
+    /// Default artifacts directory: $CHIME_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CHIME_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.entry_points
+            .get(name)
+            .ok_or_else(|| anyhow!("no entry point {name:?} in manifest"))
+    }
+
+    /// The deterministic synthetic image (must match python's
+    /// `synthetic_image`: v = ((i*W + j)*C + c) % 11 / 11 - 0.5).
+    pub fn synthetic_image(&self) -> Vec<f32> {
+        let (h, w, c) = (self.config.img_size, self.config.img_size, self.config.img_channels);
+        let mut out = Vec::with_capacity(h * w * c);
+        for i in 0..h {
+            for j in 0..w {
+                for ch in 0..c {
+                    let idx = ((i * w + j) * c + ch) % 11;
+                    out.push(idx as f32 / 11.0 - 0.5);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_image_formula() {
+        let meta = ModelMeta {
+            d_model: 64, n_heads: 4, d_head: 16, n_layers: 2, vocab: 256,
+            img_size: 2, img_channels: 3, n_vis_tokens: 16, prompt_len: 16,
+            max_len: 64, prefill_len: 32, seed: 2,
+        };
+        let m = Manifest {
+            dir: PathBuf::new(),
+            config: meta,
+            entry_points: BTreeMap::new(),
+            parity: ParityOracle { prompt: vec![], n_steps: 0, expected_tokens: vec![] },
+        };
+        let img = m.synthetic_image();
+        assert_eq!(img.len(), 2 * 2 * 3);
+        // (i*W+j)*C+c for i=j=c=0 -> 0 % 11 = 0 -> -0.5
+        assert!((img[0] + 0.5).abs() < 1e-7);
+        // i=0,j=1,c=2 -> (1*3+2)=5 -> 5/11-0.5
+        assert!((img[5] - (5.0 / 11.0 - 0.5)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn manifest_loads_if_artifacts_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment yet
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.d_model, 64);
+        assert!(m.entry_points.contains_key("decode_step"));
+        assert_eq!(m.parity.prompt.len(), m.config.prompt_len);
+        for ep in m.entry_points.values() {
+            assert!(ep.file.exists(), "{} missing", ep.file.display());
+        }
+    }
+}

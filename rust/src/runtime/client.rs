@@ -1,0 +1,135 @@
+//! PJRT client wrapper: loads HLO-text artifacts and executes them on the
+//! CPU PJRT backend (the `xla` crate).
+//!
+//! HLO *text* is the interchange format — jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py). All entry points are lowered with
+//! return_tuple=True, so every execution returns one tuple literal.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{EntryPoint, Manifest};
+
+/// A compiled entry point ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub n_outputs: usize,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} result", self.name))?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.n_outputs {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.n_outputs,
+                outs.len()
+            ));
+        }
+        Ok(outs)
+    }
+}
+
+/// PJRT runtime: one CPU client + compiled executables per entry point.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, executables: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_entry(&mut self, ep: &EntryPoint) -> Result<()> {
+        let path = ep
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-UTF-8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", ep.name))?;
+        self.executables.insert(
+            ep.name.clone(),
+            Executable { name: ep.name.clone(), exe, n_outputs: ep.outputs.len() },
+        );
+        Ok(())
+    }
+
+    /// Load every entry point in the manifest.
+    pub fn load_manifest(&mut self, manifest: &Manifest) -> Result<()> {
+        for ep in manifest.entry_points.values() {
+            self.load_entry(ep)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("entry point {name:?} not loaded"))
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Literal construction helpers.
+pub mod lit {
+    use anyhow::Result;
+
+    /// f32 tensor from a flat vec + dims.
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// i32 scalar.
+    pub fn i32_scalar(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// i32 vector.
+    pub fn i32_vec(v: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    /// Argmax over an f32 literal (greedy decoding).
+    pub fn argmax_f32(l: &xla::Literal) -> Result<usize> {
+        let v = l.to_vec::<f32>()?;
+        Ok(v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+
+    /// Check whether `path` artifacts exist (skip-gate for tests).
+    pub fn artifacts_available(dir: &std::path::Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+}

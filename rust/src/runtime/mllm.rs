@@ -1,0 +1,138 @@
+//! Functional MLLM over the AOT artifacts: encode -> connect -> prefill ->
+//! greedy decode, entirely from Rust via PJRT. Python never runs here.
+//!
+//! This is the functional half of the engine: real tokens out of real
+//! tensor math (the tiny model), while `sim` provides the paper-scale
+//! timing/energy (DESIGN.md §1).
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::Manifest;
+use super::client::{lit, Runtime};
+
+/// A loaded, ready-to-serve functional model.
+pub struct FunctionalMllm {
+    pub manifest: Manifest,
+    runtime: Runtime,
+}
+
+/// Output of one generation call.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    pub tokens: Vec<i32>,
+    /// Wall-clock nanoseconds spent in PJRT execute calls, by phase.
+    pub encode_ns: u128,
+    pub prefill_ns: u128,
+    pub decode_ns: u128,
+}
+
+impl FunctionalMllm {
+    /// Load the manifest + compile all entry points.
+    pub fn load(dir: &std::path::Path) -> Result<FunctionalMllm> {
+        let manifest = Manifest::load(dir)?;
+        let mut runtime = Runtime::cpu()?;
+        runtime.load_manifest(&manifest)?;
+        Ok(FunctionalMllm { manifest, runtime })
+    }
+
+    /// Greedy-generate `n_steps` tokens for (image, prompt).
+    ///
+    /// `image` is row-major [H, W, C] f32; `prompt` must have exactly
+    /// `prompt_len` token ids.
+    pub fn generate(&self, image: &[f32], prompt: &[i32], n_steps: usize) -> Result<Generation> {
+        let cfg = &self.manifest.config;
+        if prompt.len() != cfg.prompt_len {
+            return Err(anyhow!(
+                "prompt must have {} tokens, got {}",
+                cfg.prompt_len,
+                prompt.len()
+            ));
+        }
+        let expect_img = cfg.img_size * cfg.img_size * cfg.img_channels;
+        if image.len() != expect_img {
+            return Err(anyhow!("image must have {expect_img} floats, got {}", image.len()));
+        }
+
+        // --- vision encoder (DRAM chiplet in the mapping) ------------------
+        let t0 = std::time::Instant::now();
+        let img = lit::f32_tensor(
+            image,
+            &[cfg.img_size as i64, cfg.img_size as i64, cfg.img_channels as i64],
+        )?;
+        let feats = self.runtime.get("vision_encoder")?.run(&[img])?;
+        // --- connector ------------------------------------------------------
+        let pseudo = self
+            .runtime
+            .get("connector")?
+            .run(&[feats.into_iter().next().unwrap()])?;
+        let encode_ns = t0.elapsed().as_nanos();
+
+        // --- prefill ---------------------------------------------------------
+        let t1 = std::time::Instant::now();
+        let ids = lit::i32_vec(prompt);
+        let mut outs = self
+            .runtime
+            .get("prefill")?
+            .run(&[pseudo.into_iter().next().unwrap(), ids])?;
+        let mut v_cache = outs.pop().unwrap();
+        let mut k_cache = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        let prefill_ns = t1.elapsed().as_nanos();
+
+        // --- greedy decode ----------------------------------------------------
+        let t2 = std::time::Instant::now();
+        let mut tokens = Vec::with_capacity(n_steps);
+        let mut tok = lit::argmax_f32(&logits)? as i32;
+        let decode = self.runtime.get("decode_step")?;
+        let mut pos = cfg.prefill_len as i32;
+        for _ in 0..n_steps {
+            tokens.push(tok);
+            if pos as usize >= cfg.max_len {
+                break; // KV capacity reached
+            }
+            let mut outs = decode.run(&[
+                lit::i32_scalar(tok),
+                lit::i32_scalar(pos),
+                k_cache,
+                v_cache,
+            ])?;
+            v_cache = outs.pop().unwrap();
+            k_cache = outs.pop().unwrap();
+            let logits = outs.pop().unwrap();
+            tok = lit::argmax_f32(&logits)? as i32;
+            pos += 1;
+        }
+        let decode_ns = t2.elapsed().as_nanos();
+
+        Ok(Generation { tokens, encode_ns, prefill_ns, decode_ns })
+    }
+
+    /// Run the single-call smoke graph (model.hlo.txt) and return the
+    /// first-token logits argmax.
+    pub fn smoke(&self, image: &[f32], prompt: &[i32]) -> Result<i32> {
+        let cfg = &self.manifest.config;
+        let img = lit::f32_tensor(
+            image,
+            &[cfg.img_size as i64, cfg.img_size as i64, cfg.img_channels as i64],
+        )?;
+        let ids = lit::i32_vec(prompt);
+        let outs = self.runtime.get("model")?.run(&[img, ids])?;
+        Ok(lit::argmax_f32(&outs[0])? as i32)
+    }
+
+    /// Verify the manifest's parity oracle: Rust-side greedy decode must
+    /// reproduce the exact token sequence Python recorded at AOT time.
+    pub fn verify_parity(&self) -> Result<()> {
+        let p = &self.manifest.parity;
+        let image = self.manifest.synthetic_image();
+        let gen = self.generate(&image, &p.prompt, p.n_steps)?;
+        if gen.tokens != p.expected_tokens {
+            return Err(anyhow!(
+                "parity FAILED: rust {:?} vs python {:?}",
+                gen.tokens,
+                p.expected_tokens
+            ));
+        }
+        Ok(())
+    }
+}

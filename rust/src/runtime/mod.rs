@@ -1,0 +1,11 @@
+//! PJRT artifact runtime: loads the HLO-text entry points that
+//! `python/compile/aot.py` produced (`make artifacts`) and executes the
+//! functional MLLM from the Rust request path. Python is build-time only.
+
+pub mod artifact;
+pub mod client;
+pub mod mllm;
+
+pub use artifact::Manifest;
+pub use client::Runtime;
+pub use mllm::{FunctionalMllm, Generation};

@@ -1,0 +1,233 @@
+//! DRAM-chiplet execution model: fused kernels running on the DRAM NMP
+//! fed by the tiered M3D DRAM stack.
+//!
+//! Kernel time = dispatch + max(weight/KV streaming, MAC compute, SFPE)
+//! — the SFPE-PE pipeline with double-buffered PEs overlaps all three
+//! (paper §III-B1: "compute on one tile while transferring the other").
+
+use crate::config::NmpConfig;
+use crate::sim::energy::Component;
+use crate::sim::kernels::{FusedKernel, KernelCost};
+use crate::sim::memory::dram::WeightClass;
+use crate::sim::memory::{DramState, KvResidency, RramState, UcieLink};
+use crate::sim::nmp::{pe, sfpe};
+
+/// Execute one fused kernel on the DRAM chiplet.
+///
+/// `rram`/`ucie` are needed because attention over very long contexts may
+/// read cold KV blocks that tiering offloaded to the RRAM chiplet.
+pub fn execute(
+    kernel: &FusedKernel,
+    nmp: &NmpConfig,
+    dram: &mut DramState,
+    rram: &mut RramState,
+    ucie: &mut UcieLink,
+) -> KernelCost {
+    let mut cost = KernelCost::default();
+    let mut stream_ns = 0.0;
+
+    // --- weight streaming from the tiers ---------------------------------
+    let wb = kernel.weight_bytes();
+    if wb > 0 {
+        stream_ns += dram.weight_stream_ns_classed(weight_class(kernel), wb);
+        cost.energy.deposit(Component::DramArray, dram.array_energy_pj(wb));
+    }
+
+    // --- KV reads: priced per residency tier (mapping ❷) -----------------
+    let kv_read = kernel.kv_read_bytes();
+    if kv_read > 0 {
+        let dist = dram.kv_distribution();
+        let total: u64 = dist.iter().map(|(_, b)| b).sum();
+        let mut dram_parts: Vec<(usize, u64)> = Vec::new();
+        let mut rram_part: u64 = 0;
+        if total == 0 {
+            dram_parts.push((0, kv_read));
+        } else {
+            for (res, bytes) in dist {
+                let share = ((kv_read as u128 * bytes as u128) / total as u128) as u64;
+                match res {
+                    KvResidency::Tier(t) => dram_parts.push((t, share)),
+                    KvResidency::Rram => rram_part += share,
+                }
+            }
+        }
+        stream_ns += dram.kv_stream_ns(&dram_parts);
+        let dram_kv_bytes: u64 = dram_parts.iter().map(|(_, b)| b).sum();
+        cost.energy
+            .deposit(Component::DramArray, dram.array_energy_pj(dram_kv_bytes));
+        if rram_part > 0 {
+            // Cold blocks stream out of RRAM and cross UCIe back to the PUs.
+            stream_ns += rram.kv_stream_ns(rram_part);
+            cost.energy
+                .deposit(Component::RramArray, rram.read_energy_pj(rram_part));
+            let (ns, pj) = ucie.transfer(rram_part);
+            stream_ns += ns;
+            cost.energy.deposit(Component::Ucie, pj);
+        }
+    }
+
+    // --- KV append (write-back of this step's K/V) ------------------------
+    let kv_write = kernel.kv_write_bytes();
+    if kv_write > 0 {
+        let offloaded = dram.append_kv(kv_write);
+        cost.energy
+            .deposit(Component::DramArray, dram.array_energy_pj(kv_write));
+        if offloaded > 0 {
+            // One-shot cold offload to RRAM (write-once policy).
+            let wns = rram.offload_kv(offloaded);
+            stream_ns += wns;
+            cost.energy
+                .deposit(Component::RramArray, rram.write_energy_pj(offloaded));
+            let (ns, pj) = ucie.transfer(offloaded);
+            stream_ns += ns;
+            cost.energy.deposit(Component::Ucie, pj);
+        }
+        // Writes stream through the same row buffers.
+        stream_ns += kv_write as f64 / dram.cfg.tier_stream_bw_gbps(0, 1.0);
+    }
+
+    // --- compute ----------------------------------------------------------
+    let compute_ns = if kernel.flops() > 0.0 {
+        pe::gemm_compute_ns(nmp, kernel.flops(), kernel.m_rows)
+    } else {
+        0.0
+    };
+    let sfpe_ns = sfpe::sfpe_ns(nmp, kernel.sfpe_elems(), sfpe_cycles(kernel));
+
+    cost.stream_ns = stream_ns;
+    cost.compute_ns = compute_ns;
+    cost.sfpe_ns = sfpe_ns;
+    cost.time_ns = nmp.kernel_dispatch_ns + stream_ns.max(compute_ns).max(sfpe_ns);
+
+    // NMP energy: active portion at utilization, remainder at idle burn.
+    let busy = compute_ns.max(sfpe_ns);
+    let activity = if cost.time_ns > 0.0 { (busy / cost.time_ns).clamp(0.05, 1.0) } else { 0.0 };
+    cost.energy.deposit(
+        Component::DramNmp,
+        pe::compute_energy_pj(nmp, cost.time_ns, activity),
+    );
+    cost
+}
+
+/// Which heat class a kernel's weights stream from (mirrors the layout's
+/// placement priority; see `mapping::layout`).
+fn weight_class(kernel: &FusedKernel) -> WeightClass {
+    use crate::sim::kernels::FusedKind::*;
+    match kernel.kind {
+        FusedQkvProj | FusedAttnStream | FusedNorm | Elementwise => WeightClass::Attn,
+        FusedFfnAct => WeightClass::Ffn, // DRAM-only ablation path
+        LmHead => WeightClass::LmHead,
+        Embed => WeightClass::Embed,
+        VisionBlock | ConnectorBlock => WeightClass::VisionConn,
+    }
+}
+
+fn sfpe_cycles(kernel: &FusedKernel) -> f64 {
+    use crate::sim::kernels::FusedKind::*;
+    match kernel.kind {
+        FusedAttnStream => sfpe::cost::SOFTMAX,
+        FusedNorm => sfpe::cost::NORM,
+        FusedFfnAct => sfpe::cost::ACTIVATION,
+        _ => sfpe::cost::ADD,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChimeHardware, MllmConfig};
+    use crate::model::{OpCost, OpKind, Stage};
+    use crate::sim::kernels::{FusedKind, Placement};
+
+    fn setup() -> (ChimeHardware, DramState, RramState, UcieLink) {
+        let hw = ChimeHardware::default();
+        let dram = DramState::new(hw.dram.clone());
+        let rram = RramState::new(hw.rram.clone());
+        let ucie = UcieLink::new(hw.ucie.clone());
+        (hw, dram, rram, ucie)
+    }
+
+    fn kernel_with(weight_bytes: u64, flops: f64, m: usize) -> FusedKernel {
+        let mut op = OpCost::new("t", OpKind::Gemm, Stage::Backbone);
+        op.weight_bytes = weight_bytes;
+        op.flops = flops;
+        FusedKernel {
+            kind: FusedKind::FusedQkvProj,
+            placement: Placement::DramChiplet,
+            layer: Some(0),
+            m_rows: m,
+            ops: vec![op],
+            cut_in: false,
+            cut_out: false,
+        }
+    }
+
+    #[test]
+    fn memory_bound_gemv_dominated_by_streaming() {
+        let (hw, mut dram, mut rram, mut ucie) = setup();
+        dram.place_weights(1_000_000_000).unwrap();
+        // Decode GEMV: bytes dominate (weights 100 MB, flops tiny).
+        let k = kernel_with(100_000_000, 1e6, 1);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        assert_eq!(c.bottleneck(), "memory");
+        assert!(c.time_ns > c.compute_ns);
+        assert!(c.energy.get(Component::DramArray) > 0.0);
+        assert!(c.energy.get(Component::DramNmp) > 0.0);
+    }
+
+    #[test]
+    fn compute_bound_prefill_dominated_by_macs() {
+        let (hw, mut dram, mut rram, mut ucie) = setup();
+        // Prefill GEMM: heavy flops, light weights.
+        let k = kernel_with(1_000, 1e12, 256);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        assert_eq!(c.bottleneck(), "compute");
+    }
+
+    #[test]
+    fn cold_kv_reads_cross_ucie() {
+        let (hw, mut dram, mut rram, mut ucie) = setup();
+        // Fill DRAM completely with weights, then append KV -> all offloads.
+        dram.place_weights(hw.dram.chip_capacity_bytes()).unwrap();
+        dram.append_kv(10_000_000);
+        assert!(dram.kv_offloaded > 0);
+        let mut op = OpCost::new("attn", OpKind::Attention, Stage::Backbone);
+        op.kv_read_bytes = 10_000_000;
+        let k = FusedKernel {
+            kind: FusedKind::FusedAttnStream,
+            placement: Placement::DramChiplet,
+            layer: Some(0),
+            m_rows: 1,
+            ops: vec![op],
+            cut_in: false,
+            cut_out: true,
+        };
+        let before = ucie.bytes_transferred;
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        assert!(ucie.bytes_transferred > before, "cold KV must cross the link");
+        assert!(c.energy.get(Component::RramArray) > 0.0);
+    }
+
+    #[test]
+    fn dispatch_floor_applies() {
+        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let k = kernel_with(0, 0.0, 1);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        assert!((c.time_ns - hw.dram_nmp.kernel_dispatch_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_scale_attention_step_sane() {
+        // One full decode-attention layer of FastVLM-0.6B should take
+        // single-digit microseconds on the DRAM chiplet.
+        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let m = MllmConfig::fastvlm_0_6b();
+        dram.place_weights(
+            m.llm.attn_weight_bytes_per_layer() * m.llm.n_layers as u64,
+        )
+        .unwrap();
+        let k = kernel_with(m.llm.attn_weight_bytes_per_layer(), 2.0 * 1.84e6, 1);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        assert!(c.time_ns > 1_000.0 && c.time_ns < 100_000.0, "t = {} ns", c.time_ns);
+    }
+}

@@ -1,0 +1,4 @@
+//! Chiplet execution models (DRAM NMP + RRAM NMP).
+
+pub mod dram_chiplet;
+pub mod rram_chiplet;

@@ -1,0 +1,158 @@
+//! Component-level energy accounting (picojoule ledger).
+//!
+//! Every simulated action deposits energy against a component; the ledger
+//! backs the paper's Fig 7(c)/(d) power breakdowns and the token/J numbers
+//! in Fig 6 / Table V.
+
+/// Energy-bearing component (paper Fig 7 categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Component {
+    /// M3D DRAM array reads/writes (0.429 pJ/bit).
+    DramArray,
+    /// DRAM-chiplet NMP logic (PEs, SFPEs, routers, SRAM).
+    DramNmp,
+    /// M3D RRAM array reads/writes (0.4 / 1.33 pJ/bit).
+    RramArray,
+    /// RRAM-chiplet NMP logic.
+    RramNmp,
+    /// UCIe PHY + link transfers.
+    Ucie,
+    /// Idle/leakage burn of a waiting chiplet.
+    Idle,
+}
+
+impl Component {
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::DramArray => "dram_array",
+            Component::DramNmp => "dram_nmp",
+            Component::RramArray => "rram_array",
+            Component::RramNmp => "rram_nmp",
+            Component::Ucie => "ucie",
+            Component::Idle => "idle",
+        }
+    }
+
+    pub fn all() -> [Component; 6] {
+        [
+            Component::DramArray,
+            Component::DramNmp,
+            Component::RramArray,
+            Component::RramNmp,
+            Component::Ucie,
+            Component::Idle,
+        ]
+    }
+
+    /// Dense index for the array-backed ledger (§Perf: the ledger sits on
+    /// the simulator's innermost loop; a fixed array beats a BTreeMap).
+    #[inline]
+    pub const fn idx(self) -> usize {
+        match self {
+            Component::DramArray => 0,
+            Component::DramNmp => 1,
+            Component::RramArray => 2,
+            Component::RramNmp => 3,
+            Component::Ucie => 4,
+            Component::Idle => 5,
+        }
+    }
+}
+
+/// Picojoule ledger keyed by component (array-backed; see Component::idx).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    pj: [f64; 6],
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn deposit(&mut self, c: Component, pj: f64) {
+        debug_assert!(pj >= 0.0, "negative energy {pj} for {c:?}");
+        self.pj[c.idx()] += pj;
+    }
+
+    #[inline]
+    pub fn get(&self, c: Component) -> f64 {
+        self.pj[c.idx()]
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.pj.iter().sum()
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.total_pj() / 1e12
+    }
+
+    /// Fractional breakdown (component -> share of total).
+    pub fn breakdown(&self) -> Vec<(Component, f64)> {
+        let total = self.total_pj().max(1e-30);
+        Component::all()
+            .iter()
+            .map(|&c| (c, self.get(c) / total))
+            .collect()
+    }
+
+    #[inline]
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for i in 0..self.pj.len() {
+            self.pj[i] += other.pj[i];
+        }
+    }
+
+    /// Average power in watts over a duration.
+    pub fn avg_power_w(&self, duration_ns: f64) -> f64 {
+        if duration_ns <= 0.0 {
+            return 0.0;
+        }
+        // pJ / ns = mW; /1000 -> W.
+        self.total_pj() / duration_ns / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deposits_accumulate() {
+        let mut l = EnergyLedger::new();
+        l.deposit(Component::DramArray, 100.0);
+        l.deposit(Component::DramArray, 50.0);
+        l.deposit(Component::Ucie, 25.0);
+        assert_eq!(l.get(Component::DramArray), 150.0);
+        assert_eq!(l.total_pj(), 175.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let mut l = EnergyLedger::new();
+        l.deposit(Component::RramArray, 3.0);
+        l.deposit(Component::RramNmp, 1.0);
+        let total: f64 = l.breakdown().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_conversion() {
+        let mut l = EnergyLedger::new();
+        // 2 mJ over 1 ms = 2 W.
+        l.deposit(Component::RramNmp, 2e9);
+        assert!((l.avg_power_w(1e6) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = EnergyLedger::new();
+        a.deposit(Component::Idle, 1.0);
+        let mut b = EnergyLedger::new();
+        b.deposit(Component::Idle, 2.0);
+        a.merge(&b);
+        assert_eq!(a.get(Component::Idle), 3.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Fused near-memory kernels (paper Table I) as the simulator's unit of
+//! execution, plus their cost structure.
+//!
+//! The mapping framework (mapping::fusion) groups the model's operators
+//! into these kernels; fusion boundaries coincide with chiplet boundaries
+//! and never split within kernels of the same step (paper §III-C ❸).
+
+use crate::model::OpCost;
+use crate::sim::energy::EnergyLedger;
+
+/// Which chiplet executes a fused kernel (mapping ❶: workload-aware
+/// layout — FFN on RRAM, everything else on DRAM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    DramChiplet,
+    RramChiplet,
+}
+
+/// Table I fused-kernel classes (+ the coarse encoder/connector blocks and
+/// the lm_head GEMV, which the paper folds into "connector kernels" /
+/// attention-side work on the DRAM chiplet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FusedKind {
+    FusedQkvProj,
+    FusedAttnStream,
+    FusedFfnAct,
+    FusedNorm,
+    VisionBlock,
+    ConnectorBlock,
+    LmHead,
+    Embed,
+    Elementwise,
+}
+
+impl FusedKind {
+    /// Dense index (§Perf: per-kind time accumulates in a fixed array on
+    /// the simulator inner loop, folded into the report map once per
+    /// phase).
+    #[inline]
+    pub const fn idx(self) -> usize {
+        match self {
+            FusedKind::FusedQkvProj => 0,
+            FusedKind::FusedAttnStream => 1,
+            FusedKind::FusedFfnAct => 2,
+            FusedKind::FusedNorm => 3,
+            FusedKind::VisionBlock => 4,
+            FusedKind::ConnectorBlock => 5,
+            FusedKind::LmHead => 6,
+            FusedKind::Embed => 7,
+            FusedKind::Elementwise => 8,
+        }
+    }
+
+    pub const COUNT: usize = 9;
+
+    pub fn from_idx(i: usize) -> FusedKind {
+        [
+            FusedKind::FusedQkvProj,
+            FusedKind::FusedAttnStream,
+            FusedKind::FusedFfnAct,
+            FusedKind::FusedNorm,
+            FusedKind::VisionBlock,
+            FusedKind::ConnectorBlock,
+            FusedKind::LmHead,
+            FusedKind::Embed,
+            FusedKind::Elementwise,
+        ][i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FusedKind::FusedQkvProj => "FUSED_QKV_PROJ",
+            FusedKind::FusedAttnStream => "FUSED_ATTN_STREAM",
+            FusedKind::FusedFfnAct => "FUSED_FFN_ACT",
+            FusedKind::FusedNorm => "FUSED_NORM",
+            FusedKind::VisionBlock => "VISION_BLOCK",
+            FusedKind::ConnectorBlock => "CONNECTOR_BLOCK",
+            FusedKind::LmHead => "LM_HEAD",
+            FusedKind::Embed => "EMBED",
+            FusedKind::Elementwise => "ELEMENTWISE",
+        }
+    }
+}
+
+/// A fused kernel instance: a group of operators executing back-to-back
+/// on one chiplet with intermediates pinned in on-die SRAM.
+#[derive(Debug, Clone)]
+pub struct FusedKernel {
+    pub kind: FusedKind,
+    pub placement: Placement,
+    pub layer: Option<usize>,
+    /// Activation row count (GEMM m-dim): prefill length or 1 for decode.
+    pub m_rows: usize,
+    pub ops: Vec<OpCost>,
+    /// Consumes an activation that crossed UCIe (FFN input = AttnOut).
+    pub cut_in: bool,
+    /// Produces an activation that will cross UCIe (AttnOut / FFNOut).
+    pub cut_out: bool,
+}
+
+impl FusedKernel {
+    pub fn weight_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    pub fn kv_read_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.kv_read_bytes).sum()
+    }
+
+    pub fn kv_write_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.kv_write_bytes).sum()
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn sfpe_elems(&self) -> u64 {
+        self.ops.iter().map(|o| o.sfpe_elems).sum()
+    }
+
+    /// Activation bytes crossing the kernel's outbound boundary.
+    pub fn act_out_bytes(&self) -> u64 {
+        self.ops.last().map(|o| o.act_out_bytes).unwrap_or(0)
+    }
+}
+
+/// The cost of executing one fused kernel.
+#[derive(Debug, Clone, Default)]
+pub struct KernelCost {
+    pub time_ns: f64,
+    /// Time attributable to memory streaming (for bottleneck reporting).
+    pub stream_ns: f64,
+    /// Time attributable to MAC compute.
+    pub compute_ns: f64,
+    /// Time attributable to SFPE work.
+    pub sfpe_ns: f64,
+    pub energy: EnergyLedger,
+}
+
+impl KernelCost {
+    /// Which resource bounds this kernel?
+    pub fn bottleneck(&self) -> &'static str {
+        if self.stream_ns >= self.compute_ns && self.stream_ns >= self.sfpe_ns {
+            "memory"
+        } else if self.compute_ns >= self.sfpe_ns {
+            "compute"
+        } else {
+            "sfpe"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{OpCost, OpKind, Stage};
+
+    #[test]
+    fn aggregation_over_ops() {
+        let mut a = OpCost::new("x", OpKind::Gemm, Stage::Backbone);
+        a.weight_bytes = 10;
+        a.flops = 5.0;
+        let mut b = OpCost::new("y", OpKind::Norm, Stage::Backbone);
+        b.sfpe_elems = 7;
+        b.act_out_bytes = 3;
+        let k = FusedKernel {
+            kind: FusedKind::FusedQkvProj,
+            placement: Placement::DramChiplet,
+            layer: Some(0),
+            m_rows: 1,
+            ops: vec![a, b],
+            cut_in: false,
+            cut_out: true,
+        };
+        assert_eq!(k.weight_bytes(), 10);
+        assert_eq!(k.flops(), 5.0);
+        assert_eq!(k.sfpe_elems(), 7);
+        assert_eq!(k.act_out_bytes(), 3);
+    }
+
+    #[test]
+    fn bottleneck_classification() {
+        let mut c = KernelCost::default();
+        c.stream_ns = 10.0;
+        c.compute_ns = 5.0;
+        assert_eq!(c.bottleneck(), "memory");
+        c.compute_ns = 20.0;
+        assert_eq!(c.bottleneck(), "compute");
+        c.sfpe_ns = 30.0;
+        assert_eq!(c.bottleneck(), "sfpe");
+    }
+}

@@ -1,0 +1,328 @@
+//! M3D DRAM chiplet memory state: tiered capacity allocation, classed
+//! weight placement, KV-block residency, and stream-timing/energy queries.
+//!
+//! The 200-layer stack is split into 5 tiers with the paper's
+//! (3 + 0.8·L) ns staircase latency. The mapping framework places static
+//! weights bottom-up *by access heat* (attention weights — touched every
+//! token — in the fastest tiers; vision/connector weights — touched once
+//! per inference — in the slowest; §III-B1 "hottest attention data in the
+//! bottom tier"), then KV-cache blocks fill remaining capacity; when DRAM
+//! runs out, the coldest blocks are offloaded one-shot to RRAM (§III-C ❷).
+
+use std::collections::BTreeMap;
+
+use crate::config::DramConfig;
+
+/// Heat-ordered weight classes (placement priority = enum order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WeightClass {
+    /// QKV/O projections + norms: streamed every token, hottest.
+    Attn,
+    /// FFN weights — only present in the DRAM-only ablation.
+    Ffn,
+    /// Unembedding GEMV: streamed every token.
+    LmHead,
+    /// Embedding table: one row gathered per token.
+    Embed,
+    /// Vision encoder + connector: once per inference, coldest.
+    VisionConn,
+}
+
+impl WeightClass {
+    pub fn all_in_priority_order() -> [WeightClass; 5] {
+        [
+            WeightClass::Attn,
+            WeightClass::Ffn,
+            WeightClass::LmHead,
+            WeightClass::Embed,
+            WeightClass::VisionConn,
+        ]
+    }
+}
+
+/// Byte-granular view of one tier's occupancy.
+#[derive(Debug, Clone)]
+pub struct TierState {
+    pub capacity: u64,
+    pub weights: u64,
+    pub kv: u64,
+}
+
+impl TierState {
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.weights + self.kv)
+    }
+}
+
+/// Where a KV byte-range lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvResidency {
+    /// DRAM tier index (0 = fastest).
+    Tier(usize),
+    /// Offloaded to the RRAM chiplet (write-once cold storage).
+    Rram,
+}
+
+/// M3D DRAM state.
+#[derive(Debug, Clone)]
+pub struct DramState {
+    pub cfg: DramConfig,
+    pub tiers: Vec<TierState>,
+    /// Per-class tier spans: class -> [(tier, bytes)].
+    spans: BTreeMap<WeightClass, Vec<(usize, u64)>>,
+    /// Total KV bytes offloaded to RRAM (cold tail).
+    pub kv_offloaded: u64,
+    /// Running counters for reporting.
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl DramState {
+    pub fn new(cfg: DramConfig) -> Self {
+        let tiers = (0..cfg.tiers)
+            .map(|_| TierState { capacity: cfg.tier_capacity_bytes, weights: 0, kv: 0 })
+            .collect();
+        DramState {
+            cfg,
+            tiers,
+            spans: BTreeMap::new(),
+            kv_offloaded: 0,
+            bytes_read: 0,
+            bytes_written: 0,
+        }
+    }
+
+    /// Statically place `bytes` of `class` weights bottom-up into the
+    /// fastest remaining tiers (mapping ❶). Call in heat-priority order.
+    /// Returns Err(overflow) if the stack cannot hold them.
+    pub fn place_weights_classed(&mut self, class: WeightClass, mut bytes: u64)
+        -> Result<(), u64> {
+        let mut span = Vec::new();
+        for (i, t) in self.tiers.iter_mut().enumerate() {
+            let take = bytes.min(t.free());
+            if take > 0 {
+                t.weights += take;
+                span.push((i, take));
+                bytes -= take;
+            }
+            if bytes == 0 {
+                break;
+            }
+        }
+        self.spans.entry(class).or_default().extend(span);
+        if bytes == 0 {
+            Ok(())
+        } else {
+            Err(bytes)
+        }
+    }
+
+    /// Un-classed placement (tests / simple callers): files under Attn.
+    pub fn place_weights(&mut self, bytes: u64) -> Result<(), u64> {
+        self.place_weights_classed(WeightClass::Attn, bytes)
+    }
+
+    /// Append `bytes` of fresh (hot) KV. New blocks go to the fastest tier
+    /// with room; when DRAM is full, cold KV is evicted (or, if none, the
+    /// fresh bytes overflow) to RRAM one-shot write-once. Returns bytes
+    /// sent to RRAM.
+    pub fn append_kv(&mut self, bytes: u64) -> u64 {
+        let mut remaining = bytes;
+        for t in &mut self.tiers {
+            let take = remaining.min(t.free());
+            t.kv += take;
+            remaining -= take;
+            if remaining == 0 {
+                self.bytes_written += bytes;
+                return 0;
+            }
+        }
+        // DRAM full: offload the coldest `remaining` KV bytes (they sit in
+        // the slowest tier that has KV) and append the fresh bytes there.
+        let mut to_offload = remaining;
+        for t in self.tiers.iter_mut().rev() {
+            let evict = to_offload.min(t.kv);
+            t.kv -= evict;
+            to_offload -= evict;
+            if to_offload == 0 {
+                break;
+            }
+        }
+        let evicted = remaining - to_offload;
+        // Re-append the fresh bytes into the space we just freed.
+        let mut still = remaining;
+        for t in &mut self.tiers {
+            let take = still.min(t.free());
+            t.kv += take;
+            still -= take;
+            if still == 0 {
+                break;
+            }
+        }
+        // Fresh bytes that found no DRAM home (stack packed with weights,
+        // no cold KV to evict) also go to RRAM.
+        let offloaded = evicted + still;
+        self.kv_offloaded += offloaded;
+        self.bytes_written += bytes;
+        offloaded
+    }
+
+    /// Distribution of the current KV bytes across residencies. Attention
+    /// reads the *whole* prefix each step; the tier mix determines the
+    /// effective stream bandwidth.
+    pub fn kv_distribution(&self) -> Vec<(KvResidency, u64)> {
+        let mut out: Vec<(KvResidency, u64)> = self
+            .tiers
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kv > 0)
+            .map(|(i, t)| (KvResidency::Tier(i), t.kv))
+            .collect();
+        if self.kv_offloaded > 0 {
+            out.push((KvResidency::Rram, self.kv_offloaded));
+        }
+        out
+    }
+
+    pub fn total_kv_bytes(&self) -> u64 {
+        self.tiers.iter().map(|t| t.kv).sum::<u64>() + self.kv_offloaded
+    }
+
+    /// Time (ns) to stream `bytes` of `class` weights into the NMP, priced
+    /// at the class's own tier mix (hot classes live low and stream fast).
+    pub fn weight_stream_ns_classed(&mut self, class: WeightClass, bytes: u64) -> f64 {
+        self.bytes_read += bytes;
+        let freq = 1.0; // GHz; NMP clock == memory interface clock
+        let span = self.spans.get(&class);
+        let span_total: u64 = span
+            .map(|s| s.iter().map(|(_, b)| b).sum())
+            .unwrap_or(0);
+        if span_total == 0 {
+            // Unplaced class (tests): assume tier 0.
+            return bytes as f64 / self.cfg.tier_stream_bw_gbps(0, freq);
+        }
+        let span = span.unwrap();
+        let mut ns = 0.0;
+        for &(tier, tier_bytes) in span {
+            let share = bytes as f64 * tier_bytes as f64 / span_total as f64;
+            ns += share / self.cfg.tier_stream_bw_gbps(tier, freq);
+        }
+        ns
+    }
+
+    /// Back-compat helper: stream as the hottest class.
+    pub fn weight_stream_ns(&mut self, bytes: u64) -> f64 {
+        self.weight_stream_ns_classed(WeightClass::Attn, bytes)
+    }
+
+    /// Time (ns) to stream KV bytes by explicit tier mix.
+    pub fn kv_stream_ns(&mut self, bytes_by_tier: &[(usize, u64)]) -> f64 {
+        let freq = 1.0;
+        let mut ns = 0.0;
+        for &(tier, bytes) in bytes_by_tier {
+            self.bytes_read += bytes;
+            ns += bytes as f64 / self.cfg.tier_stream_bw_gbps(tier, freq);
+        }
+        ns
+    }
+
+    /// Array read/write energy for `bytes` (pJ), including the streaming
+    /// row-reuse derate (see `DramConfig::array_energy_scale`).
+    pub fn array_energy_pj(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.cfg.energy_pj_per_bit * self.cfg.array_energy_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> DramConfig {
+        let mut c = DramConfig::default();
+        c.tier_capacity_bytes = 1000;
+        c
+    }
+
+    #[test]
+    fn weights_fill_bottom_up() {
+        let mut d = DramState::new(small_cfg());
+        d.place_weights(1500).unwrap();
+        assert_eq!(d.tiers[0].weights, 1000);
+        assert_eq!(d.tiers[1].weights, 500);
+        assert_eq!(d.tiers[2].weights, 0);
+    }
+
+    #[test]
+    fn weights_overflow_reported() {
+        let mut d = DramState::new(small_cfg());
+        let over = d.place_weights(6000).unwrap_err();
+        assert_eq!(over, 1000);
+    }
+
+    #[test]
+    fn hot_class_streams_faster_than_cold_class() {
+        let mut d = DramState::new(small_cfg());
+        d.place_weights_classed(WeightClass::Attn, 1000).unwrap(); // tier 0
+        d.place_weights_classed(WeightClass::VisionConn, 1000).unwrap(); // tier 1
+        let hot = d.weight_stream_ns_classed(WeightClass::Attn, 500);
+        let cold = d.weight_stream_ns_classed(WeightClass::VisionConn, 500);
+        assert!(cold > hot, "cold {cold} vs hot {hot}");
+    }
+
+    #[test]
+    fn kv_appends_into_fastest_free_tier() {
+        let mut d = DramState::new(small_cfg());
+        d.place_weights(1000).unwrap(); // tier 0 full of weights
+        let off = d.append_kv(300);
+        assert_eq!(off, 0);
+        assert_eq!(d.tiers[1].kv, 300);
+    }
+
+    #[test]
+    fn kv_offloads_when_full() {
+        let mut d = DramState::new(small_cfg());
+        d.place_weights(4500).unwrap();
+        assert_eq!(d.append_kv(400), 0); // fits in remaining 500
+        let off = d.append_kv(400); // only 100 free -> 300 offloaded
+        assert_eq!(off, 300);
+        assert_eq!(d.kv_offloaded, 300);
+        assert_eq!(d.total_kv_bytes(), 800);
+        for t in &d.tiers {
+            assert!(t.weights + t.kv <= t.capacity);
+        }
+    }
+
+    #[test]
+    fn kv_overflows_directly_when_nothing_to_evict() {
+        let mut d = DramState::new(small_cfg());
+        d.place_weights(5000).unwrap(); // every tier full of weights
+        let off = d.append_kv(250);
+        assert_eq!(off, 250);
+        assert_eq!(d.kv_offloaded, 250);
+    }
+
+    #[test]
+    fn faster_tier_streams_faster() {
+        let mut a = DramState::new(DramConfig::default());
+        let t0 = a.kv_stream_ns(&[(0, 1_000_000)]);
+        let t4 = a.kv_stream_ns(&[(4, 1_000_000)]);
+        assert!(t4 > t0);
+    }
+
+    #[test]
+    fn weight_stream_time_positive_and_linear() {
+        let mut d = DramState::new(DramConfig::default());
+        d.place_weights(2_000_000_000).unwrap();
+        let t1 = d.weight_stream_ns(100_000_000);
+        let t2 = d.weight_stream_ns(200_000_000);
+        assert!(t1 > 0.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn energy_matches_derated_pj_per_bit() {
+        let d = DramState::new(DramConfig::default());
+        let expect = 8.0 * d.cfg.energy_pj_per_bit * d.cfg.array_energy_scale;
+        assert!((d.array_energy_pj(1) - expect).abs() < 1e-9);
+    }
+}

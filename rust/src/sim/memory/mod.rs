@@ -1,0 +1,10 @@
+//! Memory subsystem models: M3D DRAM (tiered), M3D RRAM (endurance-aware),
+//! and the UCIe die-to-die link.
+
+pub mod dram;
+pub mod rram;
+pub mod ucie;
+
+pub use dram::{DramState, KvResidency, TierState};
+pub use rram::RramState;
+pub use ucie::UcieLink;

@@ -1,0 +1,172 @@
+//! M3D RRAM chiplet memory state: resident-weight streaming, write-once
+//! KV offload, and the endurance ledger behind the paper's
+//! "endurance-aware management for device protection".
+
+use crate::config::RramConfig;
+
+/// M3D RRAM state.
+#[derive(Debug, Clone)]
+pub struct RramState {
+    pub cfg: RramConfig,
+    /// Weight bytes resident in the arrays (written once at model load).
+    pub weight_bytes: u64,
+    /// Cold KV bytes offloaded from DRAM (write-once).
+    pub kv_bytes: u64,
+    /// Lifetime write bytes (endurance accounting).
+    pub lifetime_write_bytes: u64,
+    /// Lifetime read bytes.
+    pub lifetime_read_bytes: u64,
+    /// Writes are wear-leveled across the full capacity; this tracks the
+    /// worst-case per-cell write count under ideal leveling.
+    pub max_cell_writes: f64,
+}
+
+impl RramState {
+    pub fn new(cfg: RramConfig) -> Self {
+        RramState {
+            cfg,
+            weight_bytes: 0,
+            kv_bytes: 0,
+            lifetime_write_bytes: 0,
+            lifetime_read_bytes: 0,
+            max_cell_writes: 0.0,
+        }
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.cfg
+            .chip_capacity_bytes
+            .saturating_sub(self.weight_bytes + self.kv_bytes)
+    }
+
+    /// Load model weights (one-shot write at deployment). Returns the
+    /// write time in ns. Errors if capacity is exceeded.
+    pub fn load_weights(&mut self, bytes: u64) -> Result<f64, String> {
+        if bytes > self.free_bytes() {
+            return Err(format!(
+                "RRAM capacity exceeded: need {} over {} free",
+                bytes,
+                self.free_bytes()
+            ));
+        }
+        self.weight_bytes += bytes;
+        Ok(self.record_write(bytes))
+    }
+
+    /// One-shot KV offload from DRAM (the paper's write-once policy for
+    /// extremely long contexts). Returns write time in ns.
+    pub fn offload_kv(&mut self, bytes: u64) -> f64 {
+        let take = bytes.min(self.free_bytes());
+        self.kv_bytes += take;
+        self.record_write(take)
+    }
+
+    fn record_write(&mut self, bytes: u64) -> f64 {
+        self.lifetime_write_bytes += bytes;
+        // Ideal wear-leveling spreads writes uniformly over all cells.
+        self.max_cell_writes =
+            self.lifetime_write_bytes as f64 / self.cfg.chip_capacity_bytes as f64;
+        bytes as f64 / self.cfg.write_stream_bw_gbps(1.0)
+    }
+
+    /// Stream resident weights to the PE groups. Returns ns.
+    pub fn weight_stream_ns(&mut self, bytes: u64) -> f64 {
+        self.lifetime_read_bytes += bytes;
+        bytes as f64 / self.cfg.read_stream_bw_gbps(1.0)
+    }
+
+    /// Stream offloaded (cold) KV. Cold reads go over the plain interface
+    /// (no near-layer parallel fan-out — the blocks live wherever the
+    /// write-once allocator put them).
+    pub fn kv_stream_ns(&mut self, bytes: u64) -> f64 {
+        self.lifetime_read_bytes += bytes;
+        bytes as f64 / (self.cfg.interface_bw_gbps(1.0) * self.cfg.stream_utilization)
+    }
+
+    pub fn read_energy_pj(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.cfg.read_energy_pj_per_bit * self.cfg.array_energy_scale
+    }
+
+    pub fn write_energy_pj(&self, bytes: u64) -> f64 {
+        // Writes pay the full per-bit cost (SET/RESET pulses do not
+        // amortize the way synchronous wide reads do).
+        bytes as f64 * 8.0 * self.cfg.write_energy_pj_per_bit
+    }
+
+    /// Fraction of rated endurance consumed (1.0 = worn out).
+    pub fn endurance_consumed(&self) -> f64 {
+        self.max_cell_writes / self.cfg.endurance_writes as f64
+    }
+
+    /// Projected device lifetime in inferences, given the per-inference
+    /// write volume observed so far over `inferences` runs.
+    pub fn projected_lifetime_inferences(&self, inferences: u64) -> f64 {
+        if self.lifetime_write_bytes == 0 || inferences == 0 {
+            return f64::INFINITY;
+        }
+        let writes_per_inference =
+            self.max_cell_writes / inferences as f64;
+        self.cfg.endurance_writes as f64 / writes_per_inference
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_enforced() {
+        let mut r = RramState::new(RramConfig::default());
+        assert!(r.load_weights(17_000_000_000).is_err());
+        assert!(r.load_weights(10_000_000_000).is_ok());
+        assert_eq!(r.free_bytes(), 6_000_000_000);
+    }
+
+    #[test]
+    fn writes_slower_than_reads() {
+        let mut r = RramState::new(RramConfig::default());
+        r.load_weights(1_000_000).unwrap();
+        let read_ns = r.weight_stream_ns(1_000_000);
+        let mut r2 = RramState::new(RramConfig::default());
+        let write_ns = r2.load_weights(1_000_000).unwrap();
+        assert!(write_ns > read_ns, "write {write_ns} vs read {read_ns}");
+    }
+
+    #[test]
+    fn write_energy_exceeds_read_energy() {
+        let r = RramState::new(RramConfig::default());
+        assert!(r.write_energy_pj(100) > r.read_energy_pj(100));
+    }
+
+    #[test]
+    fn endurance_accumulates_with_writes() {
+        let mut r = RramState::new(RramConfig::default());
+        r.load_weights(1_000_000_000).unwrap();
+        let e1 = r.endurance_consumed();
+        r.offload_kv(500_000_000);
+        let e2 = r.endurance_consumed();
+        assert!(e2 > e1);
+        assert!(e2 < 1e-5, "write-once traffic must barely dent endurance");
+    }
+
+    #[test]
+    fn lifetime_projection() {
+        let mut r = RramState::new(RramConfig::default());
+        // 2 MB of KV offload per inference over 10 inferences.
+        for _ in 0..10 {
+            r.offload_kv(2_000_000);
+        }
+        let life = r.projected_lifetime_inferences(10);
+        // 1e6 endurance / (1e-3 cell-writes per inference) = 1e9.
+        assert!(life > 1e8, "lifetime {life}");
+        assert!(life.is_finite());
+    }
+
+    #[test]
+    fn cold_kv_reads_slower_than_weight_stream() {
+        let mut r = RramState::new(RramConfig::default());
+        let w = r.weight_stream_ns(1_000_000);
+        let k = r.kv_stream_ns(1_000_000);
+        assert!(k > w);
+    }
+}

@@ -1,0 +1,4 @@
+//! Near-memory-processor timing models (PE tensor cores + SFPE SIMD).
+
+pub mod pe;
+pub mod sfpe;

@@ -1,0 +1,61 @@
+//! Special-function PE (SFPE) timing: the 256-way SIMD lane that executes
+//! online softmax, normalization, activation functions, and residual glue
+//! (paper Table I's SFPE stages).
+
+use crate::config::NmpConfig;
+
+/// Elementwise/special-function time for `elems` elements, ns.
+///
+/// Special functions (exp, rsqrt) are multi-cycle; `cycles_per_elem`
+/// captures the pipeline cost per element per lane.
+pub fn sfpe_ns(nmp: &NmpConfig, elems: u64, cycles_per_elem: f64) -> f64 {
+    if elems == 0 {
+        return 0.0;
+    }
+    elems as f64 * cycles_per_elem / nmp.sfpe_elems_per_ns()
+}
+
+/// Cycles-per-element presets by operation class.
+pub mod cost {
+    /// Online softmax update: max, exp, scale, accumulate.
+    pub const SOFTMAX: f64 = 4.0;
+    /// LayerNorm: two reduction passes + normalize + scale/shift.
+    pub const NORM: f64 = 3.0;
+    /// GELU/SiLU activation.
+    pub const ACTIVATION: f64 = 2.0;
+    /// Residual add / bias add.
+    pub const ADD: f64 = 1.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_elems_free() {
+        let nmp = NmpConfig::dram_default();
+        assert_eq!(sfpe_ns(&nmp, 0, cost::SOFTMAX), 0.0);
+    }
+
+    #[test]
+    fn dram_sfpe_throughput() {
+        let nmp = NmpConfig::dram_default();
+        // 256 lanes x 16 PUs @ 1 GHz = 4096 elems/ns at 1 cycle/elem.
+        let t = sfpe_ns(&nmp, 4096 * 100, cost::ADD);
+        assert!((t - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_costlier_than_add() {
+        let nmp = NmpConfig::dram_default();
+        assert!(sfpe_ns(&nmp, 1000, cost::SOFTMAX) > sfpe_ns(&nmp, 1000, cost::ADD));
+    }
+
+    #[test]
+    fn rram_nmp_falls_back_to_pe_lanes() {
+        let nmp = NmpConfig::rram_default();
+        // No SFPE on the RRAM logic die; elementwise still executes.
+        let t = sfpe_ns(&nmp, 1_000_000, cost::ACTIVATION);
+        assert!(t > 0.0 && t.is_finite());
+    }
+}

@@ -1,0 +1,137 @@
+//! Criterion-style micro-benchmark harness (criterion is not vendored in
+//! this offline environment). Used by `cargo bench` targets
+//! (rust/benches/*.rs with `harness = false`).
+//!
+//! Methodology: warmup iterations, then timed batches until both a
+//! minimum iteration count and a minimum measurement window are reached;
+//! reports mean / stddev / min / throughput.
+
+use std::time::Instant;
+
+use super::stats::{fmt_ns, Summary};
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter (±{:>10}, min {:>10}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.min_ns),
+            self.iterations
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub min_time_ns: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, min_iters: 10, min_time_ns: 2e8, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, min_iters: 3, min_time_ns: 5e7, results: Vec::new() }
+    }
+
+    /// Time `f`, preventing the optimizer from discarding its result.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut s = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while iters < self.min_iters || (start.elapsed().as_nanos() as f64) < self.min_time_ns {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            s.push(t0.elapsed().as_nanos() as f64);
+            iters += 1;
+            if iters > 1_000_000 {
+                break; // pathological fast function; enough samples
+            }
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iterations: s.count(),
+            mean_ns: s.mean(),
+            stddev_ns: s.stddev(),
+            min_ns: s.min(),
+        };
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render a closing summary table.
+    pub fn summary(&self) -> String {
+        let mut out = String::from("\n== bench summary ==\n");
+        for r in &self.results {
+            out.push_str(&r.report_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench { warmup_iters: 1, min_iters: 5, min_time_ns: 0.0, results: vec![] };
+        let r = b.bench("noop-ish", || std::hint::black_box(2 + 2));
+        assert!(r.iterations >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn ordering_detects_slow_functions() {
+        let mut b = Bench { warmup_iters: 1, min_iters: 5, min_time_ns: 0.0, results: vec![] };
+        let fast = b.bench("fast", || 1 + 1).mean_ns;
+        // black_box the loop bound so release builds cannot const-fold it.
+        let n = std::hint::black_box(200_000u64);
+        let slow = b
+            .bench("slow", || {
+                let mut acc = 0u64;
+                let mut i = std::hint::black_box(0u64);
+                while i < n {
+                    acc = acc.wrapping_add(std::hint::black_box(i).wrapping_mul(31));
+                    i += 1;
+                }
+                acc
+            })
+            .mean_ns;
+        assert!(slow > fast, "slow {slow} fast {fast}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser (clap is not vendored in this environment).
+//!
+//! Supports the subcommand + `--flag` / `--key value` / `--key=value`
+//! grammar used by the `chime` binary and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First bare word (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining bare words.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["simulate", "fastvlm-0.6b"]);
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.positional, vec!["fastvlm-0.6b"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["sweep", "--steps", "488", "--model=tiny"]);
+        assert_eq!(a.get_usize("steps", 0), 488);
+        assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["results", "--json", "--fig", "6"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.get("fig"), Some("6"));
+        assert!(a.flag("fig")); // options count as present
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--models", "a, b,c"]);
+        assert_eq!(a.get_list("models").unwrap(), vec!["a", "b", "c"]);
+    }
+}

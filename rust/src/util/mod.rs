@@ -1,0 +1,18 @@
+//! Self-built substrates: JSON, CLI parsing, PRNG, statistics, tables.
+//!
+//! This offline environment vendors only the `xla` crate's build closure,
+//! so serde / clap / rand / prettytable equivalents live here (DESIGN.md
+//! §2 substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+pub use cli::Args;
+pub use json::Json;
+pub use prng::Prng;
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,154 @@
+//! Summary statistics and unit formatting used across metrics, benches,
+//! and the results harness.
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
+    }
+}
+
+/// Percentile over a sample (linear interpolation, p in [0, 100]).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (samples.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let frac = rank - lo as f64;
+        samples[lo] * (1.0 - frac) + samples[hi] * frac
+    }
+}
+
+/// Format a duration in nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if !ns.is_finite() {
+        return format!("{ns}");
+    }
+    let abs = ns.abs();
+    if abs >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.1} ns", ns)
+    }
+}
+
+/// Format an energy in picojoules with an adaptive unit.
+pub fn fmt_pj(pj: f64) -> String {
+    let abs = pj.abs();
+    if abs >= 1e12 {
+        format!("{:.3} J", pj / 1e12)
+    } else if abs >= 1e9 {
+        format!("{:.3} mJ", pj / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.3} µJ", pj / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.3} nJ", pj / 1e3)
+    } else {
+        format!("{:.1} pJ", pj)
+    }
+}
+
+/// Format a byte count with an adaptive binary unit.
+pub fn fmt_bytes(b: f64) -> String {
+    let abs = b.abs();
+    if abs >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if abs >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else if abs >= 1024.0 {
+        format!("{:.2} KiB", b / 1024.0)
+    } else {
+        format!("{:.0} B", b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 100.0), 4.0);
+        assert!((percentile(&mut xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn formatting_picks_units() {
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(512.0), "512.0 ns");
+        assert_eq!(fmt_pj(3.2e9), "3.200 mJ");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+    }
+}

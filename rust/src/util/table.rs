@@ -1,0 +1,125 @@
+//! Plain-text table rendering for the paper-results harness (`chime
+//! results`) — prints the same rows/series the paper's tables and figures
+//! report.
+
+/// A simple column-aligned text table with a title and header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {} in table {:?}",
+            cells.len(),
+            self.header.len(),
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                // Left-align first column, right-align numerics.
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+                } else {
+                    s.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+                }
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        let total = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&format!("{}\n", "-".repeat(total)));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+/// Convenience: format with fixed decimals.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Convenience: format a multiplicative factor like "41.4x".
+pub fn x(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{:.0}x", v)
+    } else {
+        format!("{:.1}x", v)
+    }
+}
+
+/// Convenience: format a percentage.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["model", "tps"]);
+        t.row(vec!["fastvlm-0.6b".into(), f(533.0, 1)]);
+        t.row(vec!["mv-3b".into(), f(23.0, 1)]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("fastvlm-0.6b"));
+        // Right-aligned numeric column: both numbers end at same offset.
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(x(41.44), "41.4x");
+        assert_eq!(x(246.0), "246x");
+        assert_eq!(pct(0.515), "51.5%");
+        assert_eq!(f(1.23456, 2), "1.23");
+    }
+}

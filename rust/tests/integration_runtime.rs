@@ -1,0 +1,110 @@
+//! Integration tests: the PJRT functional runtime against the AOT
+//! artifacts. These tests skip (pass trivially) when `make artifacts`
+//! has not run, so `cargo test` stays green pre-build; CI runs
+//! `make artifacts` first (see Makefile `test` target).
+
+use chime::runtime::{FunctionalMllm, Manifest};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn manifest_signatures_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let cfg = &m.config;
+    let dec = m.entry("decode_step").unwrap();
+    assert_eq!(dec.inputs.len(), 4);
+    let kv = &dec.inputs[2];
+    assert_eq!(
+        kv.shape,
+        vec![cfg.n_layers, cfg.n_heads, cfg.max_len, cfg.d_head]
+    );
+    let pre = m.entry("prefill").unwrap();
+    assert_eq!(pre.outputs[0].shape, vec![cfg.vocab]);
+    let ve = m.entry("vision_encoder").unwrap();
+    assert_eq!(ve.inputs[0].shape, vec![cfg.img_size, cfg.img_size, cfg.img_channels]);
+}
+
+#[test]
+fn parity_with_python_oracle() {
+    // THE cross-layer correctness test: rust PJRT greedy decode must
+    // reproduce python's recorded token sequence bit-for-bit.
+    let Some(dir) = artifacts() else { return };
+    let mllm = FunctionalMllm::load(&dir).unwrap();
+    mllm.verify_parity().unwrap();
+}
+
+#[test]
+fn smoke_graph_matches_staged_pipeline() {
+    // model.hlo.txt (single fused graph) and the staged entry points must
+    // agree on the first greedy token.
+    let Some(dir) = artifacts() else { return };
+    let mllm = FunctionalMllm::load(&dir).unwrap();
+    let image = mllm.manifest.synthetic_image();
+    let prompt = mllm.manifest.parity.prompt.clone();
+    let smoke_tok = mllm.smoke(&image, &prompt).unwrap();
+    let gen = mllm.generate(&image, &prompt, 1).unwrap();
+    assert_eq!(smoke_tok, gen.tokens[0]);
+    assert_eq!(smoke_tok, mllm.manifest.parity.expected_tokens[0]);
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mllm = FunctionalMllm::load(&dir).unwrap();
+    let image = mllm.manifest.synthetic_image();
+    let prompt = mllm.manifest.parity.prompt.clone();
+    let a = mllm.generate(&image, &prompt, 6).unwrap();
+    let b = mllm.generate(&image, &prompt, 6).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}
+
+#[test]
+fn generation_depends_on_image() {
+    // Multimodality must be live in the compiled artifacts too.
+    let Some(dir) = artifacts() else { return };
+    let mllm = FunctionalMllm::load(&dir).unwrap();
+    let prompt = mllm.manifest.parity.prompt.clone();
+    let img_a = mllm.manifest.synthetic_image();
+    let img_b: Vec<f32> = img_a.iter().map(|v| -v).collect();
+    let a = mllm.smoke(&img_a, &prompt).unwrap();
+    let b = mllm.smoke(&img_b, &prompt).unwrap();
+    // Logits must differ; argmax usually does for an inverted image. If
+    // argmax coincides, at least full generations should diverge.
+    if a == b {
+        let ga = mllm.generate(&img_a, &prompt, 8).unwrap();
+        let gb = mllm.generate(&img_b, &prompt, 8).unwrap();
+        assert_ne!(ga.tokens, gb.tokens, "image input appears dead");
+    }
+}
+
+#[test]
+fn rejects_malformed_inputs() {
+    let Some(dir) = artifacts() else { return };
+    let mllm = FunctionalMllm::load(&dir).unwrap();
+    let image = mllm.manifest.synthetic_image();
+    // Wrong prompt length.
+    assert!(mllm.generate(&image, &[1, 2, 3], 2).is_err());
+    // Wrong image size.
+    assert!(mllm.generate(&image[..10], &mllm.manifest.parity.prompt, 2).is_err());
+}
+
+#[test]
+fn kv_capacity_bounds_generation() {
+    let Some(dir) = artifacts() else { return };
+    let mllm = FunctionalMllm::load(&dir).unwrap();
+    let cfg = &mllm.manifest.config;
+    let image = mllm.manifest.synthetic_image();
+    let prompt = mllm.manifest.parity.prompt.clone();
+    let budget = cfg.max_len - cfg.prefill_len;
+    let gen = mllm.generate(&image, &prompt, budget + 50).unwrap();
+    assert!(gen.tokens.len() <= budget + 1, "generated past KV capacity");
+}

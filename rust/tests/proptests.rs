@@ -1,0 +1,251 @@
+//! Property-based tests over coordinator/mapping/substrate invariants.
+//!
+//! proptest is not vendored in this offline environment, so this file
+//! carries a small seeded-random property harness (`check`) on top of
+//! `chime::util::Prng`: N random cases per property, failures reported
+//! with the case index + seed for reproduction.
+
+use chime::config::{ChimeHardware, LlmConfig, MllmConfig};
+use chime::coordinator::pipeline::{johnson_order, makespan, serial_time, StepWork};
+use chime::mapping::{fusion, layout};
+use chime::model::backbone;
+use chime::sim::memory::dram::WeightClass;
+use chime::sim::memory::DramState;
+use chime::util::{Json, Prng};
+
+const CASES: usize = 200;
+
+/// Tiny property harness: run `prop` on CASES seeded cases.
+fn check(name: &str, mut prop: impl FnMut(&mut Prng) -> Result<(), String>) {
+    for case in 0..CASES {
+        let seed = 0xC41_3E55 ^ (case as u64);
+        let mut prng = Prng::new(seed);
+        if let Err(msg) = prop(&mut prng) {
+            panic!("property {name} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+fn random_llm(prng: &mut Prng) -> LlmConfig {
+    let d_head = *prng.choice(&[16usize, 32, 64, 128]);
+    let n_heads = prng.range(1, 33);
+    let n_kv_heads = 1 + prng.range(0, n_heads);
+    LlmConfig {
+        d_model: d_head * prng.range(1, 40),
+        n_layers: prng.range(1, 48),
+        n_heads,
+        n_kv_heads,
+        d_head,
+        d_ffn: prng.range(64, 20_000),
+        ffn_matrices: *prng.choice(&[2usize, 3]),
+        vocab: prng.range(256, 200_000),
+        tied_embeddings: prng.bool(),
+        bytes_per_param: 2,
+    }
+}
+
+#[test]
+fn prop_fusion_never_splits_chiplets_and_keeps_two_cut_points() {
+    check("fusion invariants", |prng| {
+        let llm = random_llm(prng);
+        let pos = prng.range(1, 4096);
+        let ops = backbone::decode_ops(&llm, pos);
+        let kernels = fusion::fuse_ops(&ops, 1);
+        fusion::validate(&kernels).map_err(|e| e)?;
+        let cut_outs = kernels.iter().filter(|k| k.cut_out).count();
+        if cut_outs != 2 * llm.n_layers {
+            return Err(format!(
+                "expected {} cut points, got {cut_outs}",
+                2 * llm.n_layers
+            ));
+        }
+        // Conservation: fused kernels carry exactly the ops' totals.
+        let op_w: u64 = ops.iter().map(|o| o.weight_bytes).sum();
+        let k_w: u64 = kernels.iter().map(|k| k.weight_bytes()).sum();
+        if op_w != k_w {
+            return Err(format!("weight bytes {op_w} != fused {k_w}"));
+        }
+        let op_f: f64 = ops.iter().map(|o| o.flops).sum();
+        let k_f: f64 = kernels.iter().map(|k| k.flops()).sum();
+        if (op_f - k_f).abs() > 1.0 {
+            return Err(format!("flops {op_f} != fused {k_f}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_weight_traffic_independent_of_position() {
+    // Weights stream once per step regardless of context length; only KV
+    // traffic grows.
+    check("weights independent of pos", |prng| {
+        let llm = random_llm(prng);
+        let p1 = prng.range(1, 2000);
+        let p2 = p1 + prng.range(1, 2000);
+        let w = |pos: usize| -> u64 {
+            backbone::decode_ops(&llm, pos).iter().map(|o| o.weight_bytes).sum()
+        };
+        if w(p1) != w(p2) {
+            return Err(format!("weight bytes differ: {} vs {}", w(p1), w(p2)));
+        }
+        let kv = |pos: usize| -> u64 {
+            backbone::decode_ops(&llm, pos).iter().map(|o| o.kv_read_bytes).sum()
+        };
+        if kv(p2) <= kv(p1) {
+            return Err("kv traffic must grow with position".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dram_tier_allocator_conserves_bytes() {
+    check("dram allocator conservation", |prng| {
+        let mut cfg = chime::config::DramConfig::default();
+        cfg.tier_capacity_bytes = prng.range(1_000, 1_000_000) as u64;
+        let cap = cfg.tier_capacity_bytes * cfg.tiers as u64;
+        let mut dram = DramState::new(cfg);
+        let weights = (prng.f64() * cap as f64 * 0.9) as u64;
+        dram.place_weights_classed(WeightClass::Attn, weights).map_err(|o| format!("overflow {o}"))?;
+        let mut appended = 0u64;
+        let mut offloaded = 0u64;
+        for _ in 0..prng.range(1, 30) {
+            let chunk = prng.range(1, 200_000) as u64;
+            appended += chunk;
+            offloaded += dram.append_kv(chunk);
+        }
+        // Conservation: every appended byte is in a tier or offloaded.
+        let resident: u64 = dram.tiers.iter().map(|t| t.kv).sum();
+        if resident + offloaded != appended {
+            return Err(format!(
+                "lost bytes: resident {resident} + offloaded {offloaded} != appended {appended}"
+            ));
+        }
+        // Capacity: no tier overfilled.
+        for (i, t) in dram.tiers.iter().enumerate() {
+            if t.weights + t.kv > t.capacity {
+                return Err(format!("tier {i} overfilled"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_johnson_rule_never_worse_than_fifo_or_reverse() {
+    check("johnson optimality vs heuristics", |prng| {
+        let n = prng.range(1, 12);
+        let jobs: Vec<StepWork> = (0..n)
+            .map(|id| StepWork {
+                id,
+                dram_ns: prng.uniform(1.0, 1000.0),
+                rram_ns: prng.uniform(1.0, 1000.0),
+            })
+            .collect();
+        let jspan = makespan(&johnson_order(&jobs));
+        let fifo = makespan(&jobs);
+        let mut rev = jobs.clone();
+        rev.reverse();
+        let rspan = makespan(&rev);
+        if jspan > fifo + 1e-9 || jspan > rspan + 1e-9 {
+            return Err(format!("johnson {jspan} worse than fifo {fifo} / reverse {rspan}"));
+        }
+        // Makespan bounds: max(total_dram + min_rram_tail, ...) <= span <= serial.
+        let serial = serial_time(&jobs);
+        let dram_total: f64 = jobs.iter().map(|x| x.dram_ns).sum();
+        let rram_total: f64 = jobs.iter().map(|x| x.rram_ns).sum();
+        let lower = dram_total.max(rram_total);
+        if jspan < lower - 1e-9 || jspan > serial + 1e-9 {
+            return Err(format!("span {jspan} outside [{lower}, {serial}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weight_layout_partitions_model_bytes() {
+    check("layout partitions bytes", |prng| {
+        let hw = ChimeHardware::default();
+        let mut model = MllmConfig::paper_models()[prng.range(0, 4)].clone();
+        // Jitter dimensions to explore the space (kept placeable).
+        model.llm.n_layers = prng.range(1, 40);
+        model.llm.d_ffn = prng.range(64, 12_000);
+        let l = layout::WeightLayout::plan(&model, &hw);
+        let class_sum: u64 = l.dram_classes.iter().map(|(_, b)| b).sum();
+        if class_sum != l.dram_weight_bytes {
+            return Err(format!(
+                "classes {class_sum} != dram total {}",
+                l.dram_weight_bytes
+            ));
+        }
+        if l.rram_weight_bytes > hw.rram.chip_capacity_bytes {
+            return Err("rram overfilled".into());
+        }
+        if l.dram_weight_bytes > hw.dram.chip_capacity_bytes() {
+            return Err("dram overfilled".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json roundtrip", |prng| {
+        let v = random_json(prng, 0);
+        let text = v.pretty();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip mismatch:\n{text}"));
+        }
+        let compact = Json::parse(&v.compact()).map_err(|e| e.to_string())?;
+        if compact != v {
+            return Err("compact roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+fn random_json(prng: &mut Prng, depth: usize) -> Json {
+    let pick = if depth > 3 { prng.range(0, 4) } else { prng.range(0, 6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(prng.bool()),
+        2 => {
+            // Round to avoid float-text precision mismatches.
+            let v = (prng.uniform(-1e6, 1e6) * 1000.0).round() / 1000.0;
+            Json::Num(v)
+        }
+        3 => {
+            let len = prng.range(0, 12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = prng.range(32, 127) as u8 as char;
+                    c
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..prng.range(0, 5)).map(|_| random_json(prng, depth + 1)).collect()),
+        _ => {
+            let mut obj = std::collections::BTreeMap::new();
+            for i in 0..prng.range(0, 5) {
+                obj.insert(format!("k{i}"), random_json(prng, depth + 1));
+            }
+            Json::Obj(obj)
+        }
+    }
+}
+
+#[test]
+fn prop_prefill_cost_exceeds_single_decode_step() {
+    check("prefill > decode step", |prng| {
+        let llm = random_llm(prng);
+        let s = prng.range(2, 512);
+        let prefill: f64 = backbone::prefill_ops(&llm, s).iter().map(|o| o.flops).sum();
+        let decode: f64 = backbone::decode_ops(&llm, s).iter().map(|o| o.flops).sum();
+        if prefill <= decode {
+            return Err(format!("prefill {prefill} <= decode {decode} at s={s}"));
+        }
+        Ok(())
+    });
+}
