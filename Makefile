@@ -1,0 +1,28 @@
+# CHIME reproduction — top-level targets.
+#
+#   make artifacts   AOT-lower the tiny MLLM to artifacts/ (needs JAX)
+#   make build       release build of the Rust workspace
+#   make test        tier-1 verify: cargo build --release && cargo test -q
+#   make pytest      python kernel/model/AOT tests (skip cleanly w/o JAX)
+#   make results     regenerate every paper table/figure
+#   make golden      refresh the committed golden JSON snapshots
+
+.PHONY: artifacts build test pytest results golden
+
+artifacts:
+	cd python && python -m compile.aot --outdir ../artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+pytest:
+	cd python && python -m pytest -q
+
+results: build
+	cd rust && cargo run --release -- results --all
+
+golden:
+	cd rust && CHIME_UPDATE_GOLDEN=1 cargo test --test golden_paper

@@ -7,12 +7,15 @@
 //!    (FastVLM 0.6B) on the CHIME hardware and print the headline
 //!    numbers next to the Jetson baseline.
 //!
-//! Run: cargo run --release --example quickstart
+//! Run: cargo run --release --example quickstart [-- --text N --out N]
+//! (the optional flags shrink the VQA workload — used by the example
+//! smoke test to keep the run tiny).
 
 use chime::baselines::jetson;
 use chime::config::{ChimeConfig, JetsonSpec, MllmConfig};
 use chime::runtime::{FunctionalMllm, Manifest};
 use chime::sim;
+use chime::util::Args;
 
 fn main() -> anyhow::Result<()> {
     // ---------- 1. functional inference over the AOT artifacts ----------
@@ -41,16 +44,21 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---------- 2. paper-scale timing on the CHIME simulator -------------
-    let cfg = ChimeConfig::default();
+    let args = Args::from_env();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload.text_tokens = args.get_usize("text", cfg.workload.text_tokens);
+    cfg.workload.output_tokens = args.get_usize("out", cfg.workload.output_tokens);
     let model = MllmConfig::fastvlm_0_6b();
     let stats = sim::simulate(&model, &cfg);
     let jet = jetson::run(&model, &cfg.workload, &JetsonSpec::default());
     println!(
-        "CHIME  {}: {:.0} tok/s, {:.0} tok/J, {:.2} W (VQA 512x512, 128 in / 488 out)",
+        "CHIME  {}: {:.0} tok/s, {:.0} tok/J, {:.2} W (VQA 512x512, {} in / {} out)",
         model.name,
         stats.tokens_per_s(),
         stats.tokens_per_j(),
-        stats.avg_power_w()
+        stats.avg_power_w(),
+        cfg.workload.text_tokens,
+        cfg.workload.output_tokens
     );
     println!(
         "Jetson {}: {:.1} tok/s, {:.2} tok/J  ->  speedup {:.1}x, energy {:.0}x",

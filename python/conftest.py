@@ -1,5 +1,52 @@
-"""Make `compile.*` importable when pytest runs from the repo root."""
+"""Pytest bootstrap for the python/ tree.
+
+Two jobs:
+
+1. Make ``compile.*`` importable regardless of invocation directory.
+2. Gate collection on the optional toolchain: the kernel/model/AOT tests
+   need JAX (the AOT/Pallas toolchain) and the property sweep additionally
+   needs ``hypothesis``. When a requirement is absent the corresponding
+   module is *skipped with a reason* (reported in the session header)
+   instead of erroring at collection, so ``pytest`` stays green on
+   machines that only carry the Rust side.
+"""
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def _missing(mod):
+    try:
+        return importlib.util.find_spec(mod) is None
+    except (ImportError, ValueError):
+        return True
+
+
+# Test module -> import requirements beyond pytest itself.
+_REQUIREMENTS = {
+    "test_aot.py": ["jax", "numpy"],
+    "test_model.py": ["jax", "numpy"],
+    "test_kernels.py": ["jax", "numpy"],
+    "test_kernels_hypothesis.py": ["jax", "numpy", "hypothesis"],
+}
+
+
+def pytest_ignore_collect(collection_path, config):
+    name = os.path.basename(str(collection_path))
+    reqs = _REQUIREMENTS.get(name, [])
+    if any(_missing(r) for r in reqs):
+        return True
+    return None
+
+
+def pytest_report_header(config):
+    lines = []
+    for name, reqs in sorted(_REQUIREMENTS.items()):
+        gone = sorted({r for r in reqs if _missing(r)})
+        if gone:
+            lines.append(
+                "chime: skipping %s (missing: %s)" % (name, ", ".join(gone))
+            )
+    return lines

@@ -21,8 +21,13 @@
 //!   pipelined engine joining functional execution with simulated timing);
 //! - [`results`]: the paper-results harness — one module per table/figure.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! paper-vs-measured numbers.
+//! See DESIGN.md (repo root) for the system inventory, the two-cut-point
+//! pipeline, and the Table I kernel mapping; EXPERIMENTS.md for the
+//! paper-vs-measured table and the golden-snapshot workflow
+//! (`rust/tests/golden_paper.rs`). The crate is network-dependency-free:
+//! `anyhow` and `xla` resolve to vendored path crates under rust/vendor/
+//! (the `xla` stub gates the functional path off until the real PJRT
+//! build closure is supplied).
 
 pub mod baselines;
 pub mod config;

@@ -52,7 +52,7 @@ COMMANDS:
   serve     [--backend sim|functional] [--model NAME] [--requests N]
             [--rate R] [--batch B] [--tokens N]
   sweep     [--model NAME] [--json]           Fig 8 sequence-length sweep
-  results   [--fig 1|6|7|8|9|table5] [--all] [--json]
+  results   [--fig 1|6|7|8|9|table5|ablations] [--all] [--json] [--baselines]
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
 MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"

@@ -1,6 +1,12 @@
 //! PJRT artifact runtime: loads the HLO-text entry points that
 //! `python/compile/aot.py` produced (`make artifacts`) and executes the
 //! functional MLLM from the Rust request path. Python is build-time only.
+//!
+//! Backend availability: the default build links the vendored `xla` stub
+//! (rust/vendor/xla), whose `PjRtClient::cpu()` reports the PJRT backend
+//! unavailable — `FunctionalMllm::load` then fails cleanly and every
+//! artifact-gated caller skips. Point the `xla` path dependency at the
+//! real crate to enable true functional execution (DESIGN.md §2).
 
 pub mod artifact;
 pub mod client;

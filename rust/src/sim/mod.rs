@@ -41,7 +41,7 @@ impl PhaseStats {
         self.time_ns += other.time_ns;
         self.energy.merge(&other.energy);
         for (k, v) in &other.time_by_kind {
-            *self.time_by_kind.entry(k).or_insert(0.0) += v;
+            *self.time_by_kind.entry(*k).or_insert(0.0) += v;
         }
         self.dram_busy_ns += other.dram_busy_ns;
         self.rram_busy_ns += other.rram_busy_ns;

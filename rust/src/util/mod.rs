@@ -1,8 +1,9 @@
 //! Self-built substrates: JSON, CLI parsing, PRNG, statistics, tables.
 //!
-//! This offline environment vendors only the `xla` crate's build closure,
-//! so serde / clap / rand / prettytable equivalents live here (DESIGN.md
-//! §2 substitution table).
+//! This offline environment cannot fetch registry crates, so serde /
+//! clap / rand / criterion / prettytable equivalents live here, and the
+//! two external names the runtime consumes (`anyhow`, `xla`) are vendored
+//! as path crates under rust/vendor/ (DESIGN.md §2 substitution table).
 
 pub mod bench;
 pub mod cli;

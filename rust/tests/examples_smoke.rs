@@ -1,0 +1,113 @@
+//! Smoke tests for the repo-root examples so they cannot silently rot.
+//!
+//! `cargo test` already *compiles* every `[[example]]` target (that is
+//! the compile half of the guarantee); these tests additionally locate
+//! the built binaries and *run* `quickstart` (with a tiny workload via
+//! `--text/--out`) and `vqa_serving --requests 2` end to end, asserting
+//! they exit 0 and print their headline output.
+//!
+//! When a partial invocation (e.g. `cargo test --test golden_paper`)
+//! skipped building examples, the tests report that and pass — mirroring
+//! the artifact-gated runtime tests — rather than failing on a build-plan
+//! detail.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+const EXAMPLES: [&str; 4] = ["quickstart", "vqa_serving", "seqlen_sweep", "endurance_study"];
+
+/// Locate a built example binary under the active target directory,
+/// preferring the profile this test binary itself was built with so a
+/// stale binary from the other profile is never picked up first.
+fn example_bin(name: &str) -> Option<PathBuf> {
+    let target_root = std::env::var_os("CARGO_TARGET_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target"));
+    let profiles = if cfg!(debug_assertions) {
+        ["debug", "release"]
+    } else {
+        ["release", "debug"]
+    };
+    for profile in profiles {
+        for suffix in ["", ".exe"] {
+            let p = target_root
+                .join(profile)
+                .join("examples")
+                .join(format!("{name}{suffix}"));
+            if p.exists() {
+                return Some(p);
+            }
+        }
+    }
+    None
+}
+
+fn run_example(name: &str, args: &[&str]) -> Option<std::process::Output> {
+    let bin = match example_bin(name) {
+        Some(b) => b,
+        None => {
+            eprintln!("skipping: example {name} not built in this invocation");
+            return None;
+        }
+    };
+    let out = Command::new(&bin)
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap_or_else(|e| panic!("spawning {}: {e}", bin.display()));
+    assert!(
+        out.status.success(),
+        "example {name} {args:?} exited {:?}\nstdout:\n{}\nstderr:\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Some(out)
+}
+
+#[test]
+fn all_examples_compiled() {
+    // `cargo test` builds every [[example]] (compile rot fails the build
+    // itself). This guards the discovery layer: if ANY example binary is
+    // present, the build plan included examples, so ALL four must be —
+    // a partial set means an [[example]] entry or path went stale.
+    let missing: Vec<&str> = EXAMPLES
+        .iter()
+        .copied()
+        .filter(|name| example_bin(name).is_none())
+        .collect();
+    if missing.len() == EXAMPLES.len() {
+        // Filtered invocation (e.g. `cargo test --test examples_smoke`)
+        // that built no examples at all; nothing to check.
+        eprintln!("skipping: no examples built in this invocation");
+        return;
+    }
+    assert!(
+        missing.is_empty(),
+        "examples built this invocation, but these are missing from the \
+         target dir (stale [[example]] entry or path?): {missing:?}"
+    );
+}
+
+#[test]
+fn quickstart_runs_with_tiny_workload() {
+    let Some(out) = run_example("quickstart", &["--text", "16", "--out", "8"]) else {
+        return;
+    };
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("CHIME"), "quickstart output missing headline:\n{stdout}");
+    assert!(stdout.contains("speedup"), "quickstart output missing speedup:\n{stdout}");
+}
+
+#[test]
+fn vqa_serving_runs_small_request_stream() {
+    let Some(out) = run_example("vqa_serving", &["--requests", "2"]) else {
+        return;
+    };
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("simulated CHIME serving"),
+        "vqa_serving output missing simulated section:\n{stdout}"
+    );
+    assert!(stdout.contains("tok/s"), "vqa_serving output missing throughput:\n{stdout}");
+}

@@ -237,6 +237,145 @@ fn random_json(prng: &mut Prng, depth: usize) -> Json {
 }
 
 #[test]
+fn prop_dram_tier_placement_never_exceeds_capacity() {
+    // ❶ layout mechanics: classed weight placement may only fill a tier to
+    // `TierState::capacity`, `free()` must never underflow (it must equal
+    // capacity - weights - kv exactly once occupancy is legal), and
+    // placement must conserve bytes (placed + reported overflow == asked).
+    check("tier placement capacity", |prng| {
+        let mut cfg = chime::config::DramConfig::default();
+        cfg.tier_capacity_bytes = prng.range(1_000, 500_000) as u64;
+        let cap = cfg.tier_capacity_bytes * cfg.tiers as u64;
+        let mut dram = DramState::new(cfg);
+        let classes = WeightClass::all_in_priority_order();
+        let mut asked = 0u64;
+        let mut overflowed = 0u64;
+        for _ in 0..prng.range(1, 12) {
+            let class = *prng.choice(&classes);
+            let bytes = prng.range(0, (cap / 2) as usize + 1) as u64;
+            asked += bytes;
+            if let Err(over) = dram.place_weights_classed(class, bytes) {
+                if over > bytes {
+                    return Err(format!("overflow {over} exceeds request {bytes}"));
+                }
+                overflowed += over;
+            }
+            for (i, t) in dram.tiers.iter().enumerate() {
+                if t.weights + t.kv > t.capacity {
+                    return Err(format!(
+                        "tier {i} overfilled: {} + {} > {}",
+                        t.weights, t.kv, t.capacity
+                    ));
+                }
+                if t.free() != t.capacity - t.weights - t.kv {
+                    return Err(format!("tier {i} free() inconsistent"));
+                }
+            }
+        }
+        let placed: u64 = dram.tiers.iter().map(|t| t.weights).sum();
+        if placed + overflowed != asked {
+            return Err(format!(
+                "bytes lost: placed {placed} + overflow {overflowed} != asked {asked}"
+            ));
+        }
+        if placed > cap {
+            return Err(format!("placed {placed} exceeds stack capacity {cap}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_offload_one_shot_monotone() {
+    // ❷ endurance-aware offload: the DRAM-side offload ledger only ever
+    // grows (write-once — offloaded blocks never silently return), each
+    // append's return value matches the ledger delta, and the RRAM
+    // endurance/write counters are monotone under the offload stream.
+    check("kv offload one-shot monotonicity", |prng| {
+        let mut cfg = chime::config::DramConfig::default();
+        cfg.tier_capacity_bytes = prng.range(1_000, 200_000) as u64;
+        let cap = cfg.tier_capacity_bytes * cfg.tiers as u64;
+        let mut dram = DramState::new(cfg);
+        let mut rram = chime::sim::memory::RramState::new(chime::config::RramConfig::default());
+        // Random static weight load (may fill most of the stack).
+        let weights = (prng.f64() * cap as f64) as u64;
+        let _ = dram.place_weights(weights);
+        let mut last_offloaded = 0u64;
+        let mut last_endurance = 0.0f64;
+        let mut last_writes = 0u64;
+        for _ in 0..prng.range(1, 40) {
+            let chunk = prng.range(1, 100_000) as u64;
+            let before = dram.kv_offloaded;
+            let off = dram.append_kv(chunk);
+            if dram.kv_offloaded != before + off {
+                return Err(format!(
+                    "offload ledger delta {} != returned {off}",
+                    dram.kv_offloaded - before
+                ));
+            }
+            if dram.kv_offloaded < last_offloaded {
+                return Err("kv_offloaded decreased (write-once violated)".into());
+            }
+            last_offloaded = dram.kv_offloaded;
+            if off > 0 {
+                rram.offload_kv(off);
+                if rram.endurance_consumed() < last_endurance {
+                    return Err("rram endurance went backwards".into());
+                }
+                if rram.lifetime_write_bytes < last_writes {
+                    return Err("rram lifetime writes went backwards".into());
+                }
+                last_endurance = rram.endurance_consumed();
+                last_writes = rram.lifetime_write_bytes;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_johnson_makespan_bounded_by_serial() {
+    // Two-machine flow shop: johnson_order must be a permutation of the
+    // jobs, and its makespan must sit in [max(ΣD, ΣR), serial_time].
+    check("johnson permutation and serial bound", |prng| {
+        let n = prng.range(1, 16);
+        let jobs: Vec<StepWork> = (0..n)
+            .map(|id| StepWork {
+                id,
+                dram_ns: prng.uniform(1.0, 1e6),
+                rram_ns: prng.uniform(1.0, 1e6),
+            })
+            .collect();
+        let order = johnson_order(&jobs);
+        if order.len() != jobs.len() {
+            return Err(format!("order has {} jobs, expected {}", order.len(), jobs.len()));
+        }
+        let mut ids: Vec<usize> = order.iter().map(|j| j.id).collect();
+        ids.sort_unstable();
+        if ids != (0..n).collect::<Vec<_>>() {
+            return Err("johnson_order is not a permutation of the input".into());
+        }
+        let span = makespan(&order);
+        let serial = serial_time(&jobs);
+        if span > serial + 1e-6 {
+            return Err(format!("makespan {span} exceeds serial time {serial}"));
+        }
+        let dram_total: f64 = jobs.iter().map(|x| x.dram_ns).sum();
+        let rram_total: f64 = jobs.iter().map(|x| x.rram_ns).sum();
+        if span + 1e-6 < dram_total.max(rram_total) {
+            return Err(format!(
+                "makespan {span} below machine lower bound {}",
+                dram_total.max(rram_total)
+            ));
+        }
+        if n == 1 && (span - serial).abs() > 1e-9 {
+            return Err("single job cannot pipeline".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_prefill_cost_exceeds_single_decode_step() {
     check("prefill > decode step", |prng| {
         let llm = random_llm(prng);

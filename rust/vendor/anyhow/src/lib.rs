@@ -1,0 +1,193 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored because
+//! this offline environment cannot fetch registry crates (DESIGN.md §2
+//! substitution table). It provides exactly what the `chime` crate uses:
+//!
+//! * [`Error`]: an opaque error with a context chain;
+//! * [`Result<T>`]: alias for `std::result::Result<T, Error>`;
+//! * [`anyhow!`] / [`bail!`]: ad-hoc error construction macros;
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * `From<E: std::error::Error>` so `?` converts concrete errors.
+//!
+//! Display mirrors real anyhow: `{}` prints the outermost context, `{:#}`
+//! prints the whole chain joined with `: `, and `{:?}` prints the chain as
+//! a `Caused by:` list (what `main() -> anyhow::Result<()>` shows).
+
+use std::fmt;
+
+/// Opaque error: a root message plus contexts, outermost last.
+pub struct Error {
+    /// `[0]` is the root cause; later entries are contexts wrapped around
+    /// it (so the *outermost* description is the last element).
+    chain: Vec<String>,
+}
+
+/// `Result` specialised to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.push(ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The root cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: whole chain, outermost first, `: `-joined.
+            let joined: Vec<&str> = self.chain().collect();
+            write!(f, "{}", joined.join(": "))
+        } else {
+            write!(f, "{}", self.chain.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().unwrap())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in self.chain[..self.chain.len() - 1].iter().rev() {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: deliberately *not* `impl std::error::Error for Error` — exactly
+// like real anyhow — so the blanket `From` below does not conflict with
+// the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve source() chains as context entries.
+        let mut chain = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error)> = Some(&e);
+        while let Some(c) = cur {
+            chain.push(c.to_string());
+            cur = c.source();
+        }
+        chain.reverse(); // root cause first
+        Error { chain }
+    }
+}
+
+/// Attach context to fallible values (subset of `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "42".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+        fn failing() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(failing().is_err());
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let x = 7;
+        let e = anyhow!("value {x} and {}", 8);
+        assert_eq!(format!("{e}"), "value 7 and 8");
+        fn bails() -> Result<()> {
+            bail!("stopped at {}", 3);
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "stopped at 3");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+}

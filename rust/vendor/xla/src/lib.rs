@@ -1,0 +1,146 @@
+//! API-compatible **stub** of the `xla` crate surface the `chime` runtime
+//! uses (PJRT CPU client + HLO-text compilation + literals).
+//!
+//! The real `xla` crate wraps `xla_extension`, a large C++ build closure
+//! that is not present in this offline environment. This stub keeps the
+//! whole functional-runtime code path *compiling* unchanged while making
+//! the capability probe fail fast: `PjRtClient::cpu()` returns an error,
+//! so `FunctionalMllm::load` / `FunctionalServer::load` report the PJRT
+//! backend as unavailable and every artifact-gated test skips cleanly —
+//! exactly the behaviour the gated tests already expect when
+//! `make artifacts` has not run.
+//!
+//! To enable the real functional path, point the `xla` path dependency in
+//! `rust/Cargo.toml` at a checkout of the real crate (the API below is a
+//! strict subset of it); no `chime` source changes are needed.
+
+use std::fmt;
+
+/// Stub error: every operation reports the backend as unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT/xla_extension is not available in this build \
+             (vendored stub; see rust/vendor/xla/src/lib.rs)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A host literal (stub: carries no data; constructible so call sites
+/// type-check, but every readback errors).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Device buffer handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: creation always fails — the capability probe).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto (stub: parsing always fails).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("not available"), "{msg}");
+    }
+
+    #[test]
+    fn literals_constructible_but_unreadable() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]);
+        assert!(l.is_err());
+        let s = Literal::scalar(3i32);
+        assert!(s.to_vec::<i32>().is_err());
+        assert!(s.to_tuple().is_err());
+    }
+}
