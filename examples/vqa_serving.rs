@@ -8,12 +8,17 @@
 //!     latency/throughput);
 //!   * simulated backend — the same arrival process served by paper-scale
 //!     models on the CHIME hardware simulator with continuous batching
-//!     and two-cut-point pipelining (virtual time, energy).
+//!     and two-cut-point pipelining (virtual time, energy);
+//!   * sharded backend — a saturating burst over 1..=N packages
+//!     (`--packages`, default 4) through the multi-package coordinator,
+//!     demonstrating near-linear tokens/s scaling.
 //!
-//! Run: cargo run --release --example vqa_serving [-- --requests 24]
+//! Run: cargo run --release --example vqa_serving [-- --requests 24 --packages 4]
 
 use chime::config::{ChimeConfig, MllmConfig};
-use chime::coordinator::{BatchPolicy, FunctionalServer, ServeRequest, SimulatedServer};
+use chime::coordinator::{
+    BatchPolicy, FunctionalServer, RoutePolicy, ServeRequest, ShardedServer, SimulatedServer,
+};
 use chime::model::workload::RequestStream;
 use chime::runtime::Manifest;
 use chime::util::stats::fmt_ns;
@@ -82,8 +87,13 @@ fn main() -> anyhow::Result<()> {
                     arrival_ns: r.arrival_ns,
                 })
                 .collect();
-            let mut srv = SimulatedServer::new(&model, &cfg, BatchPolicy { max_batch: batch });
-            let (_, mut m) = srv.serve(reqs);
+            let mut srv = SimulatedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: batch, ..BatchPolicy::default() },
+            );
+            let out = srv.serve(reqs);
+            let mut m = out.metrics;
             let p50 = m.latency_percentile_ns(50.0);
             let p99 = m.latency_percentile_ns(99.0);
             println!(
@@ -95,6 +105,57 @@ fn main() -> anyhow::Result<()> {
                 fmt_ns(p99),
                 m.tokens_per_j(),
             );
+            if !out.shed.is_empty() {
+                println!(
+                    "  {:<16} batch {}: {} requests shed at admission (stats cover survivors only)",
+                    model.name,
+                    batch,
+                    out.shed.len()
+                );
+            }
+        }
+    }
+
+    // ------------------- multi-package sharded scaling --------------------
+    let max_packages = args.get_usize("packages", 4).max(1);
+    println!("\n== sharded CHIME serving (saturating burst, {max_packages} package max) ==");
+    let model = MllmConfig::fastvlm_0_6b();
+    let burst = ServeRequest::burst(n.max(8), 64);
+    // Doubling sweep that always ends exactly at --packages.
+    let mut counts = Vec::new();
+    let mut p = 1usize;
+    while p < max_packages {
+        counts.push(p);
+        p *= 2;
+    }
+    counts.push(max_packages);
+    let mut base_tps = 0.0;
+    for packages in counts {
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy::default(),
+            packages,
+            RoutePolicy::LeastLoaded,
+        );
+        let out = srv.serve(burst.clone());
+        let mut m = out.metrics;
+        if packages == 1 {
+            base_tps = m.tokens_per_s();
+        }
+        let p99 = m.latency_percentile_ns(99.0);
+        println!(
+            "  {:<16} packages {}: {:>7.1} tok/s ({:>4.2}x) | p99 {:>10} | {:>6.1} tok/J | completions {:?}",
+            model.name,
+            packages,
+            m.tokens_per_s(),
+            if base_tps > 0.0 { m.tokens_per_s() / base_tps } else { 0.0 },
+            fmt_ns(p99),
+            m.tokens_per_j(),
+            srv.package_completed(),
+        );
+        if !out.shed.is_empty() {
+            println!("    ({} requests shed at admission)", out.shed.len());
         }
     }
     Ok(())

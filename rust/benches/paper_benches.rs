@@ -20,6 +20,7 @@ fn main() {
         ("fig7_area_power", results::fig7::run),
         ("fig8_seqlen", results::fig8::run),
         ("fig9_memcfg", results::fig9::run),
+        ("scaling_packages", results::scaling::run),
     ] {
         let e = runner();
         println!("{}", e.text);

@@ -1,0 +1,57 @@
+//! Benches for the multi-package sharded serving path: the cross-package
+//! dispatch scheduler in isolation, and end-to-end sharded serves at 1/2/4
+//! packages (tiny model, saturating burst) so scaling regressions show up
+//! as bench-time regressions.
+
+use chime::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+use chime::coordinator::pipeline::{schedule_dispatch, StepWork};
+use chime::coordinator::{BatchPolicy, RoutePolicy, ServeRequest, ShardedServer};
+use chime::util::bench::Bench;
+use chime::util::Prng;
+
+fn main() {
+    println!("== CHIME sharded-serving benches ==\n");
+    let mut b = Bench::quick();
+
+    // --- cross-package dispatch scheduling ---------------------------------
+    let mut prng = Prng::new(3);
+    let jobs: Vec<StepWork> = (0..32)
+        .map(|id| StepWork::new(id, prng.uniform(1e5, 1e6), prng.uniform(1e5, 1e6)))
+        .collect();
+    for packages in [1usize, 2, 4, 8] {
+        let per_pkg: Vec<Vec<StepWork>> = (0..packages)
+            .map(|p| jobs.iter().copied().skip(p).step_by(packages).collect())
+            .collect();
+        let name = format!("schedule_dispatch(32 jobs, {packages} pkg)");
+        b.bench(&name, || schedule_dispatch(&per_pkg));
+        let step = schedule_dispatch(&per_pkg);
+        println!(
+            "  {packages} packages: step span {:.2} ms (serial {:.2} ms)",
+            step.makespan_ns / 1e6,
+            step.serial_ns / 1e6
+        );
+    }
+    println!();
+
+    // --- end-to-end sharded serve (tiny model, virtual time) ---------------
+    let model = MllmConfig::tiny();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 16 };
+    for packages in [1usize, 2, 4] {
+        let name = format!("sharded_serve(tiny, 16 reqs, {packages} pkg)");
+        b.bench(&name, || {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy::default(),
+                packages,
+                RoutePolicy::LeastLoaded,
+            );
+            let out = srv.serve(ServeRequest::burst(16, 16));
+            assert_eq!(out.responses.len(), 16);
+            out.metrics.tokens
+        });
+    }
+
+    print!("{}", b.summary());
+}

@@ -19,11 +19,15 @@ pub struct Slot {
 pub struct BatchPolicy {
     /// Max concurrent decode streams (KV-capacity bound on edge).
     pub max_batch: usize,
+    /// Admission-queue depth per package: beyond this the engine sheds
+    /// load (the request is returned to the caller and counted in
+    /// `ServingMetrics::rejected`, never silently dropped).
+    pub queue_capacity: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 4 }
+        BatchPolicy { max_batch: 4, queue_capacity: 1024 }
     }
 }
 
@@ -58,6 +62,12 @@ impl Batcher {
         self.slots.len()
     }
 
+    /// Decode ticks still owed to the active slots — the batcher's share
+    /// of a package's outstanding load (least-loaded routing input).
+    pub fn outstanding_tokens(&self) -> usize {
+        self.slots.iter().map(|s| s.remaining_tokens).sum()
+    }
+
     /// Join a request with its decode budget.
     pub fn join(&mut self, request_idx: usize, tokens: usize) -> bool {
         if !self.has_capacity() {
@@ -72,11 +82,14 @@ impl Batcher {
     /// request indices that finished this tick.
     pub fn tick(&mut self, costs: &[(f64, f64)]) -> (TickPlan, Vec<usize>) {
         assert_eq!(costs.len(), self.slots.len(), "one cost pair per slot");
+        // `StepWork::new` validates the costs: a NaN/∞ from the pricing
+        // engine is an invariant violation, caught here rather than
+        // corrupting the Johnson ordering downstream.
         let jobs: Vec<StepWork> = self
             .slots
             .iter()
             .zip(costs)
-            .map(|(s, &(d, r))| StepWork { id: s.request_idx, dram_ns: d, rram_ns: r })
+            .map(|(s, &(d, r))| StepWork::new(s.request_idx, d, r))
             .collect();
         let (order, pipelined_ns, serial_ns) = schedule_tick(&jobs);
         let plan = TickPlan {
@@ -102,7 +115,7 @@ mod tests {
 
     #[test]
     fn capacity_respected() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 2 });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, ..BatchPolicy::default() });
         assert!(b.join(0, 4));
         assert!(b.join(1, 4));
         assert!(!b.join(2, 4));
@@ -110,8 +123,27 @@ mod tests {
     }
 
     #[test]
+    fn outstanding_tokens_track_remaining_work() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert_eq!(b.outstanding_tokens(), 0);
+        b.join(0, 3);
+        b.join(1, 5);
+        assert_eq!(b.outstanding_tokens(), 8);
+        b.tick(&[(1.0, 1.0), (1.0, 1.0)]);
+        assert_eq!(b.outstanding_tokens(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a finite non-negative time")]
+    fn tick_rejects_non_finite_costs() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.join(0, 2);
+        b.tick(&[(f64::NAN, 1.0)]);
+    }
+
+    #[test]
     fn tick_retires_finished_slots() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4 });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, ..BatchPolicy::default() });
         b.join(7, 1);
         b.join(8, 2);
         let (_, finished) = b.tick(&[(1.0, 1.0), (1.0, 1.0)]);
@@ -124,7 +156,7 @@ mod tests {
 
     #[test]
     fn tick_pipelines_multi_request_work() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4 });
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, ..BatchPolicy::default() });
         b.join(0, 10);
         b.join(1, 10);
         b.join(2, 10);

@@ -1,159 +1,78 @@
-//! The serving engine: joins the admission queue, the continuous batcher,
-//! the two-cut-point pipeline scheduler, and one of two backends:
+//! The serving engines: the admission queue, continuous batcher, and
+//! two-cut-point pipeline scheduler compose into two backends:
 //!
 //! * **Simulated** — paper-scale models on the CHIME hardware simulator,
-//!   virtual time (drives every throughput/latency experiment);
+//!   virtual time (drives every throughput/latency experiment). This is a
+//!   thin wrapper over the single-package case of `ShardedServer`, so the
+//!   solo and sharded paths share one scheduling core.
 //! * **Functional** — the tiny AOT-compiled MLLM on PJRT, real tokens and
 //!   wall-clock time, with simulated CHIME energy attached per request.
 //!
 //! Python never runs on this path; the functional backend only loads
 //! pre-built `artifacts/*.hlo.txt`.
 
-use std::collections::BTreeMap;
-
 use anyhow::Result;
 
 use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
-use crate::mapping::Plan;
 use crate::runtime::FunctionalMllm;
-use crate::sim::{PhaseStats, SimEngine};
 use crate::util::Prng;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
 use super::metrics::ServingMetrics;
-use super::queue::AdmissionQueue;
 use super::request::{ServeRequest, ServeResponse};
+use super::sharded::{RoutePolicy, ServeOutcome, ShardedServer};
 
-/// Virtual-time simulated serving engine (paper-scale models).
+/// Virtual-time simulated serving engine (paper-scale models): the
+/// single-package deployment of the sharded coordinator.
 pub struct SimulatedServer {
-    pub cfg: ChimeConfig,
-    pub model: MllmConfig,
-    plan: Plan,
-    engine: SimEngine,
-    policy: BatchPolicy,
-    /// §Perf: reusable decode schedule, patched per slot position.
-    template: crate::mapping::planner::DecodeTemplate,
-}
-
-struct ActiveRequest {
-    req: ServeRequest,
-    admitted_ns: f64,
-    prefill_done_ns: Option<f64>,
-    pos: usize,
-    produced: usize,
-    energy_j: f64,
+    inner: ShardedServer,
 }
 
 impl SimulatedServer {
     pub fn new(model: &MllmConfig, cfg: &ChimeConfig, policy: BatchPolicy) -> Self {
-        let plan = Plan::build(model, &cfg.hardware, &cfg.workload);
-        let engine = SimEngine::new(&cfg.hardware, &plan);
-        let template = plan.decode_template();
-        SimulatedServer { cfg: cfg.clone(), model: model.clone(), plan, engine, policy, template }
+        SimulatedServer {
+            inner: ShardedServer::new(model, cfg, policy, 1, RoutePolicy::RoundRobin),
+        }
     }
 
-    /// Serve a request stream in virtual time. Requests must be sorted by
-    /// arrival. Returns completions in finish order + aggregate metrics.
-    pub fn serve(&mut self, mut requests: Vec<ServeRequest>) -> (Vec<ServeResponse>, ServingMetrics) {
-        requests.sort_by(|a, b| a.arrival_ns.partial_cmp(&b.arrival_ns).unwrap());
-        let queue = AdmissionQueue::new(usize::MAX / 2);
-        let mut batcher = Batcher::new(self.policy.clone());
-        let mut active: BTreeMap<usize, ActiveRequest> = BTreeMap::new();
-        let mut responses = Vec::new();
-        let mut metrics = ServingMetrics::new();
-        let mut clock_ns = 0.0_f64;
-        let mut next_arrival = 0usize;
-        let mut arrivals: BTreeMap<u64, f64> = BTreeMap::new();
+    /// Serve a request stream in virtual time. Returns completions in
+    /// completion order, requests shed at admission (never silently
+    /// dropped), and aggregate metrics.
+    pub fn serve(&mut self, requests: Vec<ServeRequest>) -> ServeOutcome {
+        self.inner.serve(requests)
+    }
+}
 
-        loop {
-            // Admit arrivals that have happened by `clock`.
-            while next_arrival < requests.len()
-                && requests[next_arrival].arrival_ns <= clock_ns
-            {
-                let r = requests[next_arrival].clone();
-                arrivals.insert(r.id, r.arrival_ns);
-                queue.admit(r).ok();
-                next_arrival += 1;
-            }
-            // Fill free slots from the queue.
-            while batcher.has_capacity() && !queue.is_empty() {
-                let mut batch = queue.try_pop_batch(1);
-                if let Some(req) = batch.pop() {
-                    let idx = req.id as usize;
-                    let tokens = req.max_new_tokens.max(1);
-                    batcher.join(idx, tokens + 1); // +1 tick for prefill
-                    active.insert(
-                        idx,
-                        ActiveRequest {
-                            admitted_ns: clock_ns.max(req.arrival_ns),
-                            req,
-                            prefill_done_ns: None,
-                            pos: 0,
-                            produced: 0,
-                            energy_j: 0.0,
-                        },
-                    );
-                }
-            }
+/// One-timebase queueing ledger for a sequential (single-stream) server.
+///
+/// Arrival timestamps and service durations share the same ns timeline:
+/// a request arriving while the stream is busy queues for exactly the
+/// stream's backlog; one arriving after the stream drains starts at once.
+/// This replaces the pre-fix accounting that subtracted virtual arrivals
+/// from wall-clock `Instant::elapsed()` — two unrelated timebases whose
+/// difference was meaningless and usually clamped to zero.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SequentialTimeline {
+    free_ns: f64,
+}
 
-            if batcher.active() == 0 {
-                if next_arrival >= requests.len() {
-                    break; // drained
-                }
-                // Idle: jump to the next arrival.
-                clock_ns = clock_ns.max(requests[next_arrival].arrival_ns);
-                continue;
-            }
+impl SequentialTimeline {
+    pub fn new() -> Self {
+        SequentialTimeline { free_ns: 0.0 }
+    }
 
-            // Price each slot's step on the shared hardware state.
-            let slot_ids: Vec<usize> = batcher.slots.iter().map(|s| s.request_idx).collect();
-            let mut costs = Vec::with_capacity(slot_ids.len());
-            for &idx in &slot_ids {
-                let a = active.get_mut(&idx).unwrap();
-                let stats: PhaseStats = if a.prefill_done_ns.is_none() {
-                    // Encode + prefill as this slot's first "step".
-                    let mut s = self.engine.run_kernels(&self.plan.encode_kernels);
-                    s.merge(&self.engine.run_kernels(&self.plan.prefill_kernels));
-                    s
-                } else {
-                    let pos = self.plan.trace.prefill_len() + a.pos;
-                    self.plan.patch_decode_template(&mut self.template, pos);
-                    self.engine.run_kernels(&self.template.kernels)
-                };
-                a.energy_j += stats.energy.total_joules();
-                costs.push((stats.dram_busy_ns, stats.rram_busy_ns + stats.ucie_ns));
-            }
+    /// Queue delay for a request arriving at `arrival_ns` given the work
+    /// already accepted onto the stream. Non-negative by construction.
+    pub fn begin(&self, arrival_ns: f64) -> f64 {
+        (self.free_ns - arrival_ns).max(0.0)
+    }
 
-            // One pipelined tick across the batch.
-            let (plan_tick, finished) = batcher.tick(&costs);
-            clock_ns += plan_tick.pipelined_ns;
-
-            // Advance request state.
-            for &idx in &slot_ids {
-                let a = active.get_mut(&idx).unwrap();
-                if a.prefill_done_ns.is_none() {
-                    a.prefill_done_ns = Some(clock_ns);
-                } else {
-                    a.pos += 1;
-                    a.produced += 1;
-                }
-            }
-            for idx in finished {
-                let a = active.remove(&idx).unwrap();
-                let arrival = arrivals[&a.req.id];
-                let resp = ServeResponse {
-                    id: a.req.id,
-                    tokens: vec![0; a.produced],
-                    queue_ns: a.admitted_ns - arrival,
-                    ttft_ns: a.prefill_done_ns.unwrap_or(clock_ns) - a.admitted_ns,
-                    service_ns: clock_ns - a.admitted_ns,
-                    energy_j: a.energy_j,
-                };
-                metrics.record(arrival, &resp);
-                responses.push(resp);
-            }
-        }
-        (responses, metrics)
+    /// Account `service_ns` of stream time for a request that arrived at
+    /// `arrival_ns`; returns the stream's new free timestamp. Idle gaps
+    /// (arrival after the stream drained) do not count as backlog.
+    pub fn finish(&mut self, arrival_ns: f64, service_ns: f64) -> f64 {
+        self.free_ns = self.free_ns.max(arrival_ns) + service_ns;
+        self.free_ns
     }
 }
 
@@ -184,11 +103,13 @@ impl FunctionalServer {
         (0..n).map(|_| prng.f32() - 0.5).collect()
     }
 
-    /// Serve requests sequentially (single PJRT stream), real wall time.
+    /// Serve requests sequentially (single PJRT stream). Service times are
+    /// measured wall-clock; queueing is accounted on the request timeline
+    /// via `SequentialTimeline` so both sides of the subtraction share a
+    /// timebase.
     pub fn serve(&mut self, requests: &[ServeRequest]) -> Result<(Vec<ServeResponse>, ServingMetrics)> {
         let mut responses = Vec::new();
         let mut metrics = ServingMetrics::new();
-        let t0 = std::time::Instant::now();
         // Simulated CHIME energy per generated token for the tiny model.
         let mut wcfg = self.sim_cfg.clone();
         wcfg.workload.output_tokens = 8;
@@ -196,17 +117,20 @@ impl FunctionalServer {
         let ref_stats = crate::sim::simulate_with_workload(&tiny, &wcfg, &wcfg.workload);
         let energy_per_token = ref_stats.total_energy_j() / ref_stats.output_tokens as f64;
 
+        let mut timeline = SequentialTimeline::new();
         for req in requests {
-            let now_ns = t0.elapsed().as_nanos() as f64;
-            let queue_ns = (now_ns - req.arrival_ns).max(0.0);
+            metrics.record_admitted();
+            let queue_ns = timeline.begin(req.arrival_ns);
             let image = self.image_for_seed(req.image_seed);
             let gen = self.mllm.generate(&image, &req.prompt, req.max_new_tokens)?;
+            let service_ns = (gen.encode_ns + gen.prefill_ns + gen.decode_ns) as f64;
+            timeline.finish(req.arrival_ns, service_ns);
             let resp = ServeResponse {
                 id: req.id,
                 tokens: gen.tokens.clone(),
                 queue_ns,
                 ttft_ns: (gen.encode_ns + gen.prefill_ns) as f64,
-                service_ns: (gen.encode_ns + gen.prefill_ns + gen.decode_ns) as f64,
+                service_ns,
                 energy_j: energy_per_token * gen.tokens.len() as f64,
             };
             metrics.record(req.arrival_ns, &resp);
@@ -237,11 +161,13 @@ mod tests {
         let mut cfg = ChimeConfig::default();
         cfg.workload.output_tokens = 8;
         let mut srv = SimulatedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, BatchPolicy::default());
-        let (resps, metrics) = srv.serve(reqs(6, 1e6, 8));
-        assert_eq!(resps.len(), 6);
-        assert_eq!(metrics.completed, 6);
-        assert_eq!(metrics.tokens, 48);
-        for r in &resps {
+        let out = srv.serve(reqs(6, 1e6, 8));
+        assert_eq!(out.responses.len(), 6);
+        assert!(out.shed.is_empty());
+        assert_eq!(out.metrics.completed, 6);
+        assert_eq!(out.metrics.admitted, 6);
+        assert_eq!(out.metrics.tokens, 48);
+        for r in &out.responses {
             assert!(r.service_ns > 0.0);
             assert!(r.ttft_ns > 0.0);
             assert!(r.energy_j > 0.0);
@@ -256,15 +182,15 @@ mod tests {
         let mut solo = SimulatedServer::new(
             &MllmConfig::mobilevlm_3b(),
             &cfg,
-            BatchPolicy { max_batch: 1 },
+            BatchPolicy { max_batch: 1, ..BatchPolicy::default() },
         );
-        let (_, m1) = solo.serve(burst());
+        let m1 = solo.serve(burst()).metrics;
         let mut batched = SimulatedServer::new(
             &MllmConfig::mobilevlm_3b(),
             &cfg,
-            BatchPolicy { max_batch: 4 },
+            BatchPolicy { max_batch: 4, ..BatchPolicy::default() },
         );
-        let (_, m4) = batched.serve(burst());
+        let m4 = batched.serve(burst()).metrics;
         // Gain is bounded by (D+R)/max(D,R): with the 3B model's FFN-heavy
         // RRAM side the theoretical ceiling is ~1.6x; a short 16-token run
         // with prefill amortization lands lower. Require a real gain.
@@ -283,11 +209,92 @@ mod tests {
         let mut srv = SimulatedServer::new(
             &MllmConfig::fastvlm_0_6b(),
             &cfg,
-            BatchPolicy { max_batch: 1 },
+            BatchPolicy { max_batch: 1, ..BatchPolicy::default() },
         );
-        let (_, mut metrics) = srv.serve(reqs(5, 0.0, 4));
+        let mut metrics = srv.serve(reqs(5, 0.0, 4)).metrics;
         // With batch 1 and simultaneous arrivals, later requests queue.
         assert!(metrics.mean_queue_ns() > 0.0);
         assert!(metrics.latency_percentile_ns(99.0) > metrics.latency_percentile_ns(10.0));
+    }
+
+    #[test]
+    fn capacity_one_queue_sheds_but_never_loses_requests() {
+        // Regression (silent request loss): pre-fix, `queue.admit(r).ok()`
+        // discarded Full/Closed rejections — a shed request vanished with
+        // `responses.len() < requests.len()` and no signal anywhere.
+        let mut cfg = ChimeConfig::default();
+        cfg.workload.output_tokens = 4;
+        let policy = BatchPolicy { max_batch: 1, queue_capacity: 1 };
+        let mut srv = SimulatedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, policy);
+        let out = srv.serve(reqs(6, 0.0, 4)); // simultaneous burst
+        assert_eq!(
+            out.responses.len() + out.shed.len(),
+            6,
+            "no request may vanish: {} completed + {} shed",
+            out.responses.len(),
+            out.shed.len()
+        );
+        assert!(!out.shed.is_empty(), "a capacity-1 queue must shed a burst of 6");
+        assert_eq!(out.metrics.rejected, out.shed.len() as u64);
+        assert_eq!(out.metrics.completed, out.responses.len() as u64);
+        assert_eq!(out.metrics.offered(), 6);
+        // Shed requests keep their identity for caller-side retry.
+        let mut ids: Vec<u64> = out
+            .responses
+            .iter()
+            .map(|r| r.id)
+            .chain(out.shed.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_token_requests_complete_immediately_with_no_tokens() {
+        // Regression: pre-fix, `max_new_tokens.max(1)` silently generated
+        // one token for a zero-token request.
+        let mut cfg = ChimeConfig::default();
+        cfg.workload.output_tokens = 4;
+        let mut srv = SimulatedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, BatchPolicy::default());
+        let mut rs = reqs(3, 1e6, 4);
+        rs[1].max_new_tokens = 0;
+        let out = srv.serve(rs);
+        assert_eq!(out.responses.len(), 3);
+        assert!(out.shed.is_empty());
+        let zero = out.responses.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(zero.tokens.len(), 0, "zero-token request must produce no tokens");
+        assert_eq!(zero.service_ns, 0.0);
+        assert_eq!(out.metrics.tokens, 8, "only the two 4-token requests generate");
+        assert_eq!(out.metrics.completed, 3);
+    }
+
+    #[test]
+    fn sequential_timeline_measures_queueing_in_one_timebase() {
+        // Regression (timebase mixing): pre-fix, queue_ns subtracted a
+        // virtual arrival from wall-clock elapsed — future-dated arrivals
+        // clamped to 0 and arrival-0 requests absorbed harness overhead.
+        let mut t = SequentialTimeline::new();
+        // Three simultaneous arrivals, services 10/20/30 ns: each queues
+        // behind exactly the predecessors' service time.
+        assert_eq!(t.begin(0.0), 0.0);
+        t.finish(0.0, 10.0);
+        assert_eq!(t.begin(0.0), 10.0);
+        t.finish(0.0, 20.0);
+        assert_eq!(t.begin(0.0), 30.0);
+        t.finish(0.0, 30.0);
+        // A request arriving after the stream drains never queues...
+        assert_eq!(t.begin(100.0), 0.0);
+        t.finish(100.0, 5.0);
+        // ...and the idle gap does not count as backlog for the next one.
+        assert_eq!(t.begin(105.0), 0.0);
+    }
+
+    #[test]
+    fn sequential_timeline_is_never_negative_and_skips_idle_gaps() {
+        let mut t = SequentialTimeline::new();
+        assert_eq!(t.begin(1e12), 0.0); // far-future arrival, idle stream
+        t.finish(1e12, 7.0);
+        // A stale arrival pays the full backlog, in the same timebase.
+        assert_eq!(t.begin(0.0), 1e12 + 7.0);
     }
 }

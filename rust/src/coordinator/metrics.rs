@@ -8,6 +8,14 @@ use super::request::ServeResponse;
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
     pub completed: u64,
+    /// Requests accepted past admission (== `completed` once the engine
+    /// drains; they differ only while requests are in flight).
+    pub admitted: u64,
+    /// Requests shed at admission (queue full / closed). Conservation:
+    /// every offered request is either admitted or rejected, so
+    /// `admitted + rejected == offered` and, at drain,
+    /// `completed + rejected == offered`.
+    pub rejected: u64,
     pub tokens: u64,
     latency_ns: Vec<f64>,
     ttft_ns: Vec<f64>,
@@ -40,6 +48,21 @@ impl ServingMetrics {
         self.last_completion_ns = self
             .last_completion_ns
             .max(arrival_ns + r.total_latency_ns());
+    }
+
+    /// Count a request accepted past admission.
+    pub fn record_admitted(&mut self) {
+        self.admitted += 1;
+    }
+
+    /// Count a request shed at admission (backpressure / shutdown).
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// Total requests offered to the engine (admitted or shed).
+    pub fn offered(&self) -> u64 {
+        self.admitted + self.rejected
     }
 
     pub fn span_ns(&self) -> f64 {
@@ -111,6 +134,22 @@ mod tests {
         assert_eq!(span, 1e9);
         assert!((m.tokens_per_s() - 20.0).abs() < 1e-9);
         assert!((m.requests_per_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_accounting_conserves_offered_load() {
+        let mut m = ServingMetrics::new();
+        for i in 0..5 {
+            m.record_admitted();
+            m.record(0.0, &resp(i, 0.0, 1.0, 2.0, 1));
+        }
+        for _ in 0..3 {
+            m.record_rejected();
+        }
+        assert_eq!(m.admitted, 5);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.offered(), 8);
+        assert_eq!(m.completed + m.rejected, m.offered());
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! L3 serving coordinator: admission queue with backpressure, continuous
 //! decode batcher, two-cut-point (2-machine flow-shop) pipeline
-//! scheduling, and the serving engines (simulated paper-scale + functional
-//! PJRT). This is the request path — Python is never on it.
+//! scheduling, multi-package sharding, and the serving engines (simulated
+//! paper-scale + functional PJRT). This is the request path — Python is
+//! never on it.
 
 pub mod batcher;
 pub mod engine;
@@ -9,9 +10,11 @@ pub mod metrics;
 pub mod pipeline;
 pub mod queue;
 pub mod request;
+pub mod sharded;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{FunctionalServer, SimulatedServer};
+pub use engine::{FunctionalServer, SequentialTimeline, SimulatedServer};
 pub use metrics::ServingMetrics;
 pub use queue::{AdmissionQueue, AdmitError};
 pub use request::{ServeRequest, ServeResponse};
+pub use sharded::{RoutePolicy, ServeOutcome, ShardedServer};

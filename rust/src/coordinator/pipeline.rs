@@ -8,6 +8,11 @@
 //! attention while the RRAM chiplet runs request A's FFN — a classic
 //! two-machine flow shop. The batcher uses Johnson's rule (optimal for
 //! 2-machine flow-shop makespan) to order the decode steps of a tick.
+//!
+//! With multiple *packages* (DRAM+RRAM machine pairs), each package is an
+//! independent flow shop: `schedule_dispatch` Johnson-orders every
+//! package's tick and reports the cross-package step span (packages run
+//! concurrently, so the dispatch step drains when the slowest one does).
 
 /// One request's per-step work split across the two chiplets (ns).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -20,14 +25,35 @@ pub struct StepWork {
     pub rram_ns: f64,
 }
 
+impl StepWork {
+    /// Build a job, rejecting non-finite or negative chiplet costs: a NaN
+    /// cost would poison the Johnson ordering and the makespan recurrence
+    /// silently, so the invariant is enforced at the construction boundary.
+    pub fn new(id: usize, dram_ns: f64, rram_ns: f64) -> StepWork {
+        assert!(
+            dram_ns.is_finite() && dram_ns >= 0.0,
+            "job {id}: dram cost {dram_ns} is not a finite non-negative time"
+        );
+        assert!(
+            rram_ns.is_finite() && rram_ns >= 0.0,
+            "job {id}: rram cost {rram_ns} is not a finite non-negative time"
+        );
+        StepWork { id, dram_ns, rram_ns }
+    }
+}
+
 /// Johnson's rule ordering for a 2-machine flow shop: jobs with
 /// dram < rram go first (ascending dram), the rest last (descending rram).
-/// Minimizes makespan when every job flows DRAM -> RRAM.
+/// Minimizes makespan when every job flows DRAM -> RRAM. Total-order
+/// comparisons keep this panic-free on any float input; ties keep the
+/// caller's order (stable sort), so equal-cost jobs stay deterministic.
 pub fn johnson_order(jobs: &[StepWork]) -> Vec<StepWork> {
-    let mut first: Vec<StepWork> = jobs.iter().copied().filter(|j| j.dram_ns < j.rram_ns).collect();
-    let mut second: Vec<StepWork> = jobs.iter().copied().filter(|j| j.dram_ns >= j.rram_ns).collect();
-    first.sort_by(|a, b| a.dram_ns.partial_cmp(&b.dram_ns).unwrap());
-    second.sort_by(|a, b| b.rram_ns.partial_cmp(&a.rram_ns).unwrap());
+    // Exhaustive partition (predicate true/false), so a NaN-cost job can
+    // never fall out of both halves the way `a < b` / `a >= b` filters did.
+    let (mut first, mut second): (Vec<StepWork>, Vec<StepWork>) =
+        jobs.iter().copied().partition(|j| j.dram_ns < j.rram_ns);
+    first.sort_by(|a, b| a.dram_ns.total_cmp(&b.dram_ns));
+    second.sort_by(|a, b| b.rram_ns.total_cmp(&a.rram_ns));
     first.extend(second);
     first
 }
@@ -57,6 +83,56 @@ pub fn schedule_tick(jobs: &[StepWork]) -> (Vec<StepWork>, f64, f64) {
     let span = makespan(&order);
     let serial = serial_time(jobs);
     (order, span, serial)
+}
+
+/// One package's scheduled tick inside a cross-package dispatch step.
+#[derive(Debug, Clone)]
+pub struct PackageTick {
+    /// Package index the jobs were routed to.
+    pub package: usize,
+    /// Johnson-ordered jobs for this package's flow shop.
+    pub order: Vec<StepWork>,
+    /// Pipelined makespan of this package's tick (ns).
+    pub pipelined_ns: f64,
+    /// Serial (non-pipelined) time of this package's jobs (ns).
+    pub serial_ns: f64,
+}
+
+/// A scheduled dispatch step across N independent packages.
+#[derive(Debug, Clone)]
+pub struct DispatchStep {
+    pub ticks: Vec<PackageTick>,
+    /// Step span: packages run concurrently, so the dispatch step drains
+    /// when the slowest package's flow shop does (max of package spans).
+    pub makespan_ns: f64,
+    /// What one package would pay running every job serially — the
+    /// no-pipelining, no-sharding reference time.
+    pub serial_ns: f64,
+}
+
+/// Generalize the 2-machine flow shop to per-package machine pairs: each
+/// package's jobs are Johnson-ordered independently (packages share no
+/// chiplet, so their flow shops never interact), and the step's span is
+/// the slowest package. `per_package[p]` holds the jobs routed to package
+/// `p` this tick; empty packages contribute zero time.
+///
+/// This is the *lockstep reference* model — what one globally
+/// synchronized dispatch step would cost — used by benches and tests to
+/// quantify a sharding decision in isolation. The serving engine
+/// (`coordinator::sharded`) deliberately does NOT run packages in
+/// lockstep: its event-ordered loop lets each package tick at its own
+/// rate, which strictly dominates this bound.
+pub fn schedule_dispatch(per_package: &[Vec<StepWork>]) -> DispatchStep {
+    let mut ticks = Vec::with_capacity(per_package.len());
+    let mut makespan_ns = 0.0_f64;
+    let mut serial_ns = 0.0_f64;
+    for (package, jobs) in per_package.iter().enumerate() {
+        let (order, pipelined, serial) = schedule_tick(jobs);
+        makespan_ns = makespan_ns.max(pipelined);
+        serial_ns += serial;
+        ticks.push(PackageTick { package, order, pipelined_ns: pipelined, serial_ns: serial });
+    }
+    DispatchStep { ticks, makespan_ns, serial_ns }
 }
 
 #[cfg(test)]
@@ -128,5 +204,85 @@ mod tests {
         // Long pipeline: makespan -> first dram + sum(rram).
         assert!((span - (3.0 + 16.0 * 7.0)).abs() < 1e-9);
         assert!(span < serial);
+    }
+
+    #[test]
+    fn nan_costs_do_not_panic_or_drop_jobs() {
+        // Regression: partial_cmp().unwrap() panicked on NaN, and the old
+        // `dram >= rram` partition silently dropped NaN jobs from both
+        // halves. johnson_order must stay total and permutation-preserving.
+        let jobs = [
+            j(0, f64::NAN, 1.0),
+            j(1, 2.0, f64::NAN),
+            j(2, 1.0, 3.0),
+            j(3, f64::NAN, f64::NAN),
+        ];
+        let order = johnson_order(&jobs);
+        let mut ids: Vec<usize> = order.iter().map(|x| x.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3], "NaN jobs must not be lost");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a finite non-negative time")]
+    fn step_work_rejects_nan_at_construction() {
+        StepWork::new(0, f64::NAN, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a finite non-negative time")]
+    fn step_work_rejects_infinite_rram_cost() {
+        StepWork::new(0, 1.0, f64::INFINITY);
+    }
+
+    #[test]
+    fn tied_costs_keep_stable_deterministic_order() {
+        // dram == rram ties land in the second group; equal keys must keep
+        // input order (stable sort) so scheduling stays deterministic.
+        let jobs = [j(0, 5.0, 5.0), j(1, 5.0, 5.0), j(2, 5.0, 5.0)];
+        let order = johnson_order(&jobs);
+        assert_eq!(order.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(makespan(&order), 5.0 + 3.0 * 5.0);
+    }
+
+    #[test]
+    fn dispatch_step_spans_slowest_package() {
+        // Two packages: pkg0 has the heavy tick, pkg1 the light one.
+        let per_pkg = vec![
+            vec![j(0, 10.0, 20.0), j(1, 10.0, 20.0)],
+            vec![j(2, 1.0, 2.0)],
+        ];
+        let step = schedule_dispatch(&per_pkg);
+        assert_eq!(step.ticks.len(), 2);
+        assert_eq!(step.ticks[0].package, 0);
+        // pkg0: 10 + 20 + 20 = 50; pkg1: 3. Step = slowest package.
+        assert!((step.ticks[0].pipelined_ns - 50.0).abs() < 1e-9);
+        assert!((step.ticks[1].pipelined_ns - 3.0).abs() < 1e-9);
+        assert!((step.makespan_ns - 50.0).abs() < 1e-9);
+        // Serial reference = all jobs on one pair, no pipelining.
+        assert!((step.serial_ns - (60.0 + 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_handles_empty_packages() {
+        let step = schedule_dispatch(&[Vec::new(), vec![j(0, 4.0, 6.0)]]);
+        assert_eq!(step.ticks[0].order.len(), 0);
+        assert_eq!(step.ticks[0].pipelined_ns, 0.0);
+        assert!((step.makespan_ns - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharding_scales_a_saturated_tick() {
+        // 8 identical jobs on 1 package vs split 4/4 across 2: the step
+        // span must drop by ~2x (each package is an independent flow shop).
+        let jobs: Vec<StepWork> = (0..8).map(|i| j(i, 3.0, 7.0)).collect();
+        let one = schedule_dispatch(&[jobs.clone()]);
+        let two = schedule_dispatch(&[jobs[..4].to_vec(), jobs[4..].to_vec()]);
+        assert!(
+            two.makespan_ns < one.makespan_ns / 1.5,
+            "2-package dispatch {:.1} vs 1-package {:.1}",
+            two.makespan_ns,
+            one.makespan_ns
+        );
     }
 }

@@ -41,13 +41,16 @@ impl AdmissionQueue {
     }
 
     /// Try to admit a request. Non-blocking: backpressure is immediate.
-    pub fn admit(&self, req: ServeRequest) -> Result<(), AdmitError> {
+    /// On rejection the request is handed back with the reason — the
+    /// producer owns the shed/retry decision, and nothing is silently
+    /// dropped (the pre-fix signature consumed rejected requests).
+    pub fn admit(&self, req: ServeRequest) -> Result<(), (AdmitError, ServeRequest)> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return Err(AdmitError::Closed);
+            return Err((AdmitError::Closed, req));
         }
         if g.items.len() >= self.capacity {
-            return Err(AdmitError::Full);
+            return Err((AdmitError::Full, req));
         }
         g.items.push_back(req);
         self.notify.notify_one();
@@ -77,6 +80,23 @@ impl AdmissionQueue {
         g.items.drain(..take).collect()
     }
 
+    /// Arrival timestamp of the request at the head of the queue, if any.
+    /// The virtual-time dispatcher uses this to decide when an idle
+    /// package can start its next tick.
+    pub fn peek_arrival_ns(&self) -> Option<f64> {
+        self.inner.lock().unwrap().items.front().map(|r| r.arrival_ns)
+    }
+
+    /// Return an already-admitted request to the head of the queue after a
+    /// failed downstream handoff (e.g. a batcher slot raced away between
+    /// the capacity check and the join). Deliberately ignores `capacity`:
+    /// the request passed admission once and must not be silently dropped.
+    pub fn readmit_front(&self, req: ServeRequest) {
+        let mut g = self.inner.lock().unwrap();
+        g.items.push_front(req);
+        self.notify.notify_one();
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
@@ -102,11 +122,14 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_at_capacity() {
+    fn backpressure_at_capacity_returns_the_request() {
         let q = AdmissionQueue::new(2);
         assert!(q.admit(req(0)).is_ok());
         assert!(q.admit(req(1)).is_ok());
-        assert_eq!(q.admit(req(2)), Err(AdmitError::Full));
+        // The shed request comes back intact, with the reason.
+        let (err, returned) = q.admit(req(2)).unwrap_err();
+        assert_eq!(err, AdmitError::Full);
+        assert_eq!(returned.id, 2);
         assert_eq!(q.len(), 2);
     }
 
@@ -129,7 +152,29 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
         assert!(h.join().unwrap().is_empty());
-        assert_eq!(q.admit(req(9)), Err(AdmitError::Closed));
+        let (err, returned) = q.admit(req(9)).unwrap_err();
+        assert_eq!(err, AdmitError::Closed);
+        assert_eq!(returned.id, 9);
+    }
+
+    #[test]
+    fn peek_and_readmit_preserve_fifo_head() {
+        let q = AdmissionQueue::new(2);
+        assert_eq!(q.peek_arrival_ns(), None);
+        let mut r0 = req(0);
+        r0.arrival_ns = 7.0;
+        q.admit(r0).unwrap();
+        q.admit(req(1)).unwrap();
+        assert_eq!(q.peek_arrival_ns(), Some(7.0));
+        let popped = q.try_pop_batch(1).pop().unwrap();
+        assert_eq!(popped.id, 0);
+        q.admit(req(2)).unwrap(); // queue full again
+        // Readmit goes back to the head even past capacity: the request
+        // was already admitted once and must not be shed on the way back.
+        q.readmit_front(popped);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_arrival_ns(), Some(7.0));
+        assert_eq!(q.try_pop_batch(1).pop().unwrap().id, 0);
     }
 
     #[test]

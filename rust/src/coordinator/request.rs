@@ -30,6 +30,24 @@ pub struct ServeResponse {
     pub energy_j: f64,
 }
 
+impl ServeRequest {
+    /// A saturating burst for timing-path experiments: `n` requests, all
+    /// arriving at t=0 with a `tokens` decode budget each, ids and image
+    /// seeds 0..n, no prompt tokens (the simulated path prices prompts
+    /// from the plan's workload, not the request).
+    pub fn burst(n: usize, tokens: usize) -> Vec<ServeRequest> {
+        (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: tokens,
+                arrival_ns: 0.0,
+            })
+            .collect()
+    }
+}
+
 impl ServeResponse {
     pub fn total_latency_ns(&self) -> f64 {
         self.queue_ns + self.service_ns

@@ -1,0 +1,675 @@
+//! Multi-package sharded serving on the L3 coordinator.
+//!
+//! A *package* is one DRAM+RRAM chiplet pair — a two-machine flow shop
+//! with its own admission queue, continuous batcher, KV state, and
+//! virtual clock. `ShardedServer` owns N package replicas of one plan
+//! (shared read-only weights, independent KV budgets — see
+//! `Plan::replicate`), routes each admitted request to a package through
+//! a pluggable policy, and merges the per-package virtual-time completion
+//! streams into one global `ServingMetrics`.
+//!
+//! The merge is *event-ordered*, not lockstep: the serve loop repeatedly
+//! advances whichever event is earliest in global virtual time — the next
+//! request arrival, or the package whose next flow-shop tick starts
+//! soonest. Packages therefore tick at their own natural rate (a package
+//! draining 1-token requests takes many short ticks while a neighbor
+//! grinds a long batch), which is exactly what a lockstep
+//! tick-all-packages loop gets wrong.
+//!
+//! This is the chiplet-scaling direction Cambricon-LLM (arXiv:2409.15654)
+//! takes for on-device inference, applied to CHIME's heterogeneous pairs.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ChimeConfig, ChimeHardware, MllmConfig};
+use crate::mapping::planner::DecodeTemplate;
+use crate::mapping::Plan;
+use crate::sim::{PhaseStats, SimEngine};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::ServingMetrics;
+use super::queue::AdmissionQueue;
+use super::request::{ServeRequest, ServeResponse};
+
+/// How admitted requests are assigned to packages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through packages in order — fair for homogeneous requests.
+    RoundRobin,
+    /// Send each request to the package with the fewest outstanding
+    /// decode tokens (batcher slots + queued work) — balances skewed
+    /// token budgets.
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI spelling (`rr`, `round-robin`, `ll`, `least-loaded`).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
+            "ll" | "least-loaded" | "leastloaded" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Everything `serve` produces: completions (global completion order),
+/// requests shed at admission (returned, never silently dropped), and the
+/// merged metrics. Conservation invariant:
+/// `responses.len() + shed.len() == requests.len()`.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub responses: Vec<ServeResponse>,
+    /// Requests rejected by admission backpressure, in arrival order.
+    /// A request is shed only when *every* package's queue is full at its
+    /// arrival (routing fails over before giving up); the caller owns the
+    /// retry/shed decision from there.
+    pub shed: Vec<ServeRequest>,
+    pub metrics: ServingMetrics,
+}
+
+/// A request resident in a package's batch.
+struct ActiveRequest {
+    req: ServeRequest,
+    admitted_ns: f64,
+    prefill_done_ns: Option<f64>,
+    pos: usize,
+    produced: usize,
+    energy_j: f64,
+}
+
+/// One DRAM+RRAM machine pair: private plan replica, simulator state,
+/// admission queue, batcher, and virtual clock.
+struct PackageState {
+    plan: Plan,
+    engine: SimEngine,
+    /// §Perf: reusable decode schedule, patched per slot position.
+    template: DecodeTemplate,
+    queue: AdmissionQueue,
+    batcher: Batcher,
+    active: BTreeMap<usize, ActiveRequest>,
+    clock_ns: f64,
+    /// Decode tokens promised to queued (not yet batched) requests —
+    /// tracked beside the queue so least-loaded routing is O(1).
+    queued_tokens: usize,
+    completed: u64,
+}
+
+impl PackageState {
+    fn new(plan: Plan, hw: &ChimeHardware, policy: &BatchPolicy) -> PackageState {
+        let engine = SimEngine::new(hw, &plan);
+        let template = plan.decode_template();
+        PackageState {
+            plan,
+            engine,
+            template,
+            queue: AdmissionQueue::new(policy.queue_capacity),
+            batcher: Batcher::new(policy.clone()),
+            active: BTreeMap::new(),
+            clock_ns: 0.0,
+            queued_tokens: 0,
+            completed: 0,
+        }
+    }
+
+    /// Reset the scheduling state for a fresh serve call (virtual clock,
+    /// routing counters). Hardware state (KV occupancy, endurance wear)
+    /// deliberately persists across calls — the chips do not forget.
+    fn reset_schedule(&mut self) {
+        debug_assert!(self.batcher.active() == 0 && self.queue.is_empty());
+        self.clock_ns = 0.0;
+        self.queued_tokens = 0;
+        self.completed = 0;
+    }
+
+    /// Global virtual time at which this package can next make progress:
+    /// its clock while a batch is resident, else the arrival of the
+    /// earliest queued request (an idle package fast-forwards to it).
+    fn next_event_ns(&self) -> f64 {
+        if self.batcher.active() > 0 {
+            return self.clock_ns;
+        }
+        match self.queue.peek_arrival_ns() {
+            Some(t) => self.clock_ns.max(t),
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Outstanding decode tokens (batched + queued) — the least-loaded
+    /// routing signal.
+    fn load_tokens(&self) -> usize {
+        self.batcher.outstanding_tokens() + self.queued_tokens
+    }
+
+    /// Try to admit a request; on backpressure the request is handed back
+    /// to the caller (it is shed, not lost).
+    fn admit(&mut self, req: ServeRequest) -> Result<(), ServeRequest> {
+        let tokens = req.max_new_tokens;
+        match self.queue.admit(req) {
+            Ok(()) => {
+                self.queued_tokens += tokens;
+                Ok(())
+            }
+            Err((_, req)) => Err(req),
+        }
+    }
+
+    /// Run one flow-shop tick: fill free slots from the package queue,
+    /// price every slot's step on this package's hardware state, advance
+    /// the virtual clock by the pipelined tick span, and retire finished
+    /// requests. Returns `(arrival_ns, response)` per completion.
+    fn step(&mut self) -> Vec<(f64, ServeResponse)> {
+        // An idle package fast-forwards its clock to the earliest arrival.
+        if self.batcher.active() == 0 {
+            if let Some(t) = self.queue.peek_arrival_ns() {
+                self.clock_ns = self.clock_ns.max(t);
+            }
+        }
+        // Fill free slots with requests that have arrived by the clock.
+        while self.batcher.has_capacity()
+            && self.queue.peek_arrival_ns().is_some_and(|t| t <= self.clock_ns)
+        {
+            let Some(req) = self.queue.try_pop_batch(1).pop() else { break };
+            self.queued_tokens = self.queued_tokens.saturating_sub(req.max_new_tokens);
+            let idx = req.id as usize;
+            let ticks = req.max_new_tokens + 1; // +1 tick for encode+prefill
+            if !self.batcher.join(idx, ticks) {
+                // A dropped join stranded requests forever pre-fix; hand
+                // the request back to the queue head instead.
+                self.queued_tokens += req.max_new_tokens;
+                self.queue.readmit_front(req);
+                break;
+            }
+            self.active.insert(
+                idx,
+                ActiveRequest {
+                    admitted_ns: self.clock_ns.max(req.arrival_ns),
+                    req,
+                    prefill_done_ns: None,
+                    pos: 0,
+                    produced: 0,
+                    energy_j: 0.0,
+                },
+            );
+        }
+        if self.batcher.active() == 0 {
+            return Vec::new();
+        }
+
+        // Price each slot's step on this package's shared hardware state.
+        let slot_ids: Vec<usize> = self.batcher.slots.iter().map(|s| s.request_idx).collect();
+        let mut costs = Vec::with_capacity(slot_ids.len());
+        for &idx in &slot_ids {
+            let a = self.active.get_mut(&idx).unwrap();
+            let stats: PhaseStats = if a.prefill_done_ns.is_none() {
+                // Encode + prefill as this slot's first "step".
+                let mut s = self.engine.run_kernels(&self.plan.encode_kernels);
+                s.merge(&self.engine.run_kernels(&self.plan.prefill_kernels));
+                s
+            } else {
+                let pos = self.plan.trace.prefill_len() + a.pos;
+                self.plan.patch_decode_template(&mut self.template, pos);
+                self.engine.run_kernels(&self.template.kernels)
+            };
+            a.energy_j += stats.energy.total_joules();
+            costs.push((stats.dram_busy_ns, stats.rram_busy_ns + stats.ucie_ns));
+        }
+
+        // One pipelined tick across this package's batch.
+        let (plan_tick, finished) = self.batcher.tick(&costs);
+        self.clock_ns += plan_tick.pipelined_ns;
+
+        for &idx in &slot_ids {
+            let a = self.active.get_mut(&idx).unwrap();
+            if a.prefill_done_ns.is_none() {
+                a.prefill_done_ns = Some(self.clock_ns);
+            } else {
+                a.pos += 1;
+                a.produced += 1;
+            }
+        }
+        let mut out = Vec::with_capacity(finished.len());
+        for idx in finished {
+            let a = self.active.remove(&idx).unwrap();
+            let arrival_ns = a.req.arrival_ns;
+            let resp = ServeResponse {
+                id: a.req.id,
+                tokens: vec![0; a.produced],
+                queue_ns: a.admitted_ns - arrival_ns,
+                ttft_ns: a.prefill_done_ns.unwrap_or(self.clock_ns) - a.admitted_ns,
+                service_ns: self.clock_ns - a.admitted_ns,
+                energy_j: a.energy_j,
+            };
+            self.completed += 1;
+            out.push((arrival_ns, resp));
+        }
+        out
+    }
+}
+
+/// N package replicas behind one admission/routing front door, serving a
+/// request stream in virtual time.
+pub struct ShardedServer {
+    pub policy: BatchPolicy,
+    pub route: RoutePolicy,
+    packages: Vec<PackageState>,
+    rr_next: usize,
+}
+
+impl ShardedServer {
+    /// Build a sharded deployment: one plan, replicated per package
+    /// (shared weights, independent KV budgets), each with a private
+    /// simulator, queue, and batcher.
+    pub fn new(
+        model: &MllmConfig,
+        cfg: &ChimeConfig,
+        policy: BatchPolicy,
+        packages: usize,
+        route: RoutePolicy,
+    ) -> ShardedServer {
+        assert!(packages >= 1, "a sharded deployment needs at least one package");
+        assert!(policy.max_batch >= 1, "max_batch 0 can never serve a request");
+        assert!(
+            policy.queue_capacity >= 1,
+            "queue_capacity 0 can never admit a request"
+        );
+        let base = Plan::build(model, &cfg.hardware, &cfg.workload);
+        let states: Vec<PackageState> = base
+            .replicate(packages)
+            .into_iter()
+            .map(|plan| PackageState::new(plan, &cfg.hardware, &policy))
+            .collect();
+        ShardedServer { policy, route, packages: states, rr_next: 0 }
+    }
+
+    pub fn package_count(&self) -> usize {
+        self.packages.len()
+    }
+
+    /// Completions per package so far (routing/balance diagnostics).
+    pub fn package_completed(&self) -> Vec<u64> {
+        self.packages.iter().map(|p| p.completed).collect()
+    }
+
+    /// Per-package KV headroom (independent budgets — see
+    /// `Plan::kv_budget_bytes`).
+    pub fn kv_budget_bytes_per_package(&self) -> u64 {
+        let p = &self.packages[0];
+        p.plan.kv_budget_bytes(&p.engine.hw)
+    }
+
+    fn route_for(&mut self) -> usize {
+        match self.route {
+            RoutePolicy::RoundRobin => {
+                let t = self.rr_next % self.packages.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                t
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                let mut best_load = usize::MAX;
+                for (i, p) in self.packages.iter().enumerate() {
+                    let load = p.load_tokens();
+                    if load < best_load {
+                        best_load = load;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Serve a request stream in virtual time. Returns completions in
+    /// global completion order, shed requests, and merged metrics.
+    /// Request ids must be unique within one call (they key batch slots);
+    /// a duplicate id panics rather than corrupting accounting.
+    ///
+    /// Each call is an independent serving session: virtual clocks and
+    /// per-package counters restart at zero (so a server can be reused
+    /// across experiments), while simulator hardware state — KV
+    /// occupancy, endurance wear — persists, as it did on the
+    /// pre-sharding engine.
+    pub fn serve(&mut self, requests: Vec<ServeRequest>) -> ServeOutcome {
+        for p in &mut self.packages {
+            p.reset_schedule();
+        }
+        self.rr_next = 0;
+        let mut metrics = ServingMetrics::new();
+        let mut done: Vec<(f64, ServeResponse)> = Vec::new();
+        let mut shed: Vec<ServeRequest> = Vec::new();
+        // A non-finite arrival can never be reached by the virtual clock
+        // (NaN would also wedge the event loop): shed such requests up
+        // front instead of losing them or spinning.
+        let (mut requests, unschedulable): (Vec<ServeRequest>, Vec<ServeRequest>) =
+            requests.into_iter().partition(|r| r.arrival_ns.is_finite());
+        for r in unschedulable {
+            metrics.record_rejected();
+            shed.push(r);
+        }
+        // Request ids key batch slots and per-package active maps; a
+        // collision would corrupt accounting mid-flight, so fail fast.
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &requests {
+            assert!(seen.insert(r.id), "duplicate request id {}: ids must be unique per serve call", r.id);
+        }
+        requests.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns));
+        let mut next = 0usize;
+
+        loop {
+            // The two candidate events: the next arrival, and the package
+            // whose next tick starts earliest in virtual time.
+            let t_arr = requests.get(next).map(|r| r.arrival_ns).unwrap_or(f64::INFINITY);
+            let mut t_pkg = f64::INFINITY;
+            let mut who = 0usize;
+            for (i, p) in self.packages.iter().enumerate() {
+                let t = p.next_event_ns();
+                if t < t_pkg {
+                    t_pkg = t;
+                    who = i;
+                }
+            }
+            if t_arr.is_infinite() && t_pkg.is_infinite() {
+                break; // drained
+            }
+
+            if t_arr <= t_pkg {
+                // Arrival first (ties included: a request arriving exactly
+                // at a tick boundary may join that tick).
+                let req = requests[next].clone();
+                next += 1;
+                if req.max_new_tokens == 0 {
+                    // Zero-token requests have no decode work to schedule:
+                    // complete immediately (pre-fix, `.max(1)` silently
+                    // inflated them to one generated token).
+                    metrics.record_admitted();
+                    let resp = ServeResponse {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        queue_ns: 0.0,
+                        ttft_ns: 0.0,
+                        service_ns: 0.0,
+                        energy_j: 0.0,
+                    };
+                    metrics.record(req.arrival_ns, &resp);
+                    done.push((req.arrival_ns, resp));
+                    continue;
+                }
+                // Route to the policy's package; if its queue is full,
+                // fail over to the next package with room (in index
+                // order) — a request is shed only when the *whole*
+                // deployment is out of queue capacity.
+                let target = self.route_for();
+                let n = self.packages.len();
+                let mut req = Some(req);
+                for off in 0..n {
+                    let pkg = (target + off) % n;
+                    match self.packages[pkg].admit(req.take().unwrap()) {
+                        Ok(()) => {
+                            metrics.record_admitted();
+                            break;
+                        }
+                        Err(r) => req = Some(r),
+                    }
+                }
+                if let Some(r) = req {
+                    metrics.record_rejected();
+                    shed.push(r);
+                }
+            } else {
+                for (arrival_ns, resp) in self.packages[who].step() {
+                    metrics.record(arrival_ns, &resp);
+                    done.push((arrival_ns, resp));
+                }
+            }
+        }
+
+        // Event-ordered merge of the per-package completion streams:
+        // completion timestamp = arrival + queue + service; ties break by
+        // request id for determinism.
+        done.sort_by(|a, b| {
+            let fa = a.0 + a.1.total_latency_ns();
+            let fb = b.0 + b.1.total_latency_ns();
+            fa.total_cmp(&fb).then(a.1.id.cmp(&b.1.id))
+        });
+        ServeOutcome {
+            responses: done.into_iter().map(|(_, r)| r).collect(),
+            shed,
+            metrics,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    /// Tiny-model config with a small workload: cheap enough for many
+    /// serve calls per test.
+    fn tiny_cfg() -> (MllmConfig, ChimeConfig) {
+        let mut cfg = ChimeConfig::default();
+        cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+        (MllmConfig::tiny(), cfg)
+    }
+
+    fn burst(tokens: &[usize]) -> Vec<ServeRequest> {
+        tokens
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: t,
+                arrival_ns: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_spreads_a_homogeneous_burst() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy::default(),
+            2,
+            RoutePolicy::RoundRobin,
+        );
+        let out = srv.serve(burst(&[4; 8]));
+        assert_eq!(out.responses.len(), 8);
+        assert!(out.shed.is_empty());
+        assert_eq!(srv.package_completed(), vec![4, 4]);
+        assert_eq!(out.metrics.completed, 8);
+        assert_eq!(out.metrics.admitted, 8);
+        assert_eq!(out.metrics.rejected, 0);
+        assert_eq!(out.metrics.tokens, 32);
+    }
+
+    #[test]
+    fn least_loaded_balances_skewed_token_budgets() {
+        // Alternating heavy/light requests: round-robin piles every heavy
+        // request onto package 0; least-loaded balances total tokens and
+        // must drain the burst strictly sooner (deterministic virtual time).
+        let (model, cfg) = tiny_cfg();
+        let skew = [64usize, 1, 64, 1, 64, 1, 64, 1];
+        let run = |route: RoutePolicy| {
+            let mut srv = ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, route);
+            let out = srv.serve(burst(&skew));
+            assert_eq!(out.responses.len(), 8);
+            (out.metrics.span_ns(), srv.package_completed())
+        };
+        let (rr_span, _) = run(RoutePolicy::RoundRobin);
+        let (ll_span, ll_completed) = run(RoutePolicy::LeastLoaded);
+        assert!(
+            ll_span < rr_span,
+            "least-loaded {ll_span} must drain before round-robin {rr_span}"
+        );
+        // Both packages took part under least-loaded.
+        assert!(ll_completed.iter().all(|&c| c > 0), "{ll_completed:?}");
+    }
+
+    #[test]
+    fn admission_fails_over_before_shedding() {
+        // A full routed package must not shed while a sibling has queue
+        // room: skewed least-loaded routing may pick a full target, and
+        // the failover scan admits the request elsewhere.
+        let (model, cfg) = tiny_cfg();
+        let policy = BatchPolicy { max_batch: 1, queue_capacity: 2 };
+        let mut srv = ShardedServer::new(&model, &cfg, policy, 3, RoutePolicy::LeastLoaded);
+        // Skewed burst: least-loaded routes the light requests onto one
+        // package until its queue fills, then *must* fail over (pre-fix
+        // this shed requests 4 and 5 while siblings had room). 6 requests
+        // into 3 packages x 2-deep queues fit exactly: nothing may shed.
+        let out = srv.serve(burst(&[1, 10, 10, 1, 10, 1]));
+        assert!(out.shed.is_empty(), "shed with aggregate capacity free");
+        assert_eq!(out.responses.len(), 6);
+    }
+
+    #[test]
+    fn sharded_backpressure_sheds_to_caller() {
+        let (model, cfg) = tiny_cfg();
+        let policy = BatchPolicy { max_batch: 1, queue_capacity: 1 };
+        let mut srv = ShardedServer::new(&model, &cfg, policy, 2, RoutePolicy::RoundRobin);
+        let out = srv.serve(burst(&[4; 10]));
+        // 2 packages x 1-deep queues admit 2 of a simultaneous burst of 10.
+        assert_eq!(out.responses.len(), 2);
+        assert_eq!(out.shed.len(), 8);
+        assert_eq!(out.metrics.rejected, 8);
+        assert_eq!(out.metrics.offered(), 10);
+        // Identity of every request is preserved across the split.
+        let mut ids: Vec<u64> = out
+            .responses
+            .iter()
+            .map(|r| r.id)
+            .chain(out.shed.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn responses_come_back_in_global_completion_order() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy::default(),
+            3,
+            RoutePolicy::LeastLoaded,
+        );
+        let mut reqs = burst(&[8, 2, 6, 1, 4, 3, 7, 5]);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.arrival_ns = i as f64 * 1e5;
+        }
+        let out = srv.serve(reqs);
+        assert_eq!(out.responses.len(), 8);
+        let finish: Vec<f64> = out
+            .responses
+            .iter()
+            .map(|r| {
+                // arrival = id * 1e5 by construction above.
+                r.id as f64 * 1e5 + r.total_latency_ns()
+            })
+            .collect();
+        for w in finish.windows(2) {
+            assert!(w[0] <= w[1], "responses not completion-ordered: {finish:?}");
+        }
+    }
+
+    #[test]
+    fn single_package_sharded_server_matches_simulated_server_contract() {
+        // The 1-package sharded core is the SimulatedServer engine; its
+        // per-request causality invariants must hold under mixed arrivals.
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin);
+        let mut reqs = burst(&[4; 6]);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.arrival_ns = i as f64 * 5e4;
+        }
+        let out = srv.serve(reqs);
+        assert_eq!(out.responses.len(), 6);
+        for r in &out.responses {
+            assert!(r.queue_ns >= 0.0);
+            assert!(r.ttft_ns > 0.0);
+            assert!(r.service_ns >= r.ttft_ns);
+            assert!(r.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn non_finite_arrivals_are_shed_not_spun_on() {
+        // A NaN/infinite arrival can never be reached by the virtual
+        // clock; it must come back shed instead of wedging the event loop.
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::RoundRobin);
+        let mut reqs = burst(&[4, 4, 4]);
+        reqs[1].arrival_ns = f64::NAN;
+        reqs[2].arrival_ns = f64::INFINITY;
+        let out = srv.serve(reqs);
+        assert_eq!(out.responses.len(), 1);
+        assert_eq!(out.shed.len(), 2);
+        assert_eq!(out.metrics.rejected, 2);
+        let mut shed_ids: Vec<u64> = out.shed.iter().map(|r| r.id).collect();
+        shed_ids.sort_unstable();
+        assert_eq!(shed_ids, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate request id")]
+    fn duplicate_request_ids_are_rejected_loudly() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin);
+        let mut reqs = burst(&[2, 5]);
+        reqs[1].id = 0;
+        let _ = srv.serve(reqs);
+    }
+
+    #[test]
+    fn serve_calls_are_independent_sessions() {
+        // Review regression: package clocks/counters must restart per
+        // serve() — a second t=0 burst must not queue behind the first
+        // call's entire drain time.
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::RoundRobin);
+        let first = srv.serve(burst(&[4; 6]));
+        assert_eq!(first.responses.len(), 6);
+        let second = srv.serve(burst(&[4; 6]));
+        assert_eq!(second.responses.len(), 6);
+        assert_eq!(srv.package_completed().iter().sum::<u64>(), 6, "per-call counters");
+        // A fresh t=0 burst fills empty slots at clock 0: the first
+        // admitted requests see zero queueing, which is impossible if the
+        // previous session's clock leaked into this one.
+        assert!(
+            second.responses.iter().any(|r| r.queue_ns == 0.0),
+            "second session inherited the first session's clock: {:?}",
+            second.responses.iter().map(|r| r.queue_ns).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn kv_budget_is_reported_per_package() {
+        let (model, cfg) = tiny_cfg();
+        let srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 4, RoutePolicy::RoundRobin);
+        assert_eq!(srv.package_count(), 4);
+        let budget = srv.kv_budget_bytes_per_package();
+        assert!(budget > 0);
+        // Replicas do not split the budget: every package gets full headroom.
+        let solo =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin);
+        assert_eq!(budget, solo.kv_budget_bytes_per_package());
+    }
+}

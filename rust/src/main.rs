@@ -10,7 +10,7 @@
 
 use chime::baselines::{facil, jetson};
 use chime::config::{ChimeConfig, FacilSpec, JetsonSpec, MllmConfig};
-use chime::coordinator::{BatchPolicy, FunctionalServer, ServeRequest, SimulatedServer};
+use chime::coordinator::{BatchPolicy, FunctionalServer, RoutePolicy, ServeRequest, ShardedServer};
 use chime::model::workload::RequestStream;
 use chime::results;
 use chime::runtime::Manifest;
@@ -50,9 +50,10 @@ COMMANDS:
   info      [--models] [--hardware]           Table II / III / IV configs
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
   serve     [--backend sim|functional] [--model NAME] [--requests N]
-            [--rate R] [--batch B] [--tokens N]
+            [--rate R] [--batch B] [--tokens N] [--packages N]
+            [--route rr|least-loaded] [--queue N]
   sweep     [--model NAME] [--json]           Fig 8 sequence-length sweep
-  results   [--fig 1|6|7|8|9|table5|ablations] [--all] [--json] [--baselines]
+  results   [--fig 1|6|7|8|9|table5|ablations|scaling] [--all] [--json] [--baselines]
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
 MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
@@ -180,6 +181,14 @@ fn cmd_serve(args: &Args) -> i32 {
     let backend = args.get_or("backend", "sim");
     match backend {
         "functional" => {
+            for flag in ["packages", "route", "queue"] {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "note: --{flag} is ignored by the functional backend \
+                         (single sequential PJRT stream; sharding is sim-only)"
+                    );
+                }
+            }
             let dir = std::path::PathBuf::from(
                 args.get_or("artifacts", Manifest::default_dir().to_str().unwrap()),
             );
@@ -226,6 +235,18 @@ fn cmd_serve(args: &Args) -> i32 {
             };
             let cfg = config_from(args);
             let tokens = args.get_usize("tokens", 64);
+            let packages = args.get_usize("packages", 1);
+            let route = match RoutePolicy::parse(args.get_or("route", "rr")) {
+                Some(r) => r,
+                None => {
+                    eprintln!("unknown --route (use rr|round-robin|ll|least-loaded)");
+                    return 2;
+                }
+            };
+            let policy = BatchPolicy {
+                max_batch: batch,
+                queue_capacity: args.get_usize("queue", BatchPolicy::default().queue_capacity),
+            };
             let mut stream = RequestStream::new(7, rate, cfg.workload.text_tokens, tokens, model.llm.vocab);
             let reqs: Vec<ServeRequest> = stream
                 .take(n)
@@ -238,21 +259,40 @@ fn cmd_serve(args: &Args) -> i32 {
                     arrival_ns: r.arrival_ns,
                 })
                 .collect();
-            let mut srv = SimulatedServer::new(&model, &cfg, BatchPolicy { max_batch: batch });
-            let (_, mut metrics) = srv.serve(reqs);
+            let mut srv = ShardedServer::new(&model, &cfg, policy, packages, route);
+            let out = srv.serve(reqs);
+            let mut metrics = out.metrics;
             let p50 = metrics.latency_percentile_ns(50.0);
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
-                "simulated CHIME serving {} (batch {batch}): {} reqs, {} tokens, \
-                 {:.1} tok/s system, p50 latency {}, p99 {}, {:.1} tok/J",
+                "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}): \
+                 {} reqs completed, {} shed, {} tokens, {:.1} tok/s system, \
+                 p50 latency {}, p99 {}, {:.1} tok/J",
                 model.name,
+                packages,
+                if packages == 1 { "" } else { "s" },
+                route.name(),
                 metrics.completed,
+                metrics.rejected,
                 metrics.tokens,
                 metrics.tokens_per_s(),
                 fmt_ns(p50),
                 fmt_ns(p99),
                 metrics.tokens_per_j(),
             );
+            if packages > 1 {
+                println!(
+                    "  per-package completions: {:?} (KV budget {} per package)",
+                    srv.package_completed(),
+                    fmt_bytes(srv.kv_budget_bytes_per_package() as f64),
+                );
+            }
+            if !out.shed.is_empty() {
+                println!(
+                    "  shed request ids (admission backpressure): {:?}",
+                    out.shed.iter().map(|r| r.id).collect::<Vec<_>>()
+                );
+            }
             0
         }
     }
@@ -275,7 +315,7 @@ fn cmd_results(args: &Args) -> i32 {
         match results::run_one(args.get("fig").unwrap_or("")) {
             Some(e) => vec![e],
             None => {
-                eprintln!("unknown experiment id (use 1, 6, 7, 8, 9, table5)");
+                eprintln!("unknown experiment id (use 1, 6, 7, 8, 9, table5, ablations, scaling)");
                 return 2;
             }
         }

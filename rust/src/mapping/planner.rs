@@ -11,6 +11,7 @@ use super::fusion::{fuse_ops, validate};
 use super::layout::WeightLayout;
 
 /// A reusable decode-step kernel schedule (see `Plan::decode_template`).
+#[derive(Clone)]
 pub struct DecodeTemplate {
     pub kernels: Vec<FusedKernel>,
     /// Indices of the position-dependent FUSED_ATTN_STREAM kernels.
@@ -18,6 +19,7 @@ pub struct DecodeTemplate {
 }
 
 /// A fully-resolved execution plan for one model on CHIME.
+#[derive(Clone)]
 pub struct Plan {
     pub model: MllmConfig,
     pub layout: WeightLayout,
@@ -45,6 +47,28 @@ impl Plan {
             encode_kernels,
             prefill_kernels,
         }
+    }
+
+    /// Clone this plan once per package for multi-package sharded serving.
+    ///
+    /// The *schedule* is shared: every package runs the same model with the
+    /// same weight layout (each package physically holds its own replica of
+    /// the read-only weights, so the layout bytes are identical). The *KV
+    /// budget* is independent: each package's `SimEngine` owns a private
+    /// DRAM tier/RRAM state, so one package's KV growth or offload never
+    /// consumes another's headroom (`kv_budget_bytes` per package).
+    pub fn replicate(&self, packages: usize) -> Vec<Plan> {
+        assert!(packages >= 1, "a sharded deployment needs at least one package");
+        (0..packages).map(|_| self.clone()).collect()
+    }
+
+    /// Per-package KV headroom: DRAM stack capacity not claimed by the
+    /// resident weights. Every package replica gets this full budget —
+    /// KV caches are request-private and never shared across packages.
+    pub fn kv_budget_bytes(&self, hw: &ChimeHardware) -> u64 {
+        hw.dram
+            .chip_capacity_bytes()
+            .saturating_sub(self.layout.dram_weight_bytes)
     }
 
     /// DRAM-only ablation plan: same fusion, all weights in DRAM, FFN
@@ -194,6 +218,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn replicated_plans_share_weights_with_independent_kv_budgets() {
+        let cfg = ChimeConfig::default();
+        let m = MllmConfig::fastvlm_0_6b();
+        let p = Plan::build(&m, &cfg.hardware, &cfg.workload);
+        let replicas = p.replicate(3);
+        assert_eq!(replicas.len(), 3);
+        for r in &replicas {
+            // Shared schedule/weights: identical layout bytes and kernels.
+            assert_eq!(r.layout.dram_weight_bytes, p.layout.dram_weight_bytes);
+            assert_eq!(r.layout.rram_weight_bytes, p.layout.rram_weight_bytes);
+            assert_eq!(r.prefill_kernels.len(), p.prefill_kernels.len());
+            // Independent (full, not divided) KV budget per package.
+            assert_eq!(r.kv_budget_bytes(&cfg.hardware), p.kv_budget_bytes(&cfg.hardware));
+        }
+        let budget = p.kv_budget_bytes(&cfg.hardware);
+        assert!(budget > 0, "weights must leave KV headroom");
+        assert_eq!(
+            budget,
+            cfg.hardware.dram.chip_capacity_bytes() - p.layout.dram_weight_bytes
+        );
+        // Each replica drives its own engine: KV growth in one engine must
+        // not show up in a sibling built from another replica.
+        let mut e0 = crate::sim::SimEngine::new(&cfg.hardware, &replicas[0]);
+        let e1 = crate::sim::SimEngine::new(&cfg.hardware, &replicas[1]);
+        let ks = replicas[0].decode_kernels(replicas[0].trace.prefill_len());
+        let _ = e0.run_kernels(&ks);
+        let kv0: u64 = e0.dram.tiers.iter().map(|t| t.kv).sum();
+        let kv1: u64 = e1.dram.tiers.iter().map(|t| t.kv).sum();
+        assert!(kv0 > 0, "decode step must append KV");
+        assert_eq!(kv1, 0, "sibling package's KV state must be untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one package")]
+    fn replicate_rejects_zero_packages() {
+        let cfg = ChimeConfig::default();
+        let p = Plan::build(&MllmConfig::fastvlm_0_6b(), &cfg.hardware, &cfg.workload);
+        let _ = p.replicate(0);
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod scaling;
 pub mod table5;
 
 use crate::util::Json;
@@ -33,10 +34,11 @@ pub fn run_all() -> Vec<Experiment> {
         fig8::run(),
         fig9::run(),
         ablations::run(),
+        scaling::run(),
     ]
 }
 
-/// Run one experiment by id ("1", "6", "7", "8", "9", "table5").
+/// Run one experiment by id ("1", "6", "7", "8", "9", "table5", "scaling").
 pub fn run_one(id: &str) -> Option<Experiment> {
     match id {
         "1" | "fig1" => Some(fig1::run()),
@@ -46,6 +48,7 @@ pub fn run_one(id: &str) -> Option<Experiment> {
         "9" | "fig9" => Some(fig9::run()),
         "5" | "table5" => Some(table5::run()),
         "ablations" | "a" => Some(ablations::run()),
+        "scaling" | "packages" => Some(scaling::run()),
         _ => None,
     }
 }

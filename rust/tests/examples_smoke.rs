@@ -110,4 +110,8 @@ fn vqa_serving_runs_small_request_stream() {
         "vqa_serving output missing simulated section:\n{stdout}"
     );
     assert!(stdout.contains("tok/s"), "vqa_serving output missing throughput:\n{stdout}");
+    assert!(
+        stdout.contains("sharded CHIME serving"),
+        "vqa_serving output missing sharded scaling section:\n{stdout}"
+    );
 }

@@ -258,6 +258,51 @@ fn golden_ablations() {
 }
 
 #[test]
+fn golden_scaling_packages() {
+    let e = snapshot(results::scaling::run);
+    let points = e.json.get("points").as_arr().expect("scaling points");
+    assert_eq!(points.len(), 8, "2 models x 4 package counts");
+    for model in ["fastvlm-0.6b", "mobilevlm-3b"] {
+        let series: Vec<_> = points
+            .iter()
+            .filter(|p| p.get("model").as_str() == Some(model))
+            .collect();
+        assert_eq!(series.len(), 4);
+        let tps: Vec<f64> = series
+            .iter()
+            .map(|p| p.get("tokens_per_s").as_f64().unwrap())
+            .collect();
+        // Acceptance gate: 2 packages >= 1.5x one package on saturation,
+        // and throughput keeps climbing toward 8 packages.
+        assert!(
+            tps[1] >= tps[0] * 1.5,
+            "{model}: 2-package scaling only {:.2}x",
+            tps[1] / tps[0]
+        );
+        for w in tps.windows(2) {
+            assert!(
+                w[1] >= w[0] * 0.98,
+                "{model}: tok/s regressed {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        // Sharding divides time, not energy: token/J stays in a tight band.
+        let tpj: Vec<f64> = series
+            .iter()
+            .map(|p| p.get("tokens_per_j").as_f64().unwrap())
+            .collect();
+        for v in &tpj {
+            assert!(
+                (v / tpj[0] - 1.0).abs() < 0.25,
+                "{model}: tok/J drifted {v} vs {}",
+                tpj[0]
+            );
+        }
+    }
+}
+
+#[test]
 fn golden_serving_deterministic_under_fixed_seeds() {
     // The Prng-seeded serving path must be byte-stable too: same seed,
     // same model, same policy -> identical responses and canonical JSON.
@@ -283,7 +328,9 @@ fn golden_serving_deterministic_under_fixed_seeds() {
             .collect();
         let mut srv =
             SimulatedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, BatchPolicy::default());
-        let (resps, metrics) = srv.serve(reqs);
+        let out = srv.serve(reqs);
+        let (resps, metrics) = (out.responses, out.metrics);
+        assert!(out.shed.is_empty(), "default queue must not shed 6 requests");
         let rows: Vec<Json> = resps
             .iter()
             .map(|r| {

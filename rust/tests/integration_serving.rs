@@ -1,8 +1,10 @@
 //! Integration tests: the L3 serving coordinator end to end — admission,
-//! batching, pipelining, metrics — over both backends.
+//! batching, pipelining, sharding, metrics — over both backends.
 
 use chime::config::{ChimeConfig, MllmConfig};
-use chime::coordinator::{BatchPolicy, FunctionalServer, ServeRequest, SimulatedServer};
+use chime::coordinator::{
+    BatchPolicy, FunctionalServer, RoutePolicy, ServeRequest, ShardedServer, SimulatedServer,
+};
 use chime::model::workload::RequestStream;
 use chime::runtime::Manifest;
 
@@ -26,12 +28,15 @@ fn simulated_serving_conserves_requests_and_tokens() {
     cfg.workload.output_tokens = 8;
     let mut srv = SimulatedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, BatchPolicy::default());
     let reqs = stream_requests(10, 5.0, 8, 256);
-    let (resps, metrics) = srv.serve(reqs);
-    assert_eq!(resps.len(), 10);
-    assert_eq!(metrics.completed, 10);
-    assert_eq!(metrics.tokens, 80);
+    let out = srv.serve(reqs);
+    assert_eq!(out.responses.len(), 10);
+    assert!(out.shed.is_empty());
+    assert_eq!(out.metrics.completed, 10);
+    assert_eq!(out.metrics.admitted, 10);
+    assert_eq!(out.metrics.rejected, 0);
+    assert_eq!(out.metrics.tokens, 80);
     // Every response accounted and causally ordered.
-    for r in &resps {
+    for r in &out.responses {
         assert!(r.queue_ns >= 0.0);
         assert!(r.ttft_ns > 0.0);
         assert!(r.service_ns >= r.ttft_ns);
@@ -43,15 +48,15 @@ fn simulated_serving_conserves_requests_and_tokens() {
 fn higher_arrival_rate_increases_queueing() {
     let mut cfg = ChimeConfig::default();
     cfg.workload.output_tokens = 16;
-    let policy = BatchPolicy { max_batch: 2 };
+    let policy = BatchPolicy { max_batch: 2, ..BatchPolicy::default() };
     let slow = {
         let mut srv = SimulatedServer::new(&MllmConfig::mobilevlm_1_7b(), &cfg, policy.clone());
-        let (_, mut m) = srv.serve(stream_requests(12, 0.5, 16, 32000));
+        let mut m = srv.serve(stream_requests(12, 0.5, 16, 32000)).metrics;
         m.latency_percentile_ns(90.0)
     };
     let fast = {
         let mut srv = SimulatedServer::new(&MllmConfig::mobilevlm_1_7b(), &cfg, policy);
-        let (_, mut m) = srv.serve(stream_requests(12, 100.0, 16, 32000));
+        let mut m = srv.serve(stream_requests(12, 100.0, 16, 32000)).metrics;
         m.latency_percentile_ns(90.0)
     };
     assert!(
@@ -71,6 +76,59 @@ fn pipelined_batching_beats_serial_ticks() {
         .collect();
     let (_, pipelined, serial) = schedule_tick(&jobs);
     assert!(pipelined < serial * 0.72, "pipelined {pipelined} serial {serial}");
+}
+
+#[test]
+fn two_packages_beat_one_on_a_saturating_burst() {
+    // Acceptance gate: a 2-package deployment must deliver >= 1.5x system
+    // tokens/s on a burst that saturates one package.
+    let mut cfg = ChimeConfig::default();
+    cfg.workload.output_tokens = 32;
+    let model = MllmConfig::fastvlm_0_6b();
+    let burst = || ServeRequest::burst(16, 32);
+    let run = |packages: usize| {
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy::default(),
+            packages,
+            RoutePolicy::RoundRobin,
+        );
+        let out = srv.serve(burst());
+        assert_eq!(out.responses.len(), 16, "{packages} packages must drain the burst");
+        assert!(out.shed.is_empty());
+        assert_eq!(out.metrics.tokens, 16 * 32);
+        out.metrics.tokens_per_s()
+    };
+    let one = run(1);
+    let two = run(2);
+    assert!(
+        two >= one * 1.5,
+        "2 packages {two:.1} tok/s vs 1 package {one:.1} tok/s (< 1.5x)"
+    );
+}
+
+#[test]
+fn sharded_serving_handles_poisson_arrivals_across_policies() {
+    // The sharded path must preserve the per-request causality contract of
+    // the single-package engine under both routing policies.
+    let mut cfg = ChimeConfig::default();
+    cfg.workload.output_tokens = 8;
+    for route in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+        let mut srv =
+            ShardedServer::new(&MllmConfig::fastvlm_0_6b(), &cfg, BatchPolicy::default(), 3, route);
+        let out = srv.serve(stream_requests(12, 20.0, 8, 256));
+        assert_eq!(out.responses.len(), 12, "{} lost requests", route.name());
+        assert_eq!(out.metrics.completed + out.metrics.rejected, 12);
+        for r in &out.responses {
+            assert!(r.queue_ns >= 0.0);
+            assert!(r.ttft_ns > 0.0);
+            assert!(r.service_ns >= r.ttft_ns);
+        }
+        // All three packages saw work under a 12-request spread.
+        let completed = srv.package_completed();
+        assert_eq!(completed.iter().sum::<u64>(), 12);
+    }
 }
 
 #[test]
@@ -98,6 +156,21 @@ fn functional_serving_end_to_end() {
     let (resps, metrics) = srv.serve(&reqs).unwrap();
     assert_eq!(resps.len(), 4);
     assert_eq!(metrics.tokens, 20);
+    // One-timebase queueing (timebase-mixing regression): simultaneous
+    // arrivals on a sequential stream queue behind exactly their
+    // predecessors' measured service time — not behind a wall-minus-
+    // virtual difference.
+    let mut backlog = 0.0;
+    for r in &resps {
+        assert!(
+            (r.queue_ns - backlog).abs() <= backlog * 1e-9 + 1e-6,
+            "req {}: queue {} != predecessor backlog {}",
+            r.id,
+            r.queue_ns,
+            backlog
+        );
+        backlog += r.service_ns;
+    }
     for r in &resps {
         assert_eq!(r.tokens.len(), 5);
         assert!(r.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)));

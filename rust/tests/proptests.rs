@@ -376,6 +376,166 @@ fn prop_johnson_makespan_bounded_by_serial() {
 }
 
 #[test]
+fn prop_johnson_optimal_under_ties_and_adversarial_costs() {
+    // Satellite of the NaN/tie fix: Johnson's rule must remain a
+    // permutation and optimal (vs exhaustive search) when costs are drawn
+    // from an adversarial pool — exact ties (dram == rram), zeros,
+    // near-epsilon values, and 12-orders-of-magnitude mixes.
+    check("johnson ties + adversarial distributions", |prng| {
+        let pool = [0.0, 1.0, 1.0, 2.5, 1e-9, 1e3, 1e12];
+        let n = prng.range(1, 6); // 5! = 120 permutations max
+        let jobs: Vec<StepWork> = (0..n)
+            .map(|id| {
+                let d = *prng.choice(&pool);
+                // Half the jobs get an exact tie on the two machines.
+                let r = if prng.bool() { d } else { *prng.choice(&pool) };
+                StepWork::new(id, d, r)
+            })
+            .collect();
+        let order = johnson_order(&jobs);
+        let mut ids: Vec<usize> = order.iter().map(|j| j.id).collect();
+        ids.sort_unstable();
+        if ids != (0..n).collect::<Vec<_>>() {
+            return Err("johnson_order is not a permutation".into());
+        }
+        let jspan = makespan(&order);
+        // Exhaustive optimum over all n! orders.
+        let mut best = f64::INFINITY;
+        let mut idx: Vec<usize> = (0..n).collect();
+        heap_permute(&mut idx, &mut |perm: &[usize]| {
+            let o: Vec<StepWork> = perm.iter().map(|&i| jobs[i]).collect();
+            best = best.min(makespan(&o));
+        });
+        // Relative tolerance: the pool spans 12 orders of magnitude.
+        if jspan > best * (1.0 + 1e-12) + 1e-9 {
+            return Err(format!("johnson {jspan} worse than optimal {best}"));
+        }
+        Ok(())
+    });
+}
+
+/// Heap's algorithm permutation helper (shared by the Johnson properties).
+fn heap_permute(idx: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
+    fn heap(k: usize, a: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
+        if k <= 1 {
+            f(a);
+            return;
+        }
+        for i in 0..k {
+            heap(k - 1, a, f);
+            if k % 2 == 0 {
+                a.swap(i, k - 1);
+            } else {
+                a.swap(0, k - 1);
+            }
+        }
+    }
+    let n = idx.len();
+    heap(n, idx, f);
+}
+
+#[test]
+fn prop_sharded_serving_conserves_and_orders() {
+    // Tentpole invariants, per random case: (1) conservation — every
+    // offered request either completes or is returned shed, with matching
+    // admitted/rejected counters; (2) per-request causality — queue >= 0,
+    // ttft <= service; (3) the event-ordered merge returns responses in
+    // global completion order.
+    use chime::config::{ChimeConfig, WorkloadConfig};
+    use chime::coordinator::{BatchPolicy, RoutePolicy, ServeRequest, ShardedServer};
+
+    let model = MllmConfig::tiny();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+
+    check("sharded conservation + completion order", |prng| {
+        let packages = prng.range(1, 4);
+        let route = if prng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+        let policy = BatchPolicy {
+            max_batch: prng.range(1, 4),
+            queue_capacity: prng.range(1, 8),
+        };
+        let n = prng.range(1, 10);
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                // Include zero-token requests (immediate completion path).
+                max_new_tokens: prng.range(0, 6),
+                arrival_ns: prng.uniform(0.0, 5e8),
+            })
+            .collect();
+        let mut srv = ShardedServer::new(&model, &cfg, policy, packages, route);
+        let out = srv.serve(requests.clone());
+
+        // (1) conservation
+        if out.responses.len() + out.shed.len() != n {
+            return Err(format!(
+                "lost requests: {} completed + {} shed != {n}",
+                out.responses.len(),
+                out.shed.len()
+            ));
+        }
+        if out.metrics.completed != out.responses.len() as u64
+            || out.metrics.rejected != out.shed.len() as u64
+            || out.metrics.admitted != out.metrics.completed
+            || out.metrics.offered() != n as u64
+        {
+            return Err(format!(
+                "counters drifted: completed {} rejected {} admitted {} offered {}",
+                out.metrics.completed,
+                out.metrics.rejected,
+                out.metrics.admitted,
+                out.metrics.offered()
+            ));
+        }
+        let mut ids: Vec<u64> = out
+            .responses
+            .iter()
+            .map(|r| r.id)
+            .chain(out.shed.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        if ids != (0..n as u64).collect::<Vec<_>>() {
+            return Err("request identities not conserved".into());
+        }
+
+        // (2) per-request causality + token accounting
+        for r in &out.responses {
+            let req = &requests[r.id as usize];
+            if r.tokens.len() != req.max_new_tokens {
+                return Err(format!(
+                    "req {} produced {} tokens, asked {}",
+                    r.id,
+                    r.tokens.len(),
+                    req.max_new_tokens
+                ));
+            }
+            if r.queue_ns < 0.0 || r.ttft_ns < 0.0 || r.service_ns < r.ttft_ns {
+                return Err(format!(
+                    "req {}: causality violated (queue {}, ttft {}, service {})",
+                    r.id, r.queue_ns, r.ttft_ns, r.service_ns
+                ));
+            }
+        }
+
+        // (3) completion order of the event merge
+        let finish: Vec<f64> = out
+            .responses
+            .iter()
+            .map(|r| requests[r.id as usize].arrival_ns + r.total_latency_ns())
+            .collect();
+        for w in finish.windows(2) {
+            if w[0] > w[1] {
+                return Err(format!("merge out of completion order: {finish:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_prefill_cost_exceeds_single_decode_step() {
     check("prefill > decode step", |prng| {
         let llm = random_llm(prng);
