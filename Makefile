@@ -6,8 +6,10 @@
 #   make pytest      python kernel/model/AOT tests (skip cleanly w/o JAX)
 #   make results     regenerate every paper table/figure
 #   make golden      refresh the committed golden JSON snapshots
+#   make api-smoke   run every example through the chime::api::Session path
+#   make docs        build the public-API docs (missing docs denied on api)
 
-.PHONY: artifacts build test pytest results golden
+.PHONY: artifacts build test pytest results golden api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -26,3 +28,14 @@ results: build
 
 golden:
 	cd rust && CHIME_UPDATE_GOLDEN=1 cargo test --test golden_paper
+
+# Every example is a thin shell over chime::api::Session; running them
+# end to end smoke-tests the whole public API surface.
+api-smoke: build
+	cd rust && cargo run --release --example quickstart -- --text 16 --out 8
+	cd rust && cargo run --release --example vqa_serving -- --requests 2
+	cd rust && cargo run --release --example seqlen_sweep
+	cd rust && cargo run --release --example endurance_study
+
+docs:
+	cd rust && cargo doc --no-deps

@@ -6,30 +6,33 @@
 //!   * projected device lifetime in inferences / years of continuous use;
 //!   * the migrate-only-when-reuse-pays rule across tier pairs.
 //!
+//! Inferences run through `chime::api::Session`; the RRAM ledger is read
+//! off the session's retained post-inference memory view.
+//!
 //! Run: cargo run --release --example endurance_study
 
+use chime::api::{ChimeError, Session};
 use chime::config::{ChimeConfig, MllmConfig, WorkloadConfig};
-use chime::mapping::{tiering, Plan};
-use chime::sim::SimEngine;
+use chime::mapping::tiering;
 use chime::util::stats::fmt_bytes;
 
-fn main() {
+fn main() -> Result<(), ChimeError> {
     let cfg = ChimeConfig::default();
     let model = MllmConfig::mobilevlm_3b();
+    let mut session = Session::builder().model_config(model.clone()).build()?;
 
     println!("== RRAM write pressure vs context length (MobileVLM 3B) ==");
     println!("{:>8} {:>16} {:>14} {:>24}", "text", "KV offloaded", "endurance", "lifetime (inferences)");
     for text in [512usize, 1024, 2048, 4096, 8192] {
         let w = WorkloadConfig { image_size: 512, text_tokens: text, output_tokens: 488 };
-        let plan = Plan::build(&model, &cfg.hardware, &w);
-        let mut engine = SimEngine::new(&cfg.hardware, &plan);
-        engine.run_inference(&plan);
-        let life = engine.rram.projected_lifetime_inferences(1);
+        session.infer_with(&w)?;
+        let rram = session.memory().expect("sim backend retains memory state").rram;
+        let life = rram.projected_lifetime_inferences(1);
         println!(
             "{:>8} {:>16} {:>14.3e} {:>24}",
             text,
-            fmt_bytes(engine.rram.kv_bytes as f64),
-            engine.rram.endurance_consumed(),
+            fmt_bytes(rram.kv_bytes as f64),
+            rram.endurance_consumed(),
             if life.is_finite() { format!("{:.2e}", life) } else { "unbounded".into() },
         );
     }
@@ -50,4 +53,5 @@ fn main() {
          the write-once policy leaves >1000x headroom",
         fmt_bytes(rate)
     );
+    Ok(())
 }

@@ -1,68 +1,83 @@
-//! Quickstart: the CHIME reproduction in ~60 lines.
+//! Quickstart: the CHIME reproduction in ~60 lines, driven entirely
+//! through the public `chime::api::Session` surface.
 //!
-//! 1. Functional path — load the AOT-compiled tiny MLLM (build once with
-//!    `make artifacts`) and serve a real VQA request through PJRT:
-//!    image + prompt -> autoregressive tokens, Python nowhere in sight.
+//! 1. Functional path — bring up the AOT-compiled tiny MLLM behind the
+//!    `Session` builder (build once with `make artifacts`) and serve a
+//!    real VQA request through PJRT: image + prompt -> autoregressive
+//!    tokens, Python nowhere in sight.
 //! 2. Timing path — simulate the same inference for a paper-scale model
 //!    (FastVLM 0.6B) on the CHIME hardware and print the headline
-//!    numbers next to the Jetson baseline.
+//!    numbers next to the Jetson baseline — which is just another
+//!    `Backend` behind the same builder.
 //!
 //! Run: cargo run --release --example quickstart [-- --text N --out N]
 //! (the optional flags shrink the VQA workload — used by the example
 //! smoke test to keep the run tiny).
 
-use chime::baselines::jetson;
-use chime::config::{ChimeConfig, JetsonSpec, MllmConfig};
-use chime::runtime::{FunctionalMllm, Manifest};
-use chime::sim;
+use chime::api::{BackendKind, ChimeError, Session};
 use chime::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), ChimeError> {
+    let args = Args::from_env();
+    let parse = |name: &str| -> Result<Option<usize>, ChimeError> {
+        match args.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                ChimeError::Invalid(format!("--{name} expects an integer, got {v:?}"))
+            }),
+        }
+    };
+    let text = parse("text")?;
+    let out = parse("out")?;
+    let builder = || {
+        let mut b = Session::builder().model("fastvlm-0.6b");
+        if let Some(n) = text {
+            b = b.text_tokens(n);
+        }
+        if let Some(n) = out {
+            b = b.output_tokens(n);
+        }
+        b
+    };
+
     // ---------- 1. functional inference over the AOT artifacts ----------
-    let dir = Manifest::default_dir();
-    if dir.join("manifest.json").exists() {
-        let mllm = FunctionalMllm::load(&dir)?;
-        let cfg = &mllm.manifest.config;
-        println!(
-            "functional model: d={} layers={} vocab={} (seed {})",
-            cfg.d_model, cfg.n_layers, cfg.vocab, cfg.seed
-        );
-        let image = mllm.manifest.synthetic_image();
-        let prompt = mllm.manifest.parity.prompt.clone();
-        let gen = mllm.generate(&image, &prompt, 12)?;
-        println!(
-            "generated {:?}\n  encode {:.2} ms, prefill {:.2} ms, decode {:.2} ms",
-            gen.tokens,
-            gen.encode_ns as f64 / 1e6,
-            gen.prefill_ns as f64 / 1e6,
-            gen.decode_ns as f64 / 1e6
-        );
-        mllm.verify_parity()?;
-        println!("parity vs python AOT oracle: OK\n");
-    } else {
-        println!("(artifacts not built — run `make artifacts` for the functional demo)\n");
+    // (no .model(): the functional backend always runs the AOT tiny model)
+    match Session::builder().backend(BackendKind::Functional).build() {
+        Ok(mut session) => {
+            let mut reqs = session.poisson_requests(11, 4.0, 1, 12);
+            for r in &mut reqs {
+                r.arrival_ns = 0.0;
+            }
+            let out = session.serve(reqs)?;
+            let r = &out.responses[0];
+            println!(
+                "functional backend generated {:?}\n  ttft {:.2} ms, total {:.2} ms\n",
+                r.tokens,
+                r.ttft_ns / 1e6,
+                r.service_ns / 1e6
+            );
+        }
+        Err(e) => println!("({e} — run `make artifacts` for the functional demo)\n"),
     }
 
     // ---------- 2. paper-scale timing on the CHIME simulator -------------
-    let args = Args::from_env();
-    let mut cfg = ChimeConfig::default();
-    cfg.workload.text_tokens = args.get_usize("text", cfg.workload.text_tokens);
-    cfg.workload.output_tokens = args.get_usize("out", cfg.workload.output_tokens);
-    let model = MllmConfig::fastvlm_0_6b();
-    let stats = sim::simulate(&model, &cfg);
-    let jet = jetson::run(&model, &cfg.workload, &JetsonSpec::default());
+    let mut chime = builder().build()?;
+    let stats = chime.infer()?;
+    let w = chime.workload().clone();
     println!(
         "CHIME  {}: {:.0} tok/s, {:.0} tok/J, {:.2} W (VQA 512x512, {} in / {} out)",
-        model.name,
+        chime.model().name,
         stats.tokens_per_s(),
         stats.tokens_per_j(),
         stats.avg_power_w(),
-        cfg.workload.text_tokens,
-        cfg.workload.output_tokens
+        w.text_tokens,
+        w.output_tokens
     );
+    let mut jetson = builder().backend(BackendKind::Jetson).build()?;
+    let jet = jetson.infer()?;
     println!(
         "Jetson {}: {:.1} tok/s, {:.2} tok/J  ->  speedup {:.1}x, energy {:.0}x",
-        model.name,
+        jetson.model().name,
         jet.tokens_per_s(),
         jet.tokens_per_j(),
         stats.tokens_per_s() / jet.tokens_per_s(),

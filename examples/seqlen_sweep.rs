@@ -2,21 +2,25 @@
 //! introspection: as context grows 128 -> 4k the KV cache climbs the M3D
 //! DRAM tiers and (for the big models) spills write-once to RRAM.
 //!
+//! Driven through `chime::api::Session`: one session per model,
+//! `infer_with` per length, and the session's retained memory view for
+//! the tier-residency detail — no hand-built plans or engines.
+//!
 //! Run: cargo run --release --example seqlen_sweep
 
-use chime::config::{ChimeConfig, MllmConfig, WorkloadConfig};
-use chime::mapping::{tiering, Plan};
-use chime::sim::{self, SimEngine};
+use chime::api::{ChimeError, Session};
+use chime::config::{MllmConfig, WorkloadConfig};
+use chime::mapping::tiering;
 use chime::util::stats::fmt_bytes;
 
-fn main() {
-    let cfg = ChimeConfig::default();
+fn main() -> Result<(), ChimeError> {
     println!("{:<16} {:>8} {:>12} {:>10} {:>14} {:>16}",
              "model", "text", "latency ms", "energy J", "KV bytes", "KV offloaded");
     for model in MllmConfig::paper_models() {
+        let mut session = Session::builder().model_config(model.clone()).build()?;
         for text in [128usize, 512, 1024, 2048, 4096] {
             let w = WorkloadConfig { image_size: 512, text_tokens: text, output_tokens: 488 };
-            let stats = sim::simulate_with_workload(&model, &cfg, &w);
+            let stats = session.infer_with(&w)?;
             let kv_total = model.llm.kv_bytes_per_token()
                 * (w.text_tokens + model.visual_tokens() + w.output_tokens) as u64;
             println!(
@@ -31,24 +35,27 @@ fn main() {
         }
     }
 
-    // Tier distribution detail for the heaviest case.
+    // Tier distribution detail for the heaviest case, read straight off
+    // the session's retained post-inference memory state.
     println!("\nKV tier residency after a 4k-context MobileVLM-3B inference:");
-    let model = MllmConfig::mobilevlm_3b();
+    let mut session = Session::builder()
+        .model_config(MllmConfig::mobilevlm_3b())
+        .build()?;
     let w = WorkloadConfig { image_size: 512, text_tokens: 4096, output_tokens: 488 };
-    let plan = Plan::build(&model, &cfg.hardware, &w);
-    let mut engine = SimEngine::new(&cfg.hardware, &plan);
-    engine.run_inference(&plan);
-    let snap = tiering::snapshot(&engine.dram);
+    session.infer_with(&w)?;
+    let mem = session.memory().expect("sim backend retains memory state");
+    let snap = tiering::snapshot(mem.dram);
     for (name, bytes, frac) in &snap.entries {
         println!("  {:<6} {:>12}  ({:.1}%)", name, fmt_bytes(*bytes as f64), frac * 100.0);
     }
     println!(
         "  effective KV stream bandwidth: {:.0} GB/s (tier-0-only would be {:.0} GB/s)",
         snap.effective_bw_gbps,
-        cfg.hardware.dram.tier_stream_bw_gbps(0, 1.0)
+        session.config().hardware.dram.tier_stream_bw_gbps(0, 1.0)
     );
     println!(
         "  RRAM endurance consumed this inference: {:.3e}",
-        engine.rram.endurance_consumed()
+        mem.rram.endurance_consumed()
     );
+    Ok(())
 }

@@ -1,11 +1,11 @@
 //! End-to-end VQA serving driver (the repo's headline example).
 //!
-//! Exercises the full system on a real small workload, proving all layers
-//! compose (DESIGN.md §1):
+//! Exercises the full system on a real small workload through the public
+//! `chime::api::Session` surface, proving all layers compose
+//! (DESIGN.md §1, §8):
 //!
-//!   * functional backend — a Poisson stream of VQA requests served by
-//!     the AOT-compiled tiny MLLM through PJRT (real tokens, wall-clock
-//!     latency/throughput);
+//!   * functional backend — a request stream served by the AOT-compiled
+//!     tiny MLLM through PJRT (real tokens, wall-clock latency);
 //!   * simulated backend — the same arrival process served by paper-scale
 //!     models on the CHIME hardware simulator with continuous batching
 //!     and two-cut-point pipelining (virtual time, energy);
@@ -13,86 +13,71 @@
 //!     (`--packages`, default 4) through the multi-package coordinator,
 //!     demonstrating near-linear tokens/s scaling.
 //!
+//! Every backend is one `BackendKind` behind the same builder.
+//!
 //! Run: cargo run --release --example vqa_serving [-- --requests 24 --packages 4]
 
-use chime::config::{ChimeConfig, MllmConfig};
-use chime::coordinator::{
-    BatchPolicy, FunctionalServer, RoutePolicy, ServeRequest, ShardedServer, SimulatedServer,
-};
-use chime::model::workload::RequestStream;
-use chime::runtime::Manifest;
+use chime::api::{BackendKind, ChimeError, ServeRequest, Session};
+use chime::config::MllmConfig;
+use chime::coordinator::RoutePolicy;
 use chime::util::stats::fmt_ns;
 use chime::util::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), ChimeError> {
     let args = Args::parse(std::env::args().skip(1));
-    let n = args.get_usize("requests", 12);
+    let parse = |name: &str, default: usize| -> Result<usize, ChimeError> {
+        match args.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ChimeError::Invalid(format!("--{name} expects an integer, got {v:?}"))
+            }),
+        }
+    };
+    let n = parse("requests", 12)?;
 
     // ------------------- functional serving (PJRT) ----------------------
-    let dir = Manifest::default_dir();
-    if dir.join("manifest.json").exists() {
-        let mut srv = FunctionalServer::load(&dir)?;
-        let meta = &srv.mllm.manifest.config;
-        let mut stream = RequestStream::new(11, 4.0, meta.prompt_len, 8, meta.vocab);
-        let reqs: Vec<ServeRequest> = stream
-            .take(n)
-            .into_iter()
-            .map(|r| ServeRequest {
-                id: r.id,
-                prompt: r.prompt,
-                image_seed: r.image_seed,
-                max_new_tokens: r.max_new_tokens,
-                arrival_ns: 0.0,
-            })
-            .collect();
-        let t0 = std::time::Instant::now();
-        let (resps, mut metrics) = srv.serve(&reqs)?;
-        println!("== functional backend (tiny MLLM over PJRT, {} requests) ==", n);
-        let p50 = metrics.latency_percentile_ns(50.0);
-        let p99 = metrics.latency_percentile_ns(99.0);
-        println!(
-            "  wall time {:.2} s | {} tokens | p50 {} p99 {} | {:.1} tok/s",
-            t0.elapsed().as_secs_f64(),
-            metrics.tokens,
-            fmt_ns(p50),
-            fmt_ns(p99),
-            metrics.tokens as f64 / t0.elapsed().as_secs_f64(),
-        );
-        for r in resps.iter().take(3) {
-            println!("  req {:>2} (seed-varied image) -> {:?}", r.id, r.tokens);
+    match Session::builder().backend(BackendKind::Functional).build() {
+        Ok(mut session) => {
+            let mut reqs = session.poisson_requests(11, 4.0, n, 8);
+            for r in &mut reqs {
+                r.arrival_ns = 0.0;
+            }
+            let t0 = std::time::Instant::now();
+            let out = session.serve(reqs)?;
+            println!("== functional backend (tiny MLLM over PJRT, {} requests) ==", n);
+            let mut metrics = out.metrics;
+            let p50 = metrics.latency_percentile_ns(50.0);
+            let p99 = metrics.latency_percentile_ns(99.0);
+            println!(
+                "  wall time {:.2} s | {} tokens | p50 {} p99 {} | {:.1} tok/s",
+                t0.elapsed().as_secs_f64(),
+                metrics.tokens,
+                fmt_ns(p50),
+                fmt_ns(p99),
+                metrics.tokens as f64 / t0.elapsed().as_secs_f64(),
+            );
+            for r in out.responses.iter().take(3) {
+                println!("  req {:>2} (seed-varied image) -> {:?}", r.id, r.tokens);
+            }
+            // Different images must be able to produce different generations.
+            let distinct: std::collections::BTreeSet<_> =
+                out.responses.iter().map(|r| format!("{:?}", r.tokens)).collect();
+            println!("  distinct generations: {}/{}", distinct.len(), out.responses.len());
         }
-        // Different images must be able to produce different generations.
-        let distinct: std::collections::BTreeSet<_> =
-            resps.iter().map(|r| format!("{:?}", r.tokens)).collect();
-        println!("  distinct generations: {}/{}", distinct.len(), resps.len());
-    } else {
-        println!("(run `make artifacts` to enable the functional backend)");
+        Err(e) => println!("({e} — run `make artifacts` to enable the functional backend)"),
     }
 
     // ------------------- simulated paper-scale serving -------------------
     println!("\n== simulated CHIME serving (paper-scale, virtual time) ==");
-    let mut cfg = ChimeConfig::default();
-    cfg.workload.output_tokens = 64;
     for model in [MllmConfig::fastvlm_0_6b(), MllmConfig::mobilevlm_3b()] {
         for batch in [1usize, 4] {
-            let mut stream = RequestStream::new(5, 2.0, cfg.workload.text_tokens, 64, model.llm.vocab);
-            let reqs: Vec<ServeRequest> = stream
-                .take(n)
-                .into_iter()
-                .map(|r| ServeRequest {
-                    id: r.id,
-                    prompt: r.prompt,
-                    image_seed: r.image_seed,
-                    max_new_tokens: r.max_new_tokens,
-                    arrival_ns: r.arrival_ns,
-                })
-                .collect();
-            let mut srv = SimulatedServer::new(
-                &model,
-                &cfg,
-                BatchPolicy { max_batch: batch, ..BatchPolicy::default() },
-            );
-            let out = srv.serve(reqs);
+            let mut session = Session::builder()
+                .model_config(model.clone())
+                .output_tokens(64)
+                .max_batch(batch)
+                .build()?;
+            let reqs = session.poisson_requests(5, 2.0, n, 64);
+            let out = session.serve(reqs)?;
             let mut m = out.metrics;
             let p50 = m.latency_percentile_ns(50.0);
             let p99 = m.latency_percentile_ns(99.0);
@@ -117,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ------------------- multi-package sharded scaling --------------------
-    let max_packages = args.get_usize("packages", 4).max(1);
+    let max_packages = parse("packages", 4)?.max(1);
     println!("\n== sharded CHIME serving (saturating burst, {max_packages} package max) ==");
     let model = MllmConfig::fastvlm_0_6b();
     let burst = ServeRequest::burst(n.max(8), 64);
@@ -131,14 +116,14 @@ fn main() -> anyhow::Result<()> {
     counts.push(max_packages);
     let mut base_tps = 0.0;
     for packages in counts {
-        let mut srv = ShardedServer::new(
-            &model,
-            &cfg,
-            BatchPolicy::default(),
-            packages,
-            RoutePolicy::LeastLoaded,
-        );
-        let out = srv.serve(burst.clone());
+        let mut session = Session::builder()
+            .model_config(model.clone())
+            .output_tokens(64)
+            .backend(BackendKind::Sharded)
+            .packages(packages)
+            .route(RoutePolicy::LeastLoaded)
+            .build()?;
+        let out = session.serve(burst.clone())?;
         let mut m = out.metrics;
         if packages == 1 {
             base_tps = m.tokens_per_s();
@@ -152,7 +137,7 @@ fn main() -> anyhow::Result<()> {
             if base_tps > 0.0 { m.tokens_per_s() / base_tps } else { 0.0 },
             fmt_ns(p99),
             m.tokens_per_j(),
-            srv.package_completed(),
+            session.package_completed().unwrap_or_default(),
         );
         if !out.shed.is_empty() {
             println!("    ({} requests shed at admission)", out.shed.len());

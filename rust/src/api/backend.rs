@@ -1,0 +1,519 @@
+//! The [`Backend`] trait: one polymorphic surface over every execution
+//! path — the CHIME simulator (solo, DRAM-only ablation, multi-package
+//! sharded), the functional PJRT runtime, and the Jetson/FACIL baseline
+//! models. A backend answers two questions: *what does one inference
+//! cost* ([`Backend::infer`]) and *what does a request stream look like
+//! end to end* ([`Backend::serve`]).
+
+use std::collections::BTreeMap;
+
+use crate::baselines::{facil, jetson, BaselineStats};
+use crate::config::{ChimeConfig, FacilSpec, JetsonSpec, MllmConfig, WorkloadConfig};
+use crate::coordinator::{
+    BatchPolicy, FunctionalServer, RoutePolicy, SequentialTimeline, ServeOutcome, ServeRequest,
+    ServeResponse, ServingMetrics, ShardedServer, SimulatedServer,
+};
+use crate::sim::energy::Component;
+use crate::sim::memory::{DramState, RramState};
+use crate::sim::{InferenceStats, PhaseStats};
+
+use super::ChimeError;
+
+/// Which execution engine a [`crate::api::Session`] drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single-package CHIME simulator (virtual time, paper-scale models).
+    Sim,
+    /// The M3D DRAM-only ablation (Fig 9 baseline) on the simulator.
+    DramOnly,
+    /// Multi-package sharded CHIME simulator (N DRAM+RRAM pairs).
+    Sharded,
+    /// Functional PJRT runtime over the AOT artifacts (real tokens,
+    /// wall-clock time).
+    Functional,
+    /// Jetson Orin NX analytic baseline model.
+    Jetson,
+    /// FACIL near-bank DRAM PIM analytic baseline model.
+    Facil,
+}
+
+impl BackendKind {
+    /// Parse a CLI spelling. Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "sim" | "simulated" => Some(BackendKind::Sim),
+            "dram-only" | "dramonly" | "dram_only" => Some(BackendKind::DramOnly),
+            "sharded" => Some(BackendKind::Sharded),
+            "functional" | "pjrt" => Some(BackendKind::Functional),
+            "jetson" | "jetson-orin-nx" => Some(BackendKind::Jetson),
+            "facil" => Some(BackendKind::Facil),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::DramOnly => "dram-only",
+            BackendKind::Sharded => "sharded",
+            BackendKind::Functional => "functional",
+            BackendKind::Jetson => "jetson",
+            BackendKind::Facil => "facil",
+        }
+    }
+
+    /// Every kind, in display order.
+    pub fn all() -> [BackendKind; 6] {
+        [
+            BackendKind::Sim,
+            BackendKind::DramOnly,
+            BackendKind::Sharded,
+            BackendKind::Functional,
+            BackendKind::Jetson,
+            BackendKind::Facil,
+        ]
+    }
+}
+
+/// Read-only view of a simulator backend's memory state after the most
+/// recent [`Backend::infer`] (KV residency, endurance ledgers).
+pub struct MemoryView<'a> {
+    /// Tiered M3D DRAM state (weights, KV residency, stream counters).
+    pub dram: &'a DramState,
+    /// M3D RRAM state (resident weights, offloaded KV, endurance).
+    pub rram: &'a RramState,
+}
+
+/// Request-stream sizing a backend dictates (the functional artifacts fix
+/// both the prompt length and the vocabulary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestProfile {
+    /// Prompt length every request must carry.
+    pub prompt_len: usize,
+    /// Vocabulary size to sample prompt token ids from.
+    pub vocab: usize,
+}
+
+/// One polymorphic execution surface: simulator, ablation, sharded
+/// deployment, functional runtime, and analytic baselines all answer the
+/// same two calls. Object-safe — [`crate::api::Session`] owns a
+/// `Box<dyn Backend>`.
+pub trait Backend {
+    /// Short human-readable backend name ("sim", "sharded", "jetson", ...).
+    fn name(&self) -> &'static str;
+
+    /// The [`BackendKind`] this backend executes as.
+    fn kind(&self) -> BackendKind;
+
+    /// Run one VQA inference under workload `w` and return its statistics.
+    fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError>;
+
+    /// Serve a request stream. Every offered request comes back either
+    /// completed ([`ServeOutcome::responses`]) or shed
+    /// ([`ServeOutcome::shed`]) — never silently dropped.
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError>;
+
+    /// Request sizing this backend dictates, when it does (the functional
+    /// artifacts fix prompt length and vocabulary).
+    fn request_profile(&self) -> Option<RequestProfile> {
+        None
+    }
+
+    /// Completions per package, for multi-package backends.
+    fn package_completed(&self) -> Option<Vec<u64>> {
+        None
+    }
+
+    /// Per-package KV headroom in bytes, for multi-package backends.
+    fn kv_budget_bytes_per_package(&self) -> Option<u64> {
+        None
+    }
+
+    /// Memory state retained from the most recent [`Backend::infer`],
+    /// for simulator-backed backends.
+    fn memory(&self) -> Option<MemoryView<'_>> {
+        None
+    }
+}
+
+/// Lift a [`BaselineStats`] (Jetson/FACIL analytic models) into the
+/// simulator's [`InferenceStats`] shape so baselines compare on the same
+/// axes. The baseline models report one board-level average power rather
+/// than a per-component ledger, so the whole draw lands in the ledger's
+/// `Idle` bucket (headline totals — time, energy, tokens/J — are exact).
+pub fn baseline_inference_stats(b: &BaselineStats) -> InferenceStats {
+    let phase = |time_ns: f64| -> PhaseStats {
+        let mut p = PhaseStats::default();
+        p.time_ns = time_ns;
+        // W x ns = 1e-9 J = 1e3 pJ.
+        p.energy.deposit(Component::Idle, b.avg_power_w * time_ns * 1000.0);
+        p
+    };
+    InferenceStats {
+        model: b.model.clone(),
+        encode: phase(b.encode_ns),
+        prefill: phase(b.prefill_ns),
+        decode: phase(b.decode_ns),
+        output_tokens: b.output_tokens,
+        kv_offloaded_bytes: 0,
+        rram_endurance_consumed: 0.0,
+    }
+}
+
+/// Sequential single-stream serving over an analytic per-inference price:
+/// the baseline boards run one request at a time, so queueing is exactly
+/// the backlog on a [`SequentialTimeline`]. `price(tokens)` returns the
+/// baseline stats for one inference generating `tokens` tokens.
+fn baseline_serve(
+    requests: Vec<ServeRequest>,
+    price: &mut dyn FnMut(usize) -> BaselineStats,
+) -> ServeOutcome {
+    let mut metrics = ServingMetrics::new();
+    let mut shed = Vec::new();
+    // Non-finite arrivals can never be scheduled; shed them up front, as
+    // the sharded coordinator does.
+    let (mut requests, unschedulable): (Vec<ServeRequest>, Vec<ServeRequest>) =
+        requests.into_iter().partition(|r| r.arrival_ns.is_finite());
+    for r in unschedulable {
+        metrics.record_rejected();
+        shed.push(r);
+    }
+    requests.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
+    // One price per distinct token budget (the analytic models are
+    // deterministic in it).
+    let mut cache: BTreeMap<usize, (f64, f64, f64)> = BTreeMap::new();
+    let mut timeline = SequentialTimeline::new();
+    let mut responses = Vec::with_capacity(requests.len());
+    for req in requests {
+        metrics.record_admitted();
+        let (ttft_ns, total_ns, energy_j) = *cache.entry(req.max_new_tokens).or_insert_with(|| {
+            if req.max_new_tokens == 0 {
+                (0.0, 0.0, 0.0)
+            } else {
+                let b = price(req.max_new_tokens);
+                (b.encode_ns + b.prefill_ns, b.total_ns(), b.energy_j())
+            }
+        });
+        let queue_ns = timeline.begin(req.arrival_ns);
+        timeline.finish(req.arrival_ns, total_ns);
+        let resp = ServeResponse {
+            id: req.id,
+            tokens: vec![0; req.max_new_tokens],
+            queue_ns,
+            ttft_ns,
+            service_ns: total_ns,
+            energy_j,
+        };
+        metrics.record(req.arrival_ns, &resp);
+        responses.push(resp);
+    }
+    ServeOutcome { responses, shed, metrics }
+}
+
+impl Backend for SimulatedServer {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        Ok(self.run_inference_with(w))
+    }
+
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        Ok(SimulatedServer::serve(self, requests))
+    }
+
+    fn memory(&self) -> Option<MemoryView<'_>> {
+        self.last_infer_memory().map(|(dram, rram)| MemoryView { dram, rram })
+    }
+}
+
+impl Backend for ShardedServer {
+    fn name(&self) -> &'static str {
+        if self.is_dram_only() {
+            "dram-only"
+        } else {
+            "sharded"
+        }
+    }
+
+    fn kind(&self) -> BackendKind {
+        if self.is_dram_only() {
+            BackendKind::DramOnly
+        } else {
+            BackendKind::Sharded
+        }
+    }
+
+    fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        Ok(self.run_inference_with(w))
+    }
+
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        Ok(ShardedServer::serve(self, requests))
+    }
+
+    fn package_completed(&self) -> Option<Vec<u64>> {
+        Some(ShardedServer::package_completed(self))
+    }
+
+    fn kv_budget_bytes_per_package(&self) -> Option<u64> {
+        Some(ShardedServer::kv_budget_bytes_per_package(self))
+    }
+
+    fn memory(&self) -> Option<MemoryView<'_>> {
+        self.last_infer_memory().map(|(dram, rram)| MemoryView { dram, rram })
+    }
+}
+
+impl Backend for FunctionalServer {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Functional
+    }
+
+    fn infer(&mut self, _w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        Err(ChimeError::Unsupported {
+            backend: "functional",
+            what: "single-inference simulation (the functional path measures \
+                   wall clock per request; use serve)",
+        })
+    }
+
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        FunctionalServer::serve(self, &requests)
+            .map(|(responses, metrics)| ServeOutcome { responses, shed: Vec::new(), metrics })
+    }
+
+    fn request_profile(&self) -> Option<RequestProfile> {
+        let c = &self.mllm.manifest.config;
+        Some(RequestProfile { prompt_len: c.prompt_len, vocab: c.vocab })
+    }
+}
+
+/// The DRAM-only ablation as its own backend: a sharded coordinator whose
+/// packages run the single-chiplet plan (`Plan::build_dram_only` +
+/// `SimEngine::new_dram_only`), i.e. Fig 9's baseline made servable.
+pub struct DramOnlyBackend {
+    inner: ShardedServer,
+}
+
+impl DramOnlyBackend {
+    /// Build a DRAM-only deployment of `packages` single-chiplet packages.
+    pub fn new(
+        model: &MllmConfig,
+        cfg: &ChimeConfig,
+        policy: BatchPolicy,
+        packages: usize,
+        route: RoutePolicy,
+    ) -> DramOnlyBackend {
+        DramOnlyBackend {
+            inner: ShardedServer::new_dram_only(model, cfg, policy, packages, route),
+        }
+    }
+}
+
+// Pure forwarding to `<ShardedServer as Backend>`: the dram-only
+// behavior (name/kind flip, ablation plan, memory view) is defined once
+// on the coordinator's impl and merely re-surfaced here.
+impl Backend for DramOnlyBackend {
+    fn name(&self) -> &'static str {
+        Backend::name(&self.inner)
+    }
+
+    fn kind(&self) -> BackendKind {
+        Backend::kind(&self.inner)
+    }
+
+    fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        Backend::infer(&mut self.inner, w)
+    }
+
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        Backend::serve(&mut self.inner, requests)
+    }
+
+    fn package_completed(&self) -> Option<Vec<u64>> {
+        Backend::package_completed(&self.inner)
+    }
+
+    fn kv_budget_bytes_per_package(&self) -> Option<u64> {
+        Backend::kv_budget_bytes_per_package(&self.inner)
+    }
+
+    fn memory(&self) -> Option<MemoryView<'_>> {
+        Backend::memory(&self.inner)
+    }
+}
+
+/// The Jetson Orin NX analytic baseline as a backend (Fig 6(b)'s measured
+/// comparison point, servable through the same surface).
+pub struct JetsonBackend {
+    model: MllmConfig,
+    workload: WorkloadConfig,
+    spec: JetsonSpec,
+}
+
+impl JetsonBackend {
+    /// Build with the paper's calibrated [`JetsonSpec`].
+    pub fn new(model: MllmConfig, workload: WorkloadConfig) -> JetsonBackend {
+        JetsonBackend { model, workload, spec: JetsonSpec::default() }
+    }
+
+    /// Override the board spec (calibration experiments).
+    pub fn with_spec(mut self, spec: JetsonSpec) -> JetsonBackend {
+        self.spec = spec;
+        self
+    }
+}
+
+impl Backend for JetsonBackend {
+    fn name(&self) -> &'static str {
+        "jetson"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Jetson
+    }
+
+    fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        Ok(baseline_inference_stats(&jetson::run(&self.model, w, &self.spec)))
+    }
+
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        let (model, spec, base) = (self.model.clone(), self.spec.clone(), self.workload.clone());
+        Ok(baseline_serve(requests, &mut |tokens| {
+            let mut w = base.clone();
+            w.output_tokens = tokens;
+            jetson::run(&model, &w, &spec)
+        }))
+    }
+}
+
+/// The FACIL near-bank PIM analytic baseline as a backend (Table V's
+/// PIM comparison point, servable through the same surface).
+pub struct FacilBackend {
+    model: MllmConfig,
+    workload: WorkloadConfig,
+    spec: FacilSpec,
+}
+
+impl FacilBackend {
+    /// Build with the paper's calibrated [`FacilSpec`].
+    pub fn new(model: MllmConfig, workload: WorkloadConfig) -> FacilBackend {
+        FacilBackend { model, workload, spec: FacilSpec::default() }
+    }
+
+    /// Override the platform spec (calibration experiments).
+    pub fn with_spec(mut self, spec: FacilSpec) -> FacilBackend {
+        self.spec = spec;
+        self
+    }
+}
+
+impl Backend for FacilBackend {
+    fn name(&self) -> &'static str {
+        "facil"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Facil
+    }
+
+    fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        Ok(baseline_inference_stats(&facil::run(&self.model, w, &self.spec)))
+    }
+
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        let (model, spec, base) = (self.model.clone(), self.spec.clone(), self.workload.clone());
+        Ok(baseline_serve(requests, &mut |tokens| {
+            let mut w = base.clone();
+            w.output_tokens = tokens;
+            facil::run(&model, &w, &spec)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (MllmConfig, WorkloadConfig) {
+        let mut w = WorkloadConfig::default();
+        w.output_tokens = 8;
+        (MllmConfig::fastvlm_0_6b(), w)
+    }
+
+    #[test]
+    fn baseline_conversion_preserves_headline_metrics() {
+        let (model, w) = small();
+        let b = jetson::run(&model, &w, &JetsonSpec::default());
+        let s = baseline_inference_stats(&b);
+        assert_eq!(s.output_tokens, b.output_tokens);
+        assert!((s.total_time_ns() - b.total_ns()).abs() < 1e-6);
+        assert!((s.tokens_per_s() - b.tokens_per_s()).abs() / b.tokens_per_s() < 1e-9);
+        assert!((s.tokens_per_j() - b.tokens_per_j()).abs() / b.tokens_per_j() < 1e-9);
+        assert!((s.avg_power_w() - b.avg_power_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_backends_serve_a_burst_conserving_requests() {
+        let (model, w) = small();
+        let mut backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(JetsonBackend::new(model.clone(), w.clone())),
+            Box::new(FacilBackend::new(model.clone(), w.clone())),
+        ];
+        for b in &mut backends {
+            let out = b.serve(ServeRequest::burst(5, 4)).unwrap();
+            assert_eq!(out.responses.len() + out.shed.len(), 5, "{}", b.name());
+            assert!(out.shed.is_empty(), "{}: sequential stream never sheds", b.name());
+            assert_eq!(out.metrics.completed, 5);
+            assert_eq!(out.metrics.tokens, 20);
+            // Simultaneous arrivals on a single stream must queue.
+            let queued = out.responses.iter().filter(|r| r.queue_ns > 0.0).count();
+            assert_eq!(queued, 4, "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn baseline_serve_sheds_non_finite_arrivals() {
+        let (model, w) = small();
+        let mut b = JetsonBackend::new(model, w);
+        let mut reqs = ServeRequest::burst(3, 4);
+        reqs[1].arrival_ns = f64::NAN;
+        let out = b.serve(reqs).unwrap();
+        assert_eq!(out.responses.len(), 2);
+        assert_eq!(out.shed.len(), 1);
+        assert_eq!(out.shed[0].id, 1);
+        assert_eq!(out.metrics.rejected, 1);
+    }
+
+    #[test]
+    fn backend_kind_spellings_round_trip() {
+        for k in BackendKind::all() {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("routee"), None);
+    }
+
+    #[test]
+    fn zero_token_requests_are_free_on_baselines() {
+        let (model, w) = small();
+        let mut b = FacilBackend::new(model, w);
+        let mut reqs = ServeRequest::burst(2, 4);
+        reqs[1].max_new_tokens = 0;
+        let out = b.serve(reqs).unwrap();
+        let zero = out.responses.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(zero.tokens.len(), 0);
+        assert_eq!(zero.service_ns, 0.0);
+        assert_eq!(out.metrics.tokens, 4);
+    }
+}

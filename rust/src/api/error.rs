@@ -1,0 +1,167 @@
+//! The crate's typed error taxonomy.
+//!
+//! `ChimeError` replaces ad-hoc `panic!`s, `anyhow` errors, and raw `i32`
+//! exit codes on every public execution path. Each variant carries enough
+//! context to print a one-line actionable message, and maps to a process
+//! exit code through [`ChimeError::exit_code`]: usage/configuration
+//! mistakes exit 2 (the caller can fix the invocation), environment and
+//! runtime failures exit 1.
+
+use std::fmt;
+
+/// Everything that can go wrong while building or driving a [`crate::api::Session`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChimeError {
+    /// A configuration override file could not be read, parsed, or applied
+    /// (unknown knob, non-numeric value, unreadable path).
+    Config(String),
+    /// A name failed to resolve: model, backend, route policy, experiment
+    /// id, or subcommand. `hint` lists the accepted spellings.
+    Unknown {
+        /// What kind of name failed to resolve ("model", "backend", ...).
+        what: &'static str,
+        /// The name as the caller spelled it.
+        name: String,
+        /// Accepted spellings, when enumerable.
+        hint: Option<String>,
+    },
+    /// A CLI flag is not accepted by the subcommand it was passed to.
+    UnknownFlag {
+        /// The unrecognized flag (without the leading `--`).
+        flag: String,
+        /// The closest accepted flag, when one is plausibly intended.
+        suggestion: Option<String>,
+    },
+    /// A builder or argument invariant was violated (zero packages, zero
+    /// batch, conflicting options).
+    Invalid(String),
+    /// A backend cannot be constructed in this environment (e.g. the
+    /// functional PJRT backend without AOT artifacts).
+    BackendUnavailable {
+        /// The backend that failed to come up.
+        backend: &'static str,
+        /// Why it is unavailable.
+        reason: String,
+    },
+    /// The chosen backend does not implement the requested operation.
+    Unsupported {
+        /// The backend that declined.
+        backend: &'static str,
+        /// The operation it does not implement.
+        what: &'static str,
+    },
+    /// A runtime failure while executing (PJRT execution, serving).
+    Runtime(String),
+}
+
+impl ChimeError {
+    /// Process exit code for this error: 2 for usage/configuration
+    /// mistakes the caller can fix in the invocation, 1 for environment
+    /// and runtime failures.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            ChimeError::Config(_)
+            | ChimeError::Unknown { .. }
+            | ChimeError::UnknownFlag { .. }
+            | ChimeError::Invalid(_) => 2,
+            ChimeError::BackendUnavailable { .. }
+            | ChimeError::Unsupported { .. }
+            | ChimeError::Runtime(_) => 1,
+        }
+    }
+}
+
+impl fmt::Display for ChimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChimeError::Config(msg) => write!(f, "config: {msg}"),
+            ChimeError::Unknown { what, name, hint } => {
+                write!(f, "unknown {what} {name:?}")?;
+                if let Some(h) = hint {
+                    write!(f, " (use {h})")?;
+                }
+                Ok(())
+            }
+            ChimeError::UnknownFlag { flag, suggestion } => {
+                write!(f, "unknown option --{flag}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " (did you mean --{s}?)")?;
+                }
+                Ok(())
+            }
+            ChimeError::Invalid(msg) => write!(f, "invalid arguments: {msg}"),
+            ChimeError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend {backend} unavailable: {reason}")
+            }
+            ChimeError::Unsupported { backend, what } => {
+                write!(f, "backend {backend} does not support {what}")
+            }
+            ChimeError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ChimeError {}
+
+impl From<anyhow::Error> for ChimeError {
+    fn from(e: anyhow::Error) -> ChimeError {
+        ChimeError::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_split_usage_vs_runtime() {
+        assert_eq!(ChimeError::Config("x".into()).exit_code(), 2);
+        assert_eq!(
+            ChimeError::Unknown { what: "model", name: "nope".into(), hint: None }.exit_code(),
+            2
+        );
+        assert_eq!(
+            ChimeError::UnknownFlag { flag: "routee".into(), suggestion: None }.exit_code(),
+            2
+        );
+        assert_eq!(ChimeError::Invalid("x".into()).exit_code(), 2);
+        assert_eq!(
+            ChimeError::BackendUnavailable { backend: "functional", reason: "no artifacts".into() }
+                .exit_code(),
+            1
+        );
+        assert_eq!(ChimeError::Runtime("boom".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ChimeError::UnknownFlag {
+            flag: "routee".into(),
+            suggestion: Some("route".into()),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("--routee"), "{msg}");
+        assert!(msg.contains("did you mean --route?"), "{msg}");
+
+        let e = ChimeError::Unknown {
+            what: "model",
+            name: "fastvlm-9b".into(),
+            hint: Some("fastvlm-0.6b fastvlm-1.7b".into()),
+        };
+        assert!(e.to_string().contains("unknown model"));
+    }
+
+    #[test]
+    fn anyhow_interop_round_trips_the_chain() {
+        let root = anyhow::anyhow!("root cause").context("while loading");
+        let e = ChimeError::from(root);
+        let msg = e.to_string();
+        assert!(msg.contains("while loading"), "{msg}");
+        assert!(msg.contains("root cause"), "{msg}");
+        assert_eq!(e.exit_code(), 1);
+        // And back: ChimeError implements std::error::Error, so `?` can
+        // lift it into the vendored anyhow in downstream code.
+        let back: anyhow::Error = e.into();
+        assert!(format!("{back:#}").contains("root cause"));
+    }
+}

@@ -1,0 +1,44 @@
+//! `chime::api` — the crate's public execution API.
+//!
+//! Three pieces compose into one polymorphic surface over every execution
+//! path (DESIGN.md §8):
+//!
+//! * [`ChimeError`] — the typed error taxonomy. Usage/configuration
+//!   mistakes map to exit code 2, environment/runtime failures to 1;
+//!   nothing on the public path panics or hand-threads raw `i32`s.
+//! * [`Backend`] — `infer` (one VQA inference → [`crate::sim::InferenceStats`])
+//!   and `serve` (request stream → [`crate::coordinator::ServeOutcome`])
+//!   implemented by the CHIME simulator (solo, DRAM-only ablation,
+//!   multi-package sharded), the functional PJRT runtime, and the
+//!   Jetson/FACIL analytic baselines — FACIL-style comparisons are
+//!   "another backend", not a parallel code path.
+//! * [`Session`] — the builder that owns config resolution (defaults +
+//!   JSON override file + workload knobs), model lookup, policy
+//!   validation, and backend selection. The `chime` CLI and all repo
+//!   examples construct execution exclusively through it.
+//!
+//! ```text
+//! let mut session = Session::builder()
+//!     .model("fastvlm-1.7b")
+//!     .backend(BackendKind::Sharded)
+//!     .packages(4)
+//!     .route(RoutePolicy::LeastLoaded)
+//!     .build()?;
+//! let outcome = session.serve(session.poisson_requests(7, 2.0, 16, 64))?;
+//! ```
+#![deny(missing_docs)]
+
+mod backend;
+mod error;
+mod session;
+
+pub use backend::{
+    baseline_inference_stats, Backend, BackendKind, DramOnlyBackend, FacilBackend, JetsonBackend,
+    MemoryView, RequestProfile,
+};
+pub use error::ChimeError;
+pub use session::{Session, SessionBuilder};
+
+// Re-exported so downstream servers can drive the builder without
+// importing coordinator internals.
+pub use crate::coordinator::{BatchPolicy, RoutePolicy, ServeOutcome, ServeRequest, ServeResponse};

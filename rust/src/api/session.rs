@@ -1,0 +1,579 @@
+//! [`Session`]: the builder-style front door to every execution path.
+//!
+//! A session owns config resolution (defaults + JSON override file +
+//! workload knobs), model lookup, and backend construction, and then
+//! drives the chosen [`Backend`] polymorphically. The `chime` CLI and all
+//! repo examples are thin shells over this type.
+//!
+//! ```text
+//! Session::builder()                 // defaults: fastvlm-0.6b, sim, 1 package
+//!     .model("fastvlm-1.7b")         // or .model_config(MllmConfig)
+//!     .backend(BackendKind::Sharded) // sim | dram-only | sharded | functional | jetson | facil
+//!     .packages(4)
+//!     .route(RoutePolicy::LeastLoaded)
+//!     .config_file("calib.json")     // optional JSON knob overrides
+//!     .output_tokens(64)
+//!     .build()?                      // validates, resolves, constructs
+//!     .serve(requests)?              // or .infer() / .infer_with(&w)
+//! ```
+
+use std::path::PathBuf;
+
+use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+use crate::coordinator::{
+    BatchPolicy, FunctionalServer, RoutePolicy, ServeOutcome, ServeRequest, ShardedServer,
+    SimulatedServer,
+};
+use crate::model::workload::RequestStream;
+use crate::runtime::Manifest;
+use crate::sim::InferenceStats;
+
+use super::backend::{
+    Backend, BackendKind, DramOnlyBackend, FacilBackend, JetsonBackend, MemoryView,
+    RequestProfile,
+};
+use super::ChimeError;
+
+/// Accepted model spellings, surfaced in unknown-model errors.
+const MODEL_HINT: &str = "fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny";
+
+/// Model selection: unset (backend-appropriate default), by CLI name
+/// (resolved at build), or an explicit config.
+enum ModelSel {
+    Default,
+    Name(String),
+    Config(MllmConfig),
+}
+
+/// Builder for [`Session`] — see the module docs for the lifecycle.
+pub struct SessionBuilder {
+    model: ModelSel,
+    backend: BackendKind,
+    packages: usize,
+    route: RoutePolicy,
+    batch: BatchPolicy,
+    config_file: Option<String>,
+    text_tokens: Option<usize>,
+    output_tokens: Option<usize>,
+    image_size: Option<usize>,
+    artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            model: ModelSel::Default,
+            backend: BackendKind::Sim,
+            packages: 1,
+            route: RoutePolicy::RoundRobin,
+            batch: BatchPolicy::default(),
+            config_file: None,
+            text_tokens: None,
+            output_tokens: None,
+            image_size: None,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Select the model by CLI name (resolved against the Table II zoo at
+    /// build time; unknown names fail with an actionable hint).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = ModelSel::Name(name.to_string());
+        self
+    }
+
+    /// Select the model by explicit configuration (skips name lookup).
+    pub fn model_config(mut self, model: MllmConfig) -> Self {
+        self.model = ModelSel::Config(model);
+        self
+    }
+
+    /// Choose the execution backend (default: [`BackendKind::Sim`]).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Number of DRAM+RRAM packages for sharded backends (default 1).
+    pub fn packages(mut self, n: usize) -> Self {
+        self.packages = n;
+        self
+    }
+
+    /// Routing policy for multi-package backends (default round-robin).
+    pub fn route(mut self, route: RoutePolicy) -> Self {
+        self.route = route;
+        self
+    }
+
+    /// Full batch policy (max concurrent decode streams + queue depth).
+    pub fn batch(mut self, policy: BatchPolicy) -> Self {
+        self.batch = policy;
+        self
+    }
+
+    /// Max concurrent decode streams per package (default 4).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.batch.max_batch = n;
+        self
+    }
+
+    /// Admission-queue depth per package (default 1024).
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.batch.queue_capacity = n;
+        self
+    }
+
+    /// Apply a JSON calibration-override file on top of the defaults
+    /// (same knobs as `chime --config`; unknown keys are errors).
+    pub fn config_file(mut self, path: &str) -> Self {
+        self.config_file = Some(path.to_string());
+        self
+    }
+
+    /// Override the workload's input text length (tokens).
+    pub fn text_tokens(mut self, n: usize) -> Self {
+        self.text_tokens = Some(n);
+        self
+    }
+
+    /// Override the workload's generated output length (tokens).
+    pub fn output_tokens(mut self, n: usize) -> Self {
+        self.output_tokens = Some(n);
+        self
+    }
+
+    /// Override the workload's input image side length (pixels).
+    pub fn image_size(mut self, n: usize) -> Self {
+        self.image_size = Some(n);
+        self
+    }
+
+    /// Artifacts directory for the functional backend (default:
+    /// `Manifest::default_dir()`).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Resolve configuration, look up the model, validate the policy, and
+    /// construct the backend. Every failure is a typed [`ChimeError`].
+    pub fn build(self) -> Result<Session, ChimeError> {
+        let mut cfg = ChimeConfig::default();
+        if let Some(path) = &self.config_file {
+            cfg = cfg.with_override_file(path).map_err(ChimeError::Config)?;
+        }
+        if let Some(n) = self.text_tokens {
+            cfg.workload.text_tokens = n;
+        }
+        if let Some(n) = self.output_tokens {
+            cfg.workload.output_tokens = n;
+        }
+        if let Some(n) = self.image_size {
+            cfg.workload.image_size = n;
+        }
+        // Resolve the model. The functional backend always runs the
+        // AOT-compiled tiny model — an explicitly selected paper model
+        // would be silently ignored, so it is rejected instead, and
+        // `Session::model()` reports the model that actually runs.
+        let requested = match self.model {
+            ModelSel::Default => None,
+            ModelSel::Config(m) => Some(m),
+            ModelSel::Name(name) => {
+                Some(MllmConfig::by_name(&name).ok_or(ChimeError::Unknown {
+                    what: "model",
+                    name,
+                    hint: Some(MODEL_HINT.to_string()),
+                })?)
+            }
+        };
+        let model = if self.backend == BackendKind::Functional {
+            if let Some(m) = &requested {
+                if m.name != "tiny" {
+                    return Err(ChimeError::Invalid(format!(
+                        "backend functional always runs the AOT-compiled tiny model; \
+                         omit .model() or pass \"tiny\" (got {:?})",
+                        m.name
+                    )));
+                }
+            }
+            MllmConfig::tiny()
+        } else {
+            requested.unwrap_or_else(MllmConfig::fastvlm_0_6b)
+        };
+        if self.packages == 0 {
+            return Err(ChimeError::Invalid(
+                "a deployment needs at least one package".to_string(),
+            ));
+        }
+        // Sequential single-stream backends have no package/routing
+        // dimension; a multi-package request would silently run as one
+        // stream, so it is rejected instead.
+        if self.packages > 1
+            && matches!(
+                self.backend,
+                BackendKind::Functional | BackendKind::Jetson | BackendKind::Facil
+            )
+        {
+            return Err(ChimeError::Invalid(format!(
+                "backend {} is a single sequential stream; packages > 1 applies \
+                 to the sharded simulator backends",
+                self.backend.name()
+            )));
+        }
+        if self.batch.max_batch == 0 {
+            return Err(ChimeError::Invalid(
+                "max_batch 0 can never serve a request".to_string(),
+            ));
+        }
+        if self.batch.queue_capacity == 0 {
+            return Err(ChimeError::Invalid(
+                "queue_capacity 0 can never admit a request".to_string(),
+            ));
+        }
+        let backend: Box<dyn Backend> = match self.backend {
+            BackendKind::Sim => {
+                if self.packages > 1 {
+                    return Err(ChimeError::Invalid(
+                        "backend sim is single-package; use BackendKind::Sharded \
+                         for multi-package deployments"
+                            .to_string(),
+                    ));
+                }
+                Box::new(SimulatedServer::new(&model, &cfg, self.batch.clone()))
+            }
+            BackendKind::Sharded => Box::new(ShardedServer::new(
+                &model,
+                &cfg,
+                self.batch.clone(),
+                self.packages,
+                self.route,
+            )),
+            BackendKind::DramOnly => Box::new(DramOnlyBackend::new(
+                &model,
+                &cfg,
+                self.batch.clone(),
+                self.packages,
+                self.route,
+            )),
+            BackendKind::Functional => {
+                let dir = self.artifacts_dir.clone().unwrap_or_else(Manifest::default_dir);
+                Box::new(FunctionalServer::load(&dir)?)
+            }
+            BackendKind::Jetson => {
+                Box::new(JetsonBackend::new(model.clone(), cfg.workload.clone()))
+            }
+            BackendKind::Facil => {
+                Box::new(FacilBackend::new(model.clone(), cfg.workload.clone()))
+            }
+        };
+        Ok(Session { model, cfg, backend })
+    }
+}
+
+/// One configured execution context: a resolved model + configuration and
+/// a boxed [`Backend`]. Construct through [`Session::builder`].
+pub struct Session {
+    model: MllmConfig,
+    cfg: ChimeConfig,
+    backend: Box<dyn Backend>,
+}
+
+impl Session {
+    /// Start building a session (see [`SessionBuilder`]).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The resolved model configuration.
+    pub fn model(&self) -> &MllmConfig {
+        &self.model
+    }
+
+    /// The effective configuration (defaults + file overrides + knobs).
+    pub fn config(&self) -> &ChimeConfig {
+        &self.cfg
+    }
+
+    /// The session's default workload (from [`Session::config`]).
+    pub fn workload(&self) -> &WorkloadConfig {
+        &self.cfg.workload
+    }
+
+    /// The backend's short name ("sim", "sharded", "jetson", ...).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The backend's [`BackendKind`].
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// Run one VQA inference under the session's default workload.
+    pub fn infer(&mut self) -> Result<InferenceStats, ChimeError> {
+        let w = self.cfg.workload.clone();
+        self.backend.infer(&w)
+    }
+
+    /// Run one VQA inference under an explicit workload (sweeps).
+    pub fn infer_with(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError> {
+        self.backend.infer(w)
+    }
+
+    /// Serve a request stream through the backend. Every offered request
+    /// comes back completed or shed — never silently dropped.
+    pub fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        self.backend.serve(requests)
+    }
+
+    /// Synthesize a deterministic Poisson request stream sized for this
+    /// session's backend: prompt length and vocabulary come from the
+    /// backend's [`RequestProfile`] when it dictates one (functional
+    /// artifacts), else from the session's workload + model.
+    pub fn poisson_requests(
+        &self,
+        seed: u64,
+        rate_per_s: f64,
+        n: usize,
+        max_new_tokens: usize,
+    ) -> Vec<ServeRequest> {
+        let profile = self.backend.request_profile().unwrap_or(RequestProfile {
+            prompt_len: self.cfg.workload.text_tokens,
+            vocab: self.model.llm.vocab,
+        });
+        let mut stream =
+            RequestStream::new(seed, rate_per_s, profile.prompt_len, max_new_tokens, profile.vocab);
+        stream
+            .take(n)
+            .into_iter()
+            .map(|r| ServeRequest {
+                id: r.id,
+                prompt: r.prompt,
+                image_seed: r.image_seed,
+                max_new_tokens: r.max_new_tokens,
+                arrival_ns: r.arrival_ns,
+            })
+            .collect()
+    }
+
+    /// Completions per package (multi-package backends; `None` otherwise).
+    pub fn package_completed(&self) -> Option<Vec<u64>> {
+        self.backend.package_completed()
+    }
+
+    /// Per-package KV headroom in bytes (multi-package backends).
+    pub fn kv_budget_bytes_per_package(&self) -> Option<u64> {
+        self.backend.kv_budget_bytes_per_package()
+    }
+
+    /// Memory state retained from the most recent [`Session::infer`]
+    /// (simulator-backed backends; `None` before the first inference).
+    pub fn memory(&self) -> Option<MemoryView<'_>> {
+        self.backend.memory()
+    }
+
+    /// Mutable access to the backend for trait-level drivers.
+    pub fn backend_mut(&mut self) -> &mut dyn Backend {
+        self.backend.as_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn tiny_builder() -> SessionBuilder {
+        Session::builder().model("tiny").text_tokens(8).output_tokens(4).image_size(64)
+    }
+
+    #[test]
+    fn sim_session_infers_and_serves() {
+        let mut s = tiny_builder().build().unwrap();
+        assert_eq!(s.backend_kind(), BackendKind::Sim);
+        assert_eq!(s.backend_name(), "sim");
+        let stats = s.infer().unwrap();
+        assert_eq!(stats.output_tokens, 4);
+        assert!(stats.total_time_ns() > 0.0);
+        // Memory state of the inference is retained for introspection.
+        let mem = s.memory().expect("sim backend retains memory state");
+        assert!(mem.dram.bytes_read > 0);
+        let out = s.serve(ServeRequest::burst(3, 4)).unwrap();
+        assert_eq!(out.responses.len(), 3);
+        assert!(out.shed.is_empty());
+    }
+
+    #[test]
+    fn unknown_model_is_a_usage_error() {
+        let err = Session::builder().model("fastvlm-9b").build().unwrap_err();
+        assert_eq!(err.exit_code(), 2);
+        match err {
+            ChimeError::Unknown { what, name, hint } => {
+                assert_eq!(what, "model");
+                assert_eq!(name, "fastvlm-9b");
+                assert!(hint.unwrap().contains("fastvlm-0.6b"));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_config_file_is_a_config_error_not_a_panic() {
+        let path = std::env::temp_dir().join("chime_garbage_config_test.json");
+        std::fs::write(&path, "{ not json at all ]").unwrap();
+        let err = tiny_builder()
+            .config_file(path.to_str().unwrap())
+            .build()
+            .unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(err.exit_code(), 2);
+        assert!(matches!(err, ChimeError::Config(_)), "wrong variant: {err:?}");
+    }
+
+    #[test]
+    fn missing_config_file_is_a_config_error() {
+        let err = tiny_builder()
+            .config_file("/nonexistent/chime/config.json")
+            .build()
+            .unwrap_err();
+        assert_eq!(err.exit_code(), 2);
+        assert!(matches!(err, ChimeError::Config(_)));
+    }
+
+    #[test]
+    fn unknown_config_knob_is_a_config_error() {
+        let path = std::env::temp_dir().join("chime_unknown_knob_test.json");
+        std::fs::write(&path, r#"{"dram.typo_knob": 1.0}"#).unwrap();
+        let err = tiny_builder()
+            .config_file(path.to_str().unwrap())
+            .build()
+            .unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(matches!(err, ChimeError::Config(_)));
+        assert!(err.to_string().contains("typo_knob"), "{err}");
+    }
+
+    #[test]
+    fn invalid_policies_are_rejected_with_typed_errors() {
+        assert!(matches!(
+            tiny_builder().packages(0).backend(BackendKind::Sharded).build(),
+            Err(ChimeError::Invalid(_))
+        ));
+        assert!(matches!(
+            tiny_builder().max_batch(0).build(),
+            Err(ChimeError::Invalid(_))
+        ));
+        assert!(matches!(
+            tiny_builder().queue_capacity(0).build(),
+            Err(ChimeError::Invalid(_))
+        ));
+        assert!(matches!(
+            tiny_builder().packages(2).build(), // sim is single-package
+            Err(ChimeError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn single_stream_backends_reject_multi_package_configs() {
+        // Pre-fix, .packages(4) on a baseline/functional builder silently
+        // built a single sequential stream.
+        for kind in [BackendKind::Jetson, BackendKind::Facil, BackendKind::Functional] {
+            let err = Session::builder().backend(kind).packages(4).build().unwrap_err();
+            assert!(
+                matches!(err, ChimeError::Invalid(_)),
+                "{kind:?}: expected Invalid, got {err:?}"
+            );
+            assert_eq!(err.exit_code(), 2);
+        }
+    }
+
+    #[test]
+    fn functional_backend_rejects_paper_models_and_reports_tiny() {
+        // The functional artifacts are the tiny model; a paper-model
+        // selection would be silently ignored, so it is rejected (this
+        // check runs before artifact loading, so it needs no artifacts).
+        let err = Session::builder()
+            .model("fastvlm-1.7b")
+            .backend(BackendKind::Functional)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ChimeError::Invalid(_)), "{err:?}");
+        // Explicitly selecting tiny is fine: the build proceeds to the
+        // artifact-loading stage (unavailable in stub environments).
+        match Session::builder().model("tiny").backend(BackendKind::Functional).build() {
+            Ok(s) => assert_eq!(s.model().name, "tiny"),
+            Err(ChimeError::BackendUnavailable { .. }) => {}
+            Err(other) => panic!("unexpected error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_session_exposes_package_diagnostics() {
+        let mut s = tiny_builder()
+            .backend(BackendKind::Sharded)
+            .packages(2)
+            .route(RoutePolicy::LeastLoaded)
+            .build()
+            .unwrap();
+        assert_eq!(s.backend_kind(), BackendKind::Sharded);
+        let out = s.serve(ServeRequest::burst(6, 4)).unwrap();
+        assert_eq!(out.responses.len(), 6);
+        let per_pkg = s.package_completed().unwrap();
+        assert_eq!(per_pkg.len(), 2);
+        assert_eq!(per_pkg.iter().sum::<u64>(), 6);
+        assert!(s.kv_budget_bytes_per_package().unwrap() > 0);
+    }
+
+    #[test]
+    fn baseline_sessions_share_the_surface() {
+        for kind in [BackendKind::Jetson, BackendKind::Facil] {
+            let mut s = Session::builder()
+                .model("fastvlm-0.6b")
+                .backend(kind)
+                .output_tokens(8)
+                .build()
+                .unwrap();
+            let stats = s.infer().unwrap();
+            assert_eq!(stats.output_tokens, 8);
+            assert!(stats.tokens_per_s() > 0.0, "{kind:?}");
+            assert!(s.memory().is_none(), "baselines have no simulator memory");
+        }
+    }
+
+    #[test]
+    fn poisson_requests_match_the_session_workload() {
+        let s = tiny_builder().build().unwrap();
+        let reqs = s.poisson_requests(7, 100.0, 5, 3);
+        assert_eq!(reqs.len(), 5);
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 8, "prompt sized from workload.text_tokens");
+            assert_eq!(r.max_new_tokens, 3);
+            assert!(r.arrival_ns.is_finite());
+        }
+        // Deterministic: same seed, same stream.
+        let again = s.poisson_requests(7, 100.0, 5, 3);
+        for (a, b) in reqs.iter().zip(&again) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival_ns, b.arrival_ns);
+        }
+    }
+
+    #[test]
+    fn dram_only_session_is_slower_than_sim() {
+        let w = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+        let mut het = tiny_builder().build().unwrap();
+        let mut solo = tiny_builder().backend(BackendKind::DramOnly).build().unwrap();
+        let a = het.infer_with(&w).unwrap();
+        let b = solo.infer_with(&w).unwrap();
+        assert!(
+            b.decode.time_ns > a.decode.time_ns,
+            "dram-only {} vs chime {}",
+            b.decode.time_ns,
+            a.decode.time_ns
+        );
+        assert_eq!(solo.backend_name(), "dram-only");
+    }
+}

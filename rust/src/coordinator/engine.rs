@@ -11,10 +11,11 @@
 //! Python never runs on this path; the functional backend only loads
 //! pre-built `artifacts/*.hlo.txt`.
 
-use anyhow::Result;
-
+use crate::api::ChimeError;
 use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
 use crate::runtime::FunctionalMllm;
+use crate::sim::memory::{DramState, RramState};
+use crate::sim::InferenceStats;
 use crate::util::Prng;
 
 use super::batcher::BatchPolicy;
@@ -40,6 +41,27 @@ impl SimulatedServer {
     /// dropped), and aggregate metrics.
     pub fn serve(&mut self, requests: Vec<ServeRequest>) -> ServeOutcome {
         self.inner.serve(requests)
+    }
+
+    /// The model this server serves.
+    pub fn model(&self) -> &MllmConfig {
+        self.inner.model()
+    }
+
+    /// The configuration this server was built with.
+    pub fn config(&self) -> &ChimeConfig {
+        self.inner.config()
+    }
+
+    /// One-shot inference on a fresh engine (the `api::Backend` infer
+    /// path); serving state is untouched.
+    pub fn run_inference_with(&mut self, w: &WorkloadConfig) -> InferenceStats {
+        self.inner.run_inference_with(w)
+    }
+
+    /// Memory state of the most recent `run_inference_with`.
+    pub fn last_infer_memory(&self) -> Option<(&DramState, &RramState)> {
+        self.inner.last_infer_memory()
     }
 }
 
@@ -84,8 +106,13 @@ pub struct FunctionalServer {
 }
 
 impl FunctionalServer {
-    pub fn load(artifacts_dir: &std::path::Path) -> Result<FunctionalServer> {
-        let mllm = FunctionalMllm::load(artifacts_dir)?;
+    /// Load the AOT artifacts and bring up the PJRT runtime. Fails with a
+    /// typed [`ChimeError::BackendUnavailable`] when the artifacts are
+    /// missing or the PJRT backend (vendored stub by default) is off.
+    pub fn load(artifacts_dir: &std::path::Path) -> Result<FunctionalServer, ChimeError> {
+        let mllm = FunctionalMllm::load(artifacts_dir).map_err(|e| {
+            ChimeError::BackendUnavailable { backend: "functional", reason: format!("{e:#}") }
+        })?;
         let mut sim_cfg = ChimeConfig::default();
         sim_cfg.workload = WorkloadConfig {
             image_size: mllm.manifest.config.img_size,
@@ -107,7 +134,10 @@ impl FunctionalServer {
     /// measured wall-clock; queueing is accounted on the request timeline
     /// via `SequentialTimeline` so both sides of the subtraction share a
     /// timebase.
-    pub fn serve(&mut self, requests: &[ServeRequest]) -> Result<(Vec<ServeResponse>, ServingMetrics)> {
+    pub fn serve(
+        &mut self,
+        requests: &[ServeRequest],
+    ) -> Result<(Vec<ServeResponse>, ServingMetrics), ChimeError> {
         let mut responses = Vec::new();
         let mut metrics = ServingMetrics::new();
         // Simulated CHIME energy per generated token for the tiny model.

@@ -21,10 +21,11 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{ChimeConfig, ChimeHardware, MllmConfig};
+use crate::config::{ChimeConfig, ChimeHardware, MllmConfig, WorkloadConfig};
 use crate::mapping::planner::DecodeTemplate;
 use crate::mapping::Plan;
-use crate::sim::{PhaseStats, SimEngine};
+use crate::sim::memory::{DramState, RramState};
+use crate::sim::{InferenceStats, PhaseStats, SimEngine};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServingMetrics;
@@ -103,9 +104,17 @@ struct PackageState {
 }
 
 impl PackageState {
-    fn new(plan: Plan, hw: &ChimeHardware, policy: &BatchPolicy) -> PackageState {
-        let engine = SimEngine::new(hw, &plan);
-        let template = plan.decode_template();
+    fn new(plan: Plan, hw: &ChimeHardware, policy: &BatchPolicy, dram_only: bool) -> PackageState {
+        let engine = if dram_only {
+            SimEngine::new_dram_only(hw, &plan)
+        } else {
+            SimEngine::new(hw, &plan)
+        };
+        let template = if dram_only {
+            plan.decode_template_dram_only()
+        } else {
+            plan.decode_template()
+        };
         PackageState {
             plan,
             engine,
@@ -261,6 +270,15 @@ pub struct ShardedServer {
     pub route: RoutePolicy,
     packages: Vec<PackageState>,
     rr_next: usize,
+    /// Resolved model/config kept for the `api::Backend` one-shot
+    /// inference surface (`run_inference_with`).
+    model: MllmConfig,
+    cfg: ChimeConfig,
+    /// Packages run the single-chiplet DRAM-only plan (Fig 9 ablation).
+    dram_only: bool,
+    /// Engine state of the most recent `run_inference_with` call, kept so
+    /// callers can inspect KV residency / endurance after an inference.
+    last_infer: Option<SimEngine>,
 }
 
 impl ShardedServer {
@@ -274,23 +292,99 @@ impl ShardedServer {
         packages: usize,
         route: RoutePolicy,
     ) -> ShardedServer {
+        Self::with_mode(model, cfg, policy, packages, route, false)
+    }
+
+    /// Build a DRAM-only deployment: every package runs the single-chiplet
+    /// ablation plan (`Plan::build_dram_only` + `SimEngine::new_dram_only`),
+    /// making Fig 9's baseline servable through the same coordinator.
+    pub fn new_dram_only(
+        model: &MllmConfig,
+        cfg: &ChimeConfig,
+        policy: BatchPolicy,
+        packages: usize,
+        route: RoutePolicy,
+    ) -> ShardedServer {
+        Self::with_mode(model, cfg, policy, packages, route, true)
+    }
+
+    fn with_mode(
+        model: &MllmConfig,
+        cfg: &ChimeConfig,
+        policy: BatchPolicy,
+        packages: usize,
+        route: RoutePolicy,
+        dram_only: bool,
+    ) -> ShardedServer {
         assert!(packages >= 1, "a sharded deployment needs at least one package");
         assert!(policy.max_batch >= 1, "max_batch 0 can never serve a request");
         assert!(
             policy.queue_capacity >= 1,
             "queue_capacity 0 can never admit a request"
         );
-        let base = Plan::build(model, &cfg.hardware, &cfg.workload);
+        let base = if dram_only {
+            Plan::build_dram_only(model, &cfg.hardware, &cfg.workload)
+        } else {
+            Plan::build(model, &cfg.hardware, &cfg.workload)
+        };
         let states: Vec<PackageState> = base
             .replicate(packages)
             .into_iter()
-            .map(|plan| PackageState::new(plan, &cfg.hardware, &policy))
+            .map(|plan| PackageState::new(plan, &cfg.hardware, &policy, dram_only))
             .collect();
-        ShardedServer { policy, route, packages: states, rr_next: 0 }
+        ShardedServer {
+            policy,
+            route,
+            packages: states,
+            rr_next: 0,
+            model: model.clone(),
+            cfg: cfg.clone(),
+            dram_only,
+            last_infer: None,
+        }
     }
 
     pub fn package_count(&self) -> usize {
         self.packages.len()
+    }
+
+    /// The model this deployment serves.
+    pub fn model(&self) -> &MllmConfig {
+        &self.model
+    }
+
+    /// The configuration this deployment was built with.
+    pub fn config(&self) -> &ChimeConfig {
+        &self.cfg
+    }
+
+    /// Whether the packages run the DRAM-only ablation plan.
+    pub fn is_dram_only(&self) -> bool {
+        self.dram_only
+    }
+
+    /// One-shot inference on a fresh engine under workload `w`, in this
+    /// deployment's mode (heterogeneous or DRAM-only). The engine is
+    /// retained for memory introspection via `last_infer_memory`; the
+    /// serving packages' state is untouched.
+    pub fn run_inference_with(&mut self, w: &WorkloadConfig) -> InferenceStats {
+        let (plan, mut engine) = if self.dram_only {
+            let plan = Plan::build_dram_only(&self.model, &self.cfg.hardware, w);
+            let engine = SimEngine::new_dram_only(&self.cfg.hardware, &plan);
+            (plan, engine)
+        } else {
+            let plan = Plan::build(&self.model, &self.cfg.hardware, w);
+            let engine = SimEngine::new(&self.cfg.hardware, &plan);
+            (plan, engine)
+        };
+        let stats = engine.run_inference(&plan);
+        self.last_infer = Some(engine);
+        stats
+    }
+
+    /// Memory state (DRAM, RRAM) of the most recent `run_inference_with`.
+    pub fn last_infer_memory(&self) -> Option<(&DramState, &RramState)> {
+        self.last_infer.as_ref().map(|e| (&e.dram, &e.rram))
     }
 
     /// Completions per package so far (routing/balance diagnostics).
@@ -657,6 +751,63 @@ mod tests {
             "second session inherited the first session's clock: {:?}",
             second.responses.iter().map(|r| r.queue_ns).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn dram_only_deployment_serves_and_is_slower() {
+        // The ablation is servable through the same coordinator, and a
+        // single-chiplet package must drain a burst strictly slower than
+        // the heterogeneous pair (Fig 9's result, on the serving path).
+        let (model, cfg) = tiny_cfg();
+        let run = |dram_only: bool| {
+            let mut srv = if dram_only {
+                ShardedServer::new_dram_only(
+                    &model,
+                    &cfg,
+                    BatchPolicy::default(),
+                    1,
+                    RoutePolicy::RoundRobin,
+                )
+            } else {
+                ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin)
+            };
+            let out = srv.serve(burst(&[4; 4]));
+            assert_eq!(out.responses.len(), 4);
+            out.metrics.span_ns()
+        };
+        let het = run(false);
+        let solo = run(true);
+        assert!(solo > het, "dram-only span {solo} vs heterogeneous {het}");
+    }
+
+    #[test]
+    fn one_shot_inference_matches_the_free_functions() {
+        // `run_inference_with` is the api::Backend infer path; it must be
+        // bit-identical to the pre-existing sim free functions.
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin);
+        let a = srv.run_inference_with(&cfg.workload);
+        let b = crate::sim::simulate(&model, &cfg);
+        assert_eq!(a.total_time_ns(), b.total_time_ns());
+        assert_eq!(a.total_energy_j(), b.total_energy_j());
+        assert_eq!(a.kv_offloaded_bytes, b.kv_offloaded_bytes);
+        let (dram, rram) = srv.last_infer_memory().expect("engine retained");
+        assert!(dram.bytes_read > 0);
+        assert!(rram.lifetime_read_bytes > 0);
+
+        let mut solo = ShardedServer::new_dram_only(
+            &model,
+            &cfg,
+            BatchPolicy::default(),
+            1,
+            RoutePolicy::RoundRobin,
+        );
+        assert!(solo.is_dram_only());
+        let c = solo.run_inference_with(&cfg.workload);
+        let d = crate::sim::simulate_dram_only(&model, &cfg);
+        assert_eq!(c.total_time_ns(), d.total_time_ns());
+        assert_eq!(c.total_energy_j(), d.total_energy_j());
     }
 
     #[test]

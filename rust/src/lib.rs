@@ -4,6 +4,11 @@
 //! Reproduction of Chen, Tian, Pan, Li, Xu & Rosing (CS.AR 2025). The
 //! crate provides, as a library:
 //!
+//! - [`api`]: the public execution API — a typed [`api::ChimeError`]
+//!   taxonomy, the polymorphic [`api::Backend`] trait (simulator,
+//!   DRAM-only ablation, sharded, functional PJRT, Jetson/FACIL
+//!   baselines), and the builder-style [`api::Session`] front door that
+//!   the CLI and every example drive (DESIGN.md §8);
 //! - [`config`]: the paper's hardware (Tables III/IV) and model (Table II)
 //!   configurations plus calibration knobs;
 //! - [`model`]: an operator-level MLLM workload model (vision encoder,
@@ -29,6 +34,7 @@
 //! (the `xla` stub gates the functional path off until the real PJRT
 //! build closure is supplied).
 
+pub mod api;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

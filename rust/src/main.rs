@@ -3,41 +3,59 @@
 //! Subcommands:
 //!   info      — print model zoo (Table II) and hardware configs (III/IV)
 //!   simulate  — run one model's VQA inference on the CHIME simulator
-//!   serve     — serve a request stream (simulated or functional backend)
+//!   serve     — serve a request stream (sim | functional | dram-only |
+//!               jetson | facil backends)
 //!   sweep     — sequence-length sweep (Fig 8)
 //!   results   — regenerate paper tables/figures (--fig N | --all)
 //!   parity    — verify the PJRT functional path against the AOT oracle
+//!
+//! The binary is a thin shell over `chime::api::Session`: every backend is
+//! constructed through the builder, every failure is a typed `ChimeError`
+//! (usage mistakes exit 2, environment/runtime failures exit 1), and every
+//! subcommand validates its flags so typos get a suggestion instead of a
+//! silent no-op.
 
-use chime::baselines::{facil, jetson};
-use chime::config::{ChimeConfig, FacilSpec, JetsonSpec, MllmConfig};
-use chime::coordinator::{BatchPolicy, FunctionalServer, RoutePolicy, ServeRequest, ShardedServer};
-use chime::model::workload::RequestStream;
+use chime::api::{BackendKind, ChimeError, Session, SessionBuilder};
+use chime::config::MllmConfig;
+use chime::coordinator::{BatchPolicy, RoutePolicy};
 use chime::results;
 use chime::runtime::Manifest;
-use chime::sim;
 use chime::util::stats::{fmt_bytes, fmt_ns};
 use chime::util::{table, Args, Json, Table};
 
 fn main() {
     let args = Args::from_env();
-    let code = match args.command.as_deref() {
-        Some("info") => cmd_info(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("results") => cmd_results(&args),
-        Some("parity") => cmd_parity(&args),
-        Some(other) => {
-            eprintln!("unknown command {other:?}");
-            usage();
-            2
-        }
-        None => {
-            usage();
-            0
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("chime: {e}");
+            e.exit_code()
         }
     };
     std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), ChimeError> {
+    match args.command.as_deref() {
+        Some("info") => cmd_info(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("serve") => cmd_serve(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("results") => cmd_results(args),
+        Some("parity") => cmd_parity(args),
+        Some(other) => {
+            usage();
+            Err(ChimeError::Unknown {
+                what: "command",
+                name: other.to_string(),
+                hint: Some("info simulate serve sweep results parity".to_string()),
+            })
+        }
+        None => {
+            usage();
+            Ok(())
+        }
+    }
 }
 
 fn usage() {
@@ -49,8 +67,8 @@ USAGE: chime <command> [options]
 COMMANDS:
   info      [--models] [--hardware]           Table II / III / IV configs
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
-  serve     [--backend sim|functional] [--model NAME] [--requests N]
-            [--rate R] [--batch B] [--tokens N] [--packages N]
+  serve     [--backend sim|functional|dram-only|jetson|facil] [--model NAME]
+            [--requests N] [--rate R] [--batch B] [--tokens N] [--packages N]
             [--route rr|least-loaded] [--queue N]
   sweep     [--model NAME] [--json]           Fig 8 sequence-length sweep
   results   [--fig 1|6|7|8|9|table5|ablations|scaling] [--all] [--json] [--baselines]
@@ -60,27 +78,52 @@ MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
     );
 }
 
-fn resolve_model(args: &Args) -> Result<MllmConfig, i32> {
-    let name = args.get_or("model", "fastvlm-0.6b");
-    MllmConfig::by_name(name).ok_or_else(|| {
-        eprintln!("unknown model {name:?}");
-        2
-    })
-}
-
-fn config_from(args: &Args) -> ChimeConfig {
-    let mut cfg = ChimeConfig::default();
-    if let Some(path) = args.get("config") {
-        cfg = cfg
-            .with_override_file(path)
-            .unwrap_or_else(|e| panic!("config: {e}"));
+/// Reject flags the subcommand does not accept, with a typo suggestion.
+fn ensure_known(args: &Args, allowed: &[&str]) -> Result<(), ChimeError> {
+    if let Some((flag, suggestion)) = args.unknown(allowed).into_iter().next() {
+        return Err(ChimeError::UnknownFlag { flag, suggestion });
     }
-    cfg.workload.output_tokens = args.get_usize("out", cfg.workload.output_tokens);
-    cfg.workload.text_tokens = args.get_usize("text", cfg.workload.text_tokens);
-    cfg
+    Ok(())
 }
 
-fn cmd_info(args: &Args) -> i32 {
+/// `--key N` as usize, or a typed usage error (exit 2) — never a panic.
+fn usize_arg(args: &Args, name: &str, default: usize) -> Result<usize, ChimeError> {
+    match args.get(name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| {
+            ChimeError::Invalid(format!("--{name} expects an integer, got {v:?}"))
+        }),
+    }
+}
+
+/// `--key X` as f64, or a typed usage error (exit 2) — never a panic.
+fn f64_arg(args: &Args, name: &str, default: f64) -> Result<f64, ChimeError> {
+    match args.get(name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| {
+            ChimeError::Invalid(format!("--{name} expects a number, got {v:?}"))
+        }),
+    }
+}
+
+/// Session builder pre-loaded with the shared CLI knobs
+/// (`--config`, `--out`, `--text`).
+fn builder_from(args: &Args) -> Result<SessionBuilder, ChimeError> {
+    let mut b = Session::builder();
+    if let Some(path) = args.get("config") {
+        b = b.config_file(path);
+    }
+    if args.get("out").is_some() {
+        b = b.output_tokens(usize_arg(args, "out", 0)?);
+    }
+    if args.get("text").is_some() {
+        b = b.text_tokens(usize_arg(args, "text", 0)?);
+    }
+    Ok(b)
+}
+
+fn cmd_info(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["models", "hardware"])?;
     let both = !args.flag("models") && !args.flag("hardware");
     if args.flag("models") || both {
         let mut t = Table::new(
@@ -104,7 +147,7 @@ fn cmd_info(args: &Args) -> i32 {
         print!("{}", t.render());
     }
     if args.flag("hardware") || both {
-        let hw = ChimeConfig::default().hardware;
+        let hw = chime::config::ChimeConfig::default().hardware;
         let mut t = Table::new("Tables III/IV — CHIME hardware", &["parameter", "value"]);
         t.row(vec!["dram.layers".into(), hw.dram.layers.to_string()]);
         t.row(vec!["dram.tiers".into(), hw.dram.tiers.to_string()]);
@@ -122,18 +165,22 @@ fn cmd_info(args: &Args) -> i32 {
         t.row(vec!["total die area".into(), format!("{:.2} mm2", hw.total_die_area_mm2())]);
         print!("{}", t.render());
     }
-    0
+    Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> i32 {
-    let cfg = config_from(args);
-    let models = if args.flag("all") {
+fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["model", "all", "dram-only", "out", "text", "json", "config"])?;
+    let kind = if args.flag("dram-only") { BackendKind::DramOnly } else { BackendKind::Sim };
+    let mode = kind.name();
+    let models: Vec<MllmConfig> = if args.flag("all") {
         MllmConfig::paper_models()
     } else {
-        match resolve_model(args) {
-            Ok(m) => vec![m],
-            Err(c) => return c,
-        }
+        let name = args.get_or("model", "fastvlm-0.6b");
+        vec![MllmConfig::by_name(name).ok_or(ChimeError::Unknown {
+            what: "model",
+            name: name.to_string(),
+            hint: Some("fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny".to_string()),
+        })?]
     };
     let mut t = Table::new(
         "CHIME simulation",
@@ -141,11 +188,9 @@ fn cmd_simulate(args: &Args) -> i32 {
     );
     let mut json_rows = Vec::new();
     for m in &models {
-        let (stats, mode) = if args.flag("dram-only") {
-            (sim::simulate_dram_only(m, &cfg), "dram-only")
-        } else {
-            (sim::simulate(m, &cfg), "chime")
-        };
+        let mut session = builder_from(args)?.model_config(m.clone()).backend(kind).build()?;
+        let stats = session.infer()?;
+        let mode = if kind == BackendKind::Sim { "chime" } else { mode };
         t.row(vec![
             m.name.clone(),
             mode.into(),
@@ -171,16 +216,27 @@ fn cmd_simulate(args: &Args) -> i32 {
     } else {
         print!("{}", t.render());
     }
-    0
+    Ok(())
 }
 
-fn cmd_serve(args: &Args) -> i32 {
-    let n = args.get_usize("requests", 16);
-    let rate = args.get_f64("rate", 2.0);
-    let batch = args.get_usize("batch", 4);
-    let backend = args.get_or("backend", "sim");
-    match backend {
-        "functional" => {
+fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(
+        args,
+        &["backend", "model", "requests", "rate", "batch", "tokens", "packages", "route",
+          "queue", "config", "out", "text", "artifacts"],
+    )?;
+    let n = usize_arg(args, "requests", 16)?;
+    let rate = f64_arg(args, "rate", 2.0)?;
+    let batch = usize_arg(args, "batch", 4)?;
+    let backend_name = args.get_or("backend", "sim");
+    let kind = BackendKind::parse(backend_name).ok_or(ChimeError::Unknown {
+        what: "backend",
+        name: backend_name.to_string(),
+        hint: Some("sim functional dram-only jetson facil".to_string()),
+    })?;
+
+    match kind {
+        BackendKind::Functional => {
             for flag in ["packages", "route", "queue"] {
                 if args.get(flag).is_some() {
                     eprintln!(
@@ -189,30 +245,17 @@ fn cmd_serve(args: &Args) -> i32 {
                     );
                 }
             }
-            let dir = std::path::PathBuf::from(
-                args.get_or("artifacts", Manifest::default_dir().to_str().unwrap()),
-            );
-            let mut srv = match FunctionalServer::load(&dir) {
-                Ok(s) => s,
-                Err(e) => {
-                    eprintln!("functional backend unavailable: {e:#}");
-                    return 1;
-                }
-            };
-            let cfgm = srv.mllm.manifest.config.clone_fields();
-            let mut stream = RequestStream::new(7, rate, cfgm.0, args.get_usize("tokens", 8), cfgm.1);
-            let reqs: Vec<ServeRequest> = stream
-                .take(n)
-                .into_iter()
-                .map(|r| ServeRequest {
-                    id: r.id,
-                    prompt: r.prompt,
-                    image_seed: r.image_seed,
-                    max_new_tokens: r.max_new_tokens,
-                    arrival_ns: 0.0,
-                })
-                .collect();
-            let (resps, mut metrics) = srv.serve(&reqs).expect("serving failed");
+            let mut b = builder_from(args)?.backend(BackendKind::Functional);
+            if let Some(dir) = args.get("artifacts") {
+                b = b.artifacts_dir(dir);
+            }
+            let mut session = b.build()?;
+            let mut reqs = session.poisson_requests(7, rate, n, usize_arg(args, "tokens", 8)?);
+            for r in &mut reqs {
+                r.arrival_ns = 0.0; // wall-clock stream: queueing from backlog only
+            }
+            let out = session.serve(reqs)?;
+            let mut metrics = out.metrics;
             let p50 = metrics.latency_percentile_ns(50.0);
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
@@ -223,55 +266,84 @@ fn cmd_serve(args: &Args) -> i32 {
                 fmt_ns(p99),
                 metrics.tokens_per_s(),
             );
-            for r in resps.iter().take(4) {
+            for r in out.responses.iter().take(4) {
                 println!("  req {} -> {:?}", r.id, r.tokens);
             }
-            0
         }
-        _ => {
-            let model = match resolve_model(args) {
-                Ok(m) => m,
-                Err(c) => return c,
-            };
-            let cfg = config_from(args);
-            let tokens = args.get_usize("tokens", 64);
-            let packages = args.get_usize("packages", 1);
-            let route = match RoutePolicy::parse(args.get_or("route", "rr")) {
-                Some(r) => r,
-                None => {
-                    eprintln!("unknown --route (use rr|round-robin|ll|least-loaded)");
-                    return 2;
+        BackendKind::Jetson | BackendKind::Facil => {
+            for flag in ["packages", "route", "queue", "batch"] {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "note: --{flag} is ignored by the {} baseline \
+                         (single sequential stream; sharding is sim-only)",
+                        kind.name()
+                    );
                 }
-            };
-            let policy = BatchPolicy {
-                max_batch: batch,
-                queue_capacity: args.get_usize("queue", BatchPolicy::default().queue_capacity),
-            };
-            let mut stream = RequestStream::new(7, rate, cfg.workload.text_tokens, tokens, model.llm.vocab);
-            let reqs: Vec<ServeRequest> = stream
-                .take(n)
-                .into_iter()
-                .map(|r| ServeRequest {
-                    id: r.id,
-                    prompt: r.prompt,
-                    image_seed: r.image_seed,
-                    max_new_tokens: r.max_new_tokens,
-                    arrival_ns: r.arrival_ns,
-                })
-                .collect();
-            let mut srv = ShardedServer::new(&model, &cfg, policy, packages, route);
-            let out = srv.serve(reqs);
+            }
+            let mut session = builder_from(args)?
+                .model(args.get_or("model", "fastvlm-0.6b"))
+                .backend(kind)
+                .build()?;
+            let tokens = usize_arg(args, "tokens", 64)?;
+            let reqs = session.poisson_requests(7, rate, n, tokens);
+            let out = session.serve(reqs)?;
             let mut metrics = out.metrics;
             let p50 = metrics.latency_percentile_ns(50.0);
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
-                "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}): \
+                "{} baseline serving {} (sequential stream): {} reqs completed, {} tokens, \
+                 {:.1} tok/s system, p50 latency {}, p99 {}, {:.2} tok/J",
+                session.backend_name(),
+                session.model().name,
+                metrics.completed,
+                metrics.tokens,
+                metrics.tokens_per_s(),
+                fmt_ns(p50),
+                fmt_ns(p99),
+                metrics.tokens_per_j(),
+            );
+        }
+        BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly => {
+            let packages = usize_arg(args, "packages", 1)?;
+            let route_name = args.get_or("route", "rr");
+            let route = RoutePolicy::parse(route_name).ok_or(ChimeError::Unknown {
+                what: "route",
+                name: route_name.to_string(),
+                hint: Some("rr round-robin ll least-loaded".to_string()),
+            })?;
+            let policy = BatchPolicy {
+                max_batch: batch,
+                queue_capacity: usize_arg(args, "queue", BatchPolicy::default().queue_capacity)?,
+            };
+            // `serve --backend sim` runs the sharded coordinator at any
+            // package count (1 package == the SimulatedServer core).
+            let kind = if kind == BackendKind::DramOnly {
+                BackendKind::DramOnly
+            } else {
+                BackendKind::Sharded
+            };
+            let mut session = builder_from(args)?
+                .model(args.get_or("model", "fastvlm-0.6b"))
+                .backend(kind)
+                .packages(packages)
+                .route(route)
+                .batch(policy)
+                .build()?;
+            let tokens = usize_arg(args, "tokens", 64)?;
+            let reqs = session.poisson_requests(7, rate, n, tokens);
+            let out = session.serve(reqs)?;
+            let mut metrics = out.metrics;
+            let p50 = metrics.latency_percentile_ns(50.0);
+            let p99 = metrics.latency_percentile_ns(99.0);
+            println!(
+                "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}{}): \
                  {} reqs completed, {} shed, {} tokens, {:.1} tok/s system, \
                  p50 latency {}, p99 {}, {:.1} tok/J",
-                model.name,
+                session.model().name,
                 packages,
                 if packages == 1 { "" } else { "s" },
                 route.name(),
+                if kind == BackendKind::DramOnly { ", dram-only" } else { "" },
                 metrics.completed,
                 metrics.rejected,
                 metrics.tokens,
@@ -283,8 +355,8 @@ fn cmd_serve(args: &Args) -> i32 {
             if packages > 1 {
                 println!(
                     "  per-package completions: {:?} (KV budget {} per package)",
-                    srv.package_completed(),
-                    fmt_bytes(srv.kv_budget_bytes_per_package() as f64),
+                    session.package_completed().unwrap_or_default(),
+                    fmt_bytes(session.kv_budget_bytes_per_package().unwrap_or(0) as f64),
                 );
             }
             if !out.shed.is_empty() {
@@ -293,30 +365,36 @@ fn cmd_serve(args: &Args) -> i32 {
                     out.shed.iter().map(|r| r.id).collect::<Vec<_>>()
                 );
             }
-            0
         }
     }
+    Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> i32 {
+fn cmd_sweep(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["model", "json"])?;
     let e = results::fig8::run();
     if args.flag("json") {
         println!("{}", e.json.pretty());
     } else {
         print!("{}", e.text);
     }
-    0
+    Ok(())
 }
 
-fn cmd_results(args: &Args) -> i32 {
+fn cmd_results(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["fig", "all", "json", "baselines"])?;
     let experiments = if args.flag("all") || args.get("fig").is_none() {
         results::run_all()
     } else {
-        match results::run_one(args.get("fig").unwrap_or("")) {
+        let id = args.get("fig").unwrap_or("");
+        match results::run_one(id) {
             Some(e) => vec![e],
             None => {
-                eprintln!("unknown experiment id (use 1, 6, 7, 8, 9, table5, ablations, scaling)");
-                return 2;
+                return Err(ChimeError::Unknown {
+                    what: "experiment",
+                    name: id.to_string(),
+                    hint: Some("1 6 7 8 9 table5 ablations scaling".to_string()),
+                })
             }
         }
     };
@@ -331,54 +409,44 @@ fn cmd_results(args: &Args) -> i32 {
             println!("{}", e.text);
         }
     }
-    // Also report the baseline ranges alongside (CLI convenience).
+    // Also report the baseline ranges alongside (CLI convenience) — the
+    // baselines are Session backends like everything else.
     if args.flag("baselines") {
-        let cfg = ChimeConfig::default();
         for m in MllmConfig::paper_models() {
-            let j = jetson::run(&m, &cfg.workload, &JetsonSpec::default());
-            let f = facil::run(&m, &cfg.workload, &FacilSpec::default());
+            let mut j = Session::builder()
+                .model_config(m.clone())
+                .backend(BackendKind::Jetson)
+                .build()?;
+            let mut f = Session::builder()
+                .model_config(m.clone())
+                .backend(BackendKind::Facil)
+                .build()?;
             println!(
                 "{}: jetson {:.1} tok/s, facil {:.1} tok/s",
                 m.name,
-                j.tokens_per_s(),
-                f.tokens_per_s()
+                j.infer()?.tokens_per_s(),
+                f.infer()?.tokens_per_s()
             );
         }
     }
-    0
+    Ok(())
 }
 
-fn cmd_parity(args: &Args) -> i32 {
+fn cmd_parity(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["artifacts"])?;
     let dir = std::path::PathBuf::from(
         args.get_or("artifacts", Manifest::default_dir().to_str().unwrap()),
     );
-    match chime::runtime::FunctionalMllm::load(&dir) {
-        Ok(m) => match m.verify_parity() {
-            Ok(()) => {
-                println!(
-                    "PARITY OK — rust PJRT greedy decode matches the python AOT oracle ({} tokens)",
-                    m.manifest.parity.n_steps
-                );
-                0
-            }
-            Err(e) => {
-                eprintln!("{e:#}");
-                1
-            }
-        },
-        Err(e) => {
-            eprintln!("cannot load artifacts: {e:#} (run `make artifacts`)");
-            1
+    let m = chime::runtime::FunctionalMllm::load(&dir).map_err(|e| {
+        ChimeError::BackendUnavailable {
+            backend: "functional",
+            reason: format!("{e:#} (run `make artifacts`)"),
         }
-    }
-}
-
-/// Tiny helper so serve --backend functional can size prompts.
-trait CloneFields {
-    fn clone_fields(&self) -> (usize, usize);
-}
-impl CloneFields for chime::runtime::artifact::ModelMeta {
-    fn clone_fields(&self) -> (usize, usize) {
-        (self.prompt_len, self.vocab)
-    }
+    })?;
+    m.verify_parity().map_err(|e| ChimeError::Runtime(format!("{e:#}")))?;
+    println!(
+        "PARITY OK — rust PJRT greedy decode matches the python AOT oracle ({} tokens)",
+        m.manifest.parity.n_steps
+    );
+    Ok(())
 }

@@ -13,6 +13,8 @@ use std::collections::BTreeMap;
 
 use crate::config::DramConfig;
 
+use super::MemoryModel;
+
 /// Heat-ordered weight classes (placement priority = enum order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum WeightClass {
@@ -230,6 +232,42 @@ impl DramState {
     /// row-reuse derate (see `DramConfig::array_energy_scale`).
     pub fn array_energy_pj(&self, bytes: u64) -> f64 {
         bytes as f64 * 8.0 * self.cfg.energy_pj_per_bit * self.cfg.array_energy_scale
+    }
+}
+
+impl MemoryModel for DramState {
+    fn name(&self) -> &'static str {
+        "m3d-dram"
+    }
+
+    fn capacity_bytes(&self) -> u64 {
+        self.cfg.chip_capacity_bytes()
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.tiers.iter().map(|t| t.weights + t.kv).sum()
+    }
+
+    fn stream_weights_ns(&mut self, bytes: u64) -> f64 {
+        DramState::weight_stream_ns(self, bytes)
+    }
+
+    fn read_energy_pj(&self, bytes: u64) -> f64 {
+        self.array_energy_pj(bytes)
+    }
+
+    fn write_energy_pj(&self, bytes: u64) -> f64 {
+        // Symmetric array cost: DRAM SET/SENSE energy is direction-agnostic
+        // at this granularity (unlike RRAM's asymmetric SET/RESET pulses).
+        self.array_energy_pj(bytes)
+    }
+
+    fn lifetime_read_bytes(&self) -> u64 {
+        self.bytes_read
+    }
+
+    fn lifetime_write_bytes(&self) -> u64 {
+        self.bytes_written
     }
 }
 

@@ -1,5 +1,11 @@
 //! Memory subsystem models: M3D DRAM (tiered), M3D RRAM (endurance-aware),
 //! and the UCIe die-to-die link.
+//!
+//! Both chiplet memories implement [`MemoryModel`] — the first-order
+//! streaming/energy surface the simulator prices against. The ROADMAP's
+//! cycle-accurate backend (DRAMsim3-style) slots in behind this same
+//! interface: a cycle-accurate state only has to answer the trait's
+//! stream-time and energy queries to replace the analytic staircase model.
 
 pub mod dram;
 pub mod rram;
@@ -8,3 +14,89 @@ pub mod ucie;
 pub use dram::{DramState, KvResidency, TierState};
 pub use rram::RramState;
 pub use ucie::UcieLink;
+
+/// The streaming/energy surface a chiplet memory must answer. Object-safe
+/// so heterogeneous memory stacks can be driven through `&mut dyn
+/// MemoryModel` (validation harnesses, the future cycle-accurate backend).
+pub trait MemoryModel {
+    /// Short device name ("m3d-dram", "m3d-rram", ...).
+    fn name(&self) -> &'static str;
+
+    /// Total device capacity in bytes.
+    fn capacity_bytes(&self) -> u64;
+
+    /// Bytes currently resident (weights + KV).
+    fn used_bytes(&self) -> u64;
+
+    /// Remaining capacity in bytes.
+    fn free_capacity_bytes(&self) -> u64 {
+        self.capacity_bytes().saturating_sub(self.used_bytes())
+    }
+
+    /// Time (ns) to stream `bytes` of resident weights into the NMP.
+    fn stream_weights_ns(&mut self, bytes: u64) -> f64;
+
+    /// Array read energy for `bytes`, in picojoules.
+    fn read_energy_pj(&self, bytes: u64) -> f64;
+
+    /// Array write energy for `bytes`, in picojoules.
+    fn write_energy_pj(&self, bytes: u64) -> f64;
+
+    /// Lifetime bytes read from the device (reporting/validation).
+    fn lifetime_read_bytes(&self) -> u64;
+
+    /// Lifetime bytes written to the device (reporting/endurance).
+    fn lifetime_write_bytes(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramConfig, RramConfig};
+
+    #[test]
+    fn both_chiplet_memories_answer_the_model_polymorphically() {
+        let mut dram = DramState::new(DramConfig::default());
+        dram.place_weights(1_000_000).unwrap();
+        let mut rram = RramState::new(RramConfig::default());
+        rram.load_weights(1_000_000).unwrap();
+
+        let mut models: Vec<&mut dyn MemoryModel> = vec![&mut dram, &mut rram];
+        for m in &mut models {
+            assert!(m.capacity_bytes() > 0, "{}", m.name());
+            assert_eq!(m.used_bytes(), 1_000_000, "{}", m.name());
+            assert_eq!(
+                m.free_capacity_bytes(),
+                m.capacity_bytes() - 1_000_000,
+                "{}",
+                m.name()
+            );
+            let t1 = m.stream_weights_ns(500_000);
+            let t2 = m.stream_weights_ns(1_000_000);
+            assert!(t1 > 0.0, "{}", m.name());
+            assert!(
+                (t2 / t1 - 2.0).abs() < 1e-6,
+                "{}: streaming must be linear in bytes",
+                m.name()
+            );
+            assert!(m.read_energy_pj(1_000) > 0.0);
+            assert!(m.write_energy_pj(1_000) >= m.read_energy_pj(1_000) * 0.5);
+            assert!(m.lifetime_read_bytes() >= 1_500_000, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn write_accounting_flows_through_the_trait() {
+        let mut rram = RramState::new(RramConfig::default());
+        rram.load_weights(2_000_000).unwrap();
+        let m: &dyn MemoryModel = &rram;
+        assert_eq!(m.lifetime_write_bytes(), 2_000_000);
+        assert_eq!(m.name(), "m3d-rram");
+
+        let mut dram = DramState::new(DramConfig::default());
+        dram.append_kv(4096);
+        let m: &dyn MemoryModel = &dram;
+        assert_eq!(m.lifetime_write_bytes(), 4096);
+        assert_eq!(m.name(), "m3d-dram");
+    }
+}

@@ -4,6 +4,8 @@
 
 use crate::config::RramConfig;
 
+use super::MemoryModel;
+
 /// M3D RRAM state.
 #[derive(Debug, Clone)]
 pub struct RramState {
@@ -107,6 +109,40 @@ impl RramState {
         let writes_per_inference =
             self.max_cell_writes / inferences as f64;
         self.cfg.endurance_writes as f64 / writes_per_inference
+    }
+}
+
+impl MemoryModel for RramState {
+    fn name(&self) -> &'static str {
+        "m3d-rram"
+    }
+
+    fn capacity_bytes(&self) -> u64 {
+        self.cfg.chip_capacity_bytes
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.weight_bytes + self.kv_bytes
+    }
+
+    fn stream_weights_ns(&mut self, bytes: u64) -> f64 {
+        RramState::weight_stream_ns(self, bytes)
+    }
+
+    fn read_energy_pj(&self, bytes: u64) -> f64 {
+        RramState::read_energy_pj(self, bytes)
+    }
+
+    fn write_energy_pj(&self, bytes: u64) -> f64 {
+        RramState::write_energy_pj(self, bytes)
+    }
+
+    fn lifetime_read_bytes(&self) -> u64 {
+        self.lifetime_read_bytes
+    }
+
+    fn lifetime_write_bytes(&self) -> u64 {
+        self.lifetime_write_bytes
     }
 }
 

@@ -79,6 +79,56 @@ impl Args {
         self.get(name)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
+
+    /// Flags/options present on the command line but not in `allowed`,
+    /// each paired with the closest accepted spelling (when one is
+    /// plausibly intended). Lets every subcommand reject typos like
+    /// `--routee` with a suggestion instead of silently ignoring them.
+    pub fn unknown(&self, allowed: &[&str]) -> Vec<(String, Option<String>)> {
+        self.options
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+            .filter(|name| !allowed.contains(name))
+            .map(|name| (name.to_string(), suggest(name, allowed)))
+            .collect()
+    }
+}
+
+/// The closest `allowed` spelling to `flag` within an edit distance that
+/// plausibly indicates a typo (≤ 2, and strictly less than the flag's own
+/// length so short flags don't match everything).
+pub fn suggest(flag: &str, allowed: &[&str]) -> Option<String> {
+    let mut best: Option<(usize, &str)> = None;
+    for &a in allowed {
+        let d = edit_distance(flag, a);
+        if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            best = Some((d, a));
+        }
+    }
+    let (d, name) = best?;
+    if d <= 2 && d < flag.chars().count().max(1) {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// Levenshtein distance (small DP; flag names are short).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -123,5 +173,48 @@ mod tests {
     fn lists() {
         let a = parse(&["x", "--models", "a, b,c"]);
         assert_eq!(a.get_list("models").unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn unknown_flags_are_reported_with_suggestions() {
+        let allowed = ["route", "packages", "queue", "model"];
+        let a = parse(&["serve", "--routee", "ll", "--packages", "2"]);
+        let unknown = a.unknown(&allowed);
+        assert_eq!(unknown.len(), 1);
+        assert_eq!(unknown[0].0, "routee");
+        assert_eq!(unknown[0].1.as_deref(), Some("route"));
+    }
+
+    #[test]
+    fn unknown_catches_bare_flags_too() {
+        let a = parse(&["results", "--jsno"]);
+        let unknown = a.unknown(&["json", "all", "fig"]);
+        assert_eq!(unknown.len(), 1);
+        assert_eq!(unknown[0].0, "jsno");
+        assert_eq!(unknown[0].1.as_deref(), Some("json"));
+    }
+
+    #[test]
+    fn known_flags_pass_validation() {
+        let a = parse(&["serve", "--route", "ll", "--queue=4", "--model", "tiny"]);
+        assert!(a.unknown(&["route", "queue", "model"]).is_empty());
+    }
+
+    #[test]
+    fn far_off_flags_get_no_suggestion() {
+        let a = parse(&["x", "--zzzzzz"]);
+        let unknown = a.unknown(&["route", "model"]);
+        assert_eq!(unknown.len(), 1);
+        assert_eq!(unknown[0].1, None);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("route", "route"), 0);
+        assert_eq!(edit_distance("routee", "route"), 1);
+        assert_eq!(edit_distance("jsno", "json"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(suggest("batc", &["batch", "backend"]).as_deref(), Some("batch"));
+        assert_eq!(suggest("x", &["batch"]), None, "short flags never match far names");
     }
 }

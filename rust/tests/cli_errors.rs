@@ -1,0 +1,195 @@
+//! CLI error-path regression tests against the built `chime` binary.
+//!
+//! Locks the `api_redesign` error contract end to end:
+//!
+//! * a bad `--config` file exits 2 with a readable message (pre-refactor
+//!   this was a `panic!("config: {e}")`);
+//! * a typo'd flag (`--routee`) exits 2 with a did-you-mean suggestion
+//!   (pre-refactor `Args::parse` silently swallowed it);
+//! * unknown models/backends/experiments exit 2 with hints.
+//!
+//! Like `examples_smoke.rs`, the tests skip when a partial invocation did
+//! not build the binary.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+/// Locate the built `chime` binary, preferring this test's own profile.
+fn chime_bin() -> Option<PathBuf> {
+    let target_root = std::env::var_os("CARGO_TARGET_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target"));
+    let profiles = if cfg!(debug_assertions) {
+        ["debug", "release"]
+    } else {
+        ["release", "debug"]
+    };
+    for profile in profiles {
+        for suffix in ["", ".exe"] {
+            let p = target_root.join(profile).join(format!("chime{suffix}"));
+            if p.exists() {
+                return Some(p);
+            }
+        }
+    }
+    None
+}
+
+fn run_chime(args: &[&str]) -> Option<Output> {
+    let bin = match chime_bin() {
+        Some(b) => b,
+        None => {
+            eprintln!("skipping: chime binary not built in this invocation");
+            return None;
+        }
+    };
+    Some(
+        Command::new(&bin)
+            .args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .unwrap_or_else(|e| panic!("spawning {}: {e}", bin.display())),
+    )
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).to_string()
+}
+
+#[test]
+fn garbage_config_file_exits_2_with_readable_message() {
+    // Regression: main.rs used to `panic!("config: {e}")` here.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cli_errors_garbage_config.json");
+    std::fs::write(&path, "{ this is not json ]").unwrap();
+    let Some(out) = run_chime(&["simulate", "--model", "tiny", "--config", path.to_str().unwrap()])
+    else {
+        return;
+    };
+    std::fs::remove_file(&path).ok();
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("config"), "message not readable:\n{err}");
+    assert!(!err.contains("panicked"), "config errors must not panic:\n{err}");
+}
+
+#[test]
+fn missing_config_file_exits_2() {
+    let Some(out) = run_chime(&["simulate", "--config", "/nonexistent/chime.json"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("config"));
+}
+
+#[test]
+fn misspelled_flag_exits_2_with_suggestion() {
+    // Regression: `--routee` was silently swallowed pre-refactor.
+    let Some(out) = run_chime(&["serve", "--routee", "ll", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("--routee"), "must name the bad flag:\n{err}");
+    assert!(err.contains("did you mean --route?"), "must suggest the fix:\n{err}");
+}
+
+#[test]
+fn misspelled_flag_is_rejected_on_every_subcommand() {
+    for cmd in ["info", "simulate", "serve", "sweep", "results", "parity"] {
+        let Some(out) = run_chime(&[cmd, "--completely-bogus-flag"]) else {
+            return;
+        };
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "{cmd} accepted a bogus flag; stderr:\n{}",
+            stderr_of(&out)
+        );
+        assert!(stderr_of(&out).contains("--completely-bogus-flag"), "{cmd}");
+    }
+}
+
+#[test]
+fn non_numeric_values_exit_2_not_panic() {
+    // Regression: pre-refactor these hit panic! in Args::get_usize /
+    // get_f64 and died with exit 101 and a backtrace.
+    for argv in [
+        ["simulate", "--model", "tiny", "--out", "abc"].as_slice(),
+        ["serve", "--requests", "abc"].as_slice(),
+        ["serve", "--rate", "fast"].as_slice(),
+        ["serve", "--packages", "two"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "{argv:?}; stderr:\n{}",
+            stderr_of(&out)
+        );
+        let err = stderr_of(&out);
+        assert!(err.contains("expects a"), "{argv:?}: {err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+}
+
+#[test]
+fn unknown_model_exits_2_with_hint() {
+    let Some(out) = run_chime(&["simulate", "--model", "fastvlm-9b"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr_of(&out);
+    assert!(err.contains("unknown model"), "{err}");
+    assert!(err.contains("fastvlm-0.6b"), "hint must list models:\n{err}");
+}
+
+#[test]
+fn unknown_backend_and_route_exit_2() {
+    let Some(out) = run_chime(&["serve", "--backend", "gpu"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("unknown backend"));
+
+    let Some(out) = run_chime(&["serve", "--route", "zigzag", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("unknown route"));
+}
+
+#[test]
+fn unknown_experiment_and_command_exit_2() {
+    let Some(out) = run_chime(&["results", "--fig", "99"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("unknown experiment"));
+
+    let Some(out) = run_chime(&["frobnicate"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("unknown command"));
+}
+
+#[test]
+fn happy_paths_still_exit_0() {
+    let Some(out) = run_chime(&["info", "--models"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("fastvlm-0.6b"));
+
+    let Some(out) = run_chime(&[
+        "simulate", "--model", "tiny", "--out", "4", "--text", "8", "--json",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("\"tps\""));
+}
