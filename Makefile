@@ -6,10 +6,11 @@
 #   make pytest      python kernel/model/AOT tests (skip cleanly w/o JAX)
 #   make results     regenerate every paper table/figure
 #   make golden      refresh the committed golden JSON snapshots
+#   make memcheck    cross-validate first-order vs cycle-accurate memory
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
 
-.PHONY: artifacts build test pytest results golden api-smoke docs
+.PHONY: artifacts build test pytest results golden memcheck api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -28,6 +29,11 @@ results: build
 
 golden:
 	cd rust && CHIME_UPDATE_GOLDEN=1 cargo test --test golden_paper
+
+# First-order vs cycle-accurate memory cross-validation (DESIGN.md §9);
+# the same divergence table the golden test locks to a tolerance band.
+memcheck: build
+	cd rust && cargo run --release -- memcheck
 
 # Every example is a thin shell over chime::api::Session; running them
 # end to end smoke-tests the whole public API surface.

@@ -10,11 +10,13 @@
 //!    numbers next to the Jetson baseline — which is just another
 //!    `Backend` behind the same builder.
 //!
-//! Run: cargo run --release --example quickstart [-- --text N --out N]
+//! Run: cargo run --release --example quickstart
+//!        [-- --text N --out N --memory first-order|cycle]
 //! (the optional flags shrink the VQA workload — used by the example
-//! smoke test to keep the run tiny).
+//! smoke test to keep the run tiny — and pick the chiplet-memory timing
+//! fidelity, DESIGN.md §9).
 
-use chime::api::{BackendKind, ChimeError, Session};
+use chime::api::{BackendKind, ChimeError, MemoryFidelity, Session};
 use chime::util::Args;
 
 fn main() -> Result<(), ChimeError> {
@@ -29,6 +31,12 @@ fn main() -> Result<(), ChimeError> {
     };
     let text = parse("text")?;
     let out = parse("out")?;
+    let memory = match args.get("memory") {
+        None => None,
+        Some(v) => Some(MemoryFidelity::parse(v).ok_or_else(|| {
+            ChimeError::Invalid(format!("--memory expects first-order|cycle, got {v:?}"))
+        })?),
+    };
     let builder = || {
         let mut b = Session::builder().model("fastvlm-0.6b");
         if let Some(n) = text {
@@ -61,12 +69,18 @@ fn main() -> Result<(), ChimeError> {
     }
 
     // ---------- 2. paper-scale timing on the CHIME simulator -------------
-    let mut chime = builder().build()?;
+    let mut b = builder();
+    if let Some(f) = memory {
+        b = b.memory_fidelity(f);
+    }
+    let mut chime = b.build()?;
     let stats = chime.infer()?;
     let w = chime.workload().clone();
     println!(
-        "CHIME  {}: {:.0} tok/s, {:.0} tok/J, {:.2} W (VQA 512x512, {} in / {} out)",
+        "CHIME  {} ({} memory): {:.0} tok/s, {:.0} tok/J, {:.2} W \
+         (VQA 512x512, {} in / {} out)",
         chime.model().name,
+        chime.memory_fidelity().name(),
         stats.tokens_per_s(),
         stats.tokens_per_j(),
         stats.avg_power_w(),

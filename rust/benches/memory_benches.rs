@@ -1,0 +1,48 @@
+//! Memory-subsystem benches: the cost of cycle-accurate fidelity.
+//!
+//! Prices the raw stream queries (first-order vs the bank/row and
+//! mat/pulse state machines) and a full inference at both fidelities, so
+//! the overhead of `--memory cycle` stays measured.
+
+use chime::config::{ChimeConfig, DramConfig, MemoryFidelity, MllmConfig, RramConfig};
+use chime::sim::memory::cycle::{CycleDramState, CycleRramState};
+use chime::sim::memory::dram::WeightClass;
+use chime::sim::memory::{DramState, RramState};
+use chime::util::bench::Bench;
+
+fn main() {
+    println!("== CHIME memory-fidelity benches ==\n");
+    let mut b = Bench::new();
+
+    // --- raw DRAM stream queries ----------------------------------------
+    let mut fo_dram = DramState::new(DramConfig::default());
+    fo_dram.place_weights(2_000_000_000).unwrap();
+    let mut cy_dram = CycleDramState::new(fo_dram.clone());
+    b.bench("dram_stream_first_order(64MB)", || {
+        fo_dram.weight_stream_ns_classed(WeightClass::Attn, 64_000_000)
+    });
+    b.bench("dram_stream_cycle(64MB)", || {
+        cy_dram.weight_stream_ns_classed(WeightClass::Attn, 64_000_000)
+    });
+    b.bench("dram_kv_stream_cycle(3 tiers)", || {
+        cy_dram.kv_stream_ns(&[(0, 4_000_000), (1, 2_000_000), (2, 1_000_000)])
+    });
+
+    // --- raw RRAM stream queries ----------------------------------------
+    let mut fo_rram = RramState::new(RramConfig::default());
+    fo_rram.load_weights(4_000_000_000).unwrap();
+    let mut cy_rram = CycleRramState::new(fo_rram.clone());
+    b.bench("rram_stream_first_order(106MB)", || fo_rram.weight_stream_ns(106_000_000));
+    b.bench("rram_stream_cycle(106MB)", || cy_rram.weight_stream_ns(106_000_000));
+
+    // --- end-to-end inference at both fidelities ------------------------
+    let mut cfg = ChimeConfig::default();
+    cfg.workload.output_tokens = 32;
+    let model = MllmConfig::fastvlm_0_6b();
+    b.bench("simulate_first_order(0.6B, 32 tok)", || chime::sim::simulate(&model, &cfg));
+    let mut cycle_cfg = cfg.clone();
+    cycle_cfg.hardware.memory_fidelity = MemoryFidelity::CycleAccurate;
+    b.bench("simulate_cycle(0.6B, 32 tok)", || chime::sim::simulate(&model, &cycle_cfg));
+
+    print!("{}", b.summary());
+}

@@ -21,6 +21,7 @@ fn main() {
         ("fig8_seqlen", results::fig8::run),
         ("fig9_memcfg", results::fig9::run),
         ("scaling_packages", results::scaling::run),
+        ("memcheck_fidelity", results::memcheck::run),
     ] {
         let e = runner();
         println!("{}", e.text);

@@ -41,4 +41,5 @@ pub use session::{Session, SessionBuilder};
 
 // Re-exported so downstream servers can drive the builder without
 // importing coordinator internals.
+pub use crate::config::MemoryFidelity;
 pub use crate::coordinator::{BatchPolicy, RoutePolicy, ServeOutcome, ServeRequest, ServeResponse};

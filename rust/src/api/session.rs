@@ -19,7 +19,7 @@
 
 use std::path::PathBuf;
 
-use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, WorkloadConfig};
 use crate::coordinator::{
     BatchPolicy, FunctionalServer, RoutePolicy, ServeOutcome, ServeRequest, ShardedServer,
     SimulatedServer,
@@ -52,6 +52,7 @@ pub struct SessionBuilder {
     packages: usize,
     route: RoutePolicy,
     batch: BatchPolicy,
+    memory: Option<MemoryFidelity>,
     config_file: Option<String>,
     text_tokens: Option<usize>,
     output_tokens: Option<usize>,
@@ -67,6 +68,7 @@ impl Default for SessionBuilder {
             packages: 1,
             route: RoutePolicy::RoundRobin,
             batch: BatchPolicy::default(),
+            memory: None,
             config_file: None,
             text_tokens: None,
             output_tokens: None,
@@ -126,6 +128,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Select the chiplet-memory timing fidelity (default: the
+    /// first-order analytic model; `MemoryFidelity::CycleAccurate` runs
+    /// the bank/row/tier subsystem — the CLI's `--memory` flag).
+    /// Overrides a `memory.fidelity` key from [`Self::config_file`].
+    pub fn memory_fidelity(mut self, fidelity: MemoryFidelity) -> Self {
+        self.memory = Some(fidelity);
+        self
+    }
+
     /// Apply a JSON calibration-override file on top of the defaults
     /// (same knobs as `chime --config`; unknown keys are errors).
     pub fn config_file(mut self, path: &str) -> Self {
@@ -173,6 +184,25 @@ impl SessionBuilder {
         }
         if let Some(n) = self.image_size {
             cfg.workload.image_size = n;
+        }
+        // Memory fidelity only exists on the simulator backends; an
+        // explicit cycle request elsewhere would be silently ignored, so
+        // it is rejected instead (config-file defaults pass through the
+        // same check when set to cycle).
+        if let Some(f) = self.memory {
+            cfg.hardware.memory_fidelity = f;
+        }
+        if cfg.hardware.memory_fidelity == MemoryFidelity::CycleAccurate
+            && matches!(
+                self.backend,
+                BackendKind::Functional | BackendKind::Jetson | BackendKind::Facil
+            )
+        {
+            return Err(ChimeError::Invalid(format!(
+                "backend {} has no simulated chiplet memory; --memory cycle applies \
+                 to the sim/sharded/dram-only backends",
+                self.backend.name()
+            )));
         }
         // Resolve the model. The functional backend always runs the
         // AOT-compiled tiny model — an explicitly selected paper model
@@ -300,6 +330,11 @@ impl Session {
     /// The session's default workload (from [`Session::config`]).
     pub fn workload(&self) -> &WorkloadConfig {
         &self.cfg.workload
+    }
+
+    /// The memory-timing fidelity the session's simulator runs at.
+    pub fn memory_fidelity(&self) -> MemoryFidelity {
+        self.cfg.hardware.memory_fidelity
     }
 
     /// The backend's short name ("sim", "sharded", "jetson", ...).
@@ -558,6 +593,65 @@ mod tests {
         for (a, b) in reqs.iter().zip(&again) {
             assert_eq!(a.prompt, b.prompt);
             assert_eq!(a.arrival_ns, b.arrival_ns);
+        }
+    }
+
+    #[test]
+    fn cycle_fidelity_threads_through_the_session() {
+        let mut fo = tiny_builder().build().unwrap();
+        let mut cy = tiny_builder()
+            .memory_fidelity(MemoryFidelity::CycleAccurate)
+            .build()
+            .unwrap();
+        assert_eq!(fo.memory_fidelity(), MemoryFidelity::FirstOrder);
+        assert_eq!(cy.memory_fidelity(), MemoryFidelity::CycleAccurate);
+        let a = fo.infer().unwrap();
+        let b = cy.infer().unwrap();
+        // The analytic model is the idealized lower bound...
+        assert!(b.total_time_ns() >= a.total_time_ns());
+        assert!(b.decode.time_ns > a.decode.time_ns, "decode must diverge");
+        // ...and fidelity never changes accounting: the retained memory
+        // view reports identical streamed bytes.
+        let (ra, rb) = (fo.memory().unwrap(), cy.memory().unwrap());
+        assert_eq!(ra.dram.bytes_read, rb.dram.bytes_read);
+        assert_eq!(ra.dram.bytes_written, rb.dram.bytes_written);
+        // Serving runs at cycle fidelity end to end.
+        let out = cy.serve(ServeRequest::burst(3, 4)).unwrap();
+        assert_eq!(out.responses.len(), 3);
+    }
+
+    #[test]
+    fn cycle_fidelity_works_on_sharded_and_dram_only() {
+        for kind in [BackendKind::Sharded, BackendKind::DramOnly] {
+            let mut s = tiny_builder()
+                .backend(kind)
+                .packages(2)
+                .memory_fidelity(MemoryFidelity::CycleAccurate)
+                .build()
+                .unwrap();
+            let out = s.serve(ServeRequest::burst(4, 4)).unwrap();
+            assert_eq!(out.responses.len(), 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn memoryless_backends_reject_cycle_fidelity() {
+        for kind in [BackendKind::Functional, BackendKind::Jetson, BackendKind::Facil] {
+            let err = Session::builder()
+                .backend(kind)
+                .memory_fidelity(MemoryFidelity::CycleAccurate)
+                .build()
+                .unwrap_err();
+            assert!(matches!(err, ChimeError::Invalid(_)), "{kind:?}: {err:?}");
+            assert_eq!(err.exit_code(), 2);
+            // The default (first-order) is fine — nothing to ignore.
+            assert!(!matches!(
+                Session::builder()
+                    .backend(kind)
+                    .memory_fidelity(MemoryFidelity::FirstOrder)
+                    .build(),
+                Err(ChimeError::Invalid(_))
+            ));
         }
     }
 

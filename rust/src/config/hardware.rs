@@ -8,6 +8,50 @@
 //! endpoint results but not its simulator internals; these are documented
 //! inline and recorded in EXPERIMENTS.md (DESIGN.md §6).
 
+/// Memory-timing fidelity for the chiplet memories.
+///
+/// The paper's own simulator (and every headline number) prices memory
+/// through the *first-order* analytic streaming model: effective
+/// bandwidth per tier, linear in bytes, activation cost perfectly
+/// amortized. The ROADMAP's DRAMsim3-style backend is the
+/// *cycle-accurate* alternative (`sim::memory::cycle`): per-tier bank /
+/// open-row state machines, whole-row activation quantization, tFAW
+/// windows, refresh stalls, RRAM pulse occupancy and wear-aware write
+/// scheduling. The analytic model is an idealized lower bound; the
+/// cycle model prices the same streams at or above it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemoryFidelity {
+    /// First-order analytic streaming model (default; the paper's model).
+    #[default]
+    FirstOrder,
+    /// Event-driven bank/row/tier timing model (`sim::memory::cycle`).
+    CycleAccurate,
+}
+
+impl MemoryFidelity {
+    /// Parse a CLI spelling (`first-order`, `fo`, `analytic`; `cycle`,
+    /// `cycle-accurate`, `ca`). Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<MemoryFidelity> {
+        match s {
+            "first-order" | "firstorder" | "first_order" | "fo" | "analytic" => {
+                Some(MemoryFidelity::FirstOrder)
+            }
+            "cycle" | "cycle-accurate" | "cycleaccurate" | "cycle_accurate" | "ca" => {
+                Some(MemoryFidelity::CycleAccurate)
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            MemoryFidelity::FirstOrder => "first-order",
+            MemoryFidelity::CycleAccurate => "cycle",
+        }
+    }
+}
+
 /// M3D DRAM device + system parameters (paper Table IV).
 #[derive(Debug, Clone)]
 pub struct DramConfig {
@@ -351,6 +395,9 @@ pub struct ChimeHardware {
     pub rram_nmp: NmpConfig,
     pub ucie: UcieConfig,
     pub area: AreaModel,
+    /// Memory-timing fidelity every `SimEngine` built from this hardware
+    /// runs at (default: the paper's first-order streaming model).
+    pub memory_fidelity: MemoryFidelity,
 }
 
 impl Default for ChimeHardware {
@@ -362,6 +409,7 @@ impl Default for ChimeHardware {
             rram_nmp: NmpConfig::rram_default(),
             ucie: UcieConfig::default(),
             area: AreaModel::default(),
+            memory_fidelity: MemoryFidelity::default(),
         }
     }
 }
@@ -536,6 +584,18 @@ mod tests {
         let d = hw.dram_only();
         assert_eq!(d.ucie.active_power_w, 0.0);
         assert!(d.ucie.bandwidth_gbps.is_infinite());
+    }
+
+    #[test]
+    fn memory_fidelity_spellings_round_trip() {
+        for f in [MemoryFidelity::FirstOrder, MemoryFidelity::CycleAccurate] {
+            assert_eq!(MemoryFidelity::parse(f.name()), Some(f));
+        }
+        assert_eq!(MemoryFidelity::parse("fo"), Some(MemoryFidelity::FirstOrder));
+        assert_eq!(MemoryFidelity::parse("cycle-accurate"), Some(MemoryFidelity::CycleAccurate));
+        assert_eq!(MemoryFidelity::parse("cyccle"), None);
+        assert_eq!(MemoryFidelity::default(), MemoryFidelity::FirstOrder);
+        assert_eq!(ChimeHardware::default().memory_fidelity, MemoryFidelity::FirstOrder);
     }
 
     #[test]

@@ -5,8 +5,8 @@ pub mod hardware;
 pub mod models;
 
 pub use hardware::{
-    AreaModel, ChimeHardware, DramConfig, FacilSpec, JetsonSpec, NmpConfig, RramConfig,
-    UcieConfig,
+    AreaModel, ChimeHardware, DramConfig, FacilSpec, JetsonSpec, MemoryFidelity, NmpConfig,
+    RramConfig, UcieConfig,
 };
 pub use models::{Connector, ConnectorKind, LlmConfig, MllmConfig, VisionEncoder, VisionKind};
 
@@ -59,6 +59,15 @@ impl ChimeConfig {
                     self.hardware.dram_nmp.kernel_dispatch_ns = x;
                     self.hardware.rram_nmp.kernel_dispatch_ns = x;
                 }
+                "memory.fidelity" => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| format!("override {k:?} must be a string"))?;
+                    self.hardware.memory_fidelity =
+                        MemoryFidelity::parse(s).ok_or_else(|| {
+                            format!("unknown memory fidelity {s:?} (first-order | cycle)")
+                        })?;
+                }
                 "workload.image_size" => self.workload.image_size = num()? as usize,
                 "workload.text_tokens" => self.workload.text_tokens = num()? as usize,
                 "workload.output_tokens" => self.workload.output_tokens = num()? as usize,
@@ -110,6 +119,18 @@ mod tests {
         c.apply_overrides(&j).unwrap();
         assert_eq!(c.hardware.dram.miv_internal_bw_mult, 8.0);
         assert_eq!(c.workload.output_tokens, 64);
+    }
+
+    #[test]
+    fn memory_fidelity_override_applies_and_validates() {
+        let mut c = ChimeConfig::default();
+        let j = Json::parse(r#"{"memory.fidelity": "cycle"}"#).unwrap();
+        c.apply_overrides(&j).unwrap();
+        assert_eq!(c.hardware.memory_fidelity, MemoryFidelity::CycleAccurate);
+        let bad = Json::parse(r#"{"memory.fidelity": "cyccle"}"#).unwrap();
+        assert!(c.apply_overrides(&bad).is_err());
+        let not_str = Json::parse(r#"{"memory.fidelity": 1}"#).unwrap();
+        assert!(c.apply_overrides(&not_str).is_err());
     }
 
     #[test]

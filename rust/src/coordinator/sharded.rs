@@ -383,8 +383,10 @@ impl ShardedServer {
     }
 
     /// Memory state (DRAM, RRAM) of the most recent `run_inference_with`.
+    /// Always the first-order occupancy/ledger view — both fidelities
+    /// share it bit for bit (`sim::memory::cycle` module docs).
     pub fn last_infer_memory(&self) -> Option<(&DramState, &RramState)> {
-        self.last_infer.as_ref().map(|e| (&e.dram, &e.rram))
+        self.last_infer.as_ref().map(|e| (e.dram.state(), e.rram.state()))
     }
 
     /// Completions per package so far (routing/balance diagnostics).

@@ -7,7 +7,11 @@
 //!               jetson | facil backends)
 //!   sweep     — sequence-length sweep (Fig 8)
 //!   results   — regenerate paper tables/figures (--fig N | --all)
+//!   memcheck  — cross-validate first-order vs cycle-accurate memory
 //!   parity    — verify the PJRT functional path against the AOT oracle
+//!
+//! The simulator subcommands accept `--memory first-order|cycle` to pick
+//! the chiplet-memory timing fidelity (DESIGN.md §9).
 //!
 //! The binary is a thin shell over `chime::api::Session`: every backend is
 //! constructed through the builder, every failure is a typed `ChimeError`
@@ -15,7 +19,7 @@
 //! subcommand validates its flags so typos get a suggestion instead of a
 //! silent no-op.
 
-use chime::api::{BackendKind, ChimeError, Session, SessionBuilder};
+use chime::api::{BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder};
 use chime::config::MllmConfig;
 use chime::coordinator::{BatchPolicy, RoutePolicy};
 use chime::results;
@@ -42,13 +46,14 @@ fn run(args: &Args) -> Result<(), ChimeError> {
         Some("serve") => cmd_serve(args),
         Some("sweep") => cmd_sweep(args),
         Some("results") => cmd_results(args),
+        Some("memcheck") => cmd_memcheck(args),
         Some("parity") => cmd_parity(args),
         Some(other) => {
             usage();
             Err(ChimeError::Unknown {
                 what: "command",
                 name: other.to_string(),
-                hint: Some("info simulate serve sweep results parity".to_string()),
+                hint: Some("info simulate serve sweep results memcheck parity".to_string()),
             })
         }
         None => {
@@ -67,11 +72,15 @@ USAGE: chime <command> [options]
 COMMANDS:
   info      [--models] [--hardware]           Table II / III / IV configs
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
+            [--memory first-order|cycle]
   serve     [--backend sim|functional|dram-only|jetson|facil] [--model NAME]
             [--requests N] [--rate R] [--batch B] [--tokens N] [--packages N]
-            [--route rr|least-loaded] [--queue N]
-  sweep     [--model NAME] [--json]           Fig 8 sequence-length sweep
-  results   [--fig 1|6|7|8|9|table5|ablations|scaling] [--all] [--json] [--baselines]
+            [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
+  sweep     [--model NAME] [--json] [--memory first-order|cycle]
+            Fig 8 sequence-length sweep
+  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck] [--all] [--json]
+            [--baselines]
+  memcheck  [--json]                          first-order vs cycle divergence
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
 MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
@@ -103,6 +112,21 @@ fn f64_arg(args: &Args, name: &str, default: f64) -> Result<f64, ChimeError> {
         Some(v) => v.parse().map_err(|_| {
             ChimeError::Invalid(format!("--{name} expects a number, got {v:?}"))
         }),
+    }
+}
+
+/// `--memory first-order|cycle` as a fidelity, or a typed usage error.
+fn memory_arg(args: &Args) -> Result<Option<MemoryFidelity>, ChimeError> {
+    match args.get("memory") {
+        None => Ok(None),
+        Some(v) => match MemoryFidelity::parse(v) {
+            Some(f) => Ok(Some(f)),
+            None => Err(ChimeError::Unknown {
+                what: "memory fidelity",
+                name: v.to_string(),
+                hint: Some("first-order cycle".to_string()),
+            }),
+        },
     }
 }
 
@@ -169,8 +193,12 @@ fn cmd_info(args: &Args) -> Result<(), ChimeError> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
-    ensure_known(args, &["model", "all", "dram-only", "out", "text", "json", "config"])?;
+    ensure_known(
+        args,
+        &["model", "all", "dram-only", "out", "text", "json", "config", "memory"],
+    )?;
     let kind = if args.flag("dram-only") { BackendKind::DramOnly } else { BackendKind::Sim };
+    let fidelity = memory_arg(args)?;
     let mode = kind.name();
     let models: Vec<MllmConfig> = if args.flag("all") {
         MllmConfig::paper_models()
@@ -188,12 +216,23 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
     );
     let mut json_rows = Vec::new();
     for m in &models {
-        let mut session = builder_from(args)?.model_config(m.clone()).backend(kind).build()?;
+        let mut b = builder_from(args)?.model_config(m.clone()).backend(kind);
+        if let Some(f) = fidelity {
+            b = b.memory_fidelity(f);
+        }
+        let mut session = b.build()?;
         let stats = session.infer()?;
         let mode = if kind == BackendKind::Sim { "chime" } else { mode };
+        // Label from the session's *effective* fidelity, so a cycle run
+        // selected via a --config file is reported the same as --memory.
+        let mode = if session.memory_fidelity() == MemoryFidelity::CycleAccurate {
+            format!("{mode}+cycle")
+        } else {
+            mode.to_string()
+        };
         t.row(vec![
             m.name.clone(),
-            mode.into(),
+            mode.clone(),
             fmt_ns(stats.ttft_ns()),
             fmt_ns(stats.total_time_ns()),
             table::f(stats.tokens_per_s(), 1),
@@ -203,7 +242,7 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
         ]);
         json_rows.push(Json::obj(vec![
             ("model", m.name.as_str().into()),
-            ("mode", mode.into()),
+            ("mode", mode.as_str().into()),
             ("ttft_ns", stats.ttft_ns().into()),
             ("total_ns", stats.total_time_ns().into()),
             ("tps", stats.tokens_per_s().into()),
@@ -223,8 +262,12 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
     ensure_known(
         args,
         &["backend", "model", "requests", "rate", "batch", "tokens", "packages", "route",
-          "queue", "config", "out", "text", "artifacts"],
+          "queue", "config", "out", "text", "artifacts", "memory"],
     )?;
+    // Validated here for the spelling; the Session builder owns the
+    // backend-compatibility check (--memory cycle on a memoryless backend
+    // is a typed Invalid error, same as the config-file path).
+    let fidelity = memory_arg(args)?;
     let n = usize_arg(args, "requests", 16)?;
     let rate = f64_arg(args, "rate", 2.0)?;
     let batch = usize_arg(args, "batch", 4)?;
@@ -248,6 +291,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             let mut b = builder_from(args)?.backend(BackendKind::Functional);
             if let Some(dir) = args.get("artifacts") {
                 b = b.artifacts_dir(dir);
+            }
+            if let Some(f) = fidelity {
+                b = b.memory_fidelity(f);
             }
             let mut session = b.build()?;
             let mut reqs = session.poisson_requests(7, rate, n, usize_arg(args, "tokens", 8)?);
@@ -280,10 +326,13 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                     );
                 }
             }
-            let mut session = builder_from(args)?
+            let mut b = builder_from(args)?
                 .model(args.get_or("model", "fastvlm-0.6b"))
-                .backend(kind)
-                .build()?;
+                .backend(kind);
+            if let Some(f) = fidelity {
+                b = b.memory_fidelity(f);
+            }
+            let mut session = b.build()?;
             let tokens = usize_arg(args, "tokens", 64)?;
             let reqs = session.poisson_requests(7, rate, n, tokens);
             let out = session.serve(reqs)?;
@@ -322,13 +371,16 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             } else {
                 BackendKind::Sharded
             };
-            let mut session = builder_from(args)?
+            let mut b = builder_from(args)?
                 .model(args.get_or("model", "fastvlm-0.6b"))
                 .backend(kind)
                 .packages(packages)
                 .route(route)
-                .batch(policy)
-                .build()?;
+                .batch(policy);
+            if let Some(f) = fidelity {
+                b = b.memory_fidelity(f);
+            }
+            let mut session = b.build()?;
             let tokens = usize_arg(args, "tokens", 64)?;
             let reqs = session.poisson_requests(7, rate, n, tokens);
             let out = session.serve(reqs)?;
@@ -336,14 +388,15 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             let p50 = metrics.latency_percentile_ns(50.0);
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
-                "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}{}): \
-                 {} reqs completed, {} shed, {} tokens, {:.1} tok/s system, \
+                "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}{}, \
+                 {} memory): {} reqs completed, {} shed, {} tokens, {:.1} tok/s system, \
                  p50 latency {}, p99 {}, {:.1} tok/J",
                 session.model().name,
                 packages,
                 if packages == 1 { "" } else { "s" },
                 route.name(),
                 if kind == BackendKind::DramOnly { ", dram-only" } else { "" },
+                session.memory_fidelity().name(),
                 metrics.completed,
                 metrics.rejected,
                 metrics.tokens,
@@ -371,8 +424,20 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), ChimeError> {
-    ensure_known(args, &["model", "json"])?;
-    let e = results::fig8::run();
+    ensure_known(args, &["model", "json", "memory"])?;
+    let fidelity = memory_arg(args)?.unwrap_or(MemoryFidelity::FirstOrder);
+    let e = results::fig8::run_with(fidelity);
+    if args.flag("json") {
+        println!("{}", e.json.pretty());
+    } else {
+        print!("{}", e.text);
+    }
+    Ok(())
+}
+
+fn cmd_memcheck(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["json"])?;
+    let e = results::memcheck::run();
     if args.flag("json") {
         println!("{}", e.json.pretty());
     } else {
@@ -393,7 +458,7 @@ fn cmd_results(args: &Args) -> Result<(), ChimeError> {
                 return Err(ChimeError::Unknown {
                     what: "experiment",
                     name: id.to_string(),
-                    hint: Some("1 6 7 8 9 table5 ablations scaling".to_string()),
+                    hint: Some("1 6 7 8 9 table5 ablations scaling memcheck".to_string()),
                 })
             }
         }

@@ -247,8 +247,8 @@ mod tests {
         let e1 = crate::sim::SimEngine::new(&cfg.hardware, &replicas[1]);
         let ks = replicas[0].decode_kernels(replicas[0].trace.prefill_len());
         let _ = e0.run_kernels(&ks);
-        let kv0: u64 = e0.dram.tiers.iter().map(|t| t.kv).sum();
-        let kv1: u64 = e1.dram.tiers.iter().map(|t| t.kv).sum();
+        let kv0: u64 = e0.dram.state().tiers.iter().map(|t| t.kv).sum();
+        let kv1: u64 = e1.dram.state().tiers.iter().map(|t| t.kv).sum();
         assert!(kv0 > 0, "decode step must append KV");
         assert_eq!(kv1, 0, "sibling package's KV state must be untouched");
     }

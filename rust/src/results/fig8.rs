@@ -6,7 +6,7 @@
 //! short contexts (encoder/connector amortization) and widen at long
 //! contexts (decode dominates).
 
-use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, WorkloadConfig};
 use crate::sim;
 use crate::util::{table, Json, Table};
 
@@ -23,7 +23,14 @@ pub struct SweepPoint {
 }
 
 pub fn compute() -> Vec<SweepPoint> {
-    let cfg = ChimeConfig::default();
+    compute_with(MemoryFidelity::FirstOrder)
+}
+
+/// Sweep at an explicit memory fidelity (`chime sweep --memory cycle`).
+/// The default first-order path is byte-identical to [`compute`].
+pub fn compute_with(fidelity: MemoryFidelity) -> Vec<SweepPoint> {
+    let mut cfg = ChimeConfig::default();
+    cfg.hardware.memory_fidelity = fidelity;
     let mut out = Vec::new();
     for m in MllmConfig::paper_models() {
         for &len in &LENGTHS {
@@ -46,7 +53,13 @@ pub fn compute() -> Vec<SweepPoint> {
 }
 
 pub fn run() -> Experiment {
-    let points = compute();
+    run_with(MemoryFidelity::FirstOrder)
+}
+
+/// The Fig 8 experiment at an explicit memory fidelity. First-order is
+/// byte-identical to [`run`] (the golden snapshot path).
+pub fn run_with(fidelity: MemoryFidelity) -> Experiment {
+    let points = compute_with(fidelity);
     let mut t = Table::new(
         "Fig 8 — sequence-length sensitivity (128 -> 4k text tokens, 488 out)",
         &["model", "text len", "latency (ms)", "energy (J)", "KV offloaded (MB)"],

@@ -12,6 +12,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod memcheck;
 pub mod scaling;
 pub mod table5;
 
@@ -35,10 +36,12 @@ pub fn run_all() -> Vec<Experiment> {
         fig9::run(),
         ablations::run(),
         scaling::run(),
+        memcheck::run(),
     ]
 }
 
-/// Run one experiment by id ("1", "6", "7", "8", "9", "table5", "scaling").
+/// Run one experiment by id ("1", "6", "7", "8", "9", "table5",
+/// "scaling", "memcheck").
 pub fn run_one(id: &str) -> Option<Experiment> {
     match id {
         "1" | "fig1" => Some(fig1::run()),
@@ -49,6 +52,7 @@ pub fn run_one(id: &str) -> Option<Experiment> {
         "5" | "table5" => Some(table5::run()),
         "ablations" | "a" => Some(ablations::run()),
         "scaling" | "packages" => Some(scaling::run()),
+        "memcheck" | "mem" => Some(memcheck::run()),
         _ => None,
     }
 }

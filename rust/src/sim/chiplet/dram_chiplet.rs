@@ -9,18 +9,20 @@ use crate::config::NmpConfig;
 use crate::sim::energy::Component;
 use crate::sim::kernels::{FusedKernel, KernelCost};
 use crate::sim::memory::dram::WeightClass;
-use crate::sim::memory::{DramState, KvResidency, RramState, UcieLink};
+use crate::sim::memory::{DramMem, KvResidency, RramMem, UcieLink};
 use crate::sim::nmp::{pe, sfpe};
 
 /// Execute one fused kernel on the DRAM chiplet.
 ///
 /// `rram`/`ucie` are needed because attention over very long contexts may
-/// read cold KV blocks that tiering offloaded to the RRAM chiplet.
+/// read cold KV blocks that tiering offloaded to the RRAM chiplet. The
+/// memories answer stream-time queries at whichever fidelity they wrap
+/// (first-order analytic or the cycle-accurate bank/row model).
 pub fn execute(
     kernel: &FusedKernel,
     nmp: &NmpConfig,
-    dram: &mut DramState,
-    rram: &mut RramState,
+    dram: &mut DramMem,
+    rram: &mut RramMem,
     ucie: &mut UcieLink,
 ) -> KernelCost {
     let mut cost = KernelCost::default();
@@ -83,7 +85,7 @@ pub fn execute(
             cost.energy.deposit(Component::Ucie, pj);
         }
         // Writes stream through the same row buffers.
-        stream_ns += kv_write as f64 / dram.cfg.tier_stream_bw_gbps(0, 1.0);
+        stream_ns += dram.kv_writeback_ns(kv_write);
     }
 
     // --- compute ----------------------------------------------------------
@@ -135,16 +137,21 @@ fn sfpe_cycles(kernel: &FusedKernel) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ChimeHardware, MllmConfig};
+    use crate::config::{ChimeHardware, MemoryFidelity, MllmConfig};
     use crate::model::{OpCost, OpKind, Stage};
     use crate::sim::kernels::{FusedKind, Placement};
+    use crate::sim::memory::{DramState, RramState};
 
-    fn setup() -> (ChimeHardware, DramState, RramState, UcieLink) {
+    fn setup_with(fidelity: MemoryFidelity) -> (ChimeHardware, DramMem, RramMem, UcieLink) {
         let hw = ChimeHardware::default();
-        let dram = DramState::new(hw.dram.clone());
-        let rram = RramState::new(hw.rram.clone());
+        let dram = DramMem::new(DramState::new(hw.dram.clone()), fidelity);
+        let rram = RramMem::new(RramState::new(hw.rram.clone()), fidelity);
         let ucie = UcieLink::new(hw.ucie.clone());
         (hw, dram, rram, ucie)
+    }
+
+    fn setup() -> (ChimeHardware, DramMem, RramMem, UcieLink) {
+        setup_with(MemoryFidelity::FirstOrder)
     }
 
     fn kernel_with(weight_bytes: u64, flops: f64, m: usize) -> FusedKernel {
@@ -165,7 +172,7 @@ mod tests {
     #[test]
     fn memory_bound_gemv_dominated_by_streaming() {
         let (hw, mut dram, mut rram, mut ucie) = setup();
-        dram.place_weights(1_000_000_000).unwrap();
+        dram.state_mut().place_weights(1_000_000_000).unwrap();
         // Decode GEMV: bytes dominate (weights 100 MB, flops tiny).
         let k = kernel_with(100_000_000, 1e6, 1);
         let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
@@ -188,9 +195,9 @@ mod tests {
     fn cold_kv_reads_cross_ucie() {
         let (hw, mut dram, mut rram, mut ucie) = setup();
         // Fill DRAM completely with weights, then append KV -> all offloads.
-        dram.place_weights(hw.dram.chip_capacity_bytes()).unwrap();
+        dram.state_mut().place_weights(hw.dram.chip_capacity_bytes()).unwrap();
         dram.append_kv(10_000_000);
-        assert!(dram.kv_offloaded > 0);
+        assert!(dram.state().kv_offloaded > 0);
         let mut op = OpCost::new("attn", OpKind::Attention, Stage::Backbone);
         op.kv_read_bytes = 10_000_000;
         let k = FusedKernel {
@@ -217,15 +224,43 @@ mod tests {
     }
 
     #[test]
+    fn cycle_fidelity_kernel_never_beats_first_order() {
+        // Identical kernels on the two fidelities: the analytic model is
+        // the idealized lower bound, so the cycle cost must dominate, and
+        // the streamed-byte accounting must agree bit for bit.
+        let run = |fidelity: MemoryFidelity| {
+            let (hw, mut dram, mut rram, mut ucie) = setup_with(fidelity);
+            dram.state_mut().place_weights(1_000_000_000).unwrap();
+            let k = kernel_with(100_000_000, 1e6, 1);
+            let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+            (c, dram.state().bytes_read)
+        };
+        let (fo, fo_read) = run(MemoryFidelity::FirstOrder);
+        let (cy, cy_read) = run(MemoryFidelity::CycleAccurate);
+        assert!(
+            cy.stream_ns > fo.stream_ns,
+            "cycle stream {} must exceed first-order {}",
+            cy.stream_ns,
+            fo.stream_ns
+        );
+        assert!(cy.time_ns >= fo.time_ns);
+        assert_eq!(fo_read, cy_read, "fidelity must not change byte accounting");
+        // Shared energy model: array energy identical for identical bytes.
+        assert_eq!(
+            fo.energy.get(Component::DramArray).to_bits(),
+            cy.energy.get(Component::DramArray).to_bits()
+        );
+    }
+
+    #[test]
     fn paper_scale_attention_step_sane() {
         // One full decode-attention layer of FastVLM-0.6B should take
         // single-digit microseconds on the DRAM chiplet.
         let (hw, mut dram, mut rram, mut ucie) = setup();
         let m = MllmConfig::fastvlm_0_6b();
-        dram.place_weights(
-            m.llm.attn_weight_bytes_per_layer() * m.llm.n_layers as u64,
-        )
-        .unwrap();
+        dram.state_mut()
+            .place_weights(m.llm.attn_weight_bytes_per_layer() * m.llm.n_layers as u64)
+            .unwrap();
         let k = kernel_with(m.llm.attn_weight_bytes_per_layer(), 2.0 * 1.84e6, 1);
         let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
         assert!(c.time_ns > 1_000.0 && c.time_ns < 100_000.0, "t = {} ns", c.time_ns);

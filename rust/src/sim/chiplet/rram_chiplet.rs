@@ -6,11 +6,13 @@
 use crate::config::NmpConfig;
 use crate::sim::energy::Component;
 use crate::sim::kernels::{FusedKernel, KernelCost};
-use crate::sim::memory::RramState;
+use crate::sim::memory::RramMem;
 use crate::sim::nmp::{pe, sfpe};
 
-/// Execute one fused kernel on the RRAM chiplet.
-pub fn execute(kernel: &FusedKernel, nmp: &NmpConfig, rram: &mut RramState) -> KernelCost {
+/// Execute one fused kernel on the RRAM chiplet. The memory answers
+/// stream-time queries at whichever fidelity it wraps (first-order
+/// analytic or the cycle-accurate mat/pulse model).
+pub fn execute(kernel: &FusedKernel, nmp: &NmpConfig, rram: &mut RramMem) -> KernelCost {
     let mut cost = KernelCost::default();
     let mut stream_ns = 0.0;
 
@@ -53,9 +55,14 @@ pub fn execute(kernel: &FusedKernel, nmp: &NmpConfig, rram: &mut RramState) -> K
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ChimeHardware, MllmConfig};
+    use crate::config::{ChimeHardware, MemoryFidelity, MllmConfig};
     use crate::model::{OpCost, OpKind, Stage};
     use crate::sim::kernels::{FusedKind, Placement};
+    use crate::sim::memory::RramState;
+
+    fn rram_with(hw: &ChimeHardware, fidelity: MemoryFidelity) -> RramMem {
+        RramMem::new(RramState::new(hw.rram.clone()), fidelity)
+    }
 
     fn ffn_kernel(weight_bytes: u64, flops: f64, m: usize) -> FusedKernel {
         let mut op = OpCost::new("ffn_act", OpKind::Gemm, Stage::Backbone);
@@ -76,7 +83,7 @@ mod tests {
     #[test]
     fn decode_ffn_memory_bound() {
         let hw = ChimeHardware::default();
-        let mut rram = RramState::new(hw.rram.clone());
+        let mut rram = rram_with(&hw, MemoryFidelity::FirstOrder);
         let llm = MllmConfig::mobilevlm_3b().llm;
         rram.load_weights(llm.ffn_weight_bytes_per_layer() * llm.n_layers as u64)
             .unwrap();
@@ -94,7 +101,7 @@ mod tests {
     #[test]
     fn prefill_ffn_can_be_compute_bound() {
         let hw = ChimeHardware::default();
-        let mut rram = RramState::new(hw.rram.clone());
+        let mut rram = rram_with(&hw, MemoryFidelity::FirstOrder);
         // Large-batch prefill: heavy flops over the same weights.
         let k = ffn_kernel(1_000_000, 1e13, 512);
         let c = execute(&k, &hw.rram_nmp, &mut rram);
@@ -104,10 +111,27 @@ mod tests {
     #[test]
     fn energy_includes_array_and_nmp() {
         let hw = ChimeHardware::default();
-        let mut rram = RramState::new(hw.rram.clone());
+        let mut rram = rram_with(&hw, MemoryFidelity::FirstOrder);
         let k = ffn_kernel(50_000_000, 1e9, 1);
         let c = execute(&k, &hw.rram_nmp, &mut rram);
         assert!(c.energy.get(Component::RramArray) > 0.0);
         assert!(c.energy.get(Component::RramNmp) > 0.0);
+    }
+
+    #[test]
+    fn cycle_fidelity_ffn_never_beats_first_order() {
+        let hw = ChimeHardware::default();
+        let run = |fidelity: MemoryFidelity| {
+            let mut rram = rram_with(&hw, fidelity);
+            rram.load_weights(1_000_000_000).unwrap();
+            let k = ffn_kernel(106_000_000, 1e9, 1);
+            let c = execute(&k, &hw.rram_nmp, &mut rram);
+            (c, rram.state().lifetime_read_bytes)
+        };
+        let (fo, fo_read) = run(MemoryFidelity::FirstOrder);
+        let (cy, cy_read) = run(MemoryFidelity::CycleAccurate);
+        assert!(cy.stream_ns >= fo.stream_ns);
+        assert!(cy.time_ns >= fo.time_ns);
+        assert_eq!(fo_read, cy_read, "fidelity must not change byte accounting");
     }
 }

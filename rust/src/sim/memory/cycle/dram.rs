@@ -1,0 +1,368 @@
+//! Cycle-accurate M3D DRAM timing: per-tier bank/open-row state machines
+//! layered on top of the first-order [`DramState`].
+//!
+//! The first-order tier bandwidth (`DramConfig::tier_stream_bw_gbps`)
+//! folds row activation into an amortized per-byte cost — fractional
+//! rows, no precharge, no refresh, activations perfectly overlapped with
+//! data. This model re-prices the same stream discretely:
+//!
+//! * activations are whole-row (ceil), issued round-robin over the
+//!   tier's banks by `channels` parallel activation engines;
+//! * a bank whose open row belongs to a *different* stream pays a
+//!   precharge (tRP) before the activate — weight and KV streams
+//!   interleaving on one tier thrash each other's rows;
+//! * a stream switching onto a tier pays one un-overlapped activation
+//!   (pipeline refill);
+//! * at most four activations per engine per tFAW window;
+//! * every tREFI of accumulated busy time stalls the device for tRFC.
+//!
+//! All occupancy and lifetime accounting delegates to the wrapped
+//! [`DramState`] — only time diverges (see `cycle` module docs).
+
+use crate::config::DramConfig;
+
+use super::super::dram::{DramState, KvResidency, WeightClass};
+use super::super::MemoryModel;
+
+/// Stream tag for open-row / conflict tracking: one per weight class,
+/// plus the KV read and KV write-back streams.
+fn class_tag(class: WeightClass) -> u8 {
+    class as u8
+}
+const TAG_KV_READ: u8 = 5;
+const TAG_KV_WRITE: u8 = 6;
+
+/// Timing parameters the staircase model does not carry. tFAW / tREFI /
+/// tRFC are standard LPDDR-class constants; tRP is expressed as a
+/// fraction of the tier's activate latency (precharge restores the same
+/// wordline path the activation drove).
+#[derive(Debug, Clone)]
+pub struct DramCycleTiming {
+    /// Four-activation window (ns) per activation engine.
+    pub t_faw_ns: f64,
+    /// Average refresh interval (ns).
+    pub t_refi_ns: f64,
+    /// Refresh cycle time (ns) — the stall every tREFI of busy time.
+    pub t_rfc_ns: f64,
+    /// Precharge latency as a fraction of the tier activate latency.
+    pub t_rp_frac: f64,
+}
+
+impl Default for DramCycleTiming {
+    fn default() -> Self {
+        DramCycleTiming { t_faw_ns: 40.0, t_refi_ns: 3900.0, t_rfc_ns: 280.0, t_rp_frac: 0.5 }
+    }
+}
+
+/// One tier's bank state machine.
+#[derive(Debug, Clone)]
+struct TierBanks {
+    /// Stream tag owning each bank's open row. Conflicts are tracked at
+    /// stream granularity: sequential streams re-walk their own rows in
+    /// order, so a bank held by the same stream is a row hit and a bank
+    /// held by a different stream always needs a precharge.
+    open: Vec<Option<u8>>,
+    /// Round-robin activation pointer.
+    cursor: usize,
+    /// Stream tag of the last stream on this tier (pipeline-refill lead).
+    last_tag: Option<u8>,
+}
+
+/// Cycle-accurate M3D DRAM state: a [`DramState`] (occupancy, placement,
+/// lifetime ledgers — bit-identical to first-order) plus the per-tier
+/// bank/row timing machinery.
+#[derive(Debug, Clone)]
+pub struct CycleDramState {
+    /// The wrapped first-order state; owns every byte of accounting.
+    pub base: DramState,
+    /// Discrete timing constants.
+    pub timing: DramCycleTiming,
+    tiers: Vec<TierBanks>,
+    /// Busy time accumulated toward the next refresh stall.
+    refresh_debt_ns: f64,
+    /// Diagnostics: total refresh stall time (ns).
+    pub refresh_stall_ns: f64,
+    /// Diagnostics: total tFAW stall time (ns).
+    pub faw_stall_ns: f64,
+    /// Diagnostics: whole-row activations issued.
+    pub activations: u64,
+    /// Diagnostics: row conflicts (precharge-before-activate events).
+    pub row_conflicts: u64,
+}
+
+impl CycleDramState {
+    /// Wrap a first-order state (typically after weight placement).
+    pub fn new(base: DramState) -> CycleDramState {
+        let banks = base.cfg.channels * base.cfg.banks_per_channel;
+        let tiers = (0..base.cfg.tiers)
+            .map(|_| TierBanks { open: vec![None; banks], cursor: 0, last_tag: None })
+            .collect();
+        CycleDramState {
+            base,
+            timing: DramCycleTiming::default(),
+            tiers,
+            refresh_debt_ns: 0.0,
+            refresh_stall_ns: 0.0,
+            faw_stall_ns: 0.0,
+            activations: 0,
+            row_conflicts: 0,
+        }
+    }
+
+    /// Device configuration (shared with the wrapped state).
+    pub fn cfg(&self) -> &DramConfig {
+        &self.base.cfg
+    }
+
+    /// Discrete extras for one contiguous stream of `share` bytes out of
+    /// `tier` under stream `tag`, given the analytic time `fo_ns` of that
+    /// share. Every term is >= 0, so cycle time >= first-order time holds
+    /// exactly (see module docs).
+    fn stream_extras_ns(&mut self, tier: usize, tag: u8, share: f64, fo_ns: f64) -> f64 {
+        if share <= 0.0 {
+            return 0.0;
+        }
+        let row_bytes = self.base.cfg.row_buffer_bits as f64 / 8.0;
+        let engines = self.base.cfg.channels as f64;
+        let t_act = self.base.cfg.tier_latency_ns(tier);
+        let rows_frac = share / row_bytes;
+        let rows = rows_frac.ceil().max(1.0);
+
+        // (a) whole-row activation quantization beyond the amortized cost
+        // already folded into the first-order bandwidth.
+        let quant_ns = (rows - rows_frac) * t_act / engines;
+
+        // (b) bank/open-row machine: rows land round-robin on the tier's
+        // banks; a bank holding a different stream's row precharges first.
+        // The index is clamped so an out-of-range tier (which the
+        // first-order model prices as an extra-slow stream) degrades the
+        // same way here instead of panicking.
+        let bank_tier = tier.min(self.tiers.len().saturating_sub(1));
+        let t = match self.tiers.get_mut(bank_tier) {
+            Some(t) => t,
+            None => return quant_ns, // zero-tier config: no bank machinery
+        };
+        let banks = t.open.len();
+        let touched = (rows as usize).min(banks);
+        let mut conflicts = 0u64;
+        for i in 0..touched {
+            let b = (t.cursor + i) % banks;
+            if matches!(t.open[b], Some(g) if g != tag) {
+                conflicts += 1;
+            }
+            t.open[b] = Some(tag);
+        }
+        t.cursor = (t.cursor + touched) % banks;
+
+        // (c) pipeline refill: the first activation of a stream that just
+        // switched onto this tier cannot hide behind prior data bursts.
+        let lead_ns = if t.last_tag == Some(tag) { 0.0 } else { t_act };
+        t.last_tag = Some(tag);
+
+        let conflict_ns = conflicts as f64 * (self.timing.t_rp_frac * t_act) / engines;
+
+        // (d) tFAW: at most 4 activations per window per engine. With the
+        // default staircase (t_act >= 19 ns > tFAW/4) serial issue already
+        // satisfies the window and this contributes 0; it binds for
+        // faster-activate configurations.
+        let acts_per_engine = (rows / engines).ceil();
+        let faw_ns =
+            (acts_per_engine * (self.timing.t_faw_ns / 4.0) - acts_per_engine * t_act).max(0.0);
+
+        // (e) refresh: every tREFI of accumulated busy time stalls tRFC.
+        self.refresh_debt_ns += fo_ns + quant_ns + conflict_ns + lead_ns + faw_ns;
+        let mut refresh_ns = 0.0;
+        while self.refresh_debt_ns >= self.timing.t_refi_ns {
+            self.refresh_debt_ns -= self.timing.t_refi_ns;
+            refresh_ns += self.timing.t_rfc_ns;
+        }
+
+        self.activations += rows as u64;
+        self.row_conflicts += conflicts;
+        self.faw_stall_ns += faw_ns;
+        self.refresh_stall_ns += refresh_ns;
+        quant_ns + conflict_ns + lead_ns + faw_ns + refresh_ns
+    }
+
+    /// Statically place `bytes` of `class` weights (delegates to the
+    /// wrapped state; placement is timing-free at deployment).
+    pub fn place_weights_classed(&mut self, class: WeightClass, bytes: u64) -> Result<(), u64> {
+        self.base.place_weights_classed(class, bytes)
+    }
+
+    /// Un-classed placement (tests / simple callers).
+    pub fn place_weights(&mut self, bytes: u64) -> Result<(), u64> {
+        self.base.place_weights(bytes)
+    }
+
+    /// Cycle-accurate classed weight stream: the analytic time of the
+    /// same tier shares plus the discrete extras per share. The shares
+    /// are computed once; the analytic component and accounting mirror
+    /// `DramState::weight_stream_ns_classed` over the same mix.
+    pub fn weight_stream_ns_classed(&mut self, class: WeightClass, bytes: u64) -> f64 {
+        let shares = self.base.class_stream_shares(class, bytes);
+        self.base.bytes_read += bytes;
+        let mut ns = 0.0;
+        for (tier, share) in shares {
+            let fo_share = share / self.base.cfg.tier_stream_bw_gbps(tier, 1.0);
+            ns += fo_share + self.stream_extras_ns(tier, class_tag(class), share, fo_share);
+        }
+        ns
+    }
+
+    /// Cycle-accurate KV read stream by explicit tier mix.
+    pub fn kv_stream_ns(&mut self, bytes_by_tier: &[(usize, u64)]) -> f64 {
+        let fo = self.base.kv_stream_ns(bytes_by_tier);
+        let mut extras = 0.0;
+        for &(tier, bytes) in bytes_by_tier {
+            let share = bytes as f64;
+            let fo_share = share / self.base.cfg.tier_stream_bw_gbps(tier, 1.0);
+            extras += self.stream_extras_ns(tier, TAG_KV_READ, share, fo_share);
+        }
+        fo + extras
+    }
+
+    /// Cycle-accurate KV write-back stream (this step's fresh K/V rows
+    /// through the tier-0 row buffers).
+    pub fn kv_writeback_ns(&mut self, bytes: u64) -> f64 {
+        let fo = self.base.kv_writeback_ns(bytes);
+        let extras = self.stream_extras_ns(0, TAG_KV_WRITE, bytes as f64, fo);
+        fo + extras
+    }
+
+    /// Append fresh KV (occupancy bookkeeping delegates to the wrapped
+    /// state; write timing is priced by [`Self::kv_writeback_ns`]).
+    pub fn append_kv(&mut self, bytes: u64) -> u64 {
+        self.base.append_kv(bytes)
+    }
+
+    /// KV residency distribution (delegates).
+    pub fn kv_distribution(&self) -> Vec<(KvResidency, u64)> {
+        self.base.kv_distribution()
+    }
+
+    /// Total resident + offloaded KV bytes (delegates).
+    pub fn total_kv_bytes(&self) -> u64 {
+        self.base.total_kv_bytes()
+    }
+
+    /// Array energy (delegates — the fidelities share one energy model;
+    /// divergence is a *timing* question, see DESIGN.md §9).
+    pub fn array_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.array_energy_pj(bytes)
+    }
+}
+
+impl MemoryModel for CycleDramState {
+    fn name(&self) -> &'static str {
+        "m3d-dram-cycle"
+    }
+
+    fn capacity_bytes(&self) -> u64 {
+        self.base.capacity_bytes()
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.base.used_bytes()
+    }
+
+    fn stream_weights_ns(&mut self, bytes: u64) -> f64 {
+        self.weight_stream_ns_classed(WeightClass::Attn, bytes)
+    }
+
+    fn read_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.read_energy_pj(bytes)
+    }
+
+    fn write_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.write_energy_pj(bytes)
+    }
+
+    fn lifetime_read_bytes(&self) -> u64 {
+        self.base.lifetime_read_bytes()
+    }
+
+    fn lifetime_write_bytes(&self) -> u64 {
+        self.base.lifetime_write_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    fn placed(bytes: u64) -> (DramState, CycleDramState) {
+        let mut fo = DramState::new(DramConfig::default());
+        fo.place_weights(bytes).unwrap();
+        let cy = CycleDramState::new(fo.clone());
+        (fo, cy)
+    }
+
+    #[test]
+    fn cycle_stream_never_undercuts_first_order() {
+        let (mut fo, mut cy) = placed(2_000_000_000);
+        for &bytes in &[1_000u64, 100_000, 4_096, 50_000_000, 3] {
+            let a = fo.weight_stream_ns_classed(WeightClass::Attn, bytes);
+            let b = cy.weight_stream_ns_classed(WeightClass::Attn, bytes);
+            assert!(b >= a, "{bytes} B: cycle {b} < first-order {a}");
+        }
+    }
+
+    #[test]
+    fn refresh_makes_long_streams_super_linear() {
+        // Linearity is the *first-order* contract; the cycle model is
+        // legitimately super-linear once refresh stalls accrue.
+        let (_, mut cy) = placed(2_000_000_000);
+        let t1 = cy.weight_stream_ns_classed(WeightClass::Attn, 100_000_000);
+        let t2 = cy.weight_stream_ns_classed(WeightClass::Attn, 200_000_000);
+        assert!(t2 > t1, "monotone in bytes");
+        assert!(cy.refresh_stall_ns > 0.0, "100 MB must cross several tREFI windows");
+    }
+
+    #[test]
+    fn interleaved_streams_thrash_rows() {
+        let (_, mut cy) = placed(1_000_000_000);
+        // Same-stream re-streams keep rows open after the first pass...
+        cy.weight_stream_ns_classed(WeightClass::Attn, 10_000_000);
+        let before = cy.row_conflicts;
+        cy.weight_stream_ns_classed(WeightClass::Attn, 10_000_000);
+        assert_eq!(cy.row_conflicts, before, "same stream must not self-conflict");
+        // ...while an interleaved KV stream on the same tier precharges them.
+        cy.kv_stream_ns(&[(0, 10_000_000)]);
+        assert!(cy.row_conflicts > before, "tag switch must conflict");
+    }
+
+    #[test]
+    fn accounting_is_bit_identical_to_first_order() {
+        let (mut fo, mut cy) = placed(1_000_000);
+        for m in [&mut fo as &mut dyn MemoryModel, &mut cy as &mut dyn MemoryModel] {
+            m.stream_weights_ns(500_000);
+        }
+        fo.append_kv(4096);
+        cy.append_kv(4096);
+        assert_eq!(fo.used_bytes(), cy.used_bytes());
+        assert_eq!(fo.bytes_read, cy.base.bytes_read);
+        assert_eq!(fo.bytes_written, cy.base.bytes_written);
+        assert_eq!(fo.kv_offloaded, cy.base.kv_offloaded);
+    }
+
+    #[test]
+    fn out_of_range_tier_degrades_like_first_order() {
+        // The first-order model prices an out-of-range tier as an
+        // extra-slow stream; the cycle model must degrade the same way
+        // (clamped bank state), not panic.
+        let (mut fo, mut cy) = placed(1_000_000);
+        let a = fo.kv_stream_ns(&[(7, 10_000)]);
+        let b = cy.kv_stream_ns(&[(7, 10_000)]);
+        assert!(b.is_finite() && b >= a, "cycle {b} vs first-order {a}");
+    }
+
+    #[test]
+    fn writeback_is_bounded_below_by_the_tier0_stream() {
+        let (_, mut cy) = placed(1_000_000);
+        let fo = 65_536.0 / cy.cfg().tier_stream_bw_gbps(0, 1.0);
+        let t = cy.kv_writeback_ns(65_536);
+        assert!(t >= fo, "writeback {t} < analytic {fo}");
+    }
+}

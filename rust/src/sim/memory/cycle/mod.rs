@@ -1,0 +1,38 @@
+//! Cycle-accurate chiplet-memory timing subsystem (DESIGN.md §9).
+//!
+//! The first-order states (`DramState`, `RramState`) price every stream
+//! at an effective bandwidth — activation cost perfectly amortized,
+//! strictly linear in bytes. This subsystem is the ROADMAP's
+//! DRAMsim3-style alternative: event-driven device state machines that
+//! price the *same* streams discretely, on top of the analytic time:
+//!
+//! * **DRAM** ([`CycleDramState`]) — per-tier bank/open-row tracking,
+//!   whole-row activation quantization, precharge on row conflicts when
+//!   weight and KV streams interleave on a tier, a four-activation-window
+//!   (tFAW) issue limiter, and periodic refresh stalls (tREFI/tRFC).
+//! * **RRAM** ([`CycleRramState`]) — mat/sense-amp pulse occupancy for
+//!   reads, write-verify pulse overhead, and wear-aware write scheduling
+//!   (chunked least-worn-region routing with remap bookkeeping).
+//!
+//! Two invariants the rest of the crate builds on:
+//!
+//! 1. **Lower bound** — for any request, cycle-accurate time >=
+//!    first-order time. Every discrete effect is an *addition* to the
+//!    analytic time of the same request (the analytic model is the
+//!    idealized, perfectly-amortized limit), so the bound holds exactly,
+//!    not just within float noise.
+//! 2. **Bit-identical accounting** — capacity, occupancy, KV residency,
+//!    and lifetime read/write/endurance ledgers are delegated to the
+//!    wrapped first-order state, byte for byte. Only *time* diverges.
+//!
+//! Both states implement [`super::MemoryModel`], so they are
+//! interchangeable with the first-order states behind
+//! `&mut dyn MemoryModel`; `results::memcheck` cross-validates the two
+//! fidelities over the Table II models and locks the per-phase divergence
+//! inside a tolerance band.
+
+pub mod dram;
+pub mod rram;
+
+pub use dram::{CycleDramState, DramCycleTiming};
+pub use rram::{CycleRramState, RramCycleTiming};

@@ -1,0 +1,300 @@
+//! Cycle-accurate M3D RRAM timing: mat/sense-amp pulse occupancy and
+//! wear-aware write scheduling layered on the first-order [`RramState`].
+//!
+//! RRAM reads are wide and synchronous (H-tree fan-out across mats), so
+//! the analytic stream bandwidth is close to reality; the discrete
+//! effects are pulse quantization (a stream is an integer number of
+//! array pulses), sense-amp occupancy when the pulse rate outruns the
+//! mat groups, and a pipeline-refill pulse on stream switch. Writes add
+//! SET/RESET *verify* pulses and the endurance machinery the paper's
+//! "endurance-aware management" implies: write traffic is routed in
+//! chunks to the least-worn region, and each chunk boundary pays a remap
+//! bookkeeping latency.
+//!
+//! All capacity/lifetime/endurance accounting delegates to the wrapped
+//! [`RramState`] — only time diverges (see `cycle` module docs).
+
+use crate::config::RramConfig;
+
+use super::super::rram::RramState;
+use super::super::MemoryModel;
+
+const TAG_WEIGHTS: u8 = 0;
+const TAG_KV: u8 = 1;
+const TAG_WRITE: u8 = 2;
+
+/// Discrete RRAM timing parameters not carried by Table III.
+#[derive(Debug, Clone)]
+pub struct RramCycleTiming {
+    /// Bytes fetched per parallel array pulse (one 1 Kb unit row across
+    /// the internally parallel mats).
+    pub pulse_bytes: f64,
+    /// Independent mat groups a pulse train spreads over.
+    pub mat_groups: f64,
+    /// Write-verify overhead as a fraction of the write pulse.
+    pub verify_frac: f64,
+    /// Wear-aware scheduling granularity: bytes per region remap.
+    pub remap_chunk_bytes: u64,
+    /// Remap bookkeeping latency per chunk (map update + verify read).
+    pub remap_ns: f64,
+    /// Wear-leveling regions the write scheduler balances across.
+    pub wear_regions: usize,
+}
+
+impl RramCycleTiming {
+    /// Derive from the device organization (paper Table III).
+    pub fn from_cfg(cfg: &RramConfig) -> RramCycleTiming {
+        // One unit row is 1 Kb (1k x 1k unit) = 128 B; `internal_parallelism`
+        // mats pulse together.
+        let unit_row_bytes = 1024.0 / 8.0;
+        RramCycleTiming {
+            pulse_bytes: unit_row_bytes * cfg.internal_parallelism as f64,
+            mat_groups: (cfg.controllers * cfg.channels_per_controller) as f64,
+            verify_frac: 0.3,
+            remap_chunk_bytes: 1 << 20,
+            remap_ns: 220.0,
+            wear_regions: 64,
+        }
+    }
+}
+
+/// Cycle-accurate M3D RRAM state: a [`RramState`] (capacity, endurance
+/// ledger — bit-identical to first-order) plus pulse/wear timing state.
+#[derive(Debug, Clone)]
+pub struct CycleRramState {
+    /// The wrapped first-order state; owns every byte of accounting.
+    pub base: RramState,
+    /// Discrete timing constants (derived from the device organization).
+    pub timing: RramCycleTiming,
+    /// Last stream tag (pipeline-refill lead on switch).
+    last_tag: Option<u8>,
+    /// Write bytes accumulated toward the next wear remap.
+    write_cursor_bytes: u64,
+    /// Per-region chunk-write counters (wear-aware scheduling ledger).
+    region_writes: Vec<u64>,
+    /// Diagnostics: wear remaps performed.
+    pub remaps: u64,
+    /// Diagnostics: total sense-amp occupancy stall (ns).
+    pub pulse_stall_ns: f64,
+}
+
+impl CycleRramState {
+    /// Wrap a first-order state (typically after weight load).
+    pub fn new(base: RramState) -> CycleRramState {
+        let timing = RramCycleTiming::from_cfg(&base.cfg);
+        let regions = timing.wear_regions;
+        CycleRramState {
+            base,
+            timing,
+            last_tag: None,
+            write_cursor_bytes: 0,
+            region_writes: vec![0; regions],
+            remaps: 0,
+            pulse_stall_ns: 0.0,
+        }
+    }
+
+    /// Device configuration (shared with the wrapped state).
+    pub fn cfg(&self) -> &RramConfig {
+        &self.base.cfg
+    }
+
+    /// Remaining capacity (delegates).
+    pub fn free_bytes(&self) -> u64 {
+        self.base.free_bytes()
+    }
+
+    /// Fraction of rated endurance consumed (delegates).
+    pub fn endurance_consumed(&self) -> f64 {
+        self.base.endurance_consumed()
+    }
+
+    /// Projected lifetime in inferences (delegates).
+    pub fn projected_lifetime_inferences(&self, inferences: u64) -> f64 {
+        self.base.projected_lifetime_inferences(inferences)
+    }
+
+    /// Read extras: pulse quantization/occupancy + stream-switch lead.
+    fn read_extras_ns(&mut self, bytes: u64, tag: u8, fo_ns: f64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let pulse_ns = self.base.cfg.read_latency_ns;
+        let pulses = (bytes as f64 / self.timing.pulse_bytes).ceil().max(1.0);
+        let occupancy_ns = pulses * pulse_ns / self.timing.mat_groups;
+        let stall = (occupancy_ns - fo_ns).max(0.0);
+        let lead = if self.last_tag == Some(tag) { 0.0 } else { pulse_ns };
+        self.last_tag = Some(tag);
+        self.pulse_stall_ns += stall;
+        stall + lead
+    }
+
+    /// Write extras: verify-pulse occupancy + wear-aware chunk routing.
+    fn write_extras_ns(&mut self, bytes: u64, fo_ns: f64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let pulse_ns = self.base.cfg.write_latency_ns * (1.0 + self.timing.verify_frac);
+        let pulses = (bytes as f64 / self.timing.pulse_bytes).ceil().max(1.0);
+        let occupancy_ns = pulses * pulse_ns / self.timing.mat_groups;
+        let stall = (occupancy_ns - fo_ns).max(0.0);
+        let lead = if self.last_tag == Some(TAG_WRITE) { 0.0 } else { self.base.cfg.write_latency_ns };
+        self.last_tag = Some(TAG_WRITE);
+        // Wear-aware scheduling: each full chunk routes to the currently
+        // least-worn region and pays the remap bookkeeping latency.
+        let mut remaps = 0u64;
+        self.write_cursor_bytes += bytes;
+        while self.write_cursor_bytes >= self.timing.remap_chunk_bytes {
+            self.write_cursor_bytes -= self.timing.remap_chunk_bytes;
+            let min_idx = self
+                .region_writes
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &w)| w)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            self.region_writes[min_idx] += 1;
+            remaps += 1;
+        }
+        self.remaps += remaps;
+        self.pulse_stall_ns += stall;
+        stall + lead + remaps as f64 * self.timing.remap_ns
+    }
+
+    /// Worst-minus-best region wear under the chunked scheduler (<= 1
+    /// chunk when balancing works).
+    pub fn wear_spread_chunks(&self) -> u64 {
+        let max = self.region_writes.iter().copied().max().unwrap_or(0);
+        let min = self.region_writes.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+
+    /// Load model weights (one-shot deployment write). Returns cycle
+    /// write time; errors delegate to the wrapped state.
+    pub fn load_weights(&mut self, bytes: u64) -> Result<f64, String> {
+        let fo = self.base.load_weights(bytes)?;
+        Ok(fo + self.write_extras_ns(bytes, fo))
+    }
+
+    /// One-shot KV offload (write-once). Returns cycle write time.
+    pub fn offload_kv(&mut self, bytes: u64) -> f64 {
+        let take = bytes.min(self.base.free_bytes());
+        let fo = self.base.offload_kv(bytes);
+        fo + self.write_extras_ns(take, fo)
+    }
+
+    /// Cycle-accurate resident-weight stream.
+    pub fn weight_stream_ns(&mut self, bytes: u64) -> f64 {
+        let fo = self.base.weight_stream_ns(bytes);
+        fo + self.read_extras_ns(bytes, TAG_WEIGHTS, fo)
+    }
+
+    /// Cycle-accurate cold-KV stream.
+    pub fn kv_stream_ns(&mut self, bytes: u64) -> f64 {
+        let fo = self.base.kv_stream_ns(bytes);
+        fo + self.read_extras_ns(bytes, TAG_KV, fo)
+    }
+
+    /// Array read energy (delegates — shared energy model).
+    pub fn read_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.read_energy_pj(bytes)
+    }
+
+    /// Array write energy (delegates — shared energy model).
+    pub fn write_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.write_energy_pj(bytes)
+    }
+}
+
+impl MemoryModel for CycleRramState {
+    fn name(&self) -> &'static str {
+        "m3d-rram-cycle"
+    }
+
+    fn capacity_bytes(&self) -> u64 {
+        self.base.capacity_bytes()
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.base.used_bytes()
+    }
+
+    fn stream_weights_ns(&mut self, bytes: u64) -> f64 {
+        CycleRramState::weight_stream_ns(self, bytes)
+    }
+
+    fn read_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.read_energy_pj(bytes)
+    }
+
+    fn write_energy_pj(&self, bytes: u64) -> f64 {
+        self.base.write_energy_pj(bytes)
+    }
+
+    fn lifetime_read_bytes(&self) -> u64 {
+        self.base.lifetime_read_bytes()
+    }
+
+    fn lifetime_write_bytes(&self) -> u64 {
+        self.base.lifetime_write_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RramConfig;
+
+    fn pair() -> (RramState, CycleRramState) {
+        let fo = RramState::new(RramConfig::default());
+        let cy = CycleRramState::new(fo.clone());
+        (fo, cy)
+    }
+
+    #[test]
+    fn cycle_reads_and_writes_never_undercut_first_order() {
+        let (mut fo, mut cy) = pair();
+        let wf = fo.load_weights(1_000_000_000).unwrap();
+        let wc = cy.load_weights(1_000_000_000).unwrap();
+        assert!(wc >= wf, "write {wc} < analytic {wf}");
+        for &bytes in &[100u64, 16_384, 1_000_000, 50_000_000] {
+            let a = fo.weight_stream_ns(bytes);
+            let b = cy.weight_stream_ns(bytes);
+            assert!(b >= a, "{bytes} B read: cycle {b} < first-order {a}");
+            let ka = fo.kv_stream_ns(bytes);
+            let kb = cy.kv_stream_ns(bytes);
+            assert!(kb >= ka, "{bytes} B kv: cycle {kb} < first-order {ka}");
+        }
+    }
+
+    #[test]
+    fn wear_scheduler_balances_regions() {
+        let (_, mut cy) = pair();
+        // 256 MB of chunked writes over 64 regions -> 4 chunks each.
+        cy.load_weights(256 << 20).unwrap();
+        assert_eq!(cy.remaps, 256);
+        assert!(cy.wear_spread_chunks() <= 1, "spread {}", cy.wear_spread_chunks());
+    }
+
+    #[test]
+    fn endurance_accounting_is_bit_identical() {
+        let (mut fo, mut cy) = pair();
+        fo.load_weights(2_000_000).unwrap();
+        cy.load_weights(2_000_000).unwrap();
+        fo.offload_kv(500_000);
+        cy.offload_kv(500_000);
+        assert_eq!(fo.lifetime_write_bytes, cy.base.lifetime_write_bytes);
+        assert_eq!(fo.lifetime_read_bytes, cy.base.lifetime_read_bytes);
+        assert_eq!(fo.endurance_consumed().to_bits(), cy.endurance_consumed().to_bits());
+        assert_eq!(fo.used_bytes(), cy.used_bytes());
+    }
+
+    #[test]
+    fn remap_latency_shows_up_on_chunk_boundaries() {
+        let (mut fo, mut cy) = pair();
+        let fo_t = fo.offload_kv(4 << 20);
+        let cy_t = cy.offload_kv(4 << 20);
+        assert_eq!(cy.remaps, 4);
+        assert!(cy_t >= fo_t + 4.0 * cy.timing.remap_ns - 1e-9);
+    }
+}

@@ -190,23 +190,35 @@ impl DramState {
         self.tiers.iter().map(|t| t.kv).sum::<u64>() + self.kv_offloaded
     }
 
-    /// Time (ns) to stream `bytes` of `class` weights into the NMP, priced
-    /// at the class's own tier mix (hot classes live low and stream fast).
-    pub fn weight_stream_ns_classed(&mut self, class: WeightClass, bytes: u64) -> f64 {
-        self.bytes_read += bytes;
-        let freq = 1.0; // GHz; NMP clock == memory interface clock
+    /// Per-tier byte shares a `class` stream of `bytes` draws from, in
+    /// span (placement) order; unplaced classes fall back to tier 0. Both
+    /// memory fidelities price a class stream over exactly these shares,
+    /// so the cycle-accurate model sees the same tier mix the first-order
+    /// model amortizes over.
+    pub fn class_stream_shares(&self, class: WeightClass, bytes: u64) -> Vec<(usize, f64)> {
         let span = self.spans.get(&class);
         let span_total: u64 = span
             .map(|s| s.iter().map(|(_, b)| b).sum())
             .unwrap_or(0);
         if span_total == 0 {
             // Unplaced class (tests): assume tier 0.
-            return bytes as f64 / self.cfg.tier_stream_bw_gbps(0, freq);
+            return vec![(0, bytes as f64)];
         }
-        let span = span.unwrap();
+        span.unwrap()
+            .iter()
+            .map(|&(tier, tier_bytes)| {
+                (tier, bytes as f64 * tier_bytes as f64 / span_total as f64)
+            })
+            .collect()
+    }
+
+    /// Time (ns) to stream `bytes` of `class` weights into the NMP, priced
+    /// at the class's own tier mix (hot classes live low and stream fast).
+    pub fn weight_stream_ns_classed(&mut self, class: WeightClass, bytes: u64) -> f64 {
+        self.bytes_read += bytes;
+        let freq = 1.0; // GHz; NMP clock == memory interface clock
         let mut ns = 0.0;
-        for &(tier, tier_bytes) in span {
-            let share = bytes as f64 * tier_bytes as f64 / span_total as f64;
+        for (tier, share) in self.class_stream_shares(class, bytes) {
             ns += share / self.cfg.tier_stream_bw_gbps(tier, freq);
         }
         ns
@@ -215,6 +227,13 @@ impl DramState {
     /// Back-compat helper: stream as the hottest class.
     pub fn weight_stream_ns(&mut self, bytes: u64) -> f64 {
         self.weight_stream_ns_classed(WeightClass::Attn, bytes)
+    }
+
+    /// Time (ns) to write this step's fresh K/V back through the tier-0
+    /// row buffers. Single source of the first-order write-back price —
+    /// the cycle model builds its extras on top of exactly this value.
+    pub fn kv_writeback_ns(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.cfg.tier_stream_bw_gbps(0, 1.0)
     }
 
     /// Time (ns) to stream KV bytes by explicit tier mix.

@@ -178,6 +178,49 @@ fn unknown_experiment_and_command_exit_2() {
 }
 
 #[test]
+fn unknown_memory_fidelity_exits_2_with_hint() {
+    for argv in [
+        ["simulate", "--model", "tiny", "--memory", "cyccle"].as_slice(),
+        ["serve", "--requests", "1", "--memory", "dramsim"].as_slice(),
+        ["sweep", "--memory", "approximate"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("unknown memory fidelity"), "{argv:?}: {err}");
+        assert!(err.contains("first-order"), "hint must list fidelities:\n{err}");
+    }
+}
+
+#[test]
+fn cycle_fidelity_on_memoryless_backend_exits_2() {
+    // Same contract as the library path: --memory cycle on a backend with
+    // no simulated chiplet memory is a usage error, not a silent no-op.
+    let Some(out) =
+        run_chime(&["serve", "--backend", "jetson", "--memory", "cycle", "--requests", "1"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("chiplet memory"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn cycle_fidelity_simulate_exits_0() {
+    let Some(out) = run_chime(&[
+        "simulate", "--model", "tiny", "--out", "4", "--text", "8", "--memory", "cycle",
+        "--json",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"mode\": \"chime+cycle\""), "{stdout}");
+}
+
+#[test]
 fn happy_paths_still_exit_0() {
     let Some(out) = run_chime(&["info", "--models"]) else {
         return;

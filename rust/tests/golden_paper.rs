@@ -303,6 +303,40 @@ fn golden_scaling_packages() {
 }
 
 #[test]
+fn golden_memcheck_fidelity_divergence() {
+    // Cross-validation of the cycle-accurate memory subsystem against the
+    // first-order streaming model: every per-phase ratio must sit inside
+    // the stated tolerance band (the analytic model is an exact lower
+    // bound; discrete bank/row/refresh effects bound it from above), and
+    // the memory-bound decode phase must diverge strictly.
+    let e = snapshot(results::memcheck::run);
+    let band_min = e.json.get("band").get("ratio_min").as_f64().unwrap();
+    let band_max = e.json.get("band").get("ratio_max").as_f64().unwrap();
+    assert_eq!(band_min, results::memcheck::RATIO_MIN);
+    assert_eq!(band_max, results::memcheck::RATIO_MAX);
+    let rows = e.json.get("rows").as_arr().expect("memcheck rows");
+    assert_eq!(rows.len(), 4 * 4, "4 models x (encode, prefill, decode, total)");
+    for r in rows {
+        let model = r.get("model").as_str().unwrap();
+        let phase = r.get("phase").as_str().unwrap();
+        let fo = r.get("first_order_ns").as_f64().unwrap();
+        let cy = r.get("cycle_ns").as_f64().unwrap();
+        let ratio = r.get("ratio").as_f64().unwrap();
+        assert!(fo > 0.0 && cy > 0.0, "{model}/{phase}: degenerate times");
+        assert!(
+            ratio >= band_min && ratio <= band_max,
+            "{model}/{phase}: divergence {ratio} outside [{band_min}, {band_max}]"
+        );
+        if phase == "decode" {
+            assert!(
+                ratio > 1.0001,
+                "{model}: decode is memory-bound — cycle fidelity must diverge, got {ratio}"
+            );
+        }
+    }
+}
+
+#[test]
 fn golden_serving_deterministic_under_fixed_seeds() {
     // The Prng-seeded serving path must be byte-stable too: same seed,
     // same model, same policy -> identical responses and canonical JSON.

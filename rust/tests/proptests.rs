@@ -536,6 +536,116 @@ fn prop_sharded_serving_conserves_and_orders() {
 }
 
 #[test]
+fn prop_cycle_fidelity_bounds_first_order_with_identical_accounting() {
+    // Fidelity cross-validation invariants, per random op sequence:
+    // (1) lower bound — the cycle-accurate stream/write time is >= the
+    //     first-order time for the same request (the analytic model is an
+    //     idealized lower bound; the bound is float-exact by construction);
+    // (2) accounting — used_bytes, KV residency, and the lifetime
+    //     read/write/endurance ledgers are bit-identical across fidelities.
+    use chime::config::{DramConfig, RramConfig};
+    use chime::sim::memory::cycle::{CycleDramState, CycleRramState};
+    use chime::sim::memory::{DramState, MemoryModel, RramState};
+
+    check("cycle >= first-order + identical accounting", |prng| {
+        // --- DRAM -------------------------------------------------------
+        let mut fo = DramState::new(DramConfig::default());
+        let classes = WeightClass::all_in_priority_order();
+        for class in classes {
+            if prng.bool() {
+                let _ = fo.place_weights_classed(class, prng.range(1, 300_000_000) as u64);
+            }
+        }
+        let mut cy = CycleDramState::new(fo.clone());
+        for _ in 0..prng.range(1, 20) {
+            match prng.range(0, 3) {
+                0 => {
+                    let class = *prng.choice(&classes);
+                    let bytes = prng.range(1, 60_000_000) as u64;
+                    let a = fo.weight_stream_ns_classed(class, bytes);
+                    let b = cy.weight_stream_ns_classed(class, bytes);
+                    if b < a {
+                        return Err(format!("dram stream: cycle {b} < first-order {a}"));
+                    }
+                }
+                1 => {
+                    let bytes = prng.range(1, 5_000_000) as u64;
+                    let off_a = fo.append_kv(bytes);
+                    let off_b = cy.append_kv(bytes);
+                    if off_a != off_b {
+                        return Err(format!("append_kv offload {off_a} != {off_b}"));
+                    }
+                }
+                _ => {
+                    let parts = vec![
+                        (prng.range(0, 5), prng.range(1, 4_000_000) as u64),
+                        (prng.range(0, 5), prng.range(1, 4_000_000) as u64),
+                    ];
+                    let a = fo.kv_stream_ns(&parts);
+                    let b = cy.kv_stream_ns(&parts);
+                    if b < a {
+                        return Err(format!("dram kv stream: cycle {b} < first-order {a}"));
+                    }
+                }
+            }
+        }
+        if fo.used_bytes() != cy.used_bytes()
+            || fo.bytes_read != cy.base.bytes_read
+            || fo.bytes_written != cy.base.bytes_written
+            || fo.kv_offloaded != cy.base.kv_offloaded
+        {
+            return Err("dram accounting diverged across fidelities".into());
+        }
+
+        // --- RRAM -------------------------------------------------------
+        let mut fo = RramState::new(RramConfig::default());
+        let mut cy = CycleRramState::new(fo.clone());
+        let w = prng.range(1, 2_000_000_000) as u64;
+        let a = fo.load_weights(w)?;
+        let b = cy.load_weights(w)?;
+        if b < a {
+            return Err(format!("rram load: cycle {b} < first-order {a}"));
+        }
+        for _ in 0..prng.range(1, 15) {
+            match prng.range(0, 3) {
+                0 => {
+                    let bytes = prng.range(1, 50_000_000) as u64;
+                    let a = fo.weight_stream_ns(bytes);
+                    let b = cy.weight_stream_ns(bytes);
+                    if b < a {
+                        return Err(format!("rram read: cycle {b} < first-order {a}"));
+                    }
+                }
+                1 => {
+                    let bytes = prng.range(1, 10_000_000) as u64;
+                    let a = fo.offload_kv(bytes);
+                    let b = cy.offload_kv(bytes);
+                    if b < a {
+                        return Err(format!("rram offload: cycle {b} < first-order {a}"));
+                    }
+                }
+                _ => {
+                    let bytes = prng.range(1, 10_000_000) as u64;
+                    let a = fo.kv_stream_ns(bytes);
+                    let b = cy.kv_stream_ns(bytes);
+                    if b < a {
+                        return Err(format!("rram kv: cycle {b} < first-order {a}"));
+                    }
+                }
+            }
+        }
+        if fo.used_bytes() != cy.used_bytes()
+            || fo.lifetime_read_bytes != cy.base.lifetime_read_bytes
+            || fo.lifetime_write_bytes != cy.base.lifetime_write_bytes
+            || fo.endurance_consumed().to_bits() != cy.endurance_consumed().to_bits()
+        {
+            return Err("rram accounting diverged across fidelities".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_prefill_cost_exceeds_single_decode_step() {
     check("prefill > decode step", |prng| {
         let llm = random_llm(prng);
