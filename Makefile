@@ -7,10 +7,11 @@
 #   make results     regenerate every paper table/figure
 #   make golden      refresh the committed golden JSON snapshots
 #   make memcheck    cross-validate first-order vs cycle-accurate memory
+#   make tail        streaming-serve smoke (poisson arrivals + stealing, 2 fidelities)
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
 
-.PHONY: artifacts build test pytest results golden memcheck api-smoke docs
+.PHONY: artifacts build test pytest results golden memcheck tail api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -34,6 +35,17 @@ golden:
 # the same divergence table the golden test locks to a tolerance band.
 memcheck: build
 	cd rust && cargo run --release -- memcheck
+
+# Streaming-serve smoke: the open-loop Poisson arrival process with work
+# stealing, at both memory fidelities (DESIGN.md §10; the full
+# tail-latency table is `chime results --fig tail`, locked by
+# golden_tail_work_stealing).
+tail: build
+	cd rust && cargo run --release -- serve --arrival poisson:8 --steal on \
+		--packages 4 --requests 8 --tokens 16 --model tiny --text 8 --out 4
+	cd rust && cargo run --release -- serve --arrival poisson:8 --steal on \
+		--packages 4 --requests 8 --tokens 16 --model tiny --text 8 --out 4 \
+		--memory cycle
 
 # Every example is a thin shell over chime::api::Session; running them
 # end to end smoke-tests the whole public API surface.

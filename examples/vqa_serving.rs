@@ -11,16 +11,20 @@
 //!     and two-cut-point pipelining (virtual time, energy);
 //!   * sharded backend — a saturating burst over 1..=N packages
 //!     (`--packages`, default 4) through the multi-package coordinator,
-//!     demonstrating near-linear tokens/s scaling.
+//!     demonstrating near-linear tokens/s scaling;
+//!   * streaming protocol — the same sharded deployment driven through
+//!     `Session::open_serving` (submit / tick / finish with typed
+//!     `ServeEvent`s) under an open-loop Poisson arrival process, with
+//!     cross-package work stealing off vs on (DESIGN.md §10).
 //!
 //! Every backend is one `BackendKind` behind the same builder.
 //!
 //! Run: cargo run --release --example vqa_serving [-- --requests 24 --packages 4]
 
-use chime::api::{BackendKind, ChimeError, ServeRequest, Session};
+use chime::api::{ArrivalProcess, BackendKind, ChimeError, ServeRequest, Session};
 use chime::config::MllmConfig;
 use chime::coordinator::RoutePolicy;
-use chime::util::stats::fmt_ns;
+use chime::util::stats::{fmt_ns, percentile};
 use chime::util::Args;
 
 fn main() -> Result<(), ChimeError> {
@@ -142,6 +146,48 @@ fn main() -> Result<(), ChimeError> {
         if !out.shed.is_empty() {
             println!("    ({} requests shed at admission)", out.shed.len());
         }
+    }
+
+    // ------------- event-driven streaming + work stealing ----------------
+    // Open-loop Poisson arrivals with skewed token budgets; the streaming
+    // session exposes the typed event stream, and work stealing lets idle
+    // packages drain the loaded ones' queues — the tail-latency knob.
+    println!("\n== streaming serving (open-loop poisson, steal off vs on) ==");
+    let arrival = ArrivalProcess::Poisson { rate_per_s: 24.0 };
+    for steal in [false, true] {
+        let mut session = Session::builder()
+            .model_config(model.clone())
+            .output_tokens(64)
+            .backend(BackendKind::Sharded)
+            .packages(max_packages)
+            .max_batch(2)
+            .work_stealing(steal)
+            .build()?;
+        let mut reqs = session.requests_for(&arrival, 5, n.max(16), 64)?;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.max_new_tokens = if i % 4 == 0 { 128 } else { 16 }; // skew the budgets
+        }
+        let mut serving = session.open_serving()?;
+        for r in reqs {
+            serving.submit(r);
+        }
+        let events = serving.drain()?;
+        let steals = events.iter().filter(|e| e.kind() == "stolen").count();
+        if steal {
+            for ev in events.iter().filter(|e| e.kind() == "stolen").take(3) {
+                println!("  event: req {:>2} {}", ev.id(), ev.kind());
+            }
+        }
+        let out = serving.finish()?;
+        let mut latency: Vec<f64> =
+            out.responses.iter().map(|r| r.total_latency_ns()).collect();
+        println!(
+            "  steal {:<3}: {:>3} completed | p99 latency {:>10} | {} steals",
+            if steal { "on" } else { "off" },
+            out.responses.len(),
+            fmt_ns(percentile(&mut latency, 99.0)),
+            steals,
+        );
     }
     Ok(())
 }

@@ -22,6 +22,7 @@ fn main() {
         ("fig9_memcfg", results::fig9::run),
         ("scaling_packages", results::scaling::run),
         ("memcheck_fidelity", results::memcheck::run),
+        ("tail_work_stealing", results::tail::run),
     ] {
         let e = runner();
         println!("{}", e.text);

@@ -3,15 +3,24 @@
 //! sharded), the functional PJRT runtime, and the Jetson/FACIL baseline
 //! models. A backend answers two questions: *what does one inference
 //! cost* ([`Backend::infer`]) and *what does a request stream look like
-//! end to end* ([`Backend::serve`]).
+//! end to end* ([`Backend::open_serving`]).
+//!
+//! Serving is event-driven (DESIGN.md §10): every backend opens a
+//! streaming [`ServingSession`] — submit requests at any virtual time,
+//! tick for typed [`crate::coordinator::ServeEvent`]s, finish for the
+//! outcome. The batch [`Backend::serve`] is a *provided* method: a thin
+//! submit-everything-then-drain wrapper over the session, identical for
+//! every backend by construction.
 
 use std::collections::BTreeMap;
 
 use crate::baselines::{facil, jetson, BaselineStats};
 use crate::config::{ChimeConfig, FacilSpec, JetsonSpec, MllmConfig, WorkloadConfig};
+use crate::coordinator::streaming::PendingQueue;
 use crate::coordinator::{
-    BatchPolicy, FunctionalServer, RoutePolicy, SequentialTimeline, ServeOutcome, ServeRequest,
-    ServeResponse, ServingMetrics, ShardedServer, SimulatedServer,
+    BatchPolicy, FunctionalServer, RoutePolicy, SequentialTimeline, ServeEvent, ServeOutcome,
+    ServeProtocol, ServeRequest, ServeResponse, ServingMetrics, ServingSession, ShardedServer,
+    SimulatedServer,
 };
 use crate::sim::energy::Component;
 use crate::sim::memory::{DramState, RramState};
@@ -109,10 +118,25 @@ pub trait Backend {
     /// Run one VQA inference under workload `w` and return its statistics.
     fn infer(&mut self, w: &WorkloadConfig) -> Result<InferenceStats, ChimeError>;
 
+    /// Open an event-driven streaming serving session: `submit` requests
+    /// at any virtual time, `tick` to advance the engine and receive
+    /// typed events, `finish` for the [`ServeOutcome`].
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError>;
+
     /// Serve a request stream. Every offered request comes back either
     /// completed ([`ServeOutcome::responses`]) or shed
     /// ([`ServeOutcome::shed`]) — never silently dropped.
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError>;
+    ///
+    /// Provided: the legacy batch call is a thin drain-everything wrapper
+    /// over [`Backend::open_serving`] — submit all, drain, finish — so
+    /// closed-loop callers and streaming callers share one engine path.
+    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+        let mut session = self.open_serving()?;
+        for r in requests {
+            session.submit(r);
+        }
+        session.finish()
+    }
 
     /// Request sizing this backend dictates, when it does (the functional
     /// artifacts fix prompt length and vocabulary).
@@ -161,42 +185,75 @@ pub fn baseline_inference_stats(b: &BaselineStats) -> InferenceStats {
     }
 }
 
-/// Sequential single-stream serving over an analytic per-inference price:
-/// the baseline boards run one request at a time, so queueing is exactly
-/// the backlog on a [`SequentialTimeline`]. `price(tokens)` returns the
-/// baseline stats for one inference generating `tokens` tokens.
-fn baseline_serve(
-    requests: Vec<ServeRequest>,
-    price: &mut dyn FnMut(usize) -> BaselineStats,
-) -> ServeOutcome {
-    let mut metrics = ServingMetrics::new();
-    let mut shed = Vec::new();
-    // Non-finite arrivals can never be scheduled; shed them up front, as
-    // the sharded coordinator does.
-    let (mut requests, unschedulable): (Vec<ServeRequest>, Vec<ServeRequest>) =
-        requests.into_iter().partition(|r| r.arrival_ns.is_finite());
-    for r in unschedulable {
-        metrics.record_rejected();
-        shed.push(r);
+/// Streaming session over an analytic per-inference price: the baseline
+/// boards run one request at a time, so queueing is exactly the backlog
+/// on a [`SequentialTimeline`]. `price(tokens)` returns the baseline
+/// stats for one inference generating `tokens` tokens. Requests are
+/// processed in arrival order (ties by id); like the other sequential
+/// engines, all of a request's `Token` events carry its completion
+/// timestamp (the analytic models price whole phases, not tokens).
+struct BaselineSession<'a> {
+    price: Box<dyn FnMut(usize) -> BaselineStats + 'a>,
+    pending: PendingQueue,
+    seen: std::collections::BTreeSet<u64>,
+    /// One price per distinct token budget (the analytic models are
+    /// deterministic in it).
+    cache: BTreeMap<usize, (f64, f64, f64)>,
+    timeline: SequentialTimeline,
+    responses: Vec<ServeResponse>,
+    shed: Vec<ServeRequest>,
+    metrics: ServingMetrics,
+}
+
+impl<'a> BaselineSession<'a> {
+    fn new(price: Box<dyn FnMut(usize) -> BaselineStats + 'a>) -> BaselineSession<'a> {
+        BaselineSession {
+            price,
+            pending: PendingQueue::new(),
+            seen: std::collections::BTreeSet::new(),
+            cache: BTreeMap::new(),
+            timeline: SequentialTimeline::new(),
+            responses: Vec::new(),
+            shed: Vec::new(),
+            metrics: ServingMetrics::new(),
+        }
     }
-    requests.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns).then(a.id.cmp(&b.id)));
-    // One price per distinct token budget (the analytic models are
-    // deterministic in it).
-    let mut cache: BTreeMap<usize, (f64, f64, f64)> = BTreeMap::new();
-    let mut timeline = SequentialTimeline::new();
-    let mut responses = Vec::with_capacity(requests.len());
-    for req in requests {
-        metrics.record_admitted();
-        let (ttft_ns, total_ns, energy_j) = *cache.entry(req.max_new_tokens).or_insert_with(|| {
-            if req.max_new_tokens == 0 {
-                (0.0, 0.0, 0.0)
-            } else {
-                let b = price(req.max_new_tokens);
-                (b.encode_ns + b.prefill_ns, b.total_ns(), b.energy_j())
-            }
-        });
-        let queue_ns = timeline.begin(req.arrival_ns);
-        timeline.finish(req.arrival_ns, total_ns);
+}
+
+impl ServeProtocol for BaselineSession<'_> {
+    fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        // Shared guard: duplicate ids panic, non-finite arrivals shed —
+        // the same submission contract as the sharded coordinator.
+        let req = match crate::coordinator::streaming::guard_submission(
+            &mut self.seen,
+            &mut self.metrics,
+            &mut self.shed,
+            req,
+        ) {
+            Ok(req) => req,
+            Err(events) => return events,
+        };
+        self.pending.push(req, req.id);
+        Vec::new()
+    }
+
+    fn tick(&mut self) -> Result<Vec<ServeEvent>, ChimeError> {
+        let Some(req) = self.pending.pop() else {
+            return Ok(Vec::new());
+        };
+        self.metrics.record_admitted();
+        let price = &mut self.price;
+        let (ttft_ns, total_ns, energy_j) =
+            *self.cache.entry(req.max_new_tokens).or_insert_with(|| {
+                if req.max_new_tokens == 0 {
+                    (0.0, 0.0, 0.0)
+                } else {
+                    let b = price(req.max_new_tokens);
+                    (b.encode_ns + b.prefill_ns, b.total_ns(), b.energy_j())
+                }
+            });
+        let queue_ns = self.timeline.begin(req.arrival_ns);
+        self.timeline.finish(req.arrival_ns, total_ns);
         let resp = ServeResponse {
             id: req.id,
             tokens: vec![0; req.max_new_tokens],
@@ -205,10 +262,19 @@ fn baseline_serve(
             service_ns: total_ns,
             energy_j,
         };
-        metrics.record(req.arrival_ns, &resp);
-        responses.push(resp);
+        self.metrics.record(req.arrival_ns, &resp);
+        let events = crate::coordinator::streaming::sequential_request_events(&req, &resp);
+        self.responses.push(resp);
+        Ok(events)
     }
-    ServeOutcome { responses, shed, metrics }
+
+    fn finish(&mut self) -> ServeOutcome {
+        ServeOutcome {
+            responses: std::mem::take(&mut self.responses),
+            shed: std::mem::take(&mut self.shed),
+            metrics: std::mem::take(&mut self.metrics),
+        }
+    }
 }
 
 impl Backend for SimulatedServer {
@@ -224,8 +290,8 @@ impl Backend for SimulatedServer {
         Ok(self.run_inference_with(w))
     }
 
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
-        Ok(SimulatedServer::serve(self, requests))
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
+        Ok(ServingSession::new(Box::new(SimulatedServer::open_serving(self))))
     }
 
     fn memory(&self) -> Option<MemoryView<'_>> {
@@ -254,8 +320,8 @@ impl Backend for ShardedServer {
         Ok(self.run_inference_with(w))
     }
 
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
-        Ok(ShardedServer::serve(self, requests))
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
+        Ok(ServingSession::new(Box::new(ShardedServer::open_serving(self))))
     }
 
     fn package_completed(&self) -> Option<Vec<u64>> {
@@ -288,9 +354,8 @@ impl Backend for FunctionalServer {
         })
     }
 
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
-        FunctionalServer::serve(self, &requests)
-            .map(|(responses, metrics)| ServeOutcome { responses, shed: Vec::new(), metrics })
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
+        Ok(ServingSession::new(Box::new(FunctionalServer::open_serving(self))))
     }
 
     fn request_profile(&self) -> Option<RequestProfile> {
@@ -319,6 +384,12 @@ impl DramOnlyBackend {
             inner: ShardedServer::new_dram_only(model, cfg, policy, packages, route),
         }
     }
+
+    /// Enable/disable cross-package work stealing (forwarded to the
+    /// underlying coordinator).
+    pub fn set_work_stealing(&mut self, on: bool) {
+        self.inner.set_work_stealing(on);
+    }
 }
 
 // Pure forwarding to `<ShardedServer as Backend>`: the dram-only
@@ -337,8 +408,8 @@ impl Backend for DramOnlyBackend {
         Backend::infer(&mut self.inner, w)
     }
 
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
-        Backend::serve(&mut self.inner, requests)
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
+        Backend::open_serving(&mut self.inner)
     }
 
     fn package_completed(&self) -> Option<Vec<u64>> {
@@ -388,13 +459,13 @@ impl Backend for JetsonBackend {
         Ok(baseline_inference_stats(&jetson::run(&self.model, w, &self.spec)))
     }
 
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
         let (model, spec, base) = (self.model.clone(), self.spec.clone(), self.workload.clone());
-        Ok(baseline_serve(requests, &mut |tokens| {
+        Ok(ServingSession::new(Box::new(BaselineSession::new(Box::new(move |tokens| {
             let mut w = base.clone();
             w.output_tokens = tokens;
             jetson::run(&model, &w, &spec)
-        }))
+        })))))
     }
 }
 
@@ -432,13 +503,13 @@ impl Backend for FacilBackend {
         Ok(baseline_inference_stats(&facil::run(&self.model, w, &self.spec)))
     }
 
-    fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
+    fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
         let (model, spec, base) = (self.model.clone(), self.spec.clone(), self.workload.clone());
-        Ok(baseline_serve(requests, &mut |tokens| {
+        Ok(ServingSession::new(Box::new(BaselineSession::new(Box::new(move |tokens| {
             let mut w = base.clone();
             w.output_tokens = tokens;
             facil::run(&model, &w, &spec)
-        }))
+        })))))
     }
 }
 
@@ -494,6 +565,29 @@ mod tests {
         assert_eq!(out.shed.len(), 1);
         assert_eq!(out.shed[0].id, 1);
         assert_eq!(out.metrics.rejected, 1);
+    }
+
+    #[test]
+    fn baseline_streaming_sessions_emit_the_event_lifecycle() {
+        let (model, w) = small();
+        let mut b = JetsonBackend::new(model, w);
+        let mut session = b.open_serving().unwrap();
+        let mut reqs = ServeRequest::burst(3, 2);
+        reqs[2].max_new_tokens = 0;
+        for r in reqs {
+            assert!(session.submit(r).is_empty());
+        }
+        let events = session.drain().unwrap();
+        let kinds = |id: u64| -> Vec<&'static str> {
+            events.iter().filter(|e| e.id() == id).map(|e| e.kind()).collect()
+        };
+        assert_eq!(kinds(0), ["admitted", "first-token", "token", "token", "completed"]);
+        assert_eq!(kinds(1), ["admitted", "first-token", "token", "token", "completed"]);
+        // Zero-token requests complete inline with no token events.
+        assert_eq!(kinds(2), ["admitted", "completed"]);
+        let out = session.finish().unwrap();
+        assert_eq!(out.responses.len(), 3);
+        assert_eq!(out.metrics.tokens, 4);
     }
 
     #[test]

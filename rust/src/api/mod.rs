@@ -7,11 +7,14 @@
 //!   mistakes map to exit code 2, environment/runtime failures to 1;
 //!   nothing on the public path panics or hand-threads raw `i32`s.
 //! * [`Backend`] — `infer` (one VQA inference → [`crate::sim::InferenceStats`])
-//!   and `serve` (request stream → [`crate::coordinator::ServeOutcome`])
-//!   implemented by the CHIME simulator (solo, DRAM-only ablation,
-//!   multi-package sharded), the functional PJRT runtime, and the
-//!   Jetson/FACIL analytic baselines — FACIL-style comparisons are
-//!   "another backend", not a parallel code path.
+//!   and `open_serving` (an event-driven [`ServingSession`]: submit
+//!   requests at any virtual time, tick for typed [`ServeEvent`]s,
+//!   finish for a [`crate::coordinator::ServeOutcome`]) implemented by
+//!   the CHIME simulator (solo, DRAM-only ablation, multi-package
+//!   sharded with optional work stealing), the functional PJRT runtime,
+//!   and the Jetson/FACIL analytic baselines — FACIL-style comparisons
+//!   are "another backend", not a parallel code path. The batch `serve`
+//!   is a provided drain-everything wrapper over the session.
 //! * [`Session`] — the builder that owns config resolution (defaults +
 //!   JSON override file + workload knobs), model lookup, policy
 //!   validation, and backend selection. The `chime` CLI and all repo
@@ -42,4 +45,7 @@ pub use session::{Session, SessionBuilder};
 // Re-exported so downstream servers can drive the builder without
 // importing coordinator internals.
 pub use crate::config::MemoryFidelity;
-pub use crate::coordinator::{BatchPolicy, RoutePolicy, ServeOutcome, ServeRequest, ServeResponse};
+pub use crate::coordinator::{
+    ArrivalPoint, ArrivalProcess, BatchPolicy, RoutePolicy, ServeEvent, ServeOutcome,
+    ServeProtocol, ServeRequest, ServeResponse, ServingSession,
+};

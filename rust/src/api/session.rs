@@ -21,8 +21,8 @@ use std::path::PathBuf;
 
 use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, WorkloadConfig};
 use crate::coordinator::{
-    BatchPolicy, FunctionalServer, RoutePolicy, ServeOutcome, ServeRequest, ShardedServer,
-    SimulatedServer,
+    ArrivalProcess, BatchPolicy, FunctionalServer, RoutePolicy, ServeOutcome, ServeRequest,
+    ServingSession, ShardedServer, SimulatedServer,
 };
 use crate::model::workload::RequestStream;
 use crate::runtime::Manifest;
@@ -52,6 +52,7 @@ pub struct SessionBuilder {
     packages: usize,
     route: RoutePolicy,
     batch: BatchPolicy,
+    steal: bool,
     memory: Option<MemoryFidelity>,
     config_file: Option<String>,
     text_tokens: Option<usize>,
@@ -68,6 +69,7 @@ impl Default for SessionBuilder {
             packages: 1,
             route: RoutePolicy::RoundRobin,
             batch: BatchPolicy::default(),
+            steal: false,
             memory: None,
             config_file: None,
             text_tokens: None,
@@ -125,6 +127,16 @@ impl SessionBuilder {
     /// Admission-queue depth per package (default 1024).
     pub fn queue_capacity(mut self, n: usize) -> Self {
         self.batch.queue_capacity = n;
+        self
+    }
+
+    /// Enable cross-package work stealing (default off): an idle package
+    /// takes queued decode work from the most-loaded one — the serving
+    /// tail-latency knob (`chime serve --steal on`, DESIGN.md §10). Only
+    /// meaningful on the sharded simulator backends; requesting it
+    /// elsewhere is a build error rather than a silent no-op.
+    pub fn work_stealing(mut self, on: bool) -> Self {
+        self.steal = on;
         self
     }
 
@@ -263,6 +275,16 @@ impl SessionBuilder {
                 "queue_capacity 0 can never admit a request".to_string(),
             ));
         }
+        // Work stealing moves queued work between sibling packages; on a
+        // backend with no package dimension the knob would be silently
+        // ignored, so it is rejected instead.
+        if self.steal && !matches!(self.backend, BackendKind::Sharded | BackendKind::DramOnly) {
+            return Err(ChimeError::Invalid(format!(
+                "backend {} has no sibling packages to steal between; work stealing \
+                 applies to the sharded simulator backends",
+                self.backend.name()
+            )));
+        }
         let backend: Box<dyn Backend> = match self.backend {
             BackendKind::Sim => {
                 if self.packages > 1 {
@@ -274,20 +296,28 @@ impl SessionBuilder {
                 }
                 Box::new(SimulatedServer::new(&model, &cfg, self.batch.clone()))
             }
-            BackendKind::Sharded => Box::new(ShardedServer::new(
-                &model,
-                &cfg,
-                self.batch.clone(),
-                self.packages,
-                self.route,
-            )),
-            BackendKind::DramOnly => Box::new(DramOnlyBackend::new(
-                &model,
-                &cfg,
-                self.batch.clone(),
-                self.packages,
-                self.route,
-            )),
+            BackendKind::Sharded => {
+                let mut srv = ShardedServer::new(
+                    &model,
+                    &cfg,
+                    self.batch.clone(),
+                    self.packages,
+                    self.route,
+                );
+                srv.set_work_stealing(self.steal);
+                Box::new(srv)
+            }
+            BackendKind::DramOnly => {
+                let mut srv = DramOnlyBackend::new(
+                    &model,
+                    &cfg,
+                    self.batch.clone(),
+                    self.packages,
+                    self.route,
+                );
+                srv.set_work_stealing(self.steal);
+                Box::new(srv)
+            }
             BackendKind::Functional => {
                 let dir = self.artifacts_dir.clone().unwrap_or_else(Manifest::default_dir);
                 Box::new(FunctionalServer::load(&dir)?)
@@ -359,9 +389,18 @@ impl Session {
     }
 
     /// Serve a request stream through the backend. Every offered request
-    /// comes back completed or shed — never silently dropped.
+    /// comes back completed or shed — never silently dropped. (A thin
+    /// drain-everything wrapper over [`Session::open_serving`].)
     pub fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
         self.backend.serve(requests)
+    }
+
+    /// Open an event-driven streaming serving session on the backend:
+    /// `submit` requests at any virtual time, `tick` to advance and
+    /// receive typed [`crate::coordinator::ServeEvent`]s, `finish` for
+    /// the [`ServeOutcome`] (DESIGN.md §10).
+    pub fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
+        self.backend.open_serving()
     }
 
     /// Synthesize a deterministic Poisson request stream sized for this
@@ -392,6 +431,48 @@ impl Session {
                 arrival_ns: r.arrival_ns,
             })
             .collect()
+    }
+
+    /// Synthesize a request stream from an [`ArrivalProcess`], sized for
+    /// this session's backend (same prompt/vocabulary profile as
+    /// [`Session::poisson_requests`]):
+    ///
+    /// * `Burst` — `n` requests, all arriving at t=0;
+    /// * `Poisson` — `n` requests with seeded exponential inter-arrivals
+    ///   (identical to [`Session::poisson_requests`] at the same seed);
+    /// * `Trace` — one request per trace entry (`n` is ignored; the file
+    ///   dictates the count), with per-request token budgets where the
+    ///   trace specifies them.
+    pub fn requests_for(
+        &self,
+        process: &ArrivalProcess,
+        seed: u64,
+        n: usize,
+        max_new_tokens: usize,
+    ) -> Result<Vec<ServeRequest>, ChimeError> {
+        match process {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                Ok(self.poisson_requests(seed, *rate_per_s, n, max_new_tokens))
+            }
+            ArrivalProcess::Burst => {
+                let mut reqs = self.poisson_requests(seed, 1.0, n, max_new_tokens);
+                for r in &mut reqs {
+                    r.arrival_ns = 0.0;
+                }
+                Ok(reqs)
+            }
+            ArrivalProcess::Trace { path } => {
+                let points = ArrivalProcess::trace_points(path)?;
+                let mut reqs = self.poisson_requests(seed, 1.0, points.len(), max_new_tokens);
+                for (r, p) in reqs.iter_mut().zip(&points) {
+                    r.arrival_ns = p.arrival_ns;
+                    if let Some(tokens) = p.max_new_tokens {
+                        r.max_new_tokens = tokens;
+                    }
+                }
+                Ok(reqs)
+            }
+        }
     }
 
     /// Completions per package (multi-package backends; `None` otherwise).
@@ -652,6 +733,78 @@ mod tests {
                     .build(),
                 Err(ChimeError::Invalid(_))
             ));
+        }
+    }
+
+    #[test]
+    fn work_stealing_requires_a_sharded_backend() {
+        // Pre-guard, .work_stealing(true) on a packageless backend would
+        // be silently ignored; it is a typed usage error instead.
+        for kind in [
+            BackendKind::Sim,
+            BackendKind::Jetson,
+            BackendKind::Facil,
+            BackendKind::Functional,
+        ] {
+            let err = tiny_builder().backend(kind).work_stealing(true).build().unwrap_err();
+            assert!(matches!(err, ChimeError::Invalid(_)), "{kind:?}: {err:?}");
+            assert_eq!(err.exit_code(), 2);
+        }
+        for kind in [BackendKind::Sharded, BackendKind::DramOnly] {
+            let mut s = tiny_builder()
+                .backend(kind)
+                .packages(2)
+                .work_stealing(true)
+                .build()
+                .unwrap();
+            let out = s.serve(ServeRequest::burst(4, 4)).unwrap();
+            assert_eq!(out.responses.len(), 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn requests_for_covers_every_arrival_process() {
+        let s = tiny_builder().build().unwrap();
+        let burst = s.requests_for(&ArrivalProcess::Burst, 7, 5, 3).unwrap();
+        assert_eq!(burst.len(), 5);
+        assert!(burst.iter().all(|r| r.arrival_ns == 0.0 && r.max_new_tokens == 3));
+        // poisson:<rps> is exactly the legacy seeded stream.
+        let poisson =
+            s.requests_for(&ArrivalProcess::Poisson { rate_per_s: 100.0 }, 7, 5, 3).unwrap();
+        let direct = s.poisson_requests(7, 100.0, 5, 3);
+        for (a, b) in poisson.iter().zip(&direct) {
+            assert_eq!(a.arrival_ns, b.arrival_ns);
+            assert_eq!(a.prompt, b.prompt);
+        }
+        // A trace dictates count, arrivals, and optional token budgets.
+        let path = std::env::temp_dir().join("chime_session_trace_test.json");
+        std::fs::write(&path, r#"[0, {"arrival_s": 0.25, "tokens": 7}]"#).unwrap();
+        let process = ArrivalProcess::Trace { path: path.to_str().unwrap().to_string() };
+        let trace = s.requests_for(&process, 7, 99, 3).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(trace.len(), 2, "the file dictates the request count");
+        assert_eq!(trace[0].max_new_tokens, 3, "entries without tokens use the default");
+        assert_eq!(trace[1].arrival_ns, 0.25e9);
+        assert_eq!(trace[1].max_new_tokens, 7);
+    }
+
+    #[test]
+    fn streaming_session_through_the_api_matches_batch_serve() {
+        let burst = ServeRequest::burst(5, 4);
+        let mut batch = tiny_builder().build().unwrap();
+        let batch_out = batch.serve(burst.clone()).unwrap();
+        let mut streaming = tiny_builder().build().unwrap();
+        let mut session = streaming.open_serving().unwrap();
+        for r in burst {
+            session.submit(r);
+        }
+        let events = session.drain().unwrap();
+        assert!(events.iter().any(|e| e.kind() == "completed"));
+        let out = session.finish().unwrap();
+        assert_eq!(out.responses.len(), batch_out.responses.len());
+        for (a, b) in out.responses.iter().zip(&batch_out.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
         }
     }
 

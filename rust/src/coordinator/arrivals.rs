@@ -1,0 +1,222 @@
+//! Open-loop arrival processes for serving experiments.
+//!
+//! The streaming protocol (`coordinator::streaming`) decouples *when
+//! requests arrive* from *how they are served*; this module owns the
+//! arrival side. Three processes cover the serving literature's
+//! standard shapes:
+//!
+//! * `burst` — every request at t=0 (the closed-loop saturation test the
+//!   batch API forced);
+//! * `poisson:<rps>` — seeded memoryless arrivals at `<rps>` requests/s,
+//!   deterministic for a given seed (tail-latency experiments);
+//! * `trace:<file>` — replay a JSON trace: an array whose entries are
+//!   either a number (arrival time, **seconds**) or an object
+//!   `{"arrival_s": 1.5, "tokens": 32}` with an optional per-request
+//!   decode budget.
+//!
+//! `api::Session::requests_for` turns a process into a backend-sized
+//! request stream; `chime serve --arrival <spec>` is the CLI spelling.
+
+use crate::api::ChimeError;
+use crate::util::Json;
+
+/// Hint listing the accepted `--arrival` spellings.
+pub const ARRIVAL_HINT: &str = "burst poisson:<rps> trace:<file>";
+
+/// One request slot from an arrival process: when it arrives, and an
+/// optional trace-dictated decode budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalPoint {
+    /// Arrival time in ns from stream start.
+    pub arrival_ns: f64,
+    /// Per-request decode budget, when the trace dictates one.
+    pub max_new_tokens: Option<usize>,
+}
+
+/// An open-loop arrival process specification (module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Every request arrives at t=0.
+    Burst,
+    /// Seeded Poisson arrivals at `rate_per_s` requests per second.
+    Poisson {
+        /// Mean arrival rate, requests/s. Finite and positive.
+        rate_per_s: f64,
+    },
+    /// Replay arrivals (and optional token budgets) from a JSON file.
+    Trace {
+        /// Path to the trace file.
+        path: String,
+    },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI spelling: `burst`, `poisson:<rps>`, `trace:<file>`.
+    /// Malformed specs are usage errors (exit 2).
+    pub fn parse(spec: &str) -> Result<ArrivalProcess, ChimeError> {
+        if spec == "burst" {
+            return Ok(ArrivalProcess::Burst);
+        }
+        if let Some(rate) = spec.strip_prefix("poisson:") {
+            let rate_per_s: f64 = rate.parse().map_err(|_| {
+                ChimeError::Invalid(format!(
+                    "--arrival poisson expects a rate in requests/s, got {rate:?}"
+                ))
+            })?;
+            if !rate_per_s.is_finite() || rate_per_s <= 0.0 {
+                return Err(ChimeError::Invalid(format!(
+                    "--arrival poisson rate must be finite and positive, got {rate_per_s}"
+                )));
+            }
+            return Ok(ArrivalProcess::Poisson { rate_per_s });
+        }
+        if let Some(path) = spec.strip_prefix("trace:") {
+            if path.is_empty() {
+                return Err(ChimeError::Invalid(
+                    "--arrival trace expects a file path (trace:<file>)".to_string(),
+                ));
+            }
+            return Ok(ArrivalProcess::Trace { path: path.to_string() });
+        }
+        Err(ChimeError::Unknown {
+            what: "arrival process",
+            name: spec.to_string(),
+            hint: Some(ARRIVAL_HINT.to_string()),
+        })
+    }
+
+    /// Canonical spelling (round-trips through [`ArrivalProcess::parse`]).
+    pub fn spec(&self) -> String {
+        match self {
+            ArrivalProcess::Burst => "burst".to_string(),
+            ArrivalProcess::Poisson { rate_per_s } => format!("poisson:{rate_per_s}"),
+            ArrivalProcess::Trace { path } => format!("trace:{path}"),
+        }
+    }
+
+    /// Load and validate the points of a `trace:` process. Entries must
+    /// be non-negative finite times; the file dictates the request count.
+    pub fn trace_points(path: &str) -> Result<Vec<ArrivalPoint>, ChimeError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            ChimeError::Invalid(format!("--arrival trace {path:?} unreadable: {e}"))
+        })?;
+        let json = Json::parse(&text).map_err(|e| {
+            ChimeError::Invalid(format!("--arrival trace {path:?} is not valid JSON: {e}"))
+        })?;
+        let entries = json.as_arr().ok_or_else(|| {
+            ChimeError::Invalid(format!(
+                "--arrival trace {path:?} must be a JSON array of arrivals"
+            ))
+        })?;
+        let mut points = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let (arrival_s, tokens) = match e {
+                Json::Num(s) => (*s, None),
+                Json::Obj(_) => {
+                    let s = e.get("arrival_s").as_f64().ok_or_else(|| {
+                        ChimeError::Invalid(format!(
+                            "--arrival trace {path:?} entry {i}: missing numeric \"arrival_s\""
+                        ))
+                    })?;
+                    let tokens = match e.get("tokens") {
+                        Json::Null => None,
+                        t => Some(t.as_usize().ok_or_else(|| {
+                            ChimeError::Invalid(format!(
+                                "--arrival trace {path:?} entry {i}: \"tokens\" must be a \
+                                 non-negative integer"
+                            ))
+                        })?),
+                    };
+                    (s, tokens)
+                }
+                _ => {
+                    return Err(ChimeError::Invalid(format!(
+                        "--arrival trace {path:?} entry {i}: expected a number or an object"
+                    )))
+                }
+            };
+            if !arrival_s.is_finite() || arrival_s < 0.0 {
+                return Err(ChimeError::Invalid(format!(
+                    "--arrival trace {path:?} entry {i}: arrival {arrival_s} must be finite \
+                     and non-negative"
+                )));
+            }
+            points.push(ArrivalPoint { arrival_ns: arrival_s * 1e9, max_new_tokens: tokens });
+        }
+        if points.is_empty() {
+            return Err(ChimeError::Invalid(format!(
+                "--arrival trace {path:?} contains no arrivals"
+            )));
+        }
+        Ok(points)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_round_trip() {
+        for spec in ["burst", "poisson:2.5", "trace:/tmp/t.json"] {
+            let p = ArrivalProcess::parse(spec).unwrap();
+            assert_eq!(p.spec(), spec);
+            assert_eq!(ArrivalProcess::parse(&p.spec()).unwrap(), p);
+        }
+        assert_eq!(
+            ArrivalProcess::parse("poisson:8").unwrap(),
+            ArrivalProcess::Poisson { rate_per_s: 8.0 }
+        );
+    }
+
+    #[test]
+    fn malformed_specs_are_usage_errors() {
+        for spec in ["fourier", "poisson", "poisson:", "poisson:fast", "poisson:-2",
+                     "poisson:inf", "trace:"] {
+            let err = ArrivalProcess::parse(spec).unwrap_err();
+            assert_eq!(err.exit_code(), 2, "{spec}: {err}");
+        }
+        // The unknown-name path carries the accepted spellings.
+        match ArrivalProcess::parse("uniform") {
+            Err(ChimeError::Unknown { what, hint, .. }) => {
+                assert_eq!(what, "arrival process");
+                assert!(hint.unwrap().contains("poisson"));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_files_parse_numbers_and_objects() {
+        let path = std::env::temp_dir().join("chime_arrival_trace_test.json");
+        std::fs::write(&path, r#"[0, 0.5, {"arrival_s": 1.5, "tokens": 3}]"#).unwrap();
+        let pts = ArrivalProcess::trace_points(path.to_str().unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0], ArrivalPoint { arrival_ns: 0.0, max_new_tokens: None });
+        assert_eq!(pts[1].arrival_ns, 0.5e9);
+        assert_eq!(pts[2], ArrivalPoint { arrival_ns: 1.5e9, max_new_tokens: Some(3) });
+    }
+
+    #[test]
+    fn bad_trace_files_are_usage_errors() {
+        let dir = std::env::temp_dir();
+        let cases: [(&str, &str); 5] = [
+            ("chime_trace_nonjson.json", "not json"),
+            ("chime_trace_nonarray.json", r#"{"arrival_s": 1}"#),
+            ("chime_trace_badentry.json", r#"[true]"#),
+            ("chime_trace_negative.json", r#"[-1.0]"#),
+            ("chime_trace_empty.json", r#"[]"#),
+        ];
+        for (name, body) in cases {
+            let path = dir.join(name);
+            std::fs::write(&path, body).unwrap();
+            let err = ArrivalProcess::trace_points(path.to_str().unwrap()).unwrap_err();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(err.exit_code(), 2, "{name}: {err}");
+        }
+        let err = ArrivalProcess::trace_points("/nonexistent/chime/trace.json").unwrap_err();
+        assert_eq!(err.exit_code(), 2);
+        assert!(err.to_string().contains("unreadable"));
+    }
+}

@@ -18,10 +18,13 @@ use crate::sim::memory::{DramState, RramState};
 use crate::sim::InferenceStats;
 use crate::util::Prng;
 
+use std::collections::{BTreeSet, VecDeque};
+
 use super::batcher::BatchPolicy;
 use super::metrics::ServingMetrics;
 use super::request::{ServeRequest, ServeResponse};
-use super::sharded::{RoutePolicy, ServeOutcome, ShardedServer};
+use super::sharded::{RoutePolicy, ServeOutcome, ShardedServer, ShardedSession};
+use super::streaming::{self, ServeEvent, ServeProtocol};
 
 /// Virtual-time simulated serving engine (paper-scale models): the
 /// single-package deployment of the sharded coordinator.
@@ -41,6 +44,12 @@ impl SimulatedServer {
     /// dropped), and aggregate metrics.
     pub fn serve(&mut self, requests: Vec<ServeRequest>) -> ServeOutcome {
         self.inner.serve(requests)
+    }
+
+    /// Open an event-driven streaming serving session (the sharded
+    /// session of the single-package core — DESIGN.md §10).
+    pub fn open_serving(&mut self) -> ShardedSession<'_> {
+        self.inner.open_serving()
     }
 
     /// The model this server serves.
@@ -133,40 +142,135 @@ impl FunctionalServer {
     /// Serve requests sequentially (single PJRT stream). Service times are
     /// measured wall-clock; queueing is accounted on the request timeline
     /// via `SequentialTimeline` so both sides of the subtraction share a
-    /// timebase.
+    /// timebase. A thin submit-all-then-drain wrapper over
+    /// [`FunctionalServer::open_serving`]. Note the legacy tuple return
+    /// carries completions + metrics only; requests shed at submission
+    /// (non-finite arrivals) are visible through the `api::Backend::serve`
+    /// surface, which returns the full `ServeOutcome`.
     pub fn serve(
         &mut self,
         requests: &[ServeRequest],
     ) -> Result<(Vec<ServeResponse>, ServingMetrics), ChimeError> {
-        let mut responses = Vec::new();
-        let mut metrics = ServingMetrics::new();
+        let mut session = self.open_serving();
+        for req in requests {
+            session.submit(req.clone());
+        }
+        let out = session.finish()?;
+        Ok((out.responses, out.metrics))
+    }
+
+    /// Open an event-driven streaming serving session over the single
+    /// PJRT stream. Requests are processed one per `tick` in submission
+    /// order (the stream is sequential; there is no cross-request
+    /// scheduling to reorder). The engine measures per-request phase
+    /// totals only, so all of a request's `Token` events carry its
+    /// completion timestamp (streaming module docs).
+    pub fn open_serving(&mut self) -> FunctionalSession<'_> {
         // Simulated CHIME energy per generated token for the tiny model.
         let mut wcfg = self.sim_cfg.clone();
         wcfg.workload.output_tokens = 8;
         let tiny = MllmConfig::tiny();
         let ref_stats = crate::sim::simulate_with_workload(&tiny, &wcfg, &wcfg.workload);
         let energy_per_token = ref_stats.total_energy_j() / ref_stats.output_tokens as f64;
-
-        let mut timeline = SequentialTimeline::new();
-        for req in requests {
-            metrics.record_admitted();
-            let queue_ns = timeline.begin(req.arrival_ns);
-            let image = self.image_for_seed(req.image_seed);
-            let gen = self.mllm.generate(&image, &req.prompt, req.max_new_tokens)?;
-            let service_ns = (gen.encode_ns + gen.prefill_ns + gen.decode_ns) as f64;
-            timeline.finish(req.arrival_ns, service_ns);
-            let resp = ServeResponse {
-                id: req.id,
-                tokens: gen.tokens.clone(),
-                queue_ns,
-                ttft_ns: (gen.encode_ns + gen.prefill_ns) as f64,
-                service_ns,
-                energy_j: energy_per_token * gen.tokens.len() as f64,
-            };
-            metrics.record(req.arrival_ns, &resp);
-            responses.push(resp);
+        FunctionalSession {
+            srv: self,
+            energy_per_token,
+            queue: VecDeque::new(),
+            seen: BTreeSet::new(),
+            timeline: SequentialTimeline::new(),
+            responses: Vec::new(),
+            shed: Vec::new(),
+            metrics: ServingMetrics::new(),
         }
-        Ok((responses, metrics))
+    }
+}
+
+/// One streaming serving session over the sequential PJRT stream
+/// (`FunctionalServer::open_serving`).
+pub struct FunctionalSession<'a> {
+    srv: &'a mut FunctionalServer,
+    energy_per_token: f64,
+    queue: VecDeque<ServeRequest>,
+    seen: BTreeSet<u64>,
+    timeline: SequentialTimeline,
+    responses: Vec<ServeResponse>,
+    shed: Vec<ServeRequest>,
+    metrics: ServingMetrics,
+}
+
+impl FunctionalSession<'_> {
+    /// Enqueue a request on the sequential stream (processed in
+    /// submission order; arrivals only drive queueing accounting).
+    /// Non-finite arrivals are shed — a NaN would poison the timeline —
+    /// and duplicate ids panic, per the protocol contract.
+    pub fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        let req = match streaming::guard_submission(
+            &mut self.seen,
+            &mut self.metrics,
+            &mut self.shed,
+            req,
+        ) {
+            Ok(req) => req,
+            Err(events) => return events,
+        };
+        self.queue.push_back(req);
+        Vec::new()
+    }
+
+    /// Run one request end to end on the PJRT stream and emit its event
+    /// stream. Empty when the session is idle.
+    pub fn tick(&mut self) -> Result<Vec<ServeEvent>, ChimeError> {
+        let Some(req) = self.queue.pop_front() else {
+            return Ok(Vec::new());
+        };
+        self.metrics.record_admitted();
+        let queue_ns = self.timeline.begin(req.arrival_ns);
+        let image = self.srv.image_for_seed(req.image_seed);
+        let gen = self.srv.mllm.generate(&image, &req.prompt, req.max_new_tokens)?;
+        let service_ns = (gen.encode_ns + gen.prefill_ns + gen.decode_ns) as f64;
+        self.timeline.finish(req.arrival_ns, service_ns);
+        let resp = ServeResponse {
+            id: req.id,
+            tokens: gen.tokens.clone(),
+            queue_ns,
+            ttft_ns: (gen.encode_ns + gen.prefill_ns) as f64,
+            service_ns,
+            energy_j: self.energy_per_token * gen.tokens.len() as f64,
+        };
+        self.metrics.record(req.arrival_ns, &resp);
+        let events = streaming::sequential_request_events(&req, &resp);
+        self.responses.push(resp);
+        Ok(events)
+    }
+
+    /// Drain the queue and return the outcome: completions in processing
+    /// order (the sequential stream *is* the completion order), requests
+    /// shed at submission (non-finite arrivals), and merged metrics.
+    pub fn finish(mut self) -> Result<ServeOutcome, ChimeError> {
+        while !self.tick()?.is_empty() {}
+        Ok(self.take_outcome())
+    }
+
+    fn take_outcome(&mut self) -> ServeOutcome {
+        ServeOutcome {
+            responses: std::mem::take(&mut self.responses),
+            shed: std::mem::take(&mut self.shed),
+            metrics: std::mem::take(&mut self.metrics),
+        }
+    }
+}
+
+impl ServeProtocol for FunctionalSession<'_> {
+    fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        FunctionalSession::submit(self, req)
+    }
+
+    fn tick(&mut self) -> Result<Vec<ServeEvent>, ChimeError> {
+        FunctionalSession::tick(self)
+    }
+
+    fn finish(&mut self) -> ServeOutcome {
+        self.take_outcome()
     }
 }
 

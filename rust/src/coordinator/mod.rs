@@ -1,9 +1,11 @@
 //! L3 serving coordinator: admission queue with backpressure, continuous
 //! decode batcher, two-cut-point (2-machine flow-shop) pipeline
-//! scheduling, multi-package sharding, and the serving engines (simulated
-//! paper-scale + functional PJRT). This is the request path — Python is
-//! never on it.
+//! scheduling, multi-package sharding with cross-package work stealing,
+//! the event-driven streaming protocol (`streaming`), open-loop arrival
+//! processes (`arrivals`), and the serving engines (simulated paper-scale
+//! + functional PJRT). This is the request path — Python is never on it.
 
+pub mod arrivals;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -11,10 +13,13 @@ pub mod pipeline;
 pub mod queue;
 pub mod request;
 pub mod sharded;
+pub mod streaming;
 
+pub use arrivals::{ArrivalPoint, ArrivalProcess};
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{FunctionalServer, SequentialTimeline, SimulatedServer};
+pub use engine::{FunctionalServer, FunctionalSession, SequentialTimeline, SimulatedServer};
 pub use metrics::ServingMetrics;
 pub use queue::{AdmissionQueue, AdmitError};
 pub use request::{ServeRequest, ServeResponse};
-pub use sharded::{RoutePolicy, ServeOutcome, ShardedServer};
+pub use sharded::{RoutePolicy, ServeOutcome, ShardedServer, ShardedSession};
+pub use streaming::{ServeEvent, ServeProtocol, ServingSession};

@@ -97,6 +97,27 @@ impl AdmissionQueue {
         self.notify.notify_one();
     }
 
+    /// Arrival timestamp of the newest queued request, if any — the work
+    /// stealing victim check (the back of an arrival-ordered queue is the
+    /// request that would wait longest).
+    pub fn peek_back_arrival_ns(&self) -> Option<f64> {
+        self.inner.lock().unwrap().items.back().map(|r| r.arrival_ns)
+    }
+
+    /// Pop the newest queued request if it has arrived by `now_ns` (work
+    /// stealing: an idle package takes the request that would otherwise
+    /// wait longest here; stealing not-yet-arrived work would let the
+    /// scheduler act on the future). Ignores `closed` — a steal is a
+    /// transfer between sibling queues, not a new admission.
+    pub fn steal_back(&self, now_ns: f64) -> Option<ServeRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.items.back().is_some_and(|r| r.arrival_ns <= now_ns) {
+            g.items.pop_back()
+        } else {
+            None
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
@@ -175,6 +196,29 @@ mod tests {
         assert_eq!(q.len(), 3);
         assert_eq!(q.peek_arrival_ns(), Some(7.0));
         assert_eq!(q.try_pop_batch(1).pop().unwrap().id, 0);
+    }
+
+    #[test]
+    fn steal_back_takes_only_arrived_work_from_the_tail() {
+        let q = AdmissionQueue::new(4);
+        let mut r0 = req(0);
+        r0.arrival_ns = 1.0;
+        let mut r1 = req(1);
+        r1.arrival_ns = 5.0;
+        q.admit(r0).unwrap();
+        q.admit(r1).unwrap();
+        assert_eq!(q.peek_back_arrival_ns(), Some(5.0));
+        // The back has not arrived by t=3: nothing to steal.
+        assert!(q.steal_back(3.0).is_none());
+        assert_eq!(q.len(), 2);
+        // By t=5 it has; the steal takes the tail and leaves the head.
+        let stolen = q.steal_back(5.0).unwrap();
+        assert_eq!(stolen.id, 1);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_arrival_ns(), Some(1.0));
+        // Empty queue: nothing to steal.
+        q.try_pop_batch(1);
+        assert!(q.steal_back(100.0).is_none());
     }
 
     #[test]

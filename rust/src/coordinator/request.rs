@@ -49,15 +49,52 @@ impl ServeRequest {
 }
 
 impl ServeResponse {
+    /// Arrival-to-completion latency (queueing + service).
+    ///
+    /// Edge contract: a zero-token completion has no schedulable work and
+    /// completes at its arrival, so `queue_ns == ttft_ns == service_ns ==
+    /// 0` and the total latency is exactly `0`. Shed requests never get a
+    /// `ServeResponse` at all — they come back as `ServeOutcome::shed`
+    /// and are excluded from every latency statistic.
     pub fn total_latency_ns(&self) -> f64 {
         self.queue_ns + self.service_ns
     }
 
-    pub fn decode_tps(&self) -> f64 {
-        if self.service_ns <= self.ttft_ns || self.tokens.is_empty() {
+    /// Decode-phase span: first-token instant to completion, ns.
+    pub fn decode_span_ns(&self) -> f64 {
+        (self.service_ns - self.ttft_ns).max(0.0)
+    }
+
+    /// Time per output token over the decode phase (the serving-tail
+    /// "TPOT" metric), ns/token. Zero-token completions have no decode
+    /// phase and report `0.0`.
+    pub fn tpot_ns(&self) -> f64 {
+        if self.tokens.is_empty() {
             return 0.0;
         }
-        self.tokens.len() as f64 / ((self.service_ns - self.ttft_ns) / 1e9)
+        self.decode_span_ns() / self.tokens.len() as f64
+    }
+
+    /// Steady decode rate, tokens/s.
+    ///
+    /// Edge contract (previously a silent `0.0` in both cases):
+    /// * zero-token completions have no decode phase — `0.0` (there is
+    ///   no rate to report, and `0` cannot be mistaken for a throughput
+    ///   because no tokens exist);
+    /// * a completion with tokens but zero decode span (`service_ns ==
+    ///   ttft_ns`, e.g. a degenerate analytic baseline price) decoded
+    ///   instantaneously — `f64::INFINITY`, which is the honest limit,
+    ///   instead of a `0.0` that silently understates an infinitely fast
+    ///   decode as an infinitely slow one.
+    pub fn decode_tps(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        let span = self.decode_span_ns();
+        if span <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.tokens.len() as f64 / (span / 1e9)
     }
 }
 
@@ -76,7 +113,49 @@ mod tests {
             energy_j: 0.0,
         };
         assert_eq!(r.total_latency_ns(), 350.0);
+        assert_eq!(r.decode_span_ns(), 200.0);
+        assert_eq!(r.tpot_ns(), 50.0);
         let tps = r.decode_tps();
         assert!((tps - 4.0 / (200.0 / 1e9)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn zero_token_completion_reports_zero_everything() {
+        // Contract: no schedulable work -> completes at arrival with zero
+        // latency, zero decode span, and a 0.0 (not NaN) rate.
+        let r = ServeResponse {
+            id: 0,
+            tokens: vec![],
+            queue_ns: 0.0,
+            ttft_ns: 0.0,
+            service_ns: 0.0,
+            energy_j: 0.0,
+        };
+        assert_eq!(r.total_latency_ns(), 0.0);
+        assert_eq!(r.decode_span_ns(), 0.0);
+        assert_eq!(r.tpot_ns(), 0.0);
+        assert_eq!(r.decode_tps(), 0.0);
+    }
+
+    #[test]
+    fn instantaneous_decode_reports_infinity_not_zero() {
+        // Regression: a service_ns == ttft_ns completion with tokens used
+        // to silently report 0 tps — indistinguishable from "no decode".
+        let r = ServeResponse {
+            id: 1,
+            tokens: vec![0, 0],
+            queue_ns: 5.0,
+            ttft_ns: 100.0,
+            service_ns: 100.0,
+            energy_j: 0.0,
+        };
+        assert_eq!(r.decode_span_ns(), 0.0);
+        assert_eq!(r.tpot_ns(), 0.0);
+        assert!(r.decode_tps().is_infinite() && r.decode_tps() > 0.0);
+        // And service slightly *below* ttft (float noise) clamps, not
+        // negates.
+        let r2 = ServeResponse { service_ns: 99.9999, ..r };
+        assert_eq!(r2.decode_span_ns(), 0.0);
+        assert!(r2.decode_tps().is_infinite());
     }
 }

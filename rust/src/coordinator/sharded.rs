@@ -18,8 +18,25 @@
 //!
 //! This is the chiplet-scaling direction Cambricon-LLM (arXiv:2409.15654)
 //! takes for on-device inference, applied to CHIME's heterogeneous pairs.
+//!
+//! Serving is **event-driven** (DESIGN.md §10): [`ShardedSession`]
+//! implements the streaming protocol — `submit` requests at any virtual
+//! time, `tick` to advance the earliest event (an arrival decision or one
+//! package flow-shop tick) and receive typed [`ServeEvent`]s, `finish`
+//! to collect the [`ServeOutcome`]. The batch [`ShardedServer::serve`]
+//! is a thin submit-all-then-drain wrapper over the session, so the two
+//! entry points share one scheduling core and cannot drift.
+//!
+//! With work stealing enabled ([`ShardedServer::set_work_stealing`]),
+//! every event additionally runs a steal pass at its virtual timestamp:
+//! a package that is idle (no resident batch, no runnable queued work)
+//! takes the newest queued-and-arrived request from the most-loaded
+//! package that has no free batch slot of its own. Stealing only moves
+//! *queued* decode work — in-flight batches are never migrated — so the
+//! event-ordered completion merge and every conservation invariant are
+//! preserved, and the total token count is untouched by construction.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::{ChimeConfig, ChimeHardware, MllmConfig, WorkloadConfig};
 use crate::mapping::planner::DecodeTemplate;
@@ -31,6 +48,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::ServingMetrics;
 use super::queue::AdmissionQueue;
 use super::request::{ServeRequest, ServeResponse};
+use super::streaming::{PendingQueue, ServeEvent};
 
 /// How admitted requests are assigned to packages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,11 +146,18 @@ impl PackageState {
         }
     }
 
-    /// Reset the scheduling state for a fresh serve call (virtual clock,
-    /// routing counters). Hardware state (KV occupancy, endurance wear)
-    /// deliberately persists across calls — the chips do not forget.
-    fn reset_schedule(&mut self) {
-        debug_assert!(self.batcher.active() == 0 && self.queue.is_empty());
+    /// Reset the scheduling state for a fresh serving session (virtual
+    /// clock, queues, routing counters). Hardware state (KV occupancy,
+    /// endurance wear) deliberately persists across sessions — the chips
+    /// do not forget. A session that was dropped mid-stream leaves queued
+    /// and batched requests behind; they belong to the abandoned session
+    /// and are discarded here.
+    fn reset_session(&mut self) {
+        while !self.queue.is_empty() {
+            let _ = self.queue.try_pop_batch(usize::MAX);
+        }
+        self.batcher.slots.clear();
+        self.active.clear();
         self.clock_ns = 0.0;
         self.queued_tokens = 0;
         self.completed = 0;
@@ -170,11 +195,31 @@ impl PackageState {
         }
     }
 
+    /// Take the newest queued-and-arrived request for a work steal;
+    /// `None` when the queue tail has not arrived by `now_ns` (or the
+    /// queue is empty).
+    fn steal_back(&mut self, now_ns: f64) -> Option<ServeRequest> {
+        let req = self.queue.steal_back(now_ns)?;
+        self.queued_tokens = self.queued_tokens.saturating_sub(req.max_new_tokens);
+        Some(req)
+    }
+
+    /// Receive a stolen request at steal time `now_ns`. The clock bumps
+    /// to the steal instant so the thief cannot retroactively start the
+    /// request before the steal decision was made; the request goes to
+    /// the queue head (its arrival predates anything still queued here).
+    fn receive_stolen(&mut self, req: ServeRequest, now_ns: f64) {
+        self.clock_ns = self.clock_ns.max(now_ns);
+        self.queued_tokens += req.max_new_tokens;
+        self.queue.readmit_front(req);
+    }
+
     /// Run one flow-shop tick: fill free slots from the package queue,
     /// price every slot's step on this package's hardware state, advance
     /// the virtual clock by the pipelined tick span, and retire finished
-    /// requests. Returns `(arrival_ns, response)` per completion.
-    fn step(&mut self) -> Vec<(f64, ServeResponse)> {
+    /// requests. Returns the tick's event stream (`FirstToken`/`Token`
+    /// per slot, `Completed` per retirement).
+    fn step(&mut self) -> Vec<ServeEvent> {
         // An idle package fast-forwards its clock to the earliest arrival.
         if self.batcher.active() == 0 {
             if let Some(t) = self.queue.peek_arrival_ns() {
@@ -235,16 +280,22 @@ impl PackageState {
         let (plan_tick, finished) = self.batcher.tick(&costs);
         self.clock_ns += plan_tick.pipelined_ns;
 
+        let mut events = Vec::with_capacity(slot_ids.len() + finished.len());
         for &idx in &slot_ids {
             let a = self.active.get_mut(&idx).unwrap();
             if a.prefill_done_ns.is_none() {
                 a.prefill_done_ns = Some(self.clock_ns);
+                events.push(ServeEvent::FirstToken { id: a.req.id, time_ns: self.clock_ns });
             } else {
                 a.pos += 1;
                 a.produced += 1;
+                events.push(ServeEvent::Token {
+                    id: a.req.id,
+                    index: a.produced - 1,
+                    time_ns: self.clock_ns,
+                });
             }
         }
-        let mut out = Vec::with_capacity(finished.len());
         for idx in finished {
             let a = self.active.remove(&idx).unwrap();
             let arrival_ns = a.req.arrival_ns;
@@ -257,9 +308,13 @@ impl PackageState {
                 energy_j: a.energy_j,
             };
             self.completed += 1;
-            out.push((arrival_ns, resp));
+            events.push(ServeEvent::Completed {
+                arrival_ns,
+                time_ns: arrival_ns + resp.total_latency_ns(),
+                response: resp,
+            });
         }
-        out
+        events
     }
 }
 
@@ -270,6 +325,8 @@ pub struct ShardedServer {
     pub route: RoutePolicy,
     packages: Vec<PackageState>,
     rr_next: usize,
+    /// Cross-package work stealing (off by default; `set_work_stealing`).
+    steal: bool,
     /// Resolved model/config kept for the `api::Backend` one-shot
     /// inference surface (`run_inference_with`).
     model: MllmConfig,
@@ -337,6 +394,7 @@ impl ShardedServer {
             route,
             packages: states,
             rr_next: 0,
+            steal: false,
             model: model.clone(),
             cfg: cfg.clone(),
             dram_only,
@@ -346,6 +404,18 @@ impl ShardedServer {
 
     pub fn package_count(&self) -> usize {
         self.packages.len()
+    }
+
+    /// Enable/disable cross-package work stealing for subsequent serving
+    /// sessions: an idle package takes queued decode work from the most
+    /// loaded one (module docs; a no-op on single-package deployments).
+    pub fn set_work_stealing(&mut self, on: bool) {
+        self.steal = on;
+    }
+
+    /// Whether work stealing is enabled.
+    pub fn work_stealing(&self) -> bool {
+        self.steal
     }
 
     /// The model this deployment serves.
@@ -423,113 +493,246 @@ impl ShardedServer {
         }
     }
 
+    /// Open an event-driven streaming serving session (DESIGN.md §10):
+    /// `submit` requests at any virtual time, `tick` to advance and
+    /// receive typed [`ServeEvent`]s, `finish` for the [`ServeOutcome`].
+    ///
+    /// Each session is independent: virtual clocks and per-package
+    /// counters restart at zero (so a server can be reused across
+    /// experiments), while simulator hardware state — KV occupancy,
+    /// endurance wear — persists, as it did on the pre-sharding engine.
+    pub fn open_serving(&mut self) -> ShardedSession<'_> {
+        for p in &mut self.packages {
+            p.reset_session();
+        }
+        self.rr_next = 0;
+        ShardedSession {
+            srv: self,
+            pending: PendingQueue::new(),
+            seq: 0,
+            seen: BTreeSet::new(),
+            done: Vec::new(),
+            shed: Vec::new(),
+            metrics: ServingMetrics::new(),
+        }
+    }
+
     /// Serve a request stream in virtual time. Returns completions in
     /// global completion order, shed requests, and merged metrics.
     /// Request ids must be unique within one call (they key batch slots);
     /// a duplicate id panics rather than corrupting accounting.
     ///
-    /// Each call is an independent serving session: virtual clocks and
-    /// per-package counters restart at zero (so a server can be reused
-    /// across experiments), while simulator hardware state — KV
-    /// occupancy, endurance wear — persists, as it did on the
-    /// pre-sharding engine.
+    /// This is the batch entry point: a thin submit-everything-then-drain
+    /// wrapper over [`ShardedServer::open_serving`], so closed-loop and
+    /// streaming callers exercise the same scheduling core.
     pub fn serve(&mut self, requests: Vec<ServeRequest>) -> ServeOutcome {
-        for p in &mut self.packages {
-            p.reset_schedule();
+        let mut session = self.open_serving();
+        for r in requests {
+            session.submit(r);
         }
-        self.rr_next = 0;
-        let mut metrics = ServingMetrics::new();
-        let mut done: Vec<(f64, ServeResponse)> = Vec::new();
-        let mut shed: Vec<ServeRequest> = Vec::new();
-        // A non-finite arrival can never be reached by the virtual clock
-        // (NaN would also wedge the event loop): shed such requests up
-        // front instead of losing them or spinning.
-        let (mut requests, unschedulable): (Vec<ServeRequest>, Vec<ServeRequest>) =
-            requests.into_iter().partition(|r| r.arrival_ns.is_finite());
-        for r in unschedulable {
-            metrics.record_rejected();
-            shed.push(r);
-        }
-        // Request ids key batch slots and per-package active maps; a
-        // collision would corrupt accounting mid-flight, so fail fast.
-        let mut seen = std::collections::BTreeSet::new();
-        for r in &requests {
-            assert!(seen.insert(r.id), "duplicate request id {}: ids must be unique per serve call", r.id);
-        }
-        requests.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns));
-        let mut next = 0usize;
+        session.finish()
+    }
+}
 
-        loop {
-            // The two candidate events: the next arrival, and the package
-            // whose next tick starts earliest in virtual time.
-            let t_arr = requests.get(next).map(|r| r.arrival_ns).unwrap_or(f64::INFINITY);
-            let mut t_pkg = f64::INFINITY;
-            let mut who = 0usize;
-            for (i, p) in self.packages.iter().enumerate() {
-                let t = p.next_event_ns();
-                if t < t_pkg {
-                    t_pkg = t;
-                    who = i;
+/// One event-driven serving session over a [`ShardedServer`] — the
+/// engine side of the streaming protocol (`coordinator::streaming`).
+///
+/// The event loop repeatedly advances whichever event is earliest in
+/// global virtual time: the next pending arrival, or the package whose
+/// next flow-shop tick starts soonest. With work stealing enabled, every
+/// advance is followed by a steal pass at that event's timestamp.
+pub struct ShardedSession<'a> {
+    srv: &'a mut ShardedServer,
+    pending: PendingQueue,
+    /// Submission counter: the arrival-order tiebreak (matches the
+    /// stable sort of the pre-streaming batch path).
+    seq: u64,
+    seen: BTreeSet<u64>,
+    done: Vec<(f64, ServeResponse)>,
+    shed: Vec<ServeRequest>,
+    metrics: ServingMetrics,
+}
+
+impl ShardedSession<'_> {
+    /// Submit a request at any virtual time. A non-finite arrival can
+    /// never be reached by the virtual clock (NaN would wedge the event
+    /// loop), so it is shed immediately with a [`ServeEvent::Shed`].
+    /// Panics on a duplicate request id — ids key batch slots, and a
+    /// collision would corrupt accounting mid-flight.
+    pub fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        let req = match super::streaming::guard_submission(
+            &mut self.seen,
+            &mut self.metrics,
+            &mut self.shed,
+            req,
+        ) {
+            Ok(req) => req,
+            Err(events) => return events,
+        };
+        self.pending.push(req, self.seq);
+        self.seq += 1;
+        Vec::new()
+    }
+
+    /// Advance the engine by one event — the earliest of the next pending
+    /// arrival and the earliest package tick — and return the events it
+    /// produced. An empty vector means the session is idle (drained).
+    pub fn tick(&mut self) -> Vec<ServeEvent> {
+        // The two candidate events: the next arrival, and the package
+        // whose next tick starts earliest in virtual time.
+        let t_arr = self.pending.peek_arrival_ns().unwrap_or(f64::INFINITY);
+        let mut t_pkg = f64::INFINITY;
+        let mut who = 0usize;
+        for (i, p) in self.srv.packages.iter().enumerate() {
+            let t = p.next_event_ns();
+            if t < t_pkg {
+                t_pkg = t;
+                who = i;
+            }
+        }
+        if t_arr.is_infinite() && t_pkg.is_infinite() {
+            return Vec::new(); // drained
+        }
+
+        let now_ns;
+        let mut events;
+        if t_arr <= t_pkg {
+            // Arrival first (ties included: a request arriving exactly at
+            // a tick boundary may join that tick).
+            let req = self.pending.pop().expect("finite t_arr implies a pending request");
+            now_ns = req.arrival_ns;
+            events = self.process_arrival(req);
+        } else {
+            now_ns = t_pkg;
+            events = self.srv.packages[who].step();
+            for ev in &events {
+                if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
+                    self.metrics.record(*arrival_ns, response);
+                    self.done.push((*arrival_ns, response.clone()));
                 }
             }
-            if t_arr.is_infinite() && t_pkg.is_infinite() {
-                break; // drained
-            }
+        }
+        if self.srv.steal {
+            events.extend(self.steal_pass(now_ns));
+        }
+        events
+    }
 
-            if t_arr <= t_pkg {
-                // Arrival first (ties included: a request arriving exactly
-                // at a tick boundary may join that tick).
-                let req = requests[next].clone();
-                next += 1;
-                if req.max_new_tokens == 0 {
-                    // Zero-token requests have no decode work to schedule:
-                    // complete immediately (pre-fix, `.max(1)` silently
-                    // inflated them to one generated token).
-                    metrics.record_admitted();
-                    let resp = ServeResponse {
-                        id: req.id,
-                        tokens: Vec::new(),
-                        queue_ns: 0.0,
-                        ttft_ns: 0.0,
-                        service_ns: 0.0,
-                        energy_j: 0.0,
-                    };
-                    metrics.record(req.arrival_ns, &resp);
-                    done.push((req.arrival_ns, resp));
+    /// Tick until idle, returning every event produced.
+    pub fn drain(&mut self) -> Vec<ServeEvent> {
+        let mut all = Vec::new();
+        loop {
+            let events = self.tick();
+            if events.is_empty() {
+                return all;
+            }
+            all.extend(events);
+        }
+    }
+
+    /// Drain whatever is still pending and return the accumulated
+    /// outcome: completions event-ordered by completion timestamp
+    /// (arrival + queue + service; ties break by request id), shed
+    /// requests in shed order, and merged metrics.
+    pub fn finish(mut self) -> ServeOutcome {
+        self.drain();
+        self.take_outcome()
+    }
+
+    /// Per-event admission decision, replicating the batch path exactly:
+    /// zero-token requests complete inline; everything else routes via
+    /// the policy with index-order failover, and is rejected only when
+    /// the whole deployment is out of queue capacity.
+    fn process_arrival(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        let (id, arrival_ns) = (req.id, req.arrival_ns);
+        if req.max_new_tokens == 0 {
+            // Zero-token requests have no decode work to schedule:
+            // complete immediately (pre-fix, `.max(1)` silently inflated
+            // them to one generated token).
+            self.metrics.record_admitted();
+            let resp = ServeResponse {
+                id,
+                tokens: Vec::new(),
+                queue_ns: 0.0,
+                ttft_ns: 0.0,
+                service_ns: 0.0,
+                energy_j: 0.0,
+            };
+            self.metrics.record(arrival_ns, &resp);
+            self.done.push((arrival_ns, resp.clone()));
+            return vec![
+                ServeEvent::Admitted { id, time_ns: arrival_ns, package: None },
+                ServeEvent::Completed { arrival_ns, time_ns: arrival_ns, response: resp },
+            ];
+        }
+        // Route to the policy's package; if its queue is full, fail over
+        // to the next package with room (in index order) — a request is
+        // rejected only when the *whole* deployment is out of capacity.
+        let target = self.srv.route_for();
+        let n = self.srv.packages.len();
+        let mut req = Some(req);
+        for off in 0..n {
+            let pkg = (target + off) % n;
+            match self.srv.packages[pkg].admit(req.take().unwrap()) {
+                Ok(()) => {
+                    self.metrics.record_admitted();
+                    return vec![ServeEvent::Admitted {
+                        id,
+                        time_ns: arrival_ns,
+                        package: Some(pkg),
+                    }];
+                }
+                Err(r) => req = Some(r),
+            }
+        }
+        let r = req.expect("failover loop hands the request back on rejection");
+        self.metrics.record_rejected();
+        let ev = ServeEvent::Rejected { request: r.clone(), time_ns: arrival_ns };
+        self.shed.push(r);
+        vec![ev]
+    }
+
+    /// Work-stealing pass at virtual time `now_ns`: while some package is
+    /// idle (no resident batch, no queued work runnable by `now_ns`) and
+    /// another — the most loaded, with no free batch slot of its own —
+    /// has a queued-and-arrived request, move that victim's newest queued
+    /// request to the idle package. Terminates in at most one steal per
+    /// package: a thief stops being idle the moment it receives work.
+    fn steal_pass(&mut self, now_ns: f64) -> Vec<ServeEvent> {
+        let mut events = Vec::new();
+        loop {
+            let pkgs = &mut self.srv.packages;
+            let thief = pkgs.iter().position(|p| {
+                p.batcher.active() == 0
+                    && p.queue.peek_arrival_ns().map_or(true, |t| t > now_ns)
+            });
+            let Some(thief) = thief else { break };
+            let mut victim: Option<(usize, usize)> = None;
+            for (i, p) in pkgs.iter().enumerate() {
+                if i == thief || p.batcher.has_capacity() {
                     continue;
                 }
-                // Route to the policy's package; if its queue is full,
-                // fail over to the next package with room (in index
-                // order) — a request is shed only when the *whole*
-                // deployment is out of queue capacity.
-                let target = self.route_for();
-                let n = self.packages.len();
-                let mut req = Some(req);
-                for off in 0..n {
-                    let pkg = (target + off) % n;
-                    match self.packages[pkg].admit(req.take().unwrap()) {
-                        Ok(()) => {
-                            metrics.record_admitted();
-                            break;
-                        }
-                        Err(r) => req = Some(r),
-                    }
+                if !p.queue.peek_back_arrival_ns().is_some_and(|t| t <= now_ns) {
+                    continue;
                 }
-                if let Some(r) = req {
-                    metrics.record_rejected();
-                    shed.push(r);
-                }
-            } else {
-                for (arrival_ns, resp) in self.packages[who].step() {
-                    metrics.record(arrival_ns, &resp);
-                    done.push((arrival_ns, resp));
+                let load = p.load_tokens();
+                if victim.map_or(true, |(_, best)| load > best) {
+                    victim = Some((i, load));
                 }
             }
+            let Some((victim, _)) = victim else { break };
+            let Some(req) = pkgs[victim].steal_back(now_ns) else { break };
+            let id = req.id;
+            pkgs[thief].receive_stolen(req, now_ns);
+            events.push(ServeEvent::Stolen { id, from: victim, to: thief, time_ns: now_ns });
         }
+        events
+    }
 
-        // Event-ordered merge of the per-package completion streams:
-        // completion timestamp = arrival + queue + service; ties break by
-        // request id for determinism.
+    /// Sort the completion stream into the event-ordered merge and hand
+    /// the outcome out (used by both `finish` and the protocol adapter).
+    pub(crate) fn take_outcome(&mut self) -> ServeOutcome {
+        let mut done = std::mem::take(&mut self.done);
         done.sort_by(|a, b| {
             let fa = a.0 + a.1.total_latency_ns();
             let fb = b.0 + b.1.total_latency_ns();
@@ -537,9 +740,23 @@ impl ShardedServer {
         });
         ServeOutcome {
             responses: done.into_iter().map(|(_, r)| r).collect(),
-            shed,
-            metrics,
+            shed: std::mem::take(&mut self.shed),
+            metrics: std::mem::take(&mut self.metrics),
         }
+    }
+}
+
+impl super::streaming::ServeProtocol for ShardedSession<'_> {
+    fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        ShardedSession::submit(self, req)
+    }
+
+    fn tick(&mut self) -> Result<Vec<ServeEvent>, crate::api::ChimeError> {
+        Ok(ShardedSession::tick(self))
+    }
+
+    fn finish(&mut self) -> ServeOutcome {
+        self.take_outcome()
     }
 }
 
@@ -780,6 +997,172 @@ mod tests {
         let het = run(false);
         let solo = run(true);
         assert!(solo > het, "dram-only span {solo} vs heterogeneous {het}");
+    }
+
+    #[test]
+    fn streaming_session_is_bit_identical_to_batch_serve() {
+        // The batch call is a wrapper over the session; driving the
+        // session by hand (submit + tick + finish) must produce the same
+        // outcome byte for byte.
+        let (model, cfg) = tiny_cfg();
+        let mut reqs = burst(&[4, 0, 2, 6, 4, 3]);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.arrival_ns = i as f64 * 3e4;
+        }
+        let mut batch_srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::LeastLoaded);
+        let batch = batch_srv.serve(reqs.clone());
+        let mut stream_srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::LeastLoaded);
+        let mut session = stream_srv.open_serving();
+        for r in reqs {
+            session.submit(r);
+        }
+        while !session.tick().is_empty() {}
+        let streamed = session.finish();
+        assert_eq!(batch.responses.len(), streamed.responses.len());
+        for (a, b) in batch.responses.iter().zip(&streamed.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits());
+            assert_eq!(a.ttft_ns.to_bits(), b.ttft_ns.to_bits());
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+        assert_eq!(batch.metrics.completed, streamed.metrics.completed);
+        assert_eq!(batch.metrics.tokens, streamed.metrics.tokens);
+    }
+
+    #[test]
+    fn streaming_events_follow_the_lifecycle_contract() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::RoundRobin);
+        let mut session = srv.open_serving();
+        let mut reqs = burst(&[3, 0, 2]);
+        reqs[2].arrival_ns = 1e5;
+        for r in reqs {
+            assert!(session.submit(r).is_empty(), "finite submissions emit no events");
+        }
+        let events = session.drain();
+        // Per-request bookkeeping: admission, first token, every token,
+        // completion — in causal order, never before arrival.
+        let of = |id: u64| -> Vec<&ServeEvent> {
+            events.iter().filter(|e| e.id() == id).collect()
+        };
+        // id 0: 3 tokens -> admitted + first + 3 tokens + completed.
+        let kinds: Vec<&str> = of(0).iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, ["admitted", "first-token", "token", "token", "token", "completed"]);
+        // id 1: zero tokens -> inline completion, no token events.
+        let kinds: Vec<&str> = of(1).iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, ["admitted", "completed"]);
+        // Causality: event times are monotone per request and >= arrival.
+        for id in [0u64, 2] {
+            let times: Vec<f64> = of(id).iter().filter_map(|e| e.time_ns()).collect();
+            for w in times.windows(2) {
+                assert!(w[0] <= w[1], "id {id}: out-of-order events {times:?}");
+            }
+            let arrival = if id == 2 { 1e5 } else { 0.0 };
+            assert!(times.iter().all(|&t| t >= arrival), "id {id}: event before arrival");
+        }
+        let out = session.finish();
+        assert_eq!(out.responses.len(), 3);
+    }
+
+    #[test]
+    fn submitting_a_non_finite_arrival_sheds_immediately() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin);
+        let mut session = srv.open_serving();
+        let mut req = burst(&[4]).pop().unwrap();
+        req.arrival_ns = f64::NAN;
+        let events = session.submit(req);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind(), "shed");
+        let out = session.finish();
+        assert_eq!(out.shed.len(), 1);
+        assert_eq!(out.metrics.rejected, 1);
+    }
+
+    #[test]
+    fn work_stealing_rebalances_a_skewed_drain() {
+        // Round-robin piles every heavy request onto package 0 (8 heavy,
+        // batch 2 -> 6 queued); package 1 drains its light requests, goes
+        // idle, and with stealing on must take queued work and finish the
+        // burst strictly sooner — with exactly the same token output.
+        let (model, cfg) = tiny_cfg();
+        let skew: Vec<usize> =
+            (0..16).map(|i| if i % 2 == 0 { 64 } else { 1 }).collect();
+        let policy = BatchPolicy { max_batch: 2, queue_capacity: 1024 };
+        let run = |steal: bool| {
+            let mut srv =
+                ShardedServer::new(&model, &cfg, policy.clone(), 2, RoutePolicy::RoundRobin);
+            srv.set_work_stealing(steal);
+            let mut session = srv.open_serving();
+            for r in burst(&skew) {
+                session.submit(r);
+            }
+            let events = session.drain();
+            let steals = events.iter().filter(|e| e.kind() == "stolen").count();
+            let out = session.finish();
+            assert_eq!(out.responses.len(), 16);
+            assert!(out.shed.is_empty());
+            (out.metrics.span_ns(), out.metrics.tokens, steals)
+        };
+        let (span_off, tokens_off, steals_off) = run(false);
+        let (span_on, tokens_on, steals_on) = run(true);
+        assert_eq!(steals_off, 0, "stealing must not fire when disabled");
+        assert!(steals_on > 0, "skewed drain must trigger steals");
+        assert!(
+            span_on < span_off,
+            "stealing must drain strictly sooner: {span_on} vs {span_off}"
+        );
+        assert_eq!(tokens_on, tokens_off, "stealing must not change token output");
+    }
+
+    #[test]
+    fn work_stealing_is_a_bitwise_noop_on_one_package() {
+        // A single package can never be thief and victim at once: steal
+        // on/off must produce byte-identical outcomes.
+        let (model, cfg) = tiny_cfg();
+        let run = |steal: bool| {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+                1,
+                RoutePolicy::RoundRobin,
+            );
+            srv.set_work_stealing(steal);
+            srv.serve(burst(&[8, 2, 5, 1]))
+        };
+        let (off, on) = (run(false), run(true));
+        assert_eq!(off.responses.len(), on.responses.len());
+        for (a, b) in off.responses.iter().zip(&on.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+            assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn abandoned_sessions_do_not_poison_the_next_one() {
+        // Drop a session mid-stream (submitted but not drained): the next
+        // open must start from a clean schedule and serve normally.
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::RoundRobin);
+        {
+            let mut session = srv.open_serving();
+            for r in burst(&[4; 6]) {
+                session.submit(r);
+            }
+            let _ = session.tick(); // leave work queued and batched
+        }
+        let out = srv.serve(burst(&[4; 6]));
+        assert_eq!(out.responses.len(), 6);
+        assert!(out.shed.is_empty());
+        assert_eq!(out.metrics.tokens, 24);
     }
 
     #[test]

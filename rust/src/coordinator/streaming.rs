@@ -1,0 +1,371 @@
+//! Event-driven streaming serving protocol.
+//!
+//! The batch call `serve(Vec<ServeRequest>)` forces closed-loop
+//! experiments: every arrival is known up front and the caller sees one
+//! aggregate outcome at the end. Production-shaped LLM serving is
+//! open-loop — requests arrive continuously, tokens stream out
+//! incrementally, and admission/backpressure decisions happen per event.
+//! This module defines that seam:
+//!
+//! * [`ServeEvent`] — the typed event stream a serving engine emits:
+//!   `Admitted`, `Rejected`, `Shed`, `FirstToken`, `Token`, `Completed`,
+//!   plus `Stolen` for cross-package work stealing.
+//! * [`ServeProtocol`] — the engine-side protocol: `submit` a request at
+//!   any virtual time, `tick` to advance the engine by one event, and
+//!   `finish` to collect the accumulated [`ServeOutcome`]. Implemented by
+//!   the sharded coordinator, the functional PJRT engine, and the
+//!   baseline adapters.
+//! * [`ServingSession`] — the caller-facing handle (a boxed
+//!   [`ServeProtocol`]) returned by `api::Backend::open_serving`, with
+//!   `drain`/`finish` conveniences.
+//!
+//! The legacy batch call is a thin drain-everything wrapper over this
+//! protocol (`api::Backend::serve` is a provided trait method), so the
+//! two surfaces can never drift: one engine, two entry points.
+//!
+//! ## Event contract
+//!
+//! For every submitted request, exactly one of `Admitted`, `Rejected`
+//! (admission backpressure: every queue full at arrival), or `Shed`
+//! (unschedulable: non-finite arrival timestamp) is emitted. An admitted
+//! request with a non-zero token budget then emits one `FirstToken`
+//! (marking TTFT — end of encode+prefill), `max_new_tokens` `Token`
+//! events with monotone indices, and one `Completed`. A zero-token
+//! request completes immediately at its arrival: `Admitted` then
+//! `Completed`, no token events. No event ever precedes the request's
+//! arrival time, and each request's own events are causally ordered.
+//! The *global* stream is ordered by event processing, not by timestamp:
+//! a tick's events carry the tick's end time while the loop picks work
+//! by earliest start time, so events of different requests may
+//! interleave with non-monotone timestamps. Sequential single-stream
+//! engines (functional PJRT, Jetson/FACIL baselines) measure only
+//! per-request phase totals, so they emit all of a request's `Token`
+//! events at its completion timestamp rather than an interpolated
+//! intra-request timeline.
+
+use std::collections::{BTreeSet, BinaryHeap};
+
+use crate::api::ChimeError;
+
+use super::metrics::ServingMetrics;
+use super::request::{ServeRequest, ServeResponse};
+use super::sharded::ServeOutcome;
+
+/// One typed event from a streaming serving engine. Times are in the
+/// engine's timebase (virtual ns for the simulator backends; the request
+/// timeline for the wall-clock engines).
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// The request passed admission. `package` is the DRAM+RRAM package
+    /// it was queued on; `None` for inline completions (zero-token
+    /// requests never touch a package) and single-stream engines.
+    Admitted {
+        /// Request id.
+        id: u64,
+        /// Admission time (the request's arrival).
+        time_ns: f64,
+        /// Package the request was queued on, when one exists.
+        package: Option<usize>,
+    },
+    /// Admission backpressure: every package queue was full at arrival.
+    /// The request is handed back — never silently dropped.
+    Rejected {
+        /// The rejected request, returned to the caller.
+        request: ServeRequest,
+        /// Rejection time (the request's arrival).
+        time_ns: f64,
+    },
+    /// The request can never be scheduled (non-finite arrival timestamp);
+    /// it is shed at submission, before entering the event loop.
+    Shed {
+        /// The unschedulable request, returned to the caller.
+        request: ServeRequest,
+    },
+    /// Encode+prefill finished — the TTFT instant for this request.
+    FirstToken {
+        /// Request id.
+        id: u64,
+        /// Time the first token is available.
+        time_ns: f64,
+    },
+    /// One decode token was produced.
+    Token {
+        /// Request id.
+        id: u64,
+        /// Zero-based token index within the request.
+        index: usize,
+        /// Time the token was produced.
+        time_ns: f64,
+    },
+    /// The request finished; carries the full completion record.
+    Completed {
+        /// The request's arrival time (keyed for completion-order merges).
+        arrival_ns: f64,
+        /// Completion time (`arrival_ns` + total latency).
+        time_ns: f64,
+        /// The completion record.
+        response: ServeResponse,
+    },
+    /// Work stealing moved a queued request from a loaded package to an
+    /// idle one (emitted only with stealing enabled).
+    Stolen {
+        /// Request id.
+        id: u64,
+        /// Package the request was queued on.
+        from: usize,
+        /// Idle package that took it.
+        to: usize,
+        /// Steal time.
+        time_ns: f64,
+    },
+}
+
+impl ServeEvent {
+    /// The request id this event concerns.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeEvent::Admitted { id, .. }
+            | ServeEvent::FirstToken { id, .. }
+            | ServeEvent::Token { id, .. }
+            | ServeEvent::Stolen { id, .. } => *id,
+            ServeEvent::Rejected { request, .. } | ServeEvent::Shed { request } => request.id,
+            ServeEvent::Completed { response, .. } => response.id,
+        }
+    }
+
+    /// The event's timestamp, when it has a meaningful one (`Shed`
+    /// requests carry a non-finite arrival and no event time).
+    pub fn time_ns(&self) -> Option<f64> {
+        match self {
+            ServeEvent::Admitted { time_ns, .. }
+            | ServeEvent::Rejected { time_ns, .. }
+            | ServeEvent::FirstToken { time_ns, .. }
+            | ServeEvent::Token { time_ns, .. }
+            | ServeEvent::Completed { time_ns, .. }
+            | ServeEvent::Stolen { time_ns, .. } => Some(*time_ns),
+            ServeEvent::Shed { .. } => None,
+        }
+    }
+
+    /// Short kind tag for logs and tables.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeEvent::Admitted { .. } => "admitted",
+            ServeEvent::Rejected { .. } => "rejected",
+            ServeEvent::Shed { .. } => "shed",
+            ServeEvent::FirstToken { .. } => "first-token",
+            ServeEvent::Token { .. } => "token",
+            ServeEvent::Completed { .. } => "completed",
+            ServeEvent::Stolen { .. } => "stolen",
+        }
+    }
+}
+
+/// The engine-side streaming protocol. Object-safe: `api::Backend`
+/// returns implementations boxed inside a [`ServingSession`].
+pub trait ServeProtocol {
+    /// Submit a request at any virtual time. May emit immediate events
+    /// (e.g. [`ServeEvent::Shed`] for a non-finite arrival). Panics on a
+    /// duplicate request id within one session — ids key batch slots, and
+    /// a collision would corrupt accounting mid-flight.
+    fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent>;
+
+    /// Advance the engine by one event (an arrival decision or one
+    /// engine step) and return the events it produced. An empty vector
+    /// means the session is idle: nothing pending and nothing in flight.
+    fn tick(&mut self) -> Result<Vec<ServeEvent>, ChimeError>;
+
+    /// Take the accumulated outcome (completions in global completion
+    /// order, shed requests, merged metrics). Call after draining; the
+    /// [`ServingSession`] wrapper enforces this by consuming itself.
+    fn finish(&mut self) -> ServeOutcome;
+}
+
+/// Caller-facing handle for one streaming serving session, returned by
+/// `api::Backend::open_serving`. Dropping a session without finishing it
+/// discards its in-flight requests; the engine resets on the next open.
+pub struct ServingSession<'a> {
+    inner: Box<dyn ServeProtocol + 'a>,
+}
+
+impl<'a> ServingSession<'a> {
+    /// Wrap an engine-side protocol implementation.
+    pub fn new(inner: Box<dyn ServeProtocol + 'a>) -> ServingSession<'a> {
+        ServingSession { inner }
+    }
+
+    /// Submit a request (see [`ServeProtocol::submit`]).
+    pub fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        self.inner.submit(req)
+    }
+
+    /// Advance by one event (see [`ServeProtocol::tick`]).
+    pub fn tick(&mut self) -> Result<Vec<ServeEvent>, ChimeError> {
+        self.inner.tick()
+    }
+
+    /// Tick until idle, returning every event produced.
+    pub fn drain(&mut self) -> Result<Vec<ServeEvent>, ChimeError> {
+        let mut all = Vec::new();
+        loop {
+            let events = self.inner.tick()?;
+            if events.is_empty() {
+                return Ok(all);
+            }
+            all.extend(events);
+        }
+    }
+
+    /// Drain whatever is still pending (discarding those events) and
+    /// return the accumulated [`ServeOutcome`]. The legacy batch
+    /// `serve(Vec<_>)` is exactly submit-all + `finish`.
+    pub fn finish(mut self) -> Result<ServeOutcome, ChimeError> {
+        self.drain()?;
+        Ok(self.inner.finish())
+    }
+}
+
+/// Shared submission guard for every streaming engine: panics on a
+/// duplicate request id (the [`ServeProtocol::submit`] contract — ids
+/// key completion records) and sheds non-finite arrivals (they can
+/// never be scheduled on any timeline). Returns the request back when
+/// it is schedulable, or the already-recorded [`ServeEvent::Shed`].
+pub(crate) fn guard_submission(
+    seen: &mut BTreeSet<u64>,
+    metrics: &mut ServingMetrics,
+    shed: &mut Vec<ServeRequest>,
+    req: ServeRequest,
+) -> Result<ServeRequest, Vec<ServeEvent>> {
+    assert!(
+        seen.insert(req.id),
+        "duplicate request id {}: ids must be unique per serve call",
+        req.id
+    );
+    if !req.arrival_ns.is_finite() {
+        metrics.record_rejected();
+        let ev = ServeEvent::Shed { request: req.clone() };
+        shed.push(req);
+        return Err(vec![ev]);
+    }
+    Ok(req)
+}
+
+/// Event stream for one request completed end to end by a sequential
+/// single-stream engine (functional PJRT, analytic baselines): `Admitted`
+/// at arrival, `FirstToken` at the TTFT instant, every `Token` at the
+/// completion timestamp (these engines price whole phases, not tokens),
+/// `Completed` last. Zero-token completions emit `Admitted` +
+/// `Completed` only.
+pub(crate) fn sequential_request_events(
+    req: &ServeRequest,
+    resp: &ServeResponse,
+) -> Vec<ServeEvent> {
+    let start_ns = req.arrival_ns + resp.queue_ns;
+    let done_ns = req.arrival_ns + resp.total_latency_ns();
+    let mut events = Vec::with_capacity(resp.tokens.len() + 3);
+    events.push(ServeEvent::Admitted { id: req.id, time_ns: req.arrival_ns, package: None });
+    if !resp.tokens.is_empty() {
+        events.push(ServeEvent::FirstToken { id: req.id, time_ns: start_ns + resp.ttft_ns });
+        for index in 0..resp.tokens.len() {
+            events.push(ServeEvent::Token { id: req.id, index, time_ns: done_ns });
+        }
+    }
+    events.push(ServeEvent::Completed {
+        arrival_ns: req.arrival_ns,
+        time_ns: done_ns,
+        response: resp.clone(),
+    });
+    events
+}
+
+/// Arrival-ordered pending queue shared by the streaming engines: a
+/// min-heap on `(arrival_ns, tiebreak)`. The sharded coordinator breaks
+/// ties by submission order (matching the legacy stable sort); the
+/// sequential baselines break ties by request id (matching their legacy
+/// explicit sort key). Arrivals are finite by construction — non-finite
+/// submissions are shed before insertion.
+pub(crate) struct PendingQueue {
+    heap: BinaryHeap<Pending>,
+}
+
+struct Pending {
+    arrival_ns: f64,
+    tiebreak: u64,
+    req: ServeRequest,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.arrival_ns.total_cmp(&other.arrival_ns).is_eq() && self.tiebreak == other.tiebreak
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest first.
+        other
+            .arrival_ns
+            .total_cmp(&self.arrival_ns)
+            .then(other.tiebreak.cmp(&self.tiebreak))
+    }
+}
+
+impl PendingQueue {
+    pub(crate) fn new() -> PendingQueue {
+        PendingQueue { heap: BinaryHeap::new() }
+    }
+
+    pub(crate) fn push(&mut self, req: ServeRequest, tiebreak: u64) {
+        debug_assert!(req.arrival_ns.is_finite(), "shed non-finite arrivals before queueing");
+        self.heap.push(Pending { arrival_ns: req.arrival_ns, tiebreak, req });
+    }
+
+    pub(crate) fn peek_arrival_ns(&self) -> Option<f64> {
+        self.heap.peek().map(|p| p.arrival_ns)
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<ServeRequest> {
+        self.heap.pop().map(|p| p.req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_ns: f64) -> ServeRequest {
+        ServeRequest { id, prompt: vec![], image_seed: id, max_new_tokens: 4, arrival_ns }
+    }
+
+    #[test]
+    fn pending_queue_pops_in_arrival_then_tiebreak_order() {
+        let mut q = PendingQueue::new();
+        q.push(req(2, 5.0), 2);
+        q.push(req(0, 1.0), 0);
+        q.push(req(3, 5.0), 1); // same arrival as id 2, earlier tiebreak
+        q.push(req(1, 3.0), 3);
+        assert_eq!(q.peek_arrival_ns(), Some(1.0));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 3, 2]);
+        assert_eq!(q.peek_arrival_ns(), None);
+    }
+
+    #[test]
+    fn event_accessors_report_id_kind_and_time() {
+        let ev = ServeEvent::Token { id: 7, index: 3, time_ns: 42.0 };
+        assert_eq!(ev.id(), 7);
+        assert_eq!(ev.kind(), "token");
+        assert_eq!(ev.time_ns(), Some(42.0));
+        let shed = ServeEvent::Shed { request: req(9, f64::NAN) };
+        assert_eq!(shed.id(), 9);
+        assert_eq!(shed.time_ns(), None);
+    }
+}

@@ -23,7 +23,9 @@
 //! - [`runtime`]: PJRT functional runtime loading the AOT-compiled JAX
 //!   artifacts (the tiny MLLM) — Python never runs on the request path;
 //! - [`coordinator`]: the L3 serving coordinator (request queue, batcher,
-//!   pipelined engine joining functional execution with simulated timing);
+//!   pipelined engine joining functional execution with simulated timing,
+//!   the event-driven streaming serving protocol with open-loop arrival
+//!   processes, and cross-package work stealing);
 //! - [`results`]: the paper-results harness — one module per table/figure.
 //!
 //! See DESIGN.md (repo root) for the system inventory, the two-cut-point

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   info      — print model zoo (Table II) and hardware configs (III/IV)
 //!   simulate  — run one model's VQA inference on the CHIME simulator
-//!   serve     — serve a request stream (sim | functional | dram-only |
-//!               jetson | facil backends)
+//!   serve     — serve an open-loop request stream (sim | functional |
+//!               dram-only | jetson | facil backends; --arrival picks the
+//!               burst/poisson/trace process, --steal on enables
+//!               cross-package work stealing)
 //!   sweep     — sequence-length sweep (Fig 8)
 //!   results   — regenerate paper tables/figures (--fig N | --all)
 //!   memcheck  — cross-validate first-order vs cycle-accurate memory
@@ -19,7 +21,7 @@
 //! subcommand validates its flags so typos get a suggestion instead of a
 //! silent no-op.
 
-use chime::api::{BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder};
+use chime::api::{ArrivalProcess, BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder};
 use chime::config::MllmConfig;
 use chime::coordinator::{BatchPolicy, RoutePolicy};
 use chime::results;
@@ -74,12 +76,13 @@ COMMANDS:
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
             [--memory first-order|cycle]
   serve     [--backend sim|functional|dram-only|jetson|facil] [--model NAME]
-            [--requests N] [--rate R] [--batch B] [--tokens N] [--packages N]
+            [--requests N] [--arrival burst|poisson:R|trace:FILE] [--rate R]
+            [--steal on|off] [--seed N] [--batch B] [--tokens N] [--packages N]
             [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
   sweep     [--model NAME] [--json] [--memory first-order|cycle]
             Fig 8 sequence-length sweep
-  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck] [--all] [--json]
-            [--baselines]
+  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck|tail] [--all]
+            [--json] [--baselines]
   memcheck  [--json]                          first-order vs cycle divergence
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
@@ -127,6 +130,49 @@ fn memory_arg(args: &Args) -> Result<Option<MemoryFidelity>, ChimeError> {
                 hint: Some("first-order cycle".to_string()),
             }),
         },
+    }
+}
+
+/// `--arrival burst|poisson:<rps>|trace:<file>` (with `--rate R` kept as
+/// shorthand for `poisson:R`), or a typed usage error — never a panic.
+fn arrival_arg(args: &Args) -> Result<ArrivalProcess, ChimeError> {
+    if args.flag("arrival") && args.get("arrival").is_none() {
+        return Err(ChimeError::Invalid(
+            "--arrival expects a process: burst, poisson:<rps>, or trace:<file>".to_string(),
+        ));
+    }
+    match (args.get("arrival"), args.get("rate")) {
+        (Some(_), Some(_)) => Err(ChimeError::Invalid(
+            "--rate is shorthand for --arrival poisson:<rps>; pass only one".to_string(),
+        )),
+        (Some(spec), None) => ArrivalProcess::parse(spec),
+        (None, _) => {
+            let rate = f64_arg(args, "rate", 2.0)?;
+            if !rate.is_finite() || rate <= 0.0 {
+                return Err(ChimeError::Invalid(format!(
+                    "--rate must be finite and positive, got {rate}"
+                )));
+            }
+            Ok(ArrivalProcess::Poisson { rate_per_s: rate })
+        }
+    }
+}
+
+/// `--steal on|off` as a bool, or a typed usage error — never a silent
+/// default for a malformed or value-less spelling.
+fn steal_arg(args: &Args) -> Result<bool, ChimeError> {
+    match args.get("steal") {
+        None if args.flag("steal") => Err(ChimeError::Invalid(
+            "--steal expects a mode: on or off".to_string(),
+        )),
+        None => Ok(false),
+        Some("on") | Some("true") => Ok(true),
+        Some("off") | Some("false") => Ok(false),
+        Some(other) => Err(ChimeError::Unknown {
+            what: "steal mode",
+            name: other.to_string(),
+            hint: Some("on off".to_string()),
+        }),
     }
 }
 
@@ -261,15 +307,18 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
 fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
     ensure_known(
         args,
-        &["backend", "model", "requests", "rate", "batch", "tokens", "packages", "route",
-          "queue", "config", "out", "text", "artifacts", "memory"],
+        &["backend", "model", "requests", "arrival", "rate", "steal", "seed", "batch",
+          "tokens", "packages", "route", "queue", "config", "out", "text", "artifacts",
+          "memory"],
     )?;
     // Validated here for the spelling; the Session builder owns the
     // backend-compatibility check (--memory cycle on a memoryless backend
     // is a typed Invalid error, same as the config-file path).
     let fidelity = memory_arg(args)?;
     let n = usize_arg(args, "requests", 16)?;
-    let rate = f64_arg(args, "rate", 2.0)?;
+    let arrival = arrival_arg(args)?;
+    let steal = steal_arg(args)?;
+    let seed = usize_arg(args, "seed", 7)? as u64;
     let batch = usize_arg(args, "batch", 4)?;
     let backend_name = args.get_or("backend", "sim");
     let kind = BackendKind::parse(backend_name).ok_or(ChimeError::Unknown {
@@ -277,6 +326,16 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
         name: backend_name.to_string(),
         hint: Some("sim functional dram-only jetson facil".to_string()),
     })?;
+    // Stealing moves queued work between sibling packages; on a backend
+    // with no package dimension it would be a silent no-op, so reject it
+    // up front (same contract as the Session builder).
+    if steal && !matches!(kind, BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly) {
+        return Err(ChimeError::Invalid(format!(
+            "backend {} has no sibling packages to steal between; --steal applies to \
+             the sharded simulator backends",
+            kind.name()
+        )));
+    }
 
     match kind {
         BackendKind::Functional => {
@@ -296,7 +355,8 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 b = b.memory_fidelity(f);
             }
             let mut session = b.build()?;
-            let mut reqs = session.poisson_requests(7, rate, n, usize_arg(args, "tokens", 8)?);
+            let mut reqs =
+                session.requests_for(&arrival, seed, n, usize_arg(args, "tokens", 8)?)?;
             for r in &mut reqs {
                 r.arrival_ns = 0.0; // wall-clock stream: queueing from backlog only
             }
@@ -334,16 +394,17 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             }
             let mut session = b.build()?;
             let tokens = usize_arg(args, "tokens", 64)?;
-            let reqs = session.poisson_requests(7, rate, n, tokens);
+            let reqs = session.requests_for(&arrival, seed, n, tokens)?;
             let out = session.serve(reqs)?;
             let mut metrics = out.metrics;
             let p50 = metrics.latency_percentile_ns(50.0);
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
-                "{} baseline serving {} (sequential stream): {} reqs completed, {} tokens, \
-                 {:.1} tok/s system, p50 latency {}, p99 {}, {:.2} tok/J",
+                "{} baseline serving {} (sequential stream, {} arrivals): {} reqs completed, \
+                 {} tokens, {:.1} tok/s system, p50 latency {}, p99 {}, {:.2} tok/J",
                 session.backend_name(),
                 session.model().name,
+                arrival.spec(),
                 metrics.completed,
                 metrics.tokens,
                 metrics.tokens_per_s(),
@@ -376,26 +437,37 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 .backend(kind)
                 .packages(packages)
                 .route(route)
-                .batch(policy);
+                .batch(policy)
+                .work_stealing(steal);
             if let Some(f) = fidelity {
                 b = b.memory_fidelity(f);
             }
             let mut session = b.build()?;
             let tokens = usize_arg(args, "tokens", 64)?;
-            let reqs = session.poisson_requests(7, rate, n, tokens);
-            let out = session.serve(reqs)?;
+            let reqs = session.requests_for(&arrival, seed, n, tokens)?;
+            // Drive the streaming protocol directly so the steal events
+            // are observable (the batch wrapper discards the stream).
+            let mut serving = session.open_serving()?;
+            for r in reqs {
+                serving.submit(r);
+            }
+            let events = serving.drain()?;
+            let steals = events.iter().filter(|e| e.kind() == "stolen").count();
+            let out = serving.finish()?;
             let mut metrics = out.metrics;
             let p50 = metrics.latency_percentile_ns(50.0);
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
                 "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}{}, \
-                 {} memory): {} reqs completed, {} shed, {} tokens, {:.1} tok/s system, \
-                 p50 latency {}, p99 {}, {:.1} tok/J",
+                 {} arrivals, steal {}, {} memory): {} reqs completed, {} shed, {} tokens, \
+                 {:.1} tok/s system, p50 latency {}, p99 {}, {:.1} tok/J",
                 session.model().name,
                 packages,
                 if packages == 1 { "" } else { "s" },
                 route.name(),
                 if kind == BackendKind::DramOnly { ", dram-only" } else { "" },
+                arrival.spec(),
+                if steal { "on" } else { "off" },
                 session.memory_fidelity().name(),
                 metrics.completed,
                 metrics.rejected,
@@ -405,6 +477,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 fmt_ns(p99),
                 metrics.tokens_per_j(),
             );
+            if steal {
+                println!("  work steals: {steals}");
+            }
             if packages > 1 {
                 println!(
                     "  per-package completions: {:?} (KV budget {} per package)",
@@ -458,7 +533,7 @@ fn cmd_results(args: &Args) -> Result<(), ChimeError> {
                 return Err(ChimeError::Unknown {
                     what: "experiment",
                     name: id.to_string(),
-                    hint: Some("1 6 7 8 9 table5 ablations scaling memcheck".to_string()),
+                    hint: Some("1 6 7 8 9 table5 ablations scaling memcheck tail".to_string()),
                 })
             }
         }

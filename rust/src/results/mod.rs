@@ -15,6 +15,7 @@ pub mod fig9;
 pub mod memcheck;
 pub mod scaling;
 pub mod table5;
+pub mod tail;
 
 use crate::util::Json;
 
@@ -37,11 +38,12 @@ pub fn run_all() -> Vec<Experiment> {
         ablations::run(),
         scaling::run(),
         memcheck::run(),
+        tail::run(),
     ]
 }
 
 /// Run one experiment by id ("1", "6", "7", "8", "9", "table5",
-/// "scaling", "memcheck").
+/// "scaling", "memcheck", "tail").
 pub fn run_one(id: &str) -> Option<Experiment> {
     match id {
         "1" | "fig1" => Some(fig1::run()),
@@ -53,6 +55,7 @@ pub fn run_one(id: &str) -> Option<Experiment> {
         "ablations" | "a" => Some(ablations::run()),
         "scaling" | "packages" => Some(scaling::run()),
         "memcheck" | "mem" => Some(memcheck::run()),
+        "tail" | "latency" => Some(tail::run()),
         _ => None,
     }
 }

@@ -1,0 +1,255 @@
+//! Serving tail-latency table (ROADMAP work-stealing item): p50/p95/p99
+//! TTFT, TPOT, and total latency under a seeded open-loop Poisson
+//! arrival process, with cross-package work stealing off vs on, as the
+//! deployment grows from 1 to 8 packages.
+//!
+//! The workload is deliberately skewed: requests `i % 8 < 2` carry a
+//! heavy 240-token decode budget, the rest a light 8-token one, so
+//! round-robin routing concentrates the heavy work on a fixed subset of
+//! packages. Under the arrival rate the heavy packages overload while
+//! the light ones drain and go idle — exactly the regime where an idle
+//! package stealing queued decode work from the most-loaded one cuts
+//! the tail.
+//!
+//! Expected shape (locked by `golden_tail_work_stealing`): stealing is a
+//! bitwise no-op at 1 package, strictly improves p99 total latency at
+//! ≥ 4 packages, never changes the token count, and leaves tok/J within
+//! 1% of `--steal off` (stealing relocates work; it does not re-price
+//! the tokens).
+
+use crate::config::{ChimeConfig, MllmConfig};
+use crate::coordinator::{BatchPolicy, RoutePolicy, ServeRequest, ShardedServer};
+use crate::util::stats::percentile;
+use crate::util::{table, Json, Prng, Table};
+
+use super::Experiment;
+
+pub const PACKAGES: [usize; 4] = [1, 2, 4, 8];
+pub const REQUESTS: usize = 48;
+/// Open-loop offered load, requests/s (overloads the heavy packages at
+/// every deployment size).
+pub const RATE_PER_S: f64 = 40.0;
+pub const HEAVY_TOKENS: usize = 240;
+pub const LIGHT_TOKENS: usize = 8;
+pub const SEED: u64 = 11;
+/// Small per-package batch so queues (the thing stealing rebalances)
+/// actually form.
+pub const MAX_BATCH: usize = 2;
+
+/// One (packages, steal) measurement.
+pub struct TailPoint {
+    pub model: String,
+    pub packages: usize,
+    pub steal: bool,
+    pub p50_ttft_ms: f64,
+    pub p95_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub p50_tpot_ms: f64,
+    pub p95_tpot_ms: f64,
+    pub p99_tpot_ms: f64,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub tokens_per_s: f64,
+    pub tokens_per_j: f64,
+    pub tokens: u64,
+    pub steals: u64,
+    pub completed: u64,
+}
+
+/// The seeded open-loop arrival stream: Poisson arrivals at
+/// [`RATE_PER_S`], heavy/light token skew by request index.
+fn tail_requests() -> Vec<ServeRequest> {
+    let mut prng = Prng::new(SEED);
+    let mut clock_ns = 0.0;
+    (0..REQUESTS)
+        .map(|i| {
+            clock_ns += prng.exponential(RATE_PER_S) * 1e9;
+            ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: if i % 8 < 2 { HEAVY_TOKENS } else { LIGHT_TOKENS },
+                arrival_ns: clock_ns,
+            }
+        })
+        .collect()
+}
+
+pub fn compute() -> Vec<TailPoint> {
+    let model = MllmConfig::fastvlm_0_6b();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload.output_tokens = HEAVY_TOKENS;
+    let policy = BatchPolicy { max_batch: MAX_BATCH, queue_capacity: 1024 };
+    let mut out = Vec::new();
+    for &packages in &PACKAGES {
+        for steal in [false, true] {
+            let mut srv =
+                ShardedServer::new(&model, &cfg, policy.clone(), packages, RoutePolicy::RoundRobin);
+            srv.set_work_stealing(steal);
+            // Drive the streaming session directly so steal events are
+            // observable (the batch wrapper discards the event stream).
+            let mut session = srv.open_serving();
+            for r in tail_requests() {
+                session.submit(r);
+            }
+            let events = session.drain();
+            let steals = events.iter().filter(|e| e.kind() == "stolen").count() as u64;
+            let outcome = session.finish();
+            assert_eq!(outcome.responses.len(), REQUESTS, "tail stream must fully drain");
+            assert!(outcome.shed.is_empty(), "queue depth 1024 must not shed 48 requests");
+
+            let mut ttft: Vec<f64> =
+                outcome.responses.iter().map(|r| r.queue_ns + r.ttft_ns).collect();
+            let mut tpot: Vec<f64> = outcome.responses.iter().map(|r| r.tpot_ns()).collect();
+            let mut latency: Vec<f64> =
+                outcome.responses.iter().map(|r| r.total_latency_ns()).collect();
+            let metrics = outcome.metrics;
+            out.push(TailPoint {
+                model: model.name.clone(),
+                packages,
+                steal,
+                p50_ttft_ms: percentile(&mut ttft, 50.0) / 1e6,
+                p95_ttft_ms: percentile(&mut ttft, 95.0) / 1e6,
+                p99_ttft_ms: percentile(&mut ttft, 99.0) / 1e6,
+                p50_tpot_ms: percentile(&mut tpot, 50.0) / 1e6,
+                p95_tpot_ms: percentile(&mut tpot, 95.0) / 1e6,
+                p99_tpot_ms: percentile(&mut tpot, 99.0) / 1e6,
+                p50_latency_ms: percentile(&mut latency, 50.0) / 1e6,
+                p95_latency_ms: percentile(&mut latency, 95.0) / 1e6,
+                p99_latency_ms: percentile(&mut latency, 99.0) / 1e6,
+                tokens_per_s: metrics.tokens_per_s(),
+                tokens_per_j: metrics.tokens_per_j(),
+                tokens: metrics.tokens,
+                steals,
+                completed: metrics.completed,
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Experiment {
+    let points = compute();
+    let mut t = Table::new(
+        "Serving tail latency — poisson:40 open-loop, 48 skewed requests, steal off vs on",
+        &["model", "pkgs", "steal", "p50 TTFT (ms)", "p99 TTFT (ms)", "p50 TPOT (ms)",
+          "p99 TPOT (ms)", "p50 lat (ms)", "p95 lat (ms)", "p99 lat (ms)", "tok/s", "tok/J",
+          "steals"],
+    );
+    let mut json_rows = Vec::new();
+    for p in &points {
+        t.row(vec![
+            p.model.clone(),
+            p.packages.to_string(),
+            if p.steal { "on" } else { "off" }.to_string(),
+            table::f(p.p50_ttft_ms, 1),
+            table::f(p.p99_ttft_ms, 1),
+            table::f(p.p50_tpot_ms, 2),
+            table::f(p.p99_tpot_ms, 2),
+            table::f(p.p50_latency_ms, 1),
+            table::f(p.p95_latency_ms, 1),
+            table::f(p.p99_latency_ms, 1),
+            table::f(p.tokens_per_s, 1),
+            table::f(p.tokens_per_j, 1),
+            p.steals.to_string(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", p.model.as_str().into()),
+            ("packages", p.packages.into()),
+            ("steal", Json::Bool(p.steal)),
+            ("p50_ttft_ms", p.p50_ttft_ms.into()),
+            ("p95_ttft_ms", p.p95_ttft_ms.into()),
+            ("p99_ttft_ms", p.p99_ttft_ms.into()),
+            ("p50_tpot_ms", p.p50_tpot_ms.into()),
+            ("p95_tpot_ms", p.p95_tpot_ms.into()),
+            ("p99_tpot_ms", p.p99_tpot_ms.into()),
+            ("p50_latency_ms", p.p50_latency_ms.into()),
+            ("p95_latency_ms", p.p95_latency_ms.into()),
+            ("p99_latency_ms", p.p99_latency_ms.into()),
+            ("tokens_per_s", p.tokens_per_s.into()),
+            ("tokens_per_j", p.tokens_per_j.into()),
+            ("tokens", (p.tokens as i64).into()),
+            ("steals", (p.steals as i64).into()),
+            ("completed", (p.completed as i64).into()),
+        ]));
+    }
+    Experiment {
+        id: "tail",
+        text: t.render(),
+        json: Json::obj(vec![
+            ("points", Json::Arr(json_rows)),
+            (
+                "claim",
+                Json::obj(vec![
+                    (
+                        "p99_latency",
+                        "work stealing strictly improves p99 at >= 4 packages".into(),
+                    ),
+                    ("tokens_per_j", "within 1% of steal-off (stealing relocates work)".into()),
+                    ("tokens", "bit-identical across steal modes".into()),
+                ]),
+            ),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point<'a>(pts: &'a [TailPoint], packages: usize, steal: bool) -> &'a TailPoint {
+        pts.iter().find(|p| p.packages == packages && p.steal == steal).unwrap()
+    }
+
+    #[test]
+    fn stealing_cuts_the_tail_without_repricing_tokens() {
+        let pts = compute();
+        assert_eq!(pts.len(), PACKAGES.len() * 2);
+        for &packages in &PACKAGES {
+            let (off, on) = (point(&pts, packages, false), point(&pts, packages, true));
+            assert_eq!(off.completed, REQUESTS as u64);
+            assert_eq!(on.completed, REQUESTS as u64);
+            // Stealing never changes what is generated, only where/when.
+            assert_eq!(on.tokens, off.tokens, "{packages} pkgs: token count moved");
+            assert!(
+                (on.tokens_per_j / off.tokens_per_j - 1.0).abs() < 0.01,
+                "{packages} pkgs: tok/J drifted {} vs {}",
+                on.tokens_per_j,
+                off.tokens_per_j
+            );
+            if packages == 1 {
+                assert_eq!(on.steals, 0, "one package cannot steal from itself");
+                assert_eq!(
+                    on.p99_latency_ms.to_bits(),
+                    off.p99_latency_ms.to_bits(),
+                    "stealing must be a bitwise no-op on one package"
+                );
+            }
+            if packages >= 4 {
+                assert!(on.steals > 0, "{packages} pkgs: skewed overload must trigger steals");
+                assert!(
+                    on.p99_latency_ms < off.p99_latency_ms,
+                    "{packages} pkgs: p99 {} (on) must strictly beat {} (off)",
+                    on.p99_latency_ms,
+                    off.p99_latency_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_stream_is_deterministic_and_skewed() {
+        let (a, b) = (tail_requests(), tail_requests());
+        assert_eq!(a.len(), REQUESTS);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ns, y.arrival_ns);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let heavy = a.iter().filter(|r| r.max_new_tokens == HEAVY_TOKENS).count();
+        assert_eq!(heavy, REQUESTS / 4, "2 of every 8 requests are heavy");
+        for w in a.windows(2) {
+            assert!(w[1].arrival_ns > w[0].arrival_ns, "arrivals must be strictly increasing");
+        }
+    }
+}

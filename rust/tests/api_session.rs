@@ -178,6 +178,43 @@ fn contract_sessions() -> Vec<(String, Session)> {
 }
 
 #[test]
+fn streaming_sessions_match_batch_serve_bit_for_bit() {
+    // `Backend::serve` is a provided drain-everything wrapper over
+    // `open_serving`; a manually driven session must serialize to the
+    // same canonical JSON on every deterministic backend. (Functional is
+    // excluded for byte-identity — wall-clock times — but still checked
+    // for token-event conservation below when artifacts exist.)
+    let pairs = contract_sessions().into_iter().zip(contract_sessions());
+    for ((name, mut batch), (_, mut streaming)) in pairs {
+        let reqs = batch.poisson_requests(7, 50.0, 6, 3);
+        let mut session = streaming.open_serving().unwrap();
+        for r in reqs.clone() {
+            session.submit(r);
+        }
+        let events = session.drain().unwrap();
+        let streamed = session.finish().unwrap();
+        // Event-count conservation holds on every backend.
+        let count = |kind: &str| events.iter().filter(|e| e.kind() == kind).count();
+        assert_eq!(
+            count("admitted") + count("rejected") + count("shed"),
+            6,
+            "{name}: every request needs exactly one admission decision"
+        );
+        assert_eq!(count("completed"), streamed.responses.len(), "{name}");
+        assert_eq!(count("token") as u64, streamed.metrics.tokens, "{name}");
+        if streaming.backend_kind() == BackendKind::Functional {
+            continue; // wall-clock: real but not byte-stable
+        }
+        let direct = batch.serve(reqs).unwrap();
+        assert_eq!(
+            outcome_json(&direct),
+            outcome_json(&streamed),
+            "{name}: streaming session drifted from the batch wrapper"
+        );
+    }
+}
+
+#[test]
 fn every_backend_passes_the_shared_serve_contract() {
     for (name, mut session) in contract_sessions() {
         // Synthesized through the session so prompts are sized for the

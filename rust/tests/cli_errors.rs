@@ -178,6 +178,94 @@ fn unknown_experiment_and_command_exit_2() {
 }
 
 #[test]
+fn malformed_arrival_exits_2() {
+    // The --arrival spec grammar is burst | poisson:<rps> | trace:<file>;
+    // every malformed spelling is a usage error, never a silent default.
+    for argv in [
+        ["serve", "--arrival", "fourier", "--requests", "1"].as_slice(),
+        ["serve", "--arrival", "poisson", "--requests", "1"].as_slice(),
+        ["serve", "--arrival", "poisson:", "--requests", "1"].as_slice(),
+        ["serve", "--arrival", "poisson:fast", "--requests", "1"].as_slice(),
+        ["serve", "--arrival", "poisson:-2", "--requests", "1"].as_slice(),
+        ["serve", "--arrival", "trace:", "--requests", "1"].as_slice(),
+        ["serve", "--arrival", "trace:/nonexistent/chime-trace.json", "--model", "tiny",
+         "--text", "8", "--out", "4"].as_slice(),
+        ["serve", "--arrival"].as_slice(), // value-less flag
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("arrival"), "{argv:?}: {err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+    // The unknown-process path names the accepted spellings.
+    let Some(out) = run_chime(&["serve", "--arrival", "uniform", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("poisson"), "{}", stderr_of(&out));
+    // --rate and --arrival conflict (rate is shorthand for poisson).
+    let Some(out) = run_chime(&["serve", "--arrival", "burst", "--rate", "4", "--requests", "1"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("shorthand"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn malformed_steal_exits_2() {
+    for argv in [
+        ["serve", "--steal", "maybe", "--requests", "1"].as_slice(),
+        ["serve", "--steal"].as_slice(), // value-less flag
+        // Stealing needs sibling packages: rejected on sequential backends.
+        ["serve", "--backend", "jetson", "--steal", "on", "--requests", "1"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("steal"), "{argv:?}: {err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+}
+
+#[test]
+fn arrival_and_steal_happy_paths_exit_0() {
+    // burst + steal on the sharded simulator.
+    let Some(out) = run_chime(&[
+        "serve", "--model", "tiny", "--text", "8", "--out", "4", "--arrival", "burst",
+        "--steal", "on", "--packages", "2", "--requests", "4", "--tokens", "3",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("steal on"), "{stdout}");
+    assert!(stdout.contains("work steals:"), "{stdout}");
+
+    // A trace file drives arrivals and per-request token budgets.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cli_errors_arrival_trace.json");
+    std::fs::write(&path, r#"[0, 0.0001, {"arrival_s": 0.0002, "tokens": 2}]"#).unwrap();
+    let trace = format!("trace:{}", path.display());
+    let Some(out) = run_chime(&[
+        "serve", "--model", "tiny", "--text", "8", "--out", "4", "--arrival", &trace,
+        "--tokens", "3",
+    ]) else {
+        return;
+    };
+    std::fs::remove_file(&path).ok();
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    // 3 trace entries: 2 x 3 tokens + 1 x 2 tokens = 8 generated tokens.
+    assert!(String::from_utf8_lossy(&out.stdout).contains("8 tokens"), "{:?}", out.stdout);
+}
+
+#[test]
 fn unknown_memory_fidelity_exits_2_with_hint() {
     for argv in [
         ["simulate", "--model", "tiny", "--memory", "cyccle"].as_slice(),

@@ -337,6 +337,175 @@ fn golden_memcheck_fidelity_divergence() {
 }
 
 #[test]
+fn golden_tail_work_stealing() {
+    // Acceptance gate for the streaming redesign: under the seeded
+    // open-loop Poisson process with skewed token budgets, cross-package
+    // work stealing (1) is a bitwise no-op at 1 package, (2) strictly
+    // improves p99 total latency at >= 4 packages, (3) never changes the
+    // token count, and (4) leaves tok/J within 1% of steal-off.
+    let e = snapshot(results::tail::run);
+    let points = e.json.get("points").as_arr().expect("tail points");
+    assert_eq!(points.len(), results::tail::PACKAGES.len() * 2, "packages x steal grid");
+    let point = |packages: i64, steal: bool| {
+        points
+            .iter()
+            .find(|p| {
+                p.get("packages").as_i64() == Some(packages)
+                    && p.get("steal").as_bool() == Some(steal)
+            })
+            .unwrap_or_else(|| panic!("missing tail point ({packages}, {steal})"))
+    };
+    for &packages in &results::tail::PACKAGES {
+        let (off, on) = (point(packages as i64, false), point(packages as i64, true));
+        for p in [off, on] {
+            assert_eq!(
+                p.get("completed").as_i64(),
+                Some(results::tail::REQUESTS as i64),
+                "{packages} pkgs: tail stream must fully drain"
+            );
+            // Percentile sanity: p50 <= p95 <= p99 on every metric family.
+            for fam in ["ttft", "tpot", "latency"] {
+                let v = |q: &str| p.get(&format!("{q}_{fam}_ms")).as_f64().unwrap();
+                assert!(v("p50") <= v("p95") && v("p95") <= v("p99"), "{packages}/{fam}");
+            }
+        }
+        assert_eq!(
+            on.get("tokens").as_i64(),
+            off.get("tokens").as_i64(),
+            "{packages} pkgs: stealing must not change token output"
+        );
+        let (tj_off, tj_on) = (
+            off.get("tokens_per_j").as_f64().unwrap(),
+            on.get("tokens_per_j").as_f64().unwrap(),
+        );
+        assert!(
+            (tj_on / tj_off - 1.0).abs() < 0.01,
+            "{packages} pkgs: tok/J drifted {tj_on} vs {tj_off}"
+        );
+        let (p99_off, p99_on) = (
+            off.get("p99_latency_ms").as_f64().unwrap(),
+            on.get("p99_latency_ms").as_f64().unwrap(),
+        );
+        match packages {
+            1 => {
+                assert_eq!(on.get("steals").as_i64(), Some(0), "no sibling to steal from");
+                assert_eq!(p99_on, p99_off, "1 pkg: stealing must be an exact no-op");
+            }
+            2 => assert!(
+                p99_on <= p99_off * 1.02,
+                "2 pkgs: stealing may not degrade p99 ({p99_on} vs {p99_off})"
+            ),
+            _ => {
+                assert!(on.get("steals").as_i64().unwrap() > 0, "{packages} pkgs: no steals");
+                assert!(
+                    p99_on < p99_off,
+                    "{packages} pkgs: p99 {p99_on} (on) must strictly beat {p99_off} (off)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_serve_outcome_wrapper_bit_identity() {
+    // Locks the api_redesign acceptance criterion: the batch
+    // `Backend::serve(Vec<_>)` is a wrapper over the streaming protocol,
+    // and its ServeOutcome serializes to byte-identical canonical JSON on
+    // the sim, dram-only, and 2-package sharded paths — both against a
+    // manually driven streaming session (asserted inside the runner) and
+    // against the committed snapshot (CHIME_UPDATE_GOLDEN flow).
+    use chime::api::{BackendKind, ServeRequest, Session};
+    use chime::coordinator::ServeOutcome;
+    use chime::util::Json;
+
+    fn outcome_json(out: &ServeOutcome) -> Json {
+        let rows: Vec<Json> = out
+            .responses
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", (r.id as i64).into()),
+                    ("tokens", r.tokens.len().into()),
+                    ("queue_ns", r.queue_ns.into()),
+                    ("ttft_ns", r.ttft_ns.into()),
+                    ("service_ns", r.service_ns.into()),
+                    ("energy_j", r.energy_j.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("responses", Json::Arr(rows)),
+            ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
+            ("completed", (out.metrics.completed as i64).into()),
+            ("rejected", (out.metrics.rejected as i64).into()),
+            ("tokens", (out.metrics.tokens as i64).into()),
+        ])
+    }
+
+    // Mixed stream: staggered arrivals, a zero-token request, skewed
+    // budgets — every admission path the wrapper must reproduce.
+    fn mixed_requests() -> Vec<ServeRequest> {
+        let budgets = [4usize, 0, 6, 2, 4, 3, 5, 1];
+        budgets
+            .iter()
+            .enumerate()
+            .map(|(i, &tokens)| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: tokens,
+                arrival_ns: i as f64 * 4e4,
+            })
+            .collect()
+    }
+
+    fn build(kind: BackendKind, packages: usize) -> Session {
+        Session::builder()
+            .model("tiny")
+            .image_size(64)
+            .text_tokens(8)
+            .output_tokens(8)
+            .backend(kind)
+            .packages(packages)
+            .build()
+            .unwrap()
+    }
+
+    fn run() -> Experiment {
+        let paths: [(&str, BackendKind, usize); 3] = [
+            ("sim", BackendKind::Sim, 1),
+            ("dram_only", BackendKind::DramOnly, 1),
+            ("sharded2", BackendKind::Sharded, 2),
+        ];
+        let mut entries = Vec::new();
+        for (key, kind, packages) in paths {
+            let mut batch = build(kind, packages);
+            let out = batch.serve(mixed_requests()).unwrap();
+            // The streaming session, driven by hand, must serialize
+            // byte-identically to the batch wrapper.
+            let mut streaming = build(kind, packages);
+            let mut session = streaming.open_serving().unwrap();
+            for r in mixed_requests() {
+                session.submit(r);
+            }
+            let streamed = session.finish().unwrap();
+            assert_eq!(
+                outcome_json(&out).pretty(),
+                outcome_json(&streamed).pretty(),
+                "{key}: streaming session drifted from the batch wrapper"
+            );
+            entries.push((key, outcome_json(&out)));
+        }
+        Experiment {
+            id: "serve_outcome",
+            text: "canonical ServeOutcome for sim / dram-only / 2-package sharded\n".to_string(),
+            json: Json::obj(entries),
+        }
+    }
+    snapshot(run);
+}
+
+#[test]
 fn golden_serving_deterministic_under_fixed_seeds() {
     // The Prng-seeded serving path must be byte-stable too: same seed,
     // same model, same policy -> identical responses and canonical JSON.

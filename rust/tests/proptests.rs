@@ -536,6 +536,178 @@ fn prop_sharded_serving_conserves_and_orders() {
 }
 
 #[test]
+fn prop_streaming_serve_is_conserving_causal_and_steal_token_safe() {
+    // Streaming-protocol invariants, per random case and for BOTH steal
+    // modes: (1) event-count conservation — every submitted request gets
+    // exactly one admission decision (Admitted xor Rejected xor Shed),
+    // admitted requests complete exactly once, and Token events number
+    // exactly max_new_tokens; (2) causal order — no Token before
+    // FirstToken, sequential token indices, no event before the request's
+    // arrival; (3) `--steal on` never changes the total tokens emitted
+    // (it relocates queued work, it does not re-price or re-count it).
+    use chime::config::{ChimeConfig, WorkloadConfig};
+    use chime::coordinator::{
+        BatchPolicy, RoutePolicy, ServeEvent, ServeRequest, ShardedServer,
+    };
+    use std::collections::BTreeMap;
+
+    let model = MllmConfig::tiny();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+
+    #[derive(Default)]
+    struct Lifecycle {
+        admitted: u32,
+        rejected: u32,
+        shed: u32,
+        first: u32,
+        tokens: u32,
+        completed: u32,
+    }
+
+    check("streaming conservation + causality + steal token-safety", |prng| {
+        let packages = prng.range(1, 4);
+        let route = if prng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+        let max_batch = prng.range(1, 4);
+        let n = prng.range(1, 10);
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: prng.range(0, 6),
+                // Occasionally unschedulable (exercises the Shed path).
+                arrival_ns: if prng.range(0, 12) == 0 {
+                    f64::NAN
+                } else {
+                    prng.uniform(0.0, 5e8)
+                },
+            })
+            .collect();
+
+        let run = |policy: &BatchPolicy, steal: bool| -> (Vec<ServeEvent>, usize, usize, u64) {
+            let mut srv = ShardedServer::new(&model, &cfg, policy.clone(), packages, route);
+            srv.set_work_stealing(steal);
+            let mut session = srv.open_serving();
+            let mut events = Vec::new();
+            for r in requests.clone() {
+                events.extend(session.submit(r));
+            }
+            events.extend(session.drain());
+            let out = session.finish();
+            (events, out.responses.len(), out.shed.len(), out.metrics.tokens)
+        };
+
+        // Token safety is compared without admission backpressure: with
+        // tight queues, stealing legitimately shifts queue occupancy over
+        // time and with it which requests clear admission, so emitted
+        // tokens are only comparable when nothing can be rejected.
+        let ample = BatchPolicy { max_batch, queue_capacity: n.max(1) };
+        let (events_off, done_off, shed_off, tokens_off) = run(&ample, false);
+        let (events_on, done_on, shed_on, tokens_on) = run(&ample, true);
+        // (3) steal token-safety (equality, which implies "never more").
+        if tokens_on != tokens_off {
+            return Err(format!("steal changed tokens: {tokens_on} vs {tokens_off}"));
+        }
+        if done_on != done_off || shed_on != shed_off {
+            return Err("steal changed admission outcomes without backpressure".into());
+        }
+        if done_on + shed_on != n || done_off + shed_off != n {
+            return Err("outcome lost requests".into());
+        }
+
+        // A separate tight-queue run exercises the Rejected path; its
+        // event stream must satisfy the same lifecycle contract.
+        let tight = BatchPolicy { max_batch, queue_capacity: prng.range(1, 4) };
+        let steal_tight = prng.bool();
+        let (events_tight, done_tight, shed_tight, _) = run(&tight, steal_tight);
+        if done_tight + shed_tight != n {
+            return Err("tight-queue outcome lost requests".into());
+        }
+
+        for (mode, events) in
+            [("off", &events_off), ("on", &events_on), ("tight", &events_tight)]
+        {
+            let mut per: BTreeMap<u64, Lifecycle> = BTreeMap::new();
+            for ev in events.iter() {
+                let id = ev.id();
+                let arrival = requests[id as usize].arrival_ns;
+                if let Some(t) = ev.time_ns() {
+                    if arrival.is_finite() && t < arrival {
+                        return Err(format!("{mode}: req {id} event at {t} before arrival"));
+                    }
+                }
+                let st = per.entry(id).or_default();
+                match ev {
+                    ServeEvent::Admitted { .. } => st.admitted += 1,
+                    ServeEvent::Rejected { .. } => st.rejected += 1,
+                    ServeEvent::Shed { .. } => st.shed += 1,
+                    ServeEvent::FirstToken { .. } => {
+                        if st.admitted != 1 {
+                            return Err(format!("{mode}: req {id} first-token before admission"));
+                        }
+                        st.first += 1;
+                    }
+                    ServeEvent::Token { index, .. } => {
+                        if st.first != 1 {
+                            return Err(format!("{mode}: req {id} token before first-token"));
+                        }
+                        if *index != st.tokens as usize {
+                            return Err(format!(
+                                "{mode}: req {id} token index {index}, expected {}",
+                                st.tokens
+                            ));
+                        }
+                        st.tokens += 1;
+                    }
+                    ServeEvent::Completed { .. } => {
+                        if st.admitted != 1 {
+                            return Err(format!("{mode}: req {id} completed without admission"));
+                        }
+                        st.completed += 1;
+                    }
+                    ServeEvent::Stolen { from, to, .. } => {
+                        if from == to {
+                            return Err(format!("{mode}: req {id} stolen onto its own package"));
+                        }
+                        if st.admitted != 1 {
+                            return Err(format!("{mode}: req {id} stolen before admission"));
+                        }
+                    }
+                }
+            }
+            // Event-count conservation over the whole stream.
+            let decisions: u32 = per.values().map(|s| s.admitted + s.rejected + s.shed).sum();
+            if decisions != n as u32 {
+                return Err(format!("{mode}: {decisions} admission decisions for {n} requests"));
+            }
+            for (id, st) in &per {
+                if st.admitted + st.rejected + st.shed != 1 {
+                    return Err(format!("{mode}: req {id} has multiple admission decisions"));
+                }
+                if st.completed != st.admitted {
+                    return Err(format!("{mode}: req {id} admitted but not completed"));
+                }
+                if st.admitted == 1 {
+                    let budget = requests[*id as usize].max_new_tokens as u32;
+                    if st.tokens != budget {
+                        return Err(format!(
+                            "{mode}: req {id} emitted {} tokens, budget {budget}",
+                            st.tokens
+                        ));
+                    }
+                    let expect_first = u32::from(budget > 0);
+                    if st.first != expect_first {
+                        return Err(format!("{mode}: req {id} first-token count {}", st.first));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cycle_fidelity_bounds_first_order_with_identical_accounting() {
     // Fidelity cross-validation invariants, per random op sequence:
     // (1) lower bound — the cycle-accurate stream/write time is >= the
