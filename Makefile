@@ -8,10 +8,14 @@
 #   make golden      refresh the committed golden JSON snapshots
 #   make memcheck    cross-validate first-order vs cycle-accurate memory
 #   make tail        streaming-serve smoke (poisson arrivals + stealing, 2 fidelities)
+#   make bench-snapshot  write the simulator perf snapshot to BENCH_$(PR).json
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
 
-.PHONY: artifacts build test pytest results golden memcheck tail api-smoke docs
+# PR number stamped into the bench snapshot filename (results::perf::PR).
+PR := 006
+
+.PHONY: artifacts build test pytest results golden memcheck tail bench-snapshot api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -46,6 +50,13 @@ tail: build
 	cd rust && cargo run --release -- serve --arrival poisson:8 --steal on \
 		--packages 4 --requests 8 --tokens 16 --model tiny --text 8 --out 4 \
 		--memory cycle
+
+# Simulator wall-clock benchmark (DESIGN.md §11): events/s and simulated
+# tok/s per backend × memory fidelity over the Table II zoo, written as
+# canonical JSON. Wall numbers are machine-dependent — the snapshot is a
+# per-PR trajectory (EXPERIMENTS.md), not a golden file.
+bench-snapshot: build
+	cd rust && cargo run --release -- bench --snapshot ../BENCH_$(PR).json
 
 # Every example is a thin shell over chime::api::Session; running them
 # end to end smoke-tests the whole public API surface.

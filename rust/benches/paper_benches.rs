@@ -23,6 +23,9 @@ fn main() {
         ("scaling_packages", results::scaling::run),
         ("memcheck_fidelity", results::memcheck::run),
         ("tail_work_stealing", results::tail::run),
+        // Quick config (tiny model): the full matrix is `chime bench`;
+        // timing the timer at paper scale would double cargo-bench time.
+        ("perf_simulator_quick", || results::perf::run_with(&results::perf::BenchConfig::quick())),
     ] {
         let e = runner();
         println!("{}", e.text);

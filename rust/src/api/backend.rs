@@ -564,7 +564,9 @@ mod tests {
         assert_eq!(out.responses.len(), 2);
         assert_eq!(out.shed.len(), 1);
         assert_eq!(out.shed[0].id, 1);
-        assert_eq!(out.metrics.rejected, 1);
+        assert_eq!(out.metrics.shed, 1, "non-finite arrival counts as shed, not rejected");
+        assert_eq!(out.metrics.rejected, 0);
+        assert_eq!(out.metrics.offered(), 3);
     }
 
     #[test]

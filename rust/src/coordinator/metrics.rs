@@ -11,11 +11,16 @@ pub struct ServingMetrics {
     /// Requests accepted past admission (== `completed` once the engine
     /// drains; they differ only while requests are in flight).
     pub admitted: u64,
-    /// Requests shed at admission (queue full / closed). Conservation:
-    /// every offered request is either admitted or rejected, so
-    /// `admitted + rejected == offered` and, at drain,
-    /// `completed + rejected == offered`.
+    /// Requests rejected at admission by backpressure (queue full /
+    /// closed). Conservation: every offered request is admitted, rejected,
+    /// or shed, so `admitted + rejected + shed == offered` and, at drain,
+    /// `completed + rejected + shed == offered`.
     pub rejected: u64,
+    /// Requests shed before admission (malformed, e.g. a non-finite
+    /// arrival time) — kept distinct from `rejected` so backpressure and
+    /// input-validation failures are independently countable, matching
+    /// the `ServeEvent::{Rejected, Shed}` distinction.
+    pub shed: u64,
     pub tokens: u64,
     latency_ns: Vec<f64>,
     ttft_ns: Vec<f64>,
@@ -55,14 +60,19 @@ impl ServingMetrics {
         self.admitted += 1;
     }
 
-    /// Count a request shed at admission (backpressure / shutdown).
+    /// Count a request rejected at admission (backpressure / shutdown).
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
     }
 
-    /// Total requests offered to the engine (admitted or shed).
+    /// Count a request shed before admission (malformed input).
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Total requests offered to the engine (admitted, rejected, or shed).
     pub fn offered(&self) -> u64 {
-        self.admitted + self.rejected
+        self.admitted + self.rejected + self.shed
     }
 
     pub fn span_ns(&self) -> f64 {
@@ -146,10 +156,14 @@ mod tests {
         for _ in 0..3 {
             m.record_rejected();
         }
+        for _ in 0..2 {
+            m.record_shed();
+        }
         assert_eq!(m.admitted, 5);
         assert_eq!(m.rejected, 3);
-        assert_eq!(m.offered(), 8);
-        assert_eq!(m.completed + m.rejected, m.offered());
+        assert_eq!(m.shed, 2);
+        assert_eq!(m.offered(), 10);
+        assert_eq!(m.completed + m.rejected + m.shed, m.offered());
     }
 
     #[test]

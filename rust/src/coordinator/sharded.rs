@@ -318,6 +318,72 @@ impl PackageState {
     }
 }
 
+/// Totally ordered f64 key for the event index (`total_cmp`; package
+/// event times are never NaN — arrivals are finite by the submission
+/// guard and virtual clocks only advance by finite spans).
+#[derive(Clone, Copy, PartialEq)]
+struct EventKey(f64);
+
+impl Eq for EventKey {}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// §Perf: indexed earliest-event selection over the packages. The tick
+/// loop used to linear-scan every package's `next_event_ns` on every
+/// event (O(P) per tick); the index keeps `(time, package)` keys in a
+/// `BTreeSet` so selection is O(log P), with the same tie-break as the
+/// legacy scan — lowest package index among equal minima (locked by
+/// `indexed_event_selection_matches_the_legacy_linear_scan`). The
+/// session refreshes a package's key after every mutation that can move
+/// its next event: an arrival admit, a flow-shop step, or a steal.
+struct EventIndex {
+    ordered: BTreeSet<(EventKey, usize)>,
+    key: Vec<f64>,
+}
+
+impl EventIndex {
+    fn new(packages: &[PackageState]) -> EventIndex {
+        let mut index =
+            EventIndex { ordered: BTreeSet::new(), key: Vec::with_capacity(packages.len()) };
+        for (i, p) in packages.iter().enumerate() {
+            let t = p.next_event_ns();
+            index.key.push(t);
+            index.ordered.insert((EventKey(t), i));
+        }
+        index
+    }
+
+    /// Re-read package `i`'s next event time and reposition its key.
+    fn refresh(&mut self, i: usize, packages: &[PackageState]) {
+        let t = packages[i].next_event_ns();
+        if t.total_cmp(&self.key[i]).is_eq() {
+            return;
+        }
+        self.ordered.remove(&(EventKey(self.key[i]), i));
+        self.key[i] = t;
+        self.ordered.insert((EventKey(t), i));
+    }
+
+    /// The earliest package event: `(time, package)`. Time is INFINITY
+    /// when every package is idle with nothing queued.
+    fn earliest(&self) -> (f64, usize) {
+        match self.ordered.iter().next() {
+            Some(&(EventKey(t), i)) => (t, i),
+            None => (f64::INFINITY, 0),
+        }
+    }
+}
+
 /// N package replicas behind one admission/routing front door, serving a
 /// request stream in virtual time.
 pub struct ShardedServer {
@@ -327,6 +393,9 @@ pub struct ShardedServer {
     rr_next: usize,
     /// Cross-package work stealing (off by default; `set_work_stealing`).
     steal: bool,
+    /// Parallel per-package drain for the batch path (off by default;
+    /// `set_parallel`). Bit-identical to sequential by construction.
+    parallel: bool,
     /// Resolved model/config kept for the `api::Backend` one-shot
     /// inference surface (`run_inference_with`).
     model: MllmConfig,
@@ -395,6 +464,7 @@ impl ShardedServer {
             packages: states,
             rr_next: 0,
             steal: false,
+            parallel: false,
             model: model.clone(),
             cfg: cfg.clone(),
             dram_only,
@@ -416,6 +486,24 @@ impl ShardedServer {
     /// Whether work stealing is enabled.
     pub fn work_stealing(&self) -> bool {
         self.steal
+    }
+
+    /// Enable/disable parallel per-package simulation for batch serving
+    /// (`serve` / `ShardedSession::finish`): once no arrivals are pending
+    /// and stealing is off, the packages are independent simulators, so
+    /// each drains on its own scoped thread and the completion streams
+    /// are merged back in exact sequential event-loop order — the outcome
+    /// is **bit-identical** to the sequential path (DESIGN.md §11; locked
+    /// by `prop_parallel_drain_is_bit_identical_to_sequential`). With
+    /// stealing enabled (cross-package coupling at every event) the
+    /// sequential path is used regardless of this flag.
+    pub fn set_parallel(&mut self, on: bool) {
+        self.parallel = on;
+    }
+
+    /// Whether parallel per-package draining is enabled.
+    pub fn parallel_enabled(&self) -> bool {
+        self.parallel
     }
 
     /// The model this deployment serves.
@@ -506,8 +594,10 @@ impl ShardedServer {
             p.reset_session();
         }
         self.rr_next = 0;
+        let index = EventIndex::new(&self.packages);
         ShardedSession {
             srv: self,
+            index,
             pending: PendingQueue::new(),
             seq: 0,
             seen: BTreeSet::new(),
@@ -543,6 +633,9 @@ impl ShardedServer {
 /// advance is followed by a steal pass at that event's timestamp.
 pub struct ShardedSession<'a> {
     srv: &'a mut ShardedServer,
+    /// Indexed earliest-event selection over the packages (O(log P) per
+    /// tick instead of the legacy O(P) linear scan).
+    index: EventIndex,
     pending: PendingQueue,
     /// Submission counter: the arrival-order tiebreak (matches the
     /// stable sort of the pre-streaming batch path).
@@ -579,17 +672,10 @@ impl ShardedSession<'_> {
     /// produced. An empty vector means the session is idle (drained).
     pub fn tick(&mut self) -> Vec<ServeEvent> {
         // The two candidate events: the next arrival, and the package
-        // whose next tick starts earliest in virtual time.
+        // whose next tick starts earliest in virtual time (indexed; same
+        // lowest-index tie-break as the legacy linear scan).
         let t_arr = self.pending.peek_arrival_ns().unwrap_or(f64::INFINITY);
-        let mut t_pkg = f64::INFINITY;
-        let mut who = 0usize;
-        for (i, p) in self.srv.packages.iter().enumerate() {
-            let t = p.next_event_ns();
-            if t < t_pkg {
-                t_pkg = t;
-                who = i;
-            }
-        }
+        let (t_pkg, who) = self.index.earliest();
         if t_arr.is_infinite() && t_pkg.is_infinite() {
             return Vec::new(); // drained
         }
@@ -605,6 +691,7 @@ impl ShardedSession<'_> {
         } else {
             now_ns = t_pkg;
             events = self.srv.packages[who].step();
+            self.index.refresh(who, &self.srv.packages);
             for ev in &events {
                 if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
                     self.metrics.record(*arrival_ns, response);
@@ -634,9 +721,81 @@ impl ShardedSession<'_> {
     /// outcome: completions event-ordered by completion timestamp
     /// (arrival + queue + service; ties break by request id), shed
     /// requests in shed order, and merged metrics.
+    ///
+    /// With [`ShardedServer::set_parallel`] on (and stealing off), the
+    /// remaining per-package work drains on scoped threads and the
+    /// completion streams are merged back in sequential event-loop order
+    /// — bit-identical to the sequential drain.
     pub fn finish(mut self) -> ServeOutcome {
+        if self.srv.parallel && !self.srv.steal && self.srv.packages.len() > 1 {
+            self.drain_parallel();
+        }
         self.drain();
         self.take_outcome()
+    }
+
+    /// Drain every package to idle in parallel — one scoped thread per
+    /// package — then replay the completion stream in the exact order
+    /// the sequential event loop would have produced it.
+    ///
+    /// Safe only once no arrivals are pending and stealing is off: from
+    /// that point the packages are fully independent simulators, and the
+    /// sequential loop reduces to a deterministic merge of their tick
+    /// streams ordered by `(tick start, package index)` — each package's
+    /// tick times are non-decreasing, so sorting the union of the streams
+    /// by that key reproduces the loop's first-strict-minimum selection.
+    /// `metrics.record` is replayed in that merge order because the float
+    /// accumulations it drives (energy sum, Welford service summary) are
+    /// order-dependent; replaying out of order would still be correct
+    /// arithmetic but not bit-identical.
+    fn drain_parallel(&mut self) {
+        // Arrivals interleave with package ticks through routing and
+        // shared admission state: run them on the sequential path first.
+        while self.pending.peek_arrival_ns().is_some() {
+            self.tick();
+        }
+        let mut streams: Vec<Vec<(f64, f64, ServeResponse)>> =
+            Vec::with_capacity(self.srv.packages.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .srv
+                .packages
+                .iter_mut()
+                .map(|p| {
+                    scope.spawn(move || {
+                        let mut comps = Vec::new();
+                        loop {
+                            let tick_ns = p.next_event_ns();
+                            if !tick_ns.is_finite() {
+                                return comps;
+                            }
+                            for ev in p.step() {
+                                if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
+                                    comps.push((tick_ns, arrival_ns, response));
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                streams.push(h.join().expect("package drain thread panicked"));
+            }
+        });
+        let mut merged: Vec<(f64, usize, usize, f64, ServeResponse)> = Vec::new();
+        for (pkg, stream) in streams.into_iter().enumerate() {
+            for (seq, (tick_ns, arrival_ns, resp)) in stream.into_iter().enumerate() {
+                merged.push((tick_ns, pkg, seq, arrival_ns, resp));
+            }
+        }
+        merged.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        for (_, _, _, arrival_ns, resp) in merged {
+            self.metrics.record(arrival_ns, &resp);
+            self.done.push((arrival_ns, resp));
+        }
+        for i in 0..self.srv.packages.len() {
+            self.index.refresh(i, &self.srv.packages);
+        }
     }
 
     /// Per-event admission decision, replicating the batch path exactly:
@@ -676,6 +835,7 @@ impl ShardedSession<'_> {
             match self.srv.packages[pkg].admit(req.take().unwrap()) {
                 Ok(()) => {
                     self.metrics.record_admitted();
+                    self.index.refresh(pkg, &self.srv.packages);
                     return vec![ServeEvent::Admitted {
                         id,
                         time_ns: arrival_ns,
@@ -724,6 +884,8 @@ impl ShardedSession<'_> {
             let Some(req) = pkgs[victim].steal_back(now_ns) else { break };
             let id = req.id;
             pkgs[thief].receive_stolen(req, now_ns);
+            self.index.refresh(victim, &self.srv.packages);
+            self.index.refresh(thief, &self.srv.packages);
             events.push(ServeEvent::Stolen { id, from: victim, to: thief, time_ns: now_ns });
         }
         events
@@ -932,7 +1094,9 @@ mod tests {
         let out = srv.serve(reqs);
         assert_eq!(out.responses.len(), 1);
         assert_eq!(out.shed.len(), 2);
-        assert_eq!(out.metrics.rejected, 2);
+        assert_eq!(out.metrics.shed, 2, "non-finite arrivals count as shed");
+        assert_eq!(out.metrics.rejected, 0, "no backpressure rejections here");
+        assert_eq!(out.metrics.offered(), 3);
         let mut shed_ids: Vec<u64> = out.shed.iter().map(|r| r.id).collect();
         shed_ids.sort_unstable();
         assert_eq!(shed_ids, vec![1, 2]);
@@ -1081,7 +1245,35 @@ mod tests {
         assert_eq!(events[0].kind(), "shed");
         let out = session.finish();
         assert_eq!(out.shed.len(), 1);
-        assert_eq!(out.metrics.rejected, 1);
+        assert_eq!(out.metrics.shed, 1);
+        assert_eq!(out.metrics.rejected, 0);
+    }
+
+    #[test]
+    fn rejected_and_shed_are_counted_independently() {
+        // One NaN arrival (shed at submission) plus a burst that overflows
+        // a 1-deep queue (rejected by backpressure): the two counters must
+        // move independently and still conserve the offered load.
+        let (model, cfg) = tiny_cfg();
+        let policy = BatchPolicy { max_batch: 1, queue_capacity: 1 };
+        let mut srv = ShardedServer::new(&model, &cfg, policy, 1, RoutePolicy::RoundRobin);
+        let mut reqs = burst(&[4; 5]);
+        reqs[4].arrival_ns = f64::NAN;
+        let out = srv.serve(reqs);
+        assert_eq!(out.metrics.shed, 1, "exactly the NaN arrival is shed");
+        assert!(out.metrics.rejected > 0, "the t=0 burst must overflow queue depth 1");
+        assert_eq!(out.metrics.offered(), 5);
+        assert_eq!(
+            out.metrics.completed + out.metrics.rejected + out.metrics.shed,
+            5,
+            "conservation across both counters"
+        );
+        // Both outcomes hand the request back to the caller.
+        assert_eq!(
+            out.shed.len() as u64,
+            out.metrics.rejected + out.metrics.shed,
+            "every rejected or shed request is returned"
+        );
     }
 
     #[test]
@@ -1143,6 +1335,111 @@ mod tests {
             assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
             assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits());
         }
+    }
+
+    #[test]
+    fn indexed_event_selection_matches_the_legacy_linear_scan() {
+        // The BTreeSet event index replaced a per-tick linear scan whose
+        // tie-break was "first strict minimum" (lowest package index among
+        // equal times). Drive a skewed stream tick by tick, with and
+        // without stealing, and assert the index picks exactly what the
+        // legacy scan would have picked before every tick.
+        let (model, cfg) = tiny_cfg();
+        for steal in [false, true] {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 64 },
+                3,
+                RoutePolicy::RoundRobin,
+            );
+            srv.set_work_stealing(steal);
+            let mut session = srv.open_serving();
+            let mut reqs = burst(&[8, 1, 5, 2, 7, 1, 3, 4]);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ns = i as f64 * 2e4;
+            }
+            for r in reqs {
+                session.submit(r);
+            }
+            let mut ticks = 0u32;
+            loop {
+                // Legacy reference: linear scan, first strict minimum.
+                let mut t_pkg = f64::INFINITY;
+                let mut who = 0usize;
+                for (i, p) in session.srv.packages.iter().enumerate() {
+                    let t = p.next_event_ns();
+                    if t < t_pkg {
+                        t_pkg = t;
+                        who = i;
+                    }
+                }
+                let (t_idx, who_idx) = session.index.earliest();
+                assert_eq!(
+                    t_idx.to_bits(),
+                    t_pkg.to_bits(),
+                    "steal {steal} tick {ticks}: index time drifted from the scan"
+                );
+                if t_pkg.is_finite() {
+                    assert_eq!(
+                        who_idx, who,
+                        "steal {steal} tick {ticks}: index tie-break drifted from the scan"
+                    );
+                }
+                if session.tick().is_empty() {
+                    break;
+                }
+                ticks += 1;
+            }
+            assert!(ticks > 10, "steal {steal}: the stream must exercise many ticks");
+            assert_eq!(session.finish().responses.len(), 8);
+        }
+    }
+
+    #[test]
+    fn parallel_drain_is_bit_identical_to_sequential() {
+        // With stealing off, the parallel per-package drain must replay
+        // the completion stream in exact sequential order — every float
+        // in every response and in the merged metrics matches bitwise.
+        let (model, cfg) = tiny_cfg();
+        let skew = [8usize, 1, 5, 0, 7, 2, 3, 6, 4, 1, 2, 8];
+        let run = |parallel: bool| {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 64 },
+                4,
+                RoutePolicy::LeastLoaded,
+            );
+            srv.set_parallel(parallel);
+            let mut reqs = burst(&skew);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ns = i as f64 * 3e4;
+            }
+            srv.serve(reqs)
+        };
+        let (seq, par) = (run(false), run(true));
+        assert_eq!(seq.responses.len(), par.responses.len());
+        for (a, b) in seq.responses.iter().zip(&par.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits());
+            assert_eq!(a.ttft_ns.to_bits(), b.ttft_ns.to_bits());
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+        assert_eq!(seq.metrics.completed, par.metrics.completed);
+        assert_eq!(seq.metrics.tokens, par.metrics.tokens);
+        assert_eq!(
+            seq.metrics.energy_j.to_bits(),
+            par.metrics.energy_j.to_bits(),
+            "order-dependent energy accumulation must replay identically"
+        );
+        assert_eq!(
+            seq.metrics.service.stddev().to_bits(),
+            par.metrics.service.stddev().to_bits(),
+            "order-dependent Welford summary must replay identically"
+        );
+        assert_eq!(seq.metrics.span_ns().to_bits(), par.metrics.span_ns().to_bits());
     }
 
     #[test]

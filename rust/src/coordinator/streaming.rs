@@ -242,7 +242,7 @@ pub(crate) fn guard_submission(
         req.id
     );
     if !req.arrival_ns.is_finite() {
-        metrics.record_rejected();
+        metrics.record_shed();
         let ev = ServeEvent::Shed { request: req.clone() };
         shed.push(req);
         return Err(vec![ev]);

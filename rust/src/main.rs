@@ -10,6 +10,8 @@
 //!   sweep     — sequence-length sweep (Fig 8)
 //!   results   — regenerate paper tables/figures (--fig N | --all)
 //!   memcheck  — cross-validate first-order vs cycle-accurate memory
+//!   bench     — simulator wall-clock performance (events/s) per backend
+//!               × memory fidelity; --snapshot writes BENCH_<pr>.json
 //!   parity    — verify the PJRT functional path against the AOT oracle
 //!
 //! The simulator subcommands accept `--memory first-order|cycle` to pick
@@ -49,13 +51,14 @@ fn run(args: &Args) -> Result<(), ChimeError> {
         Some("sweep") => cmd_sweep(args),
         Some("results") => cmd_results(args),
         Some("memcheck") => cmd_memcheck(args),
+        Some("bench") => cmd_bench(args),
         Some("parity") => cmd_parity(args),
         Some(other) => {
             usage();
             Err(ChimeError::Unknown {
                 what: "command",
                 name: other.to_string(),
-                hint: Some("info simulate serve sweep results memcheck parity".to_string()),
+                hint: Some("info simulate serve sweep results memcheck bench parity".to_string()),
             })
         }
         None => {
@@ -81,9 +84,11 @@ COMMANDS:
             [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
   sweep     [--model NAME] [--json] [--memory first-order|cycle]
             Fig 8 sequence-length sweep
-  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck|tail] [--all]
+  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck|tail|perf] [--all]
             [--json] [--baselines]
   memcheck  [--json]                          first-order vs cycle divergence
+  bench     [--json] [--quick] [--snapshot PATH] [--requests N] [--tokens N]
+            [--iters N]                       simulator events/s benchmark
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
 MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
@@ -459,7 +464,8 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
                 "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}{}, \
-                 {} arrivals, steal {}, {} memory): {} reqs completed, {} shed, {} tokens, \
+                 {} arrivals, steal {}, {} memory): {} reqs completed, {} rejected, \
+                 {} shed, {} tokens, \
                  {:.1} tok/s system, p50 latency {}, p99 {}, {:.1} tok/J",
                 session.model().name,
                 packages,
@@ -471,6 +477,7 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 session.memory_fidelity().name(),
                 metrics.completed,
                 metrics.rejected,
+                metrics.shed,
                 metrics.tokens,
                 metrics.tokens_per_s(),
                 fmt_ns(p50),
@@ -489,7 +496,7 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             }
             if !out.shed.is_empty() {
                 println!(
-                    "  shed request ids (admission backpressure): {:?}",
+                    "  returned request ids (rejected by backpressure or shed as malformed): {:?}",
                     out.shed.iter().map(|r| r.id).collect::<Vec<_>>()
                 );
             }
@@ -521,6 +528,40 @@ fn cmd_memcheck(args: &Args) -> Result<(), ChimeError> {
     Ok(())
 }
 
+fn cmd_bench(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(args, &["json", "quick", "snapshot", "requests", "tokens", "iters"])?;
+    if args.flag("snapshot") && args.get("snapshot").is_none() {
+        return Err(ChimeError::Invalid(
+            "--snapshot expects a file path (e.g. BENCH_006.json)".to_string(),
+        ));
+    }
+    let mut bc = if args.flag("quick") {
+        results::perf::BenchConfig::quick()
+    } else {
+        results::perf::BenchConfig::paper()
+    };
+    bc.requests = usize_arg(args, "requests", bc.requests)?;
+    bc.tokens = usize_arg(args, "tokens", bc.tokens)?;
+    bc.iters = usize_arg(args, "iters", bc.iters)?;
+    if bc.requests == 0 || bc.tokens == 0 || bc.iters == 0 {
+        return Err(ChimeError::Invalid(
+            "--requests, --tokens, and --iters must be >= 1".to_string(),
+        ));
+    }
+    let e = results::perf::run_with(&bc);
+    if args.flag("json") {
+        println!("{}", e.json.pretty());
+    } else {
+        print!("{}", e.text);
+    }
+    if let Some(path) = args.get("snapshot") {
+        std::fs::write(path, format!("{}\n", e.json.pretty()))
+            .map_err(|err| ChimeError::Runtime(format!("writing {path}: {err}")))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_results(args: &Args) -> Result<(), ChimeError> {
     ensure_known(args, &["fig", "all", "json", "baselines"])?;
     let experiments = if args.flag("all") || args.get("fig").is_none() {
@@ -533,7 +574,9 @@ fn cmd_results(args: &Args) -> Result<(), ChimeError> {
                 return Err(ChimeError::Unknown {
                     what: "experiment",
                     name: id.to_string(),
-                    hint: Some("1 6 7 8 9 table5 ablations scaling memcheck tail".to_string()),
+                    hint: Some(
+                        "1 6 7 8 9 table5 ablations scaling memcheck tail perf".to_string(),
+                    ),
                 })
             }
         }

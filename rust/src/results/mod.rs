@@ -13,6 +13,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod memcheck;
+pub mod perf;
 pub mod scaling;
 pub mod table5;
 pub mod tail;
@@ -43,7 +44,11 @@ pub fn run_all() -> Vec<Experiment> {
 }
 
 /// Run one experiment by id ("1", "6", "7", "8", "9", "table5",
-/// "scaling", "memcheck", "tail").
+/// "scaling", "memcheck", "tail", "perf").
+///
+/// "perf" is reachable only here (and via `chime bench`), never from
+/// [`run_all`]: its wall-clock columns are machine-dependent, and the
+/// `--all` output is locked byte for byte by the `golden_paper` suite.
 pub fn run_one(id: &str) -> Option<Experiment> {
     match id {
         "1" | "fig1" => Some(fig1::run()),
@@ -56,6 +61,7 @@ pub fn run_one(id: &str) -> Option<Experiment> {
         "scaling" | "packages" => Some(scaling::run()),
         "memcheck" | "mem" => Some(memcheck::run()),
         "tail" | "latency" => Some(tail::run()),
+        "perf" | "bench" => Some(perf::run()),
         _ => None,
     }
 }

@@ -1,0 +1,329 @@
+//! Simulator performance benchmark (`chime bench`): wall-clock cost of
+//! the simulator itself — simulated tokens/s, engine events/s, and wall
+//! time per backend × memory fidelity over the Table II model zoo.
+//!
+//! Unlike every other module in `results`, the numbers here describe
+//! the *simulator*, not the simulated hardware: events/s is the serving
+//! event loop's throughput in host wall time, and exists so a perf
+//! regression in the scheduling hot path (indexed event selection, SoA
+//! bank state, parallel drain — DESIGN.md §11) shows up as a number,
+//! not a feeling. `make bench-snapshot` writes the canonical JSON to
+//! `BENCH_<pr>.json`; EXPERIMENTS.md tracks the snapshots as a
+//! trajectory across PRs.
+//!
+//! Wall-clock numbers are machine-dependent by nature, so this module
+//! is deliberately **not** part of [`super::run_all`] (whose output is
+//! locked byte for byte by the `golden_paper` suite) — it is reachable
+//! only via `chime bench` and `chime results --fig perf`. The
+//! simulated-side numbers in each row (tokens, span, sim tok/s) *are*
+//! deterministic, and bit-identical between `sharded4` and
+//! `sharded4-par` by the parallel-drain construction.
+
+use std::time::Instant;
+
+use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig};
+use crate::coordinator::{BatchPolicy, RoutePolicy, ServeRequest, ShardedServer};
+use crate::util::{table, Json, Table};
+
+use super::Experiment;
+
+/// PR number stamped into the snapshot (`BENCH_006.json`).
+pub const PR: usize = 6;
+
+/// The backend variants the matrix sweeps. `Sharded4Par` is the same
+/// deployment as `Sharded4` with [`ShardedServer::set_parallel`] on —
+/// its simulated outcome is bit-identical, only the wall time moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchBackend {
+    /// Single-package heterogeneous CHIME simulator.
+    Sim,
+    /// Single-package DRAM-only ablation plan (Fig 9 baseline).
+    DramOnly,
+    /// Four packages behind the sharded coordinator, sequential drain.
+    Sharded4,
+    /// Four packages, parallel per-package drain (scoped threads).
+    Sharded4Par,
+}
+
+impl BenchBackend {
+    pub const ALL: [BenchBackend; 4] = [
+        BenchBackend::Sim,
+        BenchBackend::DramOnly,
+        BenchBackend::Sharded4,
+        BenchBackend::Sharded4Par,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchBackend::Sim => "sim",
+            BenchBackend::DramOnly => "dram-only",
+            BenchBackend::Sharded4 => "sharded4",
+            BenchBackend::Sharded4Par => "sharded4-par",
+        }
+    }
+
+    fn packages(self) -> usize {
+        match self {
+            BenchBackend::Sim | BenchBackend::DramOnly => 1,
+            BenchBackend::Sharded4 | BenchBackend::Sharded4Par => 4,
+        }
+    }
+
+    fn build(self, model: &MllmConfig, cfg: &ChimeConfig, policy: &BatchPolicy) -> ShardedServer {
+        let mut srv = match self {
+            BenchBackend::DramOnly => ShardedServer::new_dram_only(
+                model,
+                cfg,
+                policy.clone(),
+                self.packages(),
+                RoutePolicy::RoundRobin,
+            ),
+            _ => ShardedServer::new(
+                model,
+                cfg,
+                policy.clone(),
+                self.packages(),
+                RoutePolicy::RoundRobin,
+            ),
+        };
+        srv.set_parallel(self == BenchBackend::Sharded4Par);
+        srv
+    }
+}
+
+/// Workload + measurement knobs for one bench sweep.
+pub struct BenchConfig {
+    /// Burst size: requests submitted at virtual t = 0.
+    pub requests: usize,
+    /// Decode budget per request.
+    pub tokens: usize,
+    /// Timed repetitions per cell; the row reports the minimum.
+    pub iters: usize,
+    pub models: Vec<MllmConfig>,
+}
+
+impl BenchConfig {
+    /// Default sweep: Table II zoo, 8-request burst, 16 tokens each.
+    pub fn paper() -> BenchConfig {
+        BenchConfig { requests: 8, tokens: 16, iters: 3, models: MllmConfig::paper_models() }
+    }
+
+    /// CI/test sweep: tiny model only, single timed iteration.
+    pub fn quick() -> BenchConfig {
+        BenchConfig { requests: 4, tokens: 8, iters: 1, models: vec![MllmConfig::tiny()] }
+    }
+}
+
+/// One (backend, fidelity, model) measurement.
+#[derive(Debug, Clone)]
+pub struct PerfPoint {
+    pub backend: &'static str,
+    pub memory: &'static str,
+    pub model: String,
+    pub requests: u64,
+    /// Tokens generated across the stream (simulated side).
+    pub tokens: u64,
+    /// Serving events the sequential event loop emits for this stream
+    /// (admissions + token/completion events). The parallel variant
+    /// processes the same logical events — bit-identical outcome — so
+    /// the count is measured once on the sequential instrumented pass.
+    pub events: u64,
+    /// Best-of-`iters` host wall time for one `serve` call, ns.
+    pub wall_ns: f64,
+    /// Simulated span covered by the stream (max completion - min
+    /// arrival), ns — a *virtual*-time quantity, fidelity-dependent.
+    pub sim_span_ns: f64,
+    /// Simulated system throughput (tokens per simulated second).
+    pub sim_tokens_per_s: f64,
+    /// Event-loop throughput: events per host wall second.
+    pub events_per_wall_s: f64,
+}
+
+fn burst_requests(n: usize, tokens: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            prompt: vec![],
+            image_seed: i as u64,
+            max_new_tokens: tokens,
+            arrival_ns: 0.0,
+        })
+        .collect()
+}
+
+fn measure(
+    backend: BenchBackend,
+    model: &MllmConfig,
+    fidelity: MemoryFidelity,
+    bc: &BenchConfig,
+) -> PerfPoint {
+    let mut cfg = ChimeConfig::default();
+    cfg.workload.output_tokens = bc.tokens;
+    cfg.hardware.memory_fidelity = fidelity;
+    // Small per-package batch so queues form and the event loop actually
+    // schedules; capacity holds the whole burst so nothing is rejected.
+    let policy = BatchPolicy { max_batch: 2, queue_capacity: bc.requests.max(1) };
+    let reqs = burst_requests(bc.requests, bc.tokens);
+
+    // Instrumented pass (untimed): drive the streaming session to count
+    // the event stream and take the simulated-side outcome.
+    let mut srv = backend.build(model, &cfg, &policy);
+    let mut session = srv.open_serving();
+    for r in reqs.clone() {
+        session.submit(r);
+    }
+    let events = session.drain().len() as u64;
+    let out = session.finish();
+    assert!(out.shed.is_empty(), "bench burst must fit the queue capacity");
+    let metrics = out.metrics;
+
+    // Timed passes: a fresh server per iteration (KV wear persists across
+    // sessions on a reused one), each timing one batch `serve` call — the
+    // parallel variant takes its scoped-thread drain inside `finish`.
+    let mut wall_ns = f64::INFINITY;
+    for _ in 0..bc.iters.max(1) {
+        let mut srv = backend.build(model, &cfg, &policy);
+        let t0 = Instant::now();
+        let timed = srv.serve(reqs.clone());
+        let dt_ns = t0.elapsed().as_secs_f64() * 1e9;
+        assert_eq!(
+            timed.responses.len(),
+            out.responses.len(),
+            "timed pass served a different stream"
+        );
+        wall_ns = wall_ns.min(dt_ns);
+    }
+
+    PerfPoint {
+        backend: backend.name(),
+        memory: fidelity.name(),
+        model: model.name.clone(),
+        requests: metrics.completed,
+        tokens: metrics.tokens,
+        events,
+        wall_ns,
+        sim_span_ns: metrics.span_ns(),
+        sim_tokens_per_s: metrics.tokens_per_s(),
+        events_per_wall_s: if wall_ns > 0.0 { events as f64 / (wall_ns / 1e9) } else { 0.0 },
+    }
+}
+
+/// Sweep the full matrix: model × fidelity × backend variant.
+pub fn compute(bc: &BenchConfig) -> Vec<PerfPoint> {
+    let mut out = Vec::new();
+    for m in &bc.models {
+        for fidelity in [MemoryFidelity::FirstOrder, MemoryFidelity::CycleAccurate] {
+            for backend in BenchBackend::ALL {
+                out.push(measure(backend, m, fidelity, bc));
+            }
+        }
+    }
+    out
+}
+
+/// The canonical-JSON snapshot (`BENCH_<pr>.json`). Wall-clock fields
+/// are machine-dependent; everything else is deterministic.
+pub fn snapshot_json(points: &[PerfPoint], bc: &BenchConfig) -> Json {
+    let rows = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("backend", p.backend.into()),
+                ("memory", p.memory.into()),
+                ("model", p.model.as_str().into()),
+                ("requests", (p.requests as i64).into()),
+                ("tokens", (p.tokens as i64).into()),
+                ("events", (p.events as i64).into()),
+                ("wall_ns", p.wall_ns.into()),
+                ("sim_span_ns", p.sim_span_ns.into()),
+                ("sim_tokens_per_s", p.sim_tokens_per_s.into()),
+                ("events_per_wall_s", p.events_per_wall_s.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", "chime simulator performance".into()),
+        ("pr", PR.into()),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", bc.requests.into()),
+                ("tokens_per_request", bc.tokens.into()),
+                ("iters", bc.iters.into()),
+                (
+                    "models",
+                    Json::Arr(bc.models.iter().map(|m| m.name.as_str().into()).collect()),
+                ),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+pub fn run() -> Experiment {
+    run_with(&BenchConfig::paper())
+}
+
+pub fn run_with(bc: &BenchConfig) -> Experiment {
+    let points = compute(bc);
+    let mut t = Table::new(
+        "Bench — simulator wall-clock performance (events/s, machine-dependent)",
+        &["backend", "memory", "model", "reqs", "tokens", "events", "wall (ms)",
+          "sim span (ms)", "sim tok/s", "events/s"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.backend.to_string(),
+            p.memory.to_string(),
+            p.model.clone(),
+            p.requests.to_string(),
+            p.tokens.to_string(),
+            p.events.to_string(),
+            table::f(p.wall_ns / 1e6, 3),
+            table::f(p.sim_span_ns / 1e6, 3),
+            table::f(p.sim_tokens_per_s, 1),
+            table::f(p.events_per_wall_s, 0),
+        ]);
+    }
+    Experiment { id: "perf", text: t.render(), json: snapshot_json(&points, bc) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_covers_the_matrix_and_parallel_matches_sequential_sim_side() {
+        let bc = BenchConfig::quick();
+        let pts = compute(&bc);
+        assert_eq!(pts.len(), bc.models.len() * 2 * BenchBackend::ALL.len());
+        for p in &pts {
+            assert_eq!(p.requests, bc.requests as u64, "{}: burst must fully complete", p.backend);
+            assert_eq!(p.tokens, (bc.requests * bc.tokens) as u64);
+            assert!(p.events > 0, "{}: event stream must be observed", p.backend);
+            assert!(p.wall_ns > 0.0 && p.wall_ns.is_finite());
+            assert!(p.events_per_wall_s > 0.0);
+            assert!(p.sim_span_ns > 0.0 && p.sim_tokens_per_s > 0.0);
+        }
+        // The parallel variant is the same simulation: every simulated-
+        // side number matches its sequential row bit for bit.
+        for memory in ["first-order", "cycle"] {
+            let find = |b: &str| pts.iter().find(|p| p.backend == b && p.memory == memory).unwrap();
+            let (seq, par) = (find("sharded4"), find("sharded4-par"));
+            assert_eq!(par.tokens, seq.tokens);
+            assert_eq!(par.events, seq.events);
+            assert_eq!(par.sim_span_ns.to_bits(), seq.sim_span_ns.to_bits());
+            assert_eq!(par.sim_tokens_per_s.to_bits(), seq.sim_tokens_per_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_json_is_canonical_and_stamped() {
+        let bc = BenchConfig::quick();
+        let pts = compute(&bc);
+        let s = snapshot_json(&pts, &bc).pretty();
+        assert!(s.contains("\"pr\": 6"));
+        assert!(s.contains("\"events_per_wall_s\""));
+        assert!(s.contains("\"sharded4-par\""));
+    }
+}

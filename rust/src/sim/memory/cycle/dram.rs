@@ -31,6 +31,10 @@ fn class_tag(class: WeightClass) -> u8 {
 }
 const TAG_KV_READ: u8 = 5;
 const TAG_KV_WRITE: u8 = 6;
+/// Stored-tag sentinel for "no open row" / "no prior stream". Stream
+/// tags are stored shifted by one so the flat bank array needs no
+/// per-bank `Option` discriminant.
+const TAG_NONE: u8 = 0;
 
 /// Timing parameters the staircase model does not carry. tFAW / tREFI /
 /// tRFC are standard LPDDR-class constants; tRP is expressed as a
@@ -54,18 +58,43 @@ impl Default for DramCycleTiming {
     }
 }
 
-/// One tier's bank state machine.
+/// All tiers' bank state machines in a flat SoA layout (§Perf: the
+/// per-tier struct-of-`Vec<Option<u8>>` layout cost a discriminant per
+/// bank and a pointer chase per tier; the hot conflict loop now walks a
+/// dense `u8` slice).
+///
+/// Conflicts are tracked at stream granularity: sequential streams
+/// re-walk their own rows in order, so a bank held by the same stream is
+/// a row hit and a bank held by a different stream always needs a
+/// precharge.
 #[derive(Debug, Clone)]
-struct TierBanks {
-    /// Stream tag owning each bank's open row. Conflicts are tracked at
-    /// stream granularity: sequential streams re-walk their own rows in
-    /// order, so a bank held by the same stream is a row hit and a bank
-    /// held by a different stream always needs a precharge.
-    open: Vec<Option<u8>>,
-    /// Round-robin activation pointer.
-    cursor: usize,
-    /// Stream tag of the last stream on this tier (pipeline-refill lead).
-    last_tag: Option<u8>,
+struct BankState {
+    /// Open-row owner tag per (tier, bank): bank `b` of tier `t` lives at
+    /// `t * banks + b`; [`TAG_NONE`] when no row is open. Stored tags are
+    /// shifted by one (`tag + 1`).
+    open: Vec<u8>,
+    /// Round-robin activation pointer per tier.
+    cursor: Vec<usize>,
+    /// Shifted tag of the last stream on each tier (pipeline-refill
+    /// lead); [`TAG_NONE`] before any stream.
+    last_tag: Vec<u8>,
+    /// Banks per tier.
+    banks: usize,
+}
+
+impl BankState {
+    fn new(tiers: usize, banks: usize) -> BankState {
+        BankState {
+            open: vec![TAG_NONE; tiers * banks],
+            cursor: vec![0; tiers],
+            last_tag: vec![TAG_NONE; tiers],
+            banks,
+        }
+    }
+
+    fn tiers(&self) -> usize {
+        self.cursor.len()
+    }
 }
 
 /// Cycle-accurate M3D DRAM state: a [`DramState`] (occupancy, placement,
@@ -77,7 +106,7 @@ pub struct CycleDramState {
     pub base: DramState,
     /// Discrete timing constants.
     pub timing: DramCycleTiming,
-    tiers: Vec<TierBanks>,
+    banks: BankState,
     /// Busy time accumulated toward the next refresh stall.
     refresh_debt_ns: f64,
     /// Diagnostics: total refresh stall time (ns).
@@ -93,14 +122,11 @@ pub struct CycleDramState {
 impl CycleDramState {
     /// Wrap a first-order state (typically after weight placement).
     pub fn new(base: DramState) -> CycleDramState {
-        let banks = base.cfg.channels * base.cfg.banks_per_channel;
-        let tiers = (0..base.cfg.tiers)
-            .map(|_| TierBanks { open: vec![None; banks], cursor: 0, last_tag: None })
-            .collect();
+        let banks = BankState::new(base.cfg.tiers, base.cfg.channels * base.cfg.banks_per_channel);
         CycleDramState {
             base,
             timing: DramCycleTiming::default(),
-            tiers,
+            banks,
             refresh_debt_ns: 0.0,
             refresh_stall_ns: 0.0,
             faw_stall_ns: 0.0,
@@ -137,27 +163,30 @@ impl CycleDramState {
         // The index is clamped so an out-of-range tier (which the
         // first-order model prices as an extra-slow stream) degrades the
         // same way here instead of panicking.
-        let bank_tier = tier.min(self.tiers.len().saturating_sub(1));
-        let t = match self.tiers.get_mut(bank_tier) {
-            Some(t) => t,
-            None => return quant_ns, // zero-tier config: no bank machinery
-        };
-        let banks = t.open.len();
-        let touched = (rows as usize).min(banks);
+        if self.banks.tiers() == 0 {
+            return quant_ns; // zero-tier config: no bank machinery
+        }
+        let bank_tier = tier.min(self.banks.tiers() - 1);
+        let n_banks = self.banks.banks;
+        let shifted = tag + 1; // stored tags are shifted; TAG_NONE = 0
+        let open = &mut self.banks.open[bank_tier * n_banks..(bank_tier + 1) * n_banks];
+        let touched = (rows as usize).min(n_banks);
+        let cursor = self.banks.cursor[bank_tier];
         let mut conflicts = 0u64;
         for i in 0..touched {
-            let b = (t.cursor + i) % banks;
-            if matches!(t.open[b], Some(g) if g != tag) {
+            let b = (cursor + i) % n_banks;
+            let g = open[b];
+            if g != TAG_NONE && g != shifted {
                 conflicts += 1;
             }
-            t.open[b] = Some(tag);
+            open[b] = shifted;
         }
-        t.cursor = (t.cursor + touched) % banks;
+        self.banks.cursor[bank_tier] = (cursor + touched) % n_banks;
 
         // (c) pipeline refill: the first activation of a stream that just
         // switched onto this tier cannot hide behind prior data bursts.
-        let lead_ns = if t.last_tag == Some(tag) { 0.0 } else { t_act };
-        t.last_tag = Some(tag);
+        let lead_ns = if self.banks.last_tag[bank_tier] == shifted { 0.0 } else { t_act };
+        self.banks.last_tag[bank_tier] = shifted;
 
         let conflict_ns = conflicts as f64 * (self.timing.t_rp_frac * t_act) / engines;
 
@@ -331,6 +360,18 @@ mod tests {
         // ...while an interleaved KV stream on the same tier precharges them.
         cy.kv_stream_ns(&[(0, 10_000_000)]);
         assert!(cy.row_conflicts > before, "tag switch must conflict");
+    }
+
+    #[test]
+    fn tiers_keep_independent_bank_state() {
+        // Flat-SoA regression: rows opened on one tier must not leak into
+        // another tier's slice of the flat bank array.
+        let (_, mut cy) = placed(1_000_000_000);
+        cy.kv_stream_ns(&[(1, 10_000_000)]); // open KV-read rows on tier 1
+        let before = cy.row_conflicts;
+        // A different stream tag on tier 0 lands on never-opened banks.
+        cy.kv_writeback_ns(10_000_000);
+        assert_eq!(cy.row_conflicts, before, "tier 0 banks were never opened");
     }
 
     #[test]

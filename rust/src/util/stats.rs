@@ -55,20 +55,43 @@ impl Summary {
 }
 
 /// Percentile over a sample (linear interpolation, p in [0, 100]).
+///
+/// Non-finite handling: NaN and ±∞ samples are **dropped** before ranking,
+/// so a single `INFINITY` TPOT (the documented zero-decode-span contract)
+/// cannot poison p95/p99. The slice is sorted with `total_cmp` (never
+/// panics on NaN); callers who need the dropped count use
+/// [`count_non_finite`]. Returns NaN when no finite sample remains.
 pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
-    if samples.is_empty() {
-        return f64::NAN;
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (samples.len() - 1) as f64;
+    samples.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(samples, p)
+}
+
+/// Percentile over an already `total_cmp`-sorted sample. Pays the
+/// O(n log n) sort once when several percentiles are taken from one
+/// buffer. Same non-finite drop policy as [`percentile`].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    // Under total order, -NaN/-inf sort to the front and +inf/+NaN to the
+    // back, so the finite samples form one contiguous run in the middle.
+    let lo = match sorted.iter().position(|x| x.is_finite()) {
+        Some(i) => i,
+        None => return f64::NAN,
+    };
+    let hi = sorted.iter().rposition(|x| x.is_finite()).unwrap();
+    let finite = &sorted[lo..=hi];
+    let rank = (p / 100.0) * (finite.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        samples[lo]
+        finite[lo]
     } else {
         let frac = rank - lo as f64;
-        samples[lo] * (1.0 - frac) + samples[hi] * frac
+        finite[lo] * (1.0 - frac) + finite[hi] * frac
     }
+}
+
+/// How many samples the percentile helpers would drop (NaN or ±∞).
+pub fn count_non_finite(samples: &[f64]) -> usize {
+    samples.iter().filter(|x| !x.is_finite()).count()
 }
 
 /// Format a duration in nanoseconds with an adaptive unit.
@@ -141,6 +164,34 @@ mod tests {
         assert_eq!(percentile(&mut xs, 0.0), 1.0);
         assert_eq!(percentile(&mut xs, 100.0), 4.0);
         assert!((percentile(&mut xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_does_not_let_infinity_poison_the_tail() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on NaN, and a
+        // single INFINITY sample (zero-decode-span TPOT) dragged p95/p99
+        // to infinity. Both are now dropped before ranking.
+        let mut xs = vec![f64::NAN, 3.0, 1.0, f64::INFINITY, 2.0, 4.0, f64::NEG_INFINITY];
+        assert_eq!(count_non_finite(&xs), 3);
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 100.0), 4.0);
+        assert!((percentile(&mut xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&mut xs, 99.0).is_finite());
+
+        let mut none = vec![f64::NAN, f64::INFINITY];
+        assert!(percentile(&mut none, 50.0).is_nan());
+        let mut empty: Vec<f64> = Vec::new();
+        assert!(percentile(&mut empty, 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_sorted_matches_unsorted_entry_point() {
+        let mut xs = vec![9.0, 1.0, 5.0, 3.0, 7.0];
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&mut xs, p), percentile_sorted(&sorted, p));
+        }
     }
 
     #[test]

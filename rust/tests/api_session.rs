@@ -55,6 +55,7 @@ fn outcome_json(out: &ServeOutcome) -> String {
         ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
         ("completed", (out.metrics.completed as i64).into()),
         ("rejected", (out.metrics.rejected as i64).into()),
+        ("shed_count", (out.metrics.shed as i64).into()),
         ("tokens", (out.metrics.tokens as i64).into()),
     ])
     .pretty()
@@ -227,7 +228,7 @@ fn every_backend_passes_the_shared_serve_contract() {
             "{name}: requests must be conserved"
         );
         assert_eq!(
-            out.metrics.completed + out.metrics.rejected,
+            out.metrics.completed + out.metrics.rejected + out.metrics.shed,
             out.metrics.offered(),
             "{name}: admission accounting must balance"
         );
@@ -237,6 +238,29 @@ fn every_backend_passes_the_shared_serve_contract() {
             assert!(r.service_ns >= r.ttft_ns, "{name}: service < ttft");
             assert_eq!(r.tokens.len(), 3, "{name}: wrong token count");
         }
+    }
+}
+
+#[test]
+fn rejected_and_shed_are_independent_across_engines() {
+    // One NaN arrival in an otherwise-finite stream: every engine must
+    // count it as `shed` (input validation), never as `rejected`
+    // (backpressure), and conservation must hold with both counters.
+    for (name, mut session) in contract_sessions() {
+        let mut reqs = session.poisson_requests(7, 50.0, 6, 3);
+        reqs[2].arrival_ns = f64::NAN;
+        let out = session.serve(reqs).unwrap_or_else(|e| panic!("{name}: serve failed: {e}"));
+        assert_eq!(out.metrics.shed, 1, "{name}: the NaN arrival counts as shed");
+        assert_eq!(out.metrics.rejected, 0, "{name}: no backpressure in this stream");
+        assert_eq!(out.metrics.offered(), 6, "{name}");
+        assert_eq!(
+            out.metrics.completed + out.metrics.rejected + out.metrics.shed,
+            out.metrics.offered(),
+            "{name}: conservation with both counters"
+        );
+        assert_eq!(out.shed.len(), 1, "{name}: the shed request is handed back");
+        // poisson_requests assigns ids 0..n in order; index 2 was poisoned.
+        assert_eq!(out.shed[0].id, 2, "{name}");
     }
 }
 

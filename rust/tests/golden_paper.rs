@@ -438,6 +438,7 @@ fn golden_serve_outcome_wrapper_bit_identity() {
             ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
             ("completed", (out.metrics.completed as i64).into()),
             ("rejected", (out.metrics.rejected as i64).into()),
+            ("shed_count", (out.metrics.shed as i64).into()),
             ("tokens", (out.metrics.tokens as i64).into()),
         ])
     }

@@ -708,6 +708,93 @@ fn prop_streaming_serve_is_conserving_causal_and_steal_token_safe() {
 }
 
 #[test]
+fn prop_parallel_drain_is_bit_identical_to_sequential() {
+    // The parallel per-package drain (`ShardedServer::set_parallel`) must
+    // be invisible: over random package counts, routes, batch policies,
+    // arrival streams (including NaN arrivals and tight queues), and both
+    // steal modes, the full `ServeOutcome` — every response float, the
+    // shed list, and every order-dependent metric accumulation — must
+    // serialize to byte-identical canonical JSON against the sequential
+    // path.
+    use chime::config::{ChimeConfig, WorkloadConfig};
+    use chime::coordinator::{BatchPolicy, RoutePolicy, ServeOutcome, ServeRequest, ShardedServer};
+
+    let model = MllmConfig::tiny();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+
+    fn outcome_json(out: &ServeOutcome) -> String {
+        let rows: Vec<Json> = out
+            .responses
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", (r.id as i64).into()),
+                    ("tokens", r.tokens.len().into()),
+                    ("queue_ns", r.queue_ns.into()),
+                    ("ttft_ns", r.ttft_ns.into()),
+                    ("service_ns", r.service_ns.into()),
+                    ("energy_j", r.energy_j.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("responses", Json::Arr(rows)),
+            ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
+            ("completed", (out.metrics.completed as i64).into()),
+            ("rejected", (out.metrics.rejected as i64).into()),
+            ("shed_count", (out.metrics.shed as i64).into()),
+            ("tokens", (out.metrics.tokens as i64).into()),
+            // Order-dependent float accumulations: these move if the
+            // completion stream is replayed in any other order.
+            ("energy_j", out.metrics.energy_j.into()),
+            ("span_ns", out.metrics.span_ns().into()),
+            ("service_stddev", out.metrics.service.stddev().into()),
+            ("tokens_per_s", out.metrics.tokens_per_s().into()),
+        ])
+        .pretty()
+    }
+
+    check("parallel drain bit-identity", |prng| {
+        let packages = prng.range(1, 5);
+        let route = if prng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+        let steal = prng.bool();
+        let policy = BatchPolicy {
+            max_batch: prng.range(1, 4),
+            queue_capacity: prng.range(1, 10),
+        };
+        let n = prng.range(1, 12);
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: prng.range(0, 8),
+                arrival_ns: if prng.range(0, 12) == 0 {
+                    f64::NAN
+                } else {
+                    prng.uniform(0.0, 5e8)
+                },
+            })
+            .collect();
+        let run = |parallel: bool| -> String {
+            let mut srv = ShardedServer::new(&model, &cfg, policy.clone(), packages, route);
+            srv.set_work_stealing(steal);
+            srv.set_parallel(parallel);
+            outcome_json(&srv.serve(requests.clone()))
+        };
+        let (seq, par) = (run(false), run(true));
+        if seq != par {
+            return Err(format!(
+                "parallel drain diverged (packages {packages}, steal {steal}):\n\
+                 sequential:\n{seq}\nparallel:\n{par}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cycle_fidelity_bounds_first_order_with_identical_accounting() {
     // Fidelity cross-validation invariants, per random op sequence:
     // (1) lower bound — the cycle-accurate stream/write time is >= the
