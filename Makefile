@@ -8,6 +8,7 @@
 #   make golden      refresh the committed golden JSON snapshots
 #   make memcheck    cross-validate first-order vs cycle-accurate memory
 #   make tail        streaming-serve smoke (poisson arrivals + stealing, 2 fidelities)
+#   make fabric      routed-fabric grid: steals + per-link peaks, pkgs x topologies
 #   make bench-snapshot  write the simulator perf snapshot to BENCH_$(PR).json
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
@@ -15,7 +16,7 @@
 # PR number stamped into the bench snapshot filename (results::perf::PR).
 PR := 006
 
-.PHONY: artifacts build test pytest results golden memcheck tail bench-snapshot api-smoke docs
+.PHONY: artifacts build test pytest results golden memcheck tail fabric bench-snapshot api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -50,6 +51,13 @@ tail: build
 	cd rust && cargo run --release -- serve --arrival poisson:8 --steal on \
 		--packages 4 --requests 8 --tokens 16 --model tiny --text 8 --out 4 \
 		--memory cycle
+
+# Routed UCIe fabric grid (DESIGN.md §12): steals, stolen KB, routed
+# steal delay, p99 latency, and per-link peak GB/s across {1,2,4,8}
+# packages × the four topologies, stealing on; locked by
+# golden_fabric_topologies.
+fabric: build
+	cd rust && cargo run --release -- results --fig fabric
 
 # Simulator wall-clock benchmark (DESIGN.md §11): events/s and simulated
 # tok/s per backend × memory fidelity over the Table II zoo, written as

@@ -19,7 +19,7 @@
 
 use std::path::PathBuf;
 
-use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, WorkloadConfig};
+use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, TopologyKind, WorkloadConfig};
 use crate::coordinator::{
     ArrivalProcess, BatchPolicy, FunctionalServer, RoutePolicy, ServeOutcome, ServeRequest,
     ServingSession, ShardedServer, SimulatedServer,
@@ -54,6 +54,7 @@ pub struct SessionBuilder {
     batch: BatchPolicy,
     steal: bool,
     memory: Option<MemoryFidelity>,
+    topology: Option<TopologyKind>,
     config_file: Option<String>,
     text_tokens: Option<usize>,
     output_tokens: Option<usize>,
@@ -71,6 +72,7 @@ impl Default for SessionBuilder {
             batch: BatchPolicy::default(),
             steal: false,
             memory: None,
+            topology: None,
             config_file: None,
             text_tokens: None,
             output_tokens: None,
@@ -149,6 +151,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Select the inter-package UCIe fabric topology steals route over
+    /// (default: `point-to-point`, the legacy 0-cost baseline; `line`,
+    /// `ring`, and `mesh` charge each cross-package steal a routed
+    /// multi-hop delivery — the CLI's `--topology` flag, DESIGN.md §12).
+    /// Overrides a `topology.kind` key from [`Self::config_file`].
+    pub fn topology(mut self, kind: TopologyKind) -> Self {
+        self.topology = Some(kind);
+        self
+    }
+
     /// Apply a JSON calibration-override file on top of the defaults
     /// (same knobs as `chime --config`; unknown keys are errors).
     pub fn config_file(mut self, path: &str) -> Self {
@@ -212,6 +224,25 @@ impl SessionBuilder {
         {
             return Err(ChimeError::Invalid(format!(
                 "backend {} has no simulated chiplet memory; --memory cycle applies \
+                 to the sim/sharded/dram-only backends",
+                self.backend.name()
+            )));
+        }
+        // The fabric topology only exists on the chiplet simulator
+        // backends; a routed topology anywhere else would be silently
+        // ignored, so it is rejected instead (config-file `topology.kind`
+        // passes through the same check).
+        if let Some(t) = self.topology {
+            cfg.hardware.topology.kind = t;
+        }
+        if cfg.hardware.topology.kind != TopologyKind::PointToPoint
+            && matches!(
+                self.backend,
+                BackendKind::Functional | BackendKind::Jetson | BackendKind::Facil
+            )
+        {
+            return Err(ChimeError::Invalid(format!(
+                "backend {} has no simulated chiplet fabric; --topology applies \
                  to the sim/sharded/dram-only backends",
                 self.backend.name()
             )));
@@ -365,6 +396,12 @@ impl Session {
     /// The memory-timing fidelity the session's simulator runs at.
     pub fn memory_fidelity(&self) -> MemoryFidelity {
         self.cfg.hardware.memory_fidelity
+    }
+
+    /// The inter-package fabric topology the session's simulator routes
+    /// steals over.
+    pub fn topology(&self) -> TopologyKind {
+        self.cfg.hardware.topology.kind
     }
 
     /// The backend's short name ("sim", "sharded", "jetson", ...).
@@ -730,6 +767,59 @@ mod tests {
                 Session::builder()
                     .backend(kind)
                     .memory_fidelity(MemoryFidelity::FirstOrder)
+                    .build(),
+                Err(ChimeError::Invalid(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn topology_threads_through_to_the_sharded_fabric() {
+        // Default is the legacy point-to-point baseline.
+        let s = tiny_builder().build().unwrap();
+        assert_eq!(s.topology(), TopologyKind::PointToPoint);
+        // A routed topology reaches the sharded deployment's steal
+        // fabric and costs the steals a session serves.
+        let mut s = tiny_builder()
+            .backend(BackendKind::Sharded)
+            .packages(4)
+            .max_batch(2)
+            .work_stealing(true)
+            .topology(TopologyKind::Ring)
+            .build()
+            .unwrap();
+        assert_eq!(s.topology(), TopologyKind::Ring);
+        let mut reqs = ServeRequest::burst(16, 1);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                r.max_new_tokens = 64;
+            }
+        }
+        let out = s.serve(reqs).unwrap();
+        assert_eq!(out.responses.len(), 16);
+        assert!(out.metrics.steals > 0, "the skewed burst must steal");
+        assert!(out.metrics.stolen_bytes > 0);
+        assert!(
+            out.metrics.steal_delay_ns > 0.0,
+            "ring steals must pay a routed delivery"
+        );
+    }
+
+    #[test]
+    fn fabricless_backends_reject_routed_topologies() {
+        for kind in [BackendKind::Functional, BackendKind::Jetson, BackendKind::Facil] {
+            let err = Session::builder()
+                .backend(kind)
+                .topology(TopologyKind::Ring)
+                .build()
+                .unwrap_err();
+            assert!(matches!(err, ChimeError::Invalid(_)), "{kind:?}: {err:?}");
+            assert_eq!(err.exit_code(), 2);
+            // The point-to-point default is fine — nothing to ignore.
+            assert!(!matches!(
+                Session::builder()
+                    .backend(kind)
+                    .topology(TopologyKind::PointToPoint)
                     .build(),
                 Err(ChimeError::Invalid(_))
             ));

@@ -52,6 +52,65 @@ impl MemoryFidelity {
     }
 }
 
+/// UCIe fabric topology over the DRAM+RRAM packages of a deployment
+/// (`sim::fabric`). The in-package DRAM↔RRAM link always exists; the
+/// kind chooses which inter-package (DRAM-to-DRAM) links exist and how
+/// multi-hop routes are formed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopologyKind {
+    /// Dedicated link between every package pair (default; the legacy
+    /// flat model — every cross-package transfer is one hop).
+    #[default]
+    PointToPoint,
+    /// Open chain p0—p1—…—p(n-1).
+    Line,
+    /// Closed chain with a wraparound link; routes take the shorter arc.
+    Ring,
+    /// Row-major 2D grid of width ceil(sqrt(n)) with XY routing.
+    Mesh,
+}
+
+impl TopologyKind {
+    /// Every kind, in canonical order (CLI sweeps, results grids).
+    pub const ALL: [TopologyKind; 4] = [
+        TopologyKind::PointToPoint,
+        TopologyKind::Line,
+        TopologyKind::Ring,
+        TopologyKind::Mesh,
+    ];
+
+    /// Parse a CLI spelling (`point-to-point`/`p2p`, `line`, `ring`,
+    /// `mesh`). Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s {
+            "point-to-point" | "pointtopoint" | "point_to_point" | "p2p" => {
+                Some(TopologyKind::PointToPoint)
+            }
+            "line" | "chain" => Some(TopologyKind::Line),
+            "ring" => Some(TopologyKind::Ring),
+            "mesh" | "grid" => Some(TopologyKind::Mesh),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::PointToPoint => "point-to-point",
+            TopologyKind::Line => "line",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Mesh => "mesh",
+        }
+    }
+}
+
+/// Fabric topology configuration (`--topology`, `topology.kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TopologyConfig {
+    /// Which inter-package link graph the fabric routes over.
+    pub kind: TopologyKind,
+}
+
 /// M3D DRAM device + system parameters (paper Table IV).
 #[derive(Debug, Clone)]
 pub struct DramConfig {
@@ -398,6 +457,9 @@ pub struct ChimeHardware {
     /// Memory-timing fidelity every `SimEngine` built from this hardware
     /// runs at (default: the paper's first-order streaming model).
     pub memory_fidelity: MemoryFidelity,
+    /// UCIe fabric topology every fabric built from this hardware routes
+    /// over (default: the legacy point-to-point model).
+    pub topology: TopologyConfig,
 }
 
 impl Default for ChimeHardware {
@@ -410,6 +472,7 @@ impl Default for ChimeHardware {
             ucie: UcieConfig::default(),
             area: AreaModel::default(),
             memory_fidelity: MemoryFidelity::default(),
+            topology: TopologyConfig::default(),
         }
     }
 }
@@ -596,6 +659,21 @@ mod tests {
         assert_eq!(MemoryFidelity::parse("cyccle"), None);
         assert_eq!(MemoryFidelity::default(), MemoryFidelity::FirstOrder);
         assert_eq!(ChimeHardware::default().memory_fidelity, MemoryFidelity::FirstOrder);
+    }
+
+    #[test]
+    fn topology_spellings_round_trip() {
+        for k in TopologyKind::ALL {
+            assert_eq!(TopologyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TopologyKind::parse("p2p"), Some(TopologyKind::PointToPoint));
+        assert_eq!(TopologyKind::parse("grid"), Some(TopologyKind::Mesh));
+        assert_eq!(TopologyKind::parse("rign"), None);
+        assert_eq!(TopologyKind::default(), TopologyKind::PointToPoint);
+        assert_eq!(
+            ChimeHardware::default().topology.kind,
+            TopologyKind::PointToPoint
+        );
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod models;
 
 pub use hardware::{
     AreaModel, ChimeHardware, DramConfig, FacilSpec, JetsonSpec, MemoryFidelity, NmpConfig,
-    RramConfig, UcieConfig,
+    RramConfig, TopologyConfig, TopologyKind, UcieConfig,
 };
 pub use models::{Connector, ConnectorKind, LlmConfig, MllmConfig, VisionEncoder, VisionKind};
 
@@ -53,6 +53,8 @@ impl ChimeConfig {
                     self.hardware.rram.endurance_writes = num()? as u64
                 }
                 "ucie.bandwidth_gbps" => self.hardware.ucie.bandwidth_gbps = num()?,
+                "ucie.energy_pj_per_bit" => self.hardware.ucie.energy_pj_per_bit = num()?,
+                "ucie.dma_latency_ns" => self.hardware.ucie.dma_latency_ns = num()?,
                 "ucie.active_power_w" => self.hardware.ucie.active_power_w = num()?,
                 "nmp.kernel_dispatch_ns" => {
                     let x = num()?;
@@ -67,6 +69,14 @@ impl ChimeConfig {
                         MemoryFidelity::parse(s).ok_or_else(|| {
                             format!("unknown memory fidelity {s:?} (first-order | cycle)")
                         })?;
+                }
+                "topology.kind" => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| format!("override {k:?} must be a string"))?;
+                    self.hardware.topology.kind = TopologyKind::parse(s).ok_or_else(|| {
+                        format!("unknown topology {s:?} (point-to-point | line | ring | mesh)")
+                    })?;
                 }
                 "workload.image_size" => self.workload.image_size = num()? as usize,
                 "workload.text_tokens" => self.workload.text_tokens = num()? as usize,
@@ -87,6 +97,9 @@ impl ChimeConfig {
     }
 
     /// Serialize the effective calibration knobs (for EXPERIMENTS.md).
+    /// Every UCIe knob that participates in the link formula (and the
+    /// fabric topology) is part of the effective calibration, so all of
+    /// them round-trip through [`ChimeConfig::apply_overrides`].
     pub fn calibration_json(&self) -> Json {
         Json::obj(vec![
             ("dram.miv_internal_bw_mult", self.hardware.dram.miv_internal_bw_mult.into()),
@@ -94,7 +107,11 @@ impl ChimeConfig {
             ("rram.near_layer_bw_mult", self.hardware.rram.near_layer_bw_mult.into()),
             ("rram.stream_utilization", self.hardware.rram.stream_utilization.into()),
             ("ucie.bandwidth_gbps", self.hardware.ucie.bandwidth_gbps.into()),
+            ("ucie.energy_pj_per_bit", self.hardware.ucie.energy_pj_per_bit.into()),
+            ("ucie.dma_latency_ns", self.hardware.ucie.dma_latency_ns.into()),
+            ("ucie.active_power_w", self.hardware.ucie.active_power_w.into()),
             ("nmp.kernel_dispatch_ns", self.hardware.dram_nmp.kernel_dispatch_ns.into()),
+            ("topology.kind", self.hardware.topology.kind.name().into()),
         ])
     }
 }
@@ -131,6 +148,40 @@ mod tests {
         assert!(c.apply_overrides(&bad).is_err());
         let not_str = Json::parse(r#"{"memory.fidelity": 1}"#).unwrap();
         assert!(c.apply_overrides(&not_str).is_err());
+    }
+
+    #[test]
+    fn topology_override_applies_and_validates() {
+        let mut c = ChimeConfig::default();
+        let j = Json::parse(r#"{"topology.kind": "ring"}"#).unwrap();
+        c.apply_overrides(&j).unwrap();
+        assert_eq!(c.hardware.topology.kind, TopologyKind::Ring);
+        let bad = Json::parse(r#"{"topology.kind": "rign"}"#).unwrap();
+        assert!(c.apply_overrides(&bad).is_err());
+        let not_str = Json::parse(r#"{"topology.kind": 1}"#).unwrap();
+        assert!(c.apply_overrides(&not_str).is_err());
+    }
+
+    #[test]
+    fn calibration_json_round_trips_every_ucie_knob() {
+        // Pre-fix, ucie.energy_pj_per_bit / ucie.dma_latency_ns were not
+        // accepted as overrides and calibration_json dropped everything
+        // but the bandwidth: a saved calibration silently lost the link
+        // formula's other knobs. The effective calibration now
+        // round-trips exactly.
+        let mut tuned = ChimeConfig::default();
+        tuned.hardware.ucie.bandwidth_gbps = 256.0;
+        tuned.hardware.ucie.energy_pj_per_bit = 0.45;
+        tuned.hardware.ucie.dma_latency_ns = 120.0;
+        tuned.hardware.ucie.active_power_w = 1.5;
+        tuned.hardware.topology.kind = TopologyKind::Mesh;
+        let mut restored = ChimeConfig::default();
+        restored.apply_overrides(&tuned.calibration_json()).unwrap();
+        assert_eq!(restored.hardware.ucie.bandwidth_gbps, 256.0);
+        assert_eq!(restored.hardware.ucie.energy_pj_per_bit, 0.45);
+        assert_eq!(restored.hardware.ucie.dma_latency_ns, 120.0);
+        assert_eq!(restored.hardware.ucie.active_power_w, 1.5);
+        assert_eq!(restored.hardware.topology.kind, TopologyKind::Mesh);
     }
 
     #[test]

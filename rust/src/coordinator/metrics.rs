@@ -22,6 +22,14 @@ pub struct ServingMetrics {
     /// the `ServeEvent::{Rejected, Shed}` distinction.
     pub shed: u64,
     pub tokens: u64,
+    /// Cross-package work steals executed (0 with stealing off).
+    pub steals: u64,
+    /// Payload bytes work stealing moved across the fabric (request
+    /// metadata + prompt tokens + per-token KV context).
+    pub stolen_bytes: u64,
+    /// Total routed delivery latency steals paid (ns). Zero on the
+    /// point-to-point topology, which is the legacy 0-cost baseline.
+    pub steal_delay_ns: f64,
     latency_ns: Vec<f64>,
     ttft_ns: Vec<f64>,
     queue_ns: Vec<f64>,
@@ -68,6 +76,22 @@ impl ServingMetrics {
     /// Count a request shed before admission (malformed input).
     pub fn record_shed(&mut self) {
         self.shed += 1;
+    }
+
+    /// Count one cross-package work steal: the payload it moved and the
+    /// routed delivery latency it paid (0 on point-to-point).
+    pub fn record_steal(&mut self, bytes: u64, delay_ns: f64) {
+        self.steals += 1;
+        self.stolen_bytes += bytes;
+        self.steal_delay_ns += delay_ns;
+    }
+
+    /// Mean routed delivery latency per steal (ns); 0 with no steals.
+    pub fn mean_steal_delay_ns(&self) -> f64 {
+        if self.steals == 0 {
+            return 0.0;
+        }
+        self.steal_delay_ns / self.steals as f64
     }
 
     /// Total requests offered to the engine (admitted, rejected, or shed).
@@ -164,6 +188,18 @@ mod tests {
         assert_eq!(m.shed, 2);
         assert_eq!(m.offered(), 10);
         assert_eq!(m.completed + m.rejected + m.shed, m.offered());
+    }
+
+    #[test]
+    fn steal_accounting_sums_bytes_and_delay() {
+        let mut m = ServingMetrics::new();
+        assert_eq!(m.mean_steal_delay_ns(), 0.0);
+        m.record_steal(1000, 0.0); // point-to-point: free
+        m.record_steal(3000, 500.0); // routed: paid
+        assert_eq!(m.steals, 2);
+        assert_eq!(m.stolen_bytes, 4000);
+        assert_eq!(m.steal_delay_ns, 500.0);
+        assert_eq!(m.mean_steal_delay_ns(), 250.0);
     }
 
     #[test]

@@ -38,9 +38,10 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::config::{ChimeConfig, ChimeHardware, MllmConfig, WorkloadConfig};
+use crate::config::{ChimeConfig, ChimeHardware, MllmConfig, TopologyKind, WorkloadConfig};
 use crate::mapping::planner::DecodeTemplate;
 use crate::mapping::Plan;
+use crate::sim::fabric::{Delivery, Endpoint, Fabric, Link, LinkState};
 use crate::sim::memory::{DramState, RramState};
 use crate::sim::{InferenceStats, PhaseStats, SimEngine};
 
@@ -49,6 +50,10 @@ use super::metrics::ServingMetrics;
 use super::queue::AdmissionQueue;
 use super::request::{ServeRequest, ServeResponse};
 use super::streaming::{PendingQueue, ServeEvent};
+
+/// Fixed per-steal control overhead: request descriptor, scheduling
+/// state, and route metadata that cross the fabric beside the payload.
+const STEAL_METADATA_BYTES: u64 = 64;
 
 /// How admitted requests are assigned to packages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -393,6 +398,11 @@ pub struct ShardedServer {
     rr_next: usize,
     /// Cross-package work stealing (off by default; `set_work_stealing`).
     steal: bool,
+    /// The inter-package UCIe fabric steals route over (DESIGN.md §12):
+    /// spans every package on the configured topology. `point-to-point`
+    /// is the legacy 0-cost baseline; line/ring/mesh charge each steal a
+    /// routed DRAM-to-DRAM delivery in latency and link energy.
+    steal_fabric: Fabric,
     /// Parallel per-package drain for the batch path (off by default;
     /// `set_parallel`). Bit-identical to sequential by construction.
     parallel: bool,
@@ -458,12 +468,22 @@ impl ShardedServer {
             .into_iter()
             .map(|plan| PackageState::new(plan, &cfg.hardware, &policy, dram_only))
             .collect();
+        // Built from the *engine's* link config so the DRAM-only ablation
+        // transform (infinite bandwidth = no link) carries over: its
+        // routed transfers are free, matching the in-package semantics.
+        let steal_fabric = Fabric::new(
+            states[0].engine.hw.ucie.clone(),
+            cfg.hardware.topology.kind,
+            packages,
+            0,
+        );
         ShardedServer {
             policy,
             route,
             packages: states,
             rr_next: 0,
             steal: false,
+            steal_fabric,
             parallel: false,
             model: model.clone(),
             cfg: cfg.clone(),
@@ -552,6 +572,54 @@ impl ShardedServer {
         self.packages.iter().map(|p| p.completed).collect()
     }
 
+    /// The fabric topology this deployment routes steals over.
+    pub fn topology(&self) -> TopologyKind {
+        self.steal_fabric.kind()
+    }
+
+    /// The inter-package steal fabric (per-link telemetry, route
+    /// inspection).
+    pub fn steal_fabric(&self) -> &Fabric {
+        &self.steal_fabric
+    }
+
+    /// Merged per-link fabric telemetry across the whole deployment:
+    /// each package engine's in-package DRAM↔RRAM link (remapped from
+    /// the engine's private `Local { package: 0 }` onto the global
+    /// package index) folded together with the inter-package links of
+    /// the steal fabric. Engines only ever touch local links and the
+    /// steal fabric only ever routes DRAM-to-DRAM (no local legs), so
+    /// the two sources never double-count a link.
+    pub fn fabric_links(&self) -> BTreeMap<Link, LinkState> {
+        let mut merged: BTreeMap<Link, LinkState> = BTreeMap::new();
+        for (p, pkg) in self.packages.iter().enumerate() {
+            for (link, state) in pkg.engine.fabric.link_states() {
+                let global = match *link {
+                    Link::Local { .. } => Link::Local { package: p },
+                    inter => inter,
+                };
+                merged.entry(global).or_default().merge(state);
+            }
+        }
+        for (link, state) in self.steal_fabric.link_states() {
+            merged.entry(*link).or_default().merge(state);
+        }
+        merged
+    }
+
+    /// Bytes one steal moves across the fabric: fixed control metadata,
+    /// the prompt token ids, and the per-token KV context the thief must
+    /// materialize for them. Timing-path requests carry an empty prompt
+    /// (the plan prices prompts from the workload), so the plan's
+    /// prefill length stands in for the prompt there.
+    fn steal_payload(&self, req: &ServeRequest) -> u64 {
+        let prompt_tokens =
+            req.prompt.len().max(self.packages[0].plan.trace.prefill_len()) as u64;
+        STEAL_METADATA_BYTES
+            + 4 * prompt_tokens
+            + self.model.llm.kv_bytes_per_token() * prompt_tokens
+    }
+
     /// Per-package KV headroom (independent budgets — see
     /// `Plan::kv_budget_bytes`).
     pub fn kv_budget_bytes_per_package(&self) -> u64 {
@@ -593,6 +661,7 @@ impl ShardedServer {
         for p in &mut self.packages {
             p.reset_session();
         }
+        self.steal_fabric.reset();
         self.rr_next = 0;
         let index = EventIndex::new(&self.packages);
         ShardedSession {
@@ -857,14 +926,22 @@ impl ShardedSession<'_> {
     /// another — the most loaded, with no free batch slot of its own —
     /// has a queued-and-arrived request, move that victim's newest queued
     /// request to the idle package. Terminates in at most one steal per
-    /// package: a thief stops being idle the moment it receives work.
+    /// package per pass: a thief is masked out once it receives work. On
+    /// point-to-point the mask is redundant (the 0-cost steal lands at
+    /// `now_ns`, so the idle predicate retires the thief by itself); on
+    /// routed topologies the payload lands in the future and the mask is
+    /// what stops one idle package from draining every victim queue at a
+    /// single instant.
     fn steal_pass(&mut self, now_ns: f64) -> Vec<ServeEvent> {
         let mut events = Vec::new();
+        let mut stole = vec![false; self.srv.packages.len()];
         loop {
-            let pkgs = &mut self.srv.packages;
-            let thief = pkgs.iter().position(|p| {
-                p.batcher.active() == 0
-                    && p.queue.peek_arrival_ns().map_or(true, |t| t > now_ns)
+            let pkgs = &self.srv.packages;
+            let thief = pkgs.iter().enumerate().find_map(|(i, p)| {
+                (!stole[i]
+                    && p.batcher.active() == 0
+                    && p.queue.peek_arrival_ns().map_or(true, |t| t > now_ns))
+                .then_some(i)
             });
             let Some(thief) = thief else { break };
             let mut victim: Option<(usize, usize)> = None;
@@ -881,12 +958,38 @@ impl ShardedSession<'_> {
                 }
             }
             let Some((victim, _)) = victim else { break };
-            let Some(req) = pkgs[victim].steal_back(now_ns) else { break };
+            let Some(req) = self.srv.packages[victim].steal_back(now_ns) else { break };
             let id = req.id;
-            pkgs[thief].receive_stolen(req, now_ns);
+            let bytes = self.srv.steal_payload(&req);
+            // Route the payload DRAM-to-DRAM over the package fabric.
+            // `point-to-point` is the legacy 0-cost baseline — every
+            // pre-fabric outcome stays bit-identical; the routed
+            // topologies charge the delivery latency (the thief cannot
+            // start the request before the payload lands) and per-hop
+            // UCIe link energy.
+            let delivery = if self.srv.steal_fabric.kind() == TopologyKind::PointToPoint {
+                Delivery::free()
+            } else {
+                self.srv.steal_fabric.advance_to(now_ns);
+                self.srv.steal_fabric.transfer(
+                    Endpoint::dram(victim),
+                    Endpoint::dram(thief),
+                    bytes,
+                )
+            };
+            self.srv.packages[thief].receive_stolen(req, now_ns + delivery.delivery_ns);
+            stole[thief] = true;
+            self.metrics.record_steal(bytes, delivery.delivery_ns);
+            self.metrics.energy_j += delivery.energy_pj * 1e-12;
             self.index.refresh(victim, &self.srv.packages);
             self.index.refresh(thief, &self.srv.packages);
-            events.push(ServeEvent::Stolen { id, from: victim, to: thief, time_ns: now_ns });
+            events.push(ServeEvent::Stolen {
+                id,
+                from: victim,
+                to: thief,
+                bytes,
+                time_ns: now_ns,
+            });
         }
         events
     }
@@ -1335,6 +1438,105 @@ mod tests {
             assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
             assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits());
         }
+    }
+
+    #[test]
+    fn routed_topologies_charge_steals_the_point_to_point_baseline_does_not() {
+        // Same skewed drain on 4 packages with stealing on, across the
+        // fabric topologies. Every topology moves the same kind of
+        // payload (steals and stolen bytes are counted everywhere), but
+        // only the routed topologies pay a delivery latency — the
+        // point-to-point default is the legacy 0-cost baseline.
+        let (model, cfg_base) = tiny_cfg();
+        let skew: Vec<usize> = (0..16).map(|i| if i % 2 == 0 { 64 } else { 1 }).collect();
+        let run = |kind: TopologyKind| {
+            let mut cfg = cfg_base.clone();
+            cfg.hardware.topology.kind = kind;
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+                4,
+                RoutePolicy::RoundRobin,
+            );
+            assert_eq!(srv.topology(), kind);
+            srv.set_work_stealing(true);
+            let mut session = srv.open_serving();
+            for r in burst(&skew) {
+                session.submit(r);
+            }
+            let events = session.drain();
+            for ev in &events {
+                if let ServeEvent::Stolen { bytes, .. } = ev {
+                    assert!(*bytes > 0, "{kind:?}: steal payload must be positive");
+                }
+            }
+            let out = session.finish();
+            assert_eq!(out.responses.len(), 16);
+            out.metrics
+        };
+        let p2p = run(TopologyKind::PointToPoint);
+        assert!(p2p.steals > 0, "skewed drain must trigger steals");
+        assert!(p2p.stolen_bytes > 0, "steal payloads are counted on every topology");
+        assert_eq!(p2p.steal_delay_ns, 0.0, "point-to-point is the 0-cost baseline");
+        for kind in [TopologyKind::Line, TopologyKind::Ring, TopologyKind::Mesh] {
+            let routed = run(kind);
+            assert!(routed.steals > 0, "{kind:?}: steals must still fire");
+            assert!(routed.stolen_bytes > 0, "{kind:?}: stolen bytes must be counted");
+            assert!(
+                routed.steal_delay_ns > 0.0,
+                "{kind:?}: routed steals must pay a strictly positive delivery"
+            );
+            assert!(
+                routed.mean_steal_delay_ns() > p2p.mean_steal_delay_ns(),
+                "{kind:?}: mean steal delay must exceed the free baseline"
+            );
+        }
+    }
+
+    #[test]
+    fn fabric_links_merge_engine_locals_with_steal_fabric_inters() {
+        // After a stealing session on a ring, the merged telemetry must
+        // show every package's local DRAM<->RRAM link (remapped onto its
+        // global index) plus strictly positive traffic on at least one
+        // inter-package link, and the inter-link totals must agree with
+        // the steal fabric's per-link counters exactly.
+        let (model, mut cfg) = tiny_cfg();
+        cfg.hardware.topology.kind = TopologyKind::Ring;
+        let skew: Vec<usize> = (0..16).map(|i| if i % 2 == 0 { 64 } else { 1 }).collect();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+            4,
+            RoutePolicy::RoundRobin,
+        );
+        srv.set_work_stealing(true);
+        let out = srv.serve(burst(&skew));
+        assert!(out.metrics.steals > 0, "the skewed drain must steal");
+        let links = srv.fabric_links();
+        for p in 0..4 {
+            let local = &links[&Link::Local { package: p }];
+            assert!(
+                local.bytes > 0,
+                "package {p}: cut-point traffic must land on its local link"
+            );
+        }
+        let inter_bytes: u64 = links
+            .iter()
+            .filter(|(l, _)| matches!(l, Link::Inter { .. }))
+            .map(|(_, s)| s.bytes)
+            .sum();
+        let steal_inter: u64 = srv.steal_fabric().link_states().map(|(_, s)| s.bytes).sum();
+        assert!(inter_bytes > 0, "steals must put bytes on inter-package links");
+        assert_eq!(
+            inter_bytes, steal_inter,
+            "inter-package traffic comes only from the steal fabric"
+        );
+        assert!(
+            links.iter().any(|(l, s)| matches!(l, Link::Inter { .. }) && s.peak_gbps() > 0.0),
+            "a used inter link must report a positive peak"
+        );
     }
 
     #[test]

@@ -115,6 +115,9 @@ pub enum ServeEvent {
         from: usize,
         /// Idle package that took it.
         to: usize,
+        /// Payload the steal moved across the fabric (request metadata +
+        /// prompt tokens + per-token KV context), in bytes.
+        bytes: u64,
         /// Steal time.
         time_ns: f64,
     },

@@ -24,7 +24,7 @@
 //! silent no-op.
 
 use chime::api::{ArrivalProcess, BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder};
-use chime::config::MllmConfig;
+use chime::config::{MllmConfig, TopologyKind};
 use chime::coordinator::{BatchPolicy, RoutePolicy};
 use chime::results;
 use chime::runtime::Manifest;
@@ -77,15 +77,17 @@ USAGE: chime <command> [options]
 COMMANDS:
   info      [--models] [--hardware]           Table II / III / IV configs
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
-            [--memory first-order|cycle]
+            [--memory first-order|cycle] [--topology point-to-point|line|ring|mesh]
   serve     [--backend sim|functional|dram-only|jetson|facil] [--model NAME]
             [--requests N] [--arrival burst|poisson:R|trace:FILE] [--rate R]
             [--steal on|off] [--seed N] [--batch B] [--tokens N] [--packages N]
             [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
+            [--topology point-to-point|line|ring|mesh]
   sweep     [--model NAME] [--json] [--memory first-order|cycle]
+            [--topology point-to-point|line|ring|mesh]
             Fig 8 sequence-length sweep
-  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck|tail|perf] [--all]
-            [--json] [--baselines]
+  results   [--fig 1|6|7|8|9|table5|ablations|scaling|memcheck|tail|perf|fabric]
+            [--all] [--json] [--baselines]
   memcheck  [--json]                          first-order vs cycle divergence
   bench     [--json] [--quick] [--snapshot PATH] [--requests N] [--tokens N]
             [--iters N]                       simulator events/s benchmark
@@ -133,6 +135,25 @@ fn memory_arg(args: &Args) -> Result<Option<MemoryFidelity>, ChimeError> {
                 what: "memory fidelity",
                 name: v.to_string(),
                 hint: Some("first-order cycle".to_string()),
+            }),
+        },
+    }
+}
+
+/// `--topology point-to-point|line|ring|mesh` as a fabric topology, or a
+/// typed usage error with the accepted spellings.
+fn topology_arg(args: &Args) -> Result<Option<TopologyKind>, ChimeError> {
+    match args.get("topology") {
+        None if args.flag("topology") => Err(ChimeError::Invalid(
+            "--topology expects a fabric: point-to-point, line, ring, or mesh".to_string(),
+        )),
+        None => Ok(None),
+        Some(v) => match TopologyKind::parse(v) {
+            Some(t) => Ok(Some(t)),
+            None => Err(ChimeError::Unknown {
+                what: "topology",
+                name: v.to_string(),
+                hint: Some("point-to-point line ring mesh".to_string()),
             }),
         },
     }
@@ -246,10 +267,11 @@ fn cmd_info(args: &Args) -> Result<(), ChimeError> {
 fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
     ensure_known(
         args,
-        &["model", "all", "dram-only", "out", "text", "json", "config", "memory"],
+        &["model", "all", "dram-only", "out", "text", "json", "config", "memory", "topology"],
     )?;
     let kind = if args.flag("dram-only") { BackendKind::DramOnly } else { BackendKind::Sim };
     let fidelity = memory_arg(args)?;
+    let topology = topology_arg(args)?;
     let mode = kind.name();
     let models: Vec<MllmConfig> = if args.flag("all") {
         MllmConfig::paper_models()
@@ -270,6 +292,9 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
         let mut b = builder_from(args)?.model_config(m.clone()).backend(kind);
         if let Some(f) = fidelity {
             b = b.memory_fidelity(f);
+        }
+        if let Some(t) = topology {
+            b = b.topology(t);
         }
         let mut session = b.build()?;
         let stats = session.infer()?;
@@ -314,12 +339,14 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
         args,
         &["backend", "model", "requests", "arrival", "rate", "steal", "seed", "batch",
           "tokens", "packages", "route", "queue", "config", "out", "text", "artifacts",
-          "memory"],
+          "memory", "topology"],
     )?;
     // Validated here for the spelling; the Session builder owns the
-    // backend-compatibility check (--memory cycle on a memoryless backend
-    // is a typed Invalid error, same as the config-file path).
+    // backend-compatibility checks (--memory cycle or a routed --topology
+    // on a backend without the subsystem is a typed Invalid error, same
+    // as the config-file path).
     let fidelity = memory_arg(args)?;
+    let topology = topology_arg(args)?;
     let n = usize_arg(args, "requests", 16)?;
     let arrival = arrival_arg(args)?;
     let steal = steal_arg(args)?;
@@ -359,6 +386,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             if let Some(f) = fidelity {
                 b = b.memory_fidelity(f);
             }
+            if let Some(t) = topology {
+                b = b.topology(t);
+            }
             let mut session = b.build()?;
             let mut reqs =
                 session.requests_for(&arrival, seed, n, usize_arg(args, "tokens", 8)?)?;
@@ -396,6 +426,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 .backend(kind);
             if let Some(f) = fidelity {
                 b = b.memory_fidelity(f);
+            }
+            if let Some(t) = topology {
+                b = b.topology(t);
             }
             let mut session = b.build()?;
             let tokens = usize_arg(args, "tokens", 64)?;
@@ -447,6 +480,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             if let Some(f) = fidelity {
                 b = b.memory_fidelity(f);
             }
+            if let Some(t) = topology {
+                b = b.topology(t);
+            }
             let mut session = b.build()?;
             let tokens = usize_arg(args, "tokens", 64)?;
             let reqs = session.requests_for(&arrival, seed, n, tokens)?;
@@ -464,8 +500,8 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             let p99 = metrics.latency_percentile_ns(99.0);
             println!(
                 "simulated CHIME serving {} ({} package{}, {} routing, batch {batch}{}, \
-                 {} arrivals, steal {}, {} memory): {} reqs completed, {} rejected, \
-                 {} shed, {} tokens, \
+                 {} arrivals, steal {}, {} memory, {} fabric): {} reqs completed, \
+                 {} rejected, {} shed, {} tokens, \
                  {:.1} tok/s system, p50 latency {}, p99 {}, {:.1} tok/J",
                 session.model().name,
                 packages,
@@ -475,6 +511,7 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 arrival.spec(),
                 if steal { "on" } else { "off" },
                 session.memory_fidelity().name(),
+                session.topology().name(),
                 metrics.completed,
                 metrics.rejected,
                 metrics.shed,
@@ -485,7 +522,11 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 metrics.tokens_per_j(),
             );
             if steal {
-                println!("  work steals: {steals}");
+                println!(
+                    "  work steals: {steals} ({} moved, mean routed delay {})",
+                    fmt_bytes(metrics.stolen_bytes as f64),
+                    fmt_ns(metrics.mean_steal_delay_ns()),
+                );
             }
             if packages > 1 {
                 println!(
@@ -506,9 +547,10 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), ChimeError> {
-    ensure_known(args, &["model", "json", "memory"])?;
+    ensure_known(args, &["model", "json", "memory", "topology"])?;
     let fidelity = memory_arg(args)?.unwrap_or(MemoryFidelity::FirstOrder);
-    let e = results::fig8::run_with(fidelity);
+    let topology = topology_arg(args)?.unwrap_or_default();
+    let e = results::fig8::run_with(fidelity, topology);
     if args.flag("json") {
         println!("{}", e.json.pretty());
     } else {
@@ -575,7 +617,7 @@ fn cmd_results(args: &Args) -> Result<(), ChimeError> {
                     what: "experiment",
                     name: id.to_string(),
                     hint: Some(
-                        "1 6 7 8 9 table5 ablations scaling memcheck tail perf".to_string(),
+                        "1 6 7 8 9 table5 ablations scaling memcheck tail perf fabric".to_string(),
                     ),
                 })
             }

@@ -1,0 +1,212 @@
+//! Fabric figure (DESIGN.md §12): per-link peak bandwidth and the
+//! steal-vs-locality tail across {1, 2, 4, 8} packages × the four UCIe
+//! fabric topologies, with work stealing always on, under the same
+//! seeded skewed open-loop stream as the tail-latency table.
+//!
+//! What the grid shows:
+//!
+//! * `point-to-point` is the legacy 0-cost steal baseline — steals move
+//!   payloads (`stolen KB` is counted) but pay no routed delivery, so
+//!   its rows reproduce the pre-fabric tail numbers bit for bit;
+//! * `line`/`ring`/`mesh` charge every steal a multi-hop DRAM-to-DRAM
+//!   delivery, so `steal delay` turns strictly positive and the steal
+//!   traffic becomes visible as per-link peak GB/s on the inter-package
+//!   links ([`ShardedServer::fabric_links`]);
+//! * at 1 package every topology is identical by construction (there is
+//!   no inter-package link to route over), which the first four rows
+//!   demonstrate.
+//!
+//! Reachable via `chime results --fig fabric` (and `make fabric`), never
+//! from `--all`: the `--all` output is locked byte for byte by the
+//! `golden_paper` suite from before this figure existed.
+
+use crate::config::{ChimeConfig, MllmConfig, TopologyKind};
+use crate::coordinator::{BatchPolicy, RoutePolicy, ShardedServer};
+use crate::sim::fabric::Link;
+use crate::util::stats::percentile_sorted;
+use crate::util::{table, Json, Table};
+
+use super::tail::{tail_requests, HEAVY_TOKENS, MAX_BATCH, PACKAGES, REQUESTS};
+use super::Experiment;
+
+/// One (packages, topology) measurement, stealing on.
+pub struct FabricPoint {
+    pub model: String,
+    pub packages: usize,
+    pub topology: TopologyKind,
+    pub steals: u64,
+    pub stolen_kb: f64,
+    pub mean_steal_delay_us: f64,
+    pub p99_latency_ms: f64,
+    /// Busiest inter-package link's peak over any 1 µs window (GB/s).
+    pub peak_inter_gbps: f64,
+    /// Total bytes crossed on inter-package links (payload × hops).
+    pub inter_bytes: u64,
+    pub tokens: u64,
+}
+
+pub fn compute() -> Vec<FabricPoint> {
+    let model = MllmConfig::fastvlm_0_6b();
+    let policy = BatchPolicy { max_batch: MAX_BATCH, queue_capacity: 1024 };
+    let mut out = Vec::new();
+    for &packages in &PACKAGES {
+        for kind in TopologyKind::ALL {
+            let mut cfg = ChimeConfig::default();
+            cfg.workload.output_tokens = HEAVY_TOKENS;
+            cfg.hardware.topology.kind = kind;
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                policy.clone(),
+                packages,
+                RoutePolicy::RoundRobin,
+            );
+            srv.set_work_stealing(true);
+            let outcome = srv.serve(tail_requests());
+            assert_eq!(outcome.responses.len(), REQUESTS, "fabric stream must fully drain");
+            let mut latency: Vec<f64> =
+                outcome.responses.iter().map(|r| r.total_latency_ns()).collect();
+            latency.sort_by(|a, b| a.total_cmp(b));
+            let links = srv.fabric_links();
+            let inter = || links.iter().filter(|(l, _)| matches!(l, Link::Inter { .. }));
+            let peak_inter_gbps = inter().map(|(_, s)| s.peak_gbps()).fold(0.0, f64::max);
+            let inter_bytes = inter().map(|(_, s)| s.bytes).sum();
+            let m = outcome.metrics;
+            out.push(FabricPoint {
+                model: model.name.clone(),
+                packages,
+                topology: kind,
+                steals: m.steals,
+                stolen_kb: m.stolen_bytes as f64 / 1e3,
+                mean_steal_delay_us: m.mean_steal_delay_ns() / 1e3,
+                p99_latency_ms: percentile_sorted(&latency, 99.0) / 1e6,
+                peak_inter_gbps,
+                inter_bytes,
+                tokens: m.tokens,
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Experiment {
+    let points = compute();
+    let mut t = Table::new(
+        "UCIe fabric — per-link peaks and the steal tail, poisson:40, steal on",
+        &["model", "pkgs", "topology", "steals", "stolen (KB)", "steal delay (us)",
+          "p99 lat (ms)", "peak link (GB/s)"],
+    );
+    let mut json_rows = Vec::new();
+    for p in &points {
+        t.row(vec![
+            p.model.clone(),
+            p.packages.to_string(),
+            p.topology.name().to_string(),
+            p.steals.to_string(),
+            table::f(p.stolen_kb, 1),
+            table::f(p.mean_steal_delay_us, 2),
+            table::f(p.p99_latency_ms, 1),
+            table::f(p.peak_inter_gbps, 1),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", p.model.as_str().into()),
+            ("packages", p.packages.into()),
+            ("topology", p.topology.name().into()),
+            ("steals", (p.steals as i64).into()),
+            ("stolen_kb", p.stolen_kb.into()),
+            ("mean_steal_delay_us", p.mean_steal_delay_us.into()),
+            ("p99_latency_ms", p.p99_latency_ms.into()),
+            ("peak_inter_gbps", p.peak_inter_gbps.into()),
+            ("inter_bytes", (p.inter_bytes as i64).into()),
+            ("tokens", (p.tokens as i64).into()),
+        ]));
+    }
+    Experiment {
+        id: "fabric",
+        text: t.render(),
+        json: Json::obj(vec![
+            ("points", Json::Arr(json_rows)),
+            (
+                "claim",
+                Json::obj(vec![
+                    (
+                        "baseline",
+                        "point-to-point steals are free: delay 0, no link traffic".into(),
+                    ),
+                    (
+                        "routed",
+                        "line/ring/mesh steals pay a multi-hop delivery and load the links"
+                            .into(),
+                    ),
+                    ("one_package", "every topology is identical at one package".into()),
+                ]),
+            ),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point<'a>(
+        pts: &'a [FabricPoint],
+        packages: usize,
+        kind: TopologyKind,
+    ) -> &'a FabricPoint {
+        pts.iter().find(|p| p.packages == packages && p.topology == kind).unwrap()
+    }
+
+    #[test]
+    fn grid_covers_every_package_count_and_topology() {
+        let pts = compute();
+        assert_eq!(pts.len(), PACKAGES.len() * TopologyKind::ALL.len());
+        // Routing work around the fabric never changes what is generated.
+        for p in &pts {
+            assert_eq!(p.tokens, pts[0].tokens, "{:?}: token count moved", p.topology);
+        }
+    }
+
+    #[test]
+    fn one_package_is_topology_invariant_with_no_inter_traffic() {
+        let pts = compute();
+        let base = point(&pts, 1, TopologyKind::PointToPoint);
+        for kind in TopologyKind::ALL {
+            let p = point(&pts, 1, kind);
+            assert_eq!(p.steals, 0, "{kind:?}: one package cannot steal from itself");
+            assert_eq!(p.inter_bytes, 0, "{kind:?}: no inter-package links at 1 package");
+            assert_eq!(p.peak_inter_gbps, 0.0);
+            assert_eq!(
+                p.p99_latency_ms.to_bits(),
+                base.p99_latency_ms.to_bits(),
+                "{kind:?}: every topology must be identical at one package"
+            );
+        }
+    }
+
+    #[test]
+    fn routed_steals_pay_and_load_the_links_at_scale() {
+        let pts = compute();
+        for &packages in PACKAGES.iter().filter(|&&p| p >= 4) {
+            let p2p = point(&pts, packages, TopologyKind::PointToPoint);
+            assert!(p2p.steals > 0, "{packages} pkgs: skewed overload must steal");
+            assert!(p2p.stolen_kb > 0.0, "steal payloads are counted on every topology");
+            assert_eq!(p2p.mean_steal_delay_us, 0.0, "point-to-point is the free baseline");
+            assert_eq!(p2p.inter_bytes, 0, "free steals never touch the links");
+            for kind in [TopologyKind::Line, TopologyKind::Ring, TopologyKind::Mesh] {
+                let p = point(&pts, packages, kind);
+                assert!(p.steals > 0, "{packages} pkgs {kind:?}: steals must still fire");
+                assert!(p.stolen_kb > 0.0);
+                assert!(
+                    p.mean_steal_delay_us > p2p.mean_steal_delay_us,
+                    "{packages} pkgs {kind:?}: routed delay must beat the 0-cost baseline"
+                );
+                assert!(
+                    p.peak_inter_gbps > 0.0,
+                    "{packages} pkgs {kind:?}: steal traffic must load the links"
+                );
+                assert!(p.inter_bytes > 0);
+            }
+        }
+    }
+}

@@ -6,7 +6,7 @@
 //! short contexts (encoder/connector amortization) and widen at long
 //! contexts (decode dominates).
 
-use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, WorkloadConfig};
+use crate::config::{ChimeConfig, MemoryFidelity, MllmConfig, TopologyKind, WorkloadConfig};
 use crate::sim;
 use crate::util::{table, Json, Table};
 
@@ -23,14 +23,19 @@ pub struct SweepPoint {
 }
 
 pub fn compute() -> Vec<SweepPoint> {
-    compute_with(MemoryFidelity::FirstOrder)
+    compute_with(MemoryFidelity::FirstOrder, TopologyKind::PointToPoint)
 }
 
-/// Sweep at an explicit memory fidelity (`chime sweep --memory cycle`).
-/// The default first-order path is byte-identical to [`compute`].
-pub fn compute_with(fidelity: MemoryFidelity) -> Vec<SweepPoint> {
+/// Sweep at an explicit memory fidelity and fabric topology (`chime
+/// sweep --memory cycle --topology ring`). The default path is
+/// byte-identical to [`compute`]; the sweep is single-package, where
+/// every topology is identical by construction (`sim::fabric`), so the
+/// topology knob is threaded into the config for CLI uniformity without
+/// changing any number.
+pub fn compute_with(fidelity: MemoryFidelity, topology: TopologyKind) -> Vec<SweepPoint> {
     let mut cfg = ChimeConfig::default();
     cfg.hardware.memory_fidelity = fidelity;
+    cfg.hardware.topology.kind = topology;
     let mut out = Vec::new();
     for m in MllmConfig::paper_models() {
         for &len in &LENGTHS {
@@ -53,13 +58,14 @@ pub fn compute_with(fidelity: MemoryFidelity) -> Vec<SweepPoint> {
 }
 
 pub fn run() -> Experiment {
-    run_with(MemoryFidelity::FirstOrder)
+    run_with(MemoryFidelity::FirstOrder, TopologyKind::PointToPoint)
 }
 
-/// The Fig 8 experiment at an explicit memory fidelity. First-order is
-/// byte-identical to [`run`] (the golden snapshot path).
-pub fn run_with(fidelity: MemoryFidelity) -> Experiment {
-    let points = compute_with(fidelity);
+/// The Fig 8 experiment at an explicit memory fidelity and fabric
+/// topology. The defaults are byte-identical to [`run`] (the golden
+/// snapshot path).
+pub fn run_with(fidelity: MemoryFidelity, topology: TopologyKind) -> Experiment {
+    let points = compute_with(fidelity, topology);
     let mut t = Table::new(
         "Fig 8 — sequence-length sensitivity (128 -> 4k text tokens, 488 out)",
         &["model", "text len", "latency (ms)", "energy (J)", "KV offloaded (MB)"],

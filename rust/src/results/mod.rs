@@ -7,6 +7,7 @@
 //! reproduction target.
 
 pub mod ablations;
+pub mod fabric;
 pub mod fig1;
 pub mod fig6;
 pub mod fig7;
@@ -44,11 +45,12 @@ pub fn run_all() -> Vec<Experiment> {
 }
 
 /// Run one experiment by id ("1", "6", "7", "8", "9", "table5",
-/// "scaling", "memcheck", "tail", "perf").
+/// "scaling", "memcheck", "tail", "perf", "fabric").
 ///
-/// "perf" is reachable only here (and via `chime bench`), never from
-/// [`run_all`]: its wall-clock columns are machine-dependent, and the
-/// `--all` output is locked byte for byte by the `golden_paper` suite.
+/// "perf" and "fabric" are reachable only here (perf also via
+/// `chime bench`), never from [`run_all`]: perf's wall-clock columns are
+/// machine-dependent, fabric post-dates the lock, and the `--all` output
+/// is locked byte for byte by the `golden_paper` suite.
 pub fn run_one(id: &str) -> Option<Experiment> {
     match id {
         "1" | "fig1" => Some(fig1::run()),
@@ -62,6 +64,7 @@ pub fn run_one(id: &str) -> Option<Experiment> {
         "memcheck" | "mem" => Some(memcheck::run()),
         "tail" | "latency" => Some(tail::run()),
         "perf" | "bench" => Some(perf::run()),
+        "fabric" | "links" => Some(fabric::run()),
         _ => None,
     }
 }

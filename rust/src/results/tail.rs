@@ -58,8 +58,10 @@ pub struct TailPoint {
 }
 
 /// The seeded open-loop arrival stream: Poisson arrivals at
-/// [`RATE_PER_S`], heavy/light token skew by request index.
-fn tail_requests() -> Vec<ServeRequest> {
+/// [`RATE_PER_S`], heavy/light token skew by request index. Shared with
+/// the fabric figure (`results::fabric`) so its per-topology tail rows
+/// are directly comparable with this table.
+pub fn tail_requests() -> Vec<ServeRequest> {
     let mut prng = Prng::new(SEED);
     let mut clock_ns = 0.0;
     (0..REQUESTS)

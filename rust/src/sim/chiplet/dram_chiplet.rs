@@ -7,23 +7,25 @@
 
 use crate::config::NmpConfig;
 use crate::sim::energy::Component;
+use crate::sim::fabric::Fabric;
 use crate::sim::kernels::{FusedKernel, KernelCost};
 use crate::sim::memory::dram::WeightClass;
-use crate::sim::memory::{DramMem, KvResidency, RramMem, UcieLink};
+use crate::sim::memory::{DramMem, KvResidency, RramMem};
 use crate::sim::nmp::{pe, sfpe};
 
 /// Execute one fused kernel on the DRAM chiplet.
 ///
-/// `rram`/`ucie` are needed because attention over very long contexts may
-/// read cold KV blocks that tiering offloaded to the RRAM chiplet. The
-/// memories answer stream-time queries at whichever fidelity they wrap
-/// (first-order analytic or the cycle-accurate bank/row model).
+/// `rram`/`fabric` are needed because attention over very long contexts
+/// may read cold KV blocks that tiering offloaded to the RRAM chiplet —
+/// those cross the package's local UCIe link. The memories answer
+/// stream-time queries at whichever fidelity they wrap (first-order
+/// analytic or the cycle-accurate bank/row model).
 pub fn execute(
     kernel: &FusedKernel,
     nmp: &NmpConfig,
     dram: &mut DramMem,
     rram: &mut RramMem,
-    ucie: &mut UcieLink,
+    fabric: &mut Fabric,
 ) -> KernelCost {
     let mut cost = KernelCost::default();
     let mut stream_ns = 0.0;
@@ -62,7 +64,7 @@ pub fn execute(
             stream_ns += rram.kv_stream_ns(rram_part);
             cost.energy
                 .deposit(Component::RramArray, rram.read_energy_pj(rram_part));
-            let (ns, pj) = ucie.transfer(rram_part);
+            let (ns, pj) = fabric.local_transfer(rram_part);
             stream_ns += ns;
             cost.energy.deposit(Component::Ucie, pj);
         }
@@ -80,7 +82,7 @@ pub fn execute(
             stream_ns += wns;
             cost.energy
                 .deposit(Component::RramArray, rram.write_energy_pj(offloaded));
-            let (ns, pj) = ucie.transfer(offloaded);
+            let (ns, pj) = fabric.local_transfer(offloaded);
             stream_ns += ns;
             cost.energy.deposit(Component::Ucie, pj);
         }
@@ -142,15 +144,15 @@ mod tests {
     use crate::sim::kernels::{FusedKind, Placement};
     use crate::sim::memory::{DramState, RramState};
 
-    fn setup_with(fidelity: MemoryFidelity) -> (ChimeHardware, DramMem, RramMem, UcieLink) {
+    fn setup_with(fidelity: MemoryFidelity) -> (ChimeHardware, DramMem, RramMem, Fabric) {
         let hw = ChimeHardware::default();
         let dram = DramMem::new(DramState::new(hw.dram.clone()), fidelity);
         let rram = RramMem::new(RramState::new(hw.rram.clone()), fidelity);
-        let ucie = UcieLink::new(hw.ucie.clone());
-        (hw, dram, rram, ucie)
+        let fabric = Fabric::single(hw.ucie.clone());
+        (hw, dram, rram, fabric)
     }
 
-    fn setup() -> (ChimeHardware, DramMem, RramMem, UcieLink) {
+    fn setup() -> (ChimeHardware, DramMem, RramMem, Fabric) {
         setup_with(MemoryFidelity::FirstOrder)
     }
 
@@ -171,11 +173,11 @@ mod tests {
 
     #[test]
     fn memory_bound_gemv_dominated_by_streaming() {
-        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let (hw, mut dram, mut rram, mut fabric) = setup();
         dram.state_mut().place_weights(1_000_000_000).unwrap();
         // Decode GEMV: bytes dominate (weights 100 MB, flops tiny).
         let k = kernel_with(100_000_000, 1e6, 1);
-        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut fabric);
         assert_eq!(c.bottleneck(), "memory");
         assert!(c.time_ns > c.compute_ns);
         assert!(c.energy.get(Component::DramArray) > 0.0);
@@ -184,16 +186,16 @@ mod tests {
 
     #[test]
     fn compute_bound_prefill_dominated_by_macs() {
-        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let (hw, mut dram, mut rram, mut fabric) = setup();
         // Prefill GEMM: heavy flops, light weights.
         let k = kernel_with(1_000, 1e12, 256);
-        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut fabric);
         assert_eq!(c.bottleneck(), "compute");
     }
 
     #[test]
     fn cold_kv_reads_cross_ucie() {
-        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let (hw, mut dram, mut rram, mut fabric) = setup();
         // Fill DRAM completely with weights, then append KV -> all offloads.
         dram.state_mut().place_weights(hw.dram.chip_capacity_bytes()).unwrap();
         dram.append_kv(10_000_000);
@@ -209,17 +211,17 @@ mod tests {
             cut_in: false,
             cut_out: true,
         };
-        let before = ucie.bytes_transferred;
-        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
-        assert!(ucie.bytes_transferred > before, "cold KV must cross the link");
+        let before = fabric.bytes_transferred;
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut fabric);
+        assert!(fabric.bytes_transferred > before, "cold KV must cross the link");
         assert!(c.energy.get(Component::RramArray) > 0.0);
     }
 
     #[test]
     fn dispatch_floor_applies() {
-        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let (hw, mut dram, mut rram, mut fabric) = setup();
         let k = kernel_with(0, 0.0, 1);
-        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut fabric);
         assert!((c.time_ns - hw.dram_nmp.kernel_dispatch_ns).abs() < 1e-9);
     }
 
@@ -229,10 +231,10 @@ mod tests {
         // the idealized lower bound, so the cycle cost must dominate, and
         // the streamed-byte accounting must agree bit for bit.
         let run = |fidelity: MemoryFidelity| {
-            let (hw, mut dram, mut rram, mut ucie) = setup_with(fidelity);
+            let (hw, mut dram, mut rram, mut fabric) = setup_with(fidelity);
             dram.state_mut().place_weights(1_000_000_000).unwrap();
             let k = kernel_with(100_000_000, 1e6, 1);
-            let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+            let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut fabric);
             (c, dram.state().bytes_read)
         };
         let (fo, fo_read) = run(MemoryFidelity::FirstOrder);
@@ -256,13 +258,13 @@ mod tests {
     fn paper_scale_attention_step_sane() {
         // One full decode-attention layer of FastVLM-0.6B should take
         // single-digit microseconds on the DRAM chiplet.
-        let (hw, mut dram, mut rram, mut ucie) = setup();
+        let (hw, mut dram, mut rram, mut fabric) = setup();
         let m = MllmConfig::fastvlm_0_6b();
         dram.state_mut()
             .place_weights(m.llm.attn_weight_bytes_per_layer() * m.llm.n_layers as u64)
             .unwrap();
         let k = kernel_with(m.llm.attn_weight_bytes_per_layer(), 2.0 * 1.84e6, 1);
-        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut ucie);
+        let c = execute(&k, &hw.dram_nmp, &mut dram, &mut rram, &mut fabric);
         assert!(c.time_ns > 1_000.0 && c.time_ns < 100_000.0, "t = {} ns", c.time_ns);
     }
 }

@@ -1,0 +1,410 @@
+//! Routed UCIe fabric: hop-by-hop link simulation over a
+//! [`Topology`], with per-link byte/transfer counters, per-link busy
+//! time, and per-tick peak-bandwidth tracking (DESIGN.md §12).
+//!
+//! Two transfer paths share one config and one set of counters:
+//!
+//! * [`Fabric::local_transfer`] — the in-package DRAM↔RRAM DMA every
+//!   `SimEngine` issues for the two cut-point activations and KV
+//!   offloads. This is *verbatim* the legacy `UcieLink` formula (same
+//!   guard, same latency, same energy), so the default configuration
+//!   reproduces every pre-fabric number bit-identically.
+//! * [`Fabric::transfer`] — a routed transfer between two arbitrary
+//!   chiplet endpoints. The payload crosses every link of the route
+//!   serially (store-and-forward at DRAM dies), but the *sender* stalls
+//!   only for the local handoff — the first-hop DMA — matching the
+//!   streaming-overlap semantics of the legacy link: downstream hops
+//!   overlap with whatever the sender does next, and the receiver sees
+//!   the payload at `delivery_ns`.
+//!
+//! Telemetry is side-effect-only: recording bytes on a link never
+//! changes the returned latency/energy, which keeps the single-package
+//! default bit-identical while still exposing per-link peak GB/s.
+
+pub mod topology;
+
+pub use topology::{Chiplet, Endpoint, Link, Topology};
+
+use std::collections::BTreeMap;
+
+use crate::config::{TopologyKind, UcieConfig};
+
+/// Peak-tracking window (ns): per-link bytes are bucketed into 1 µs
+/// ticks of fabric virtual time; the max bucket is the peak. 1 µs sits
+/// well under kernel granularity (~10–100 µs) and well over single
+/// transfers, so the peak reflects sustained, not instantaneous, load.
+pub const TICK_NS: f64 = 1000.0;
+
+/// Lifetime + per-tick counters for one physical link.
+#[derive(Debug, Clone, Default)]
+pub struct LinkState {
+    /// Total payload bytes that crossed this link.
+    pub bytes: u64,
+    /// Number of transfers that crossed this link.
+    pub transfers: u64,
+    /// Total wire-serialization time on this link (ns).
+    pub busy_ns: f64,
+    /// Largest per-tick byte count observed ([`TICK_NS`] window).
+    pub peak_tick_bytes: u64,
+    tick_index: u64,
+    tick_bytes: u64,
+}
+
+impl LinkState {
+    /// Record one crossing at fabric time `clock_ns`.
+    fn record(&mut self, bytes: u64, wire_ns: f64, clock_ns: f64) {
+        let tick = (clock_ns / TICK_NS) as u64;
+        if tick != self.tick_index {
+            self.tick_index = tick;
+            self.tick_bytes = 0;
+        }
+        self.bytes += bytes;
+        self.transfers += 1;
+        self.busy_ns += wire_ns;
+        self.tick_bytes += bytes;
+        self.peak_tick_bytes = self.peak_tick_bytes.max(self.tick_bytes);
+    }
+
+    /// Peak sustained bandwidth over any [`TICK_NS`] window, in GB/s
+    /// (bytes/ns ≡ GB/s).
+    pub fn peak_gbps(&self) -> f64 {
+        self.peak_tick_bytes as f64 / TICK_NS
+    }
+
+    /// Fold another link's counters into this one (sum totals, max
+    /// peaks) — used when merging per-engine fabrics into one view.
+    pub fn merge(&mut self, other: &LinkState) {
+        self.bytes += other.bytes;
+        self.transfers += other.transfers;
+        self.busy_ns += other.busy_ns;
+        self.peak_tick_bytes = self.peak_tick_bytes.max(other.peak_tick_bytes);
+    }
+}
+
+/// Cost of one routed transfer (see [`Fabric::transfer`]).
+#[derive(Debug, Clone, Copy)]
+pub struct Delivery {
+    /// Sender-side stall: the first-hop DMA (setup + one wire pass).
+    pub stall_ns: f64,
+    /// When the receiver has the payload, relative to send: setup plus
+    /// one serialized wire pass per hop.
+    pub delivery_ns: f64,
+    /// Total link energy (every hop re-drives the wires), pJ.
+    pub energy_pj: f64,
+    /// Number of links crossed.
+    pub hops: usize,
+}
+
+impl Delivery {
+    /// A free delivery (zero-byte, linkless, or unrouted transfer).
+    pub fn free() -> Delivery {
+        Delivery { stall_ns: 0.0, delivery_ns: 0.0, energy_pj: 0.0, hops: 0 }
+    }
+}
+
+/// A routed UCIe fabric instance: one [`Topology`] plus per-link state
+/// and aggregate counters. Engines own a single-package fabric (their
+/// private local link); `ShardedServer` owns a fabric spanning all
+/// packages for cross-package (steal) traffic.
+pub struct Fabric {
+    cfg: UcieConfig,
+    kind: TopologyKind,
+    packages: usize,
+    home: usize,
+    topo: Box<dyn Topology + Send + Sync>,
+    links: BTreeMap<Link, LinkState>,
+    clock_ns: f64,
+    /// Aggregate payload bytes (counted once per transfer, like the
+    /// legacy `UcieLink` — per-link counters count per crossing).
+    pub bytes_transferred: u64,
+    /// Aggregate transfer count.
+    pub transfers: u64,
+}
+
+impl Fabric {
+    /// A fabric over `packages` packages. `home` names the package
+    /// whose local link [`Fabric::local_transfer`] charges.
+    pub fn new(cfg: UcieConfig, kind: TopologyKind, packages: usize, home: usize) -> Fabric {
+        assert!(home < packages.max(1), "home package out of range");
+        let topo = kind.build(packages);
+        let links = topo.links().into_iter().map(|l| (l, LinkState::default())).collect();
+        Fabric {
+            cfg,
+            kind,
+            packages,
+            home,
+            topo,
+            links,
+            clock_ns: 0.0,
+            bytes_transferred: 0,
+            transfers: 0,
+        }
+    }
+
+    /// The single-package fabric a `SimEngine` owns: one local link,
+    /// point-to-point (every topology is identical at one package).
+    pub fn single(cfg: UcieConfig) -> Fabric {
+        Fabric::new(cfg, TopologyKind::PointToPoint, 1, 0)
+    }
+
+    /// The link configuration (read-only).
+    pub fn config(&self) -> &UcieConfig {
+        &self.cfg
+    }
+
+    /// The topology kind this fabric routes over.
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    /// Number of packages spanned.
+    pub fn packages(&self) -> usize {
+        self.packages
+    }
+
+    /// The topology (route inspection).
+    pub fn topology(&self) -> &dyn Topology {
+        self.topo.as_ref()
+    }
+
+    /// Current fabric virtual time (ns).
+    pub fn clock_ns(&self) -> f64 {
+        self.clock_ns
+    }
+
+    /// Advance fabric virtual time by `ns` (peak-tick bucketing only —
+    /// never changes transfer costs).
+    pub fn advance(&mut self, ns: f64) {
+        self.clock_ns += ns;
+    }
+
+    /// Advance fabric virtual time to at least `ns`.
+    pub fn advance_to(&mut self, ns: f64) {
+        self.clock_ns = self.clock_ns.max(ns);
+    }
+
+    /// Zero every counter and the clock (new serving session); the
+    /// topology is untouched.
+    pub fn reset(&mut self) {
+        for state in self.links.values_mut() {
+            *state = LinkState::default();
+        }
+        self.clock_ns = 0.0;
+        self.bytes_transferred = 0;
+        self.transfers = 0;
+    }
+
+    /// Per-link telemetry, in canonical link order.
+    pub fn link_states(&self) -> impl Iterator<Item = (&Link, &LinkState)> {
+        self.links.iter()
+    }
+
+    /// In-package DMA on the home package's local link. Returns
+    /// `(latency_ns, energy_pj)` — *verbatim* the legacy `UcieLink`
+    /// formula: streaming payloads overlap with downstream compute, so
+    /// the non-overlappable cost is the DMA setup latency plus the
+    /// serialized wire time of the payload.
+    pub fn local_transfer(&mut self, bytes: u64) -> (f64, f64) {
+        if bytes == 0 || self.cfg.bandwidth_gbps.is_infinite() {
+            // DRAM-only ablation: no link.
+            return (0.0, 0.0);
+        }
+        self.bytes_transferred += bytes;
+        self.transfers += 1;
+        let wire_ns = bytes as f64 / self.cfg.bandwidth_gbps;
+        let latency = self.cfg.dma_latency_ns + wire_ns;
+        let energy = bytes as f64 * 8.0 * self.cfg.energy_pj_per_bit;
+        let clock = self.clock_ns;
+        self.links
+            .entry(Link::Local { package: self.home })
+            .or_default()
+            .record(bytes, wire_ns, clock);
+        (latency, energy)
+    }
+
+    /// Route a payload from `src` to `dst` hop-by-hop. Each hop
+    /// re-serializes the payload on its link (store-and-forward) and
+    /// re-drives the wires, so delivery time and energy scale with hop
+    /// count; the sender stalls only for the first-hop handoff. A
+    /// one-hop route costs exactly what [`Fabric::local_transfer`]
+    /// charges.
+    pub fn transfer(&mut self, src: Endpoint, dst: Endpoint, bytes: u64) -> Delivery {
+        let route = self.topo.route(src, dst);
+        let hops = route.len();
+        if bytes == 0 || self.cfg.bandwidth_gbps.is_infinite() || hops == 0 {
+            return Delivery::free();
+        }
+        self.bytes_transferred += bytes;
+        self.transfers += 1;
+        let wire_ns = bytes as f64 / self.cfg.bandwidth_gbps;
+        let clock = self.clock_ns;
+        for link in &route {
+            self.links.entry(*link).or_default().record(bytes, wire_ns, clock);
+        }
+        Delivery {
+            stall_ns: self.cfg.dma_latency_ns + wire_ns,
+            delivery_ns: self.cfg.dma_latency_ns + wire_ns * hops as f64,
+            energy_pj: bytes as f64 * 8.0 * self.cfg.energy_pj_per_bit * hops as f64,
+            hops,
+        }
+    }
+}
+
+impl Clone for Fabric {
+    fn clone(&self) -> Fabric {
+        Fabric {
+            cfg: self.cfg.clone(),
+            kind: self.kind,
+            packages: self.packages,
+            home: self.home,
+            topo: self.kind.build(self.packages),
+            links: self.links.clone(),
+            clock_ns: self.clock_ns,
+            bytes_transferred: self.bytes_transferred,
+            transfers: self.transfers,
+        }
+    }
+}
+
+impl std::fmt::Debug for Fabric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Fabric")
+            .field("kind", &self.kind)
+            .field("packages", &self.packages)
+            .field("home", &self.home)
+            .field("bytes_transferred", &self.bytes_transferred)
+            .field("transfers", &self.transfers)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_transfer_matches_the_legacy_link_bit_for_bit() {
+        // 128 KB at 128 GB/s = 1000 ns wire + 80 ns DMA; 0.6 pJ/bit.
+        let mut f = Fabric::single(UcieConfig::default());
+        let (ns, pj) = f.local_transfer(128_000);
+        let wire = 128_000.0 / 128.0;
+        assert_eq!(ns.to_bits(), (80.0 + wire).to_bits());
+        assert_eq!(pj.to_bits(), (128_000.0 * 8.0 * 0.6).to_bits());
+        assert_eq!((f.bytes_transferred, f.transfers), (128_000, 1));
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        let mut f = Fabric::single(UcieConfig::default());
+        assert_eq!(f.local_transfer(0), (0.0, 0.0));
+        let d = f.transfer(Endpoint::dram(0), Endpoint::rram(0), 0);
+        assert_eq!((d.delivery_ns, d.energy_pj), (0.0, 0.0));
+        assert_eq!(f.transfers, 0);
+    }
+
+    #[test]
+    fn dram_only_link_is_free() {
+        let mut cfg = UcieConfig::default();
+        cfg.bandwidth_gbps = f64::INFINITY;
+        let mut f = Fabric::new(cfg, TopologyKind::Ring, 4, 0);
+        assert_eq!(f.local_transfer(1_000_000), (0.0, 0.0));
+        let d = f.transfer(Endpoint::dram(0), Endpoint::dram(2), 1_000_000);
+        assert_eq!((d.stall_ns, d.delivery_ns, d.energy_pj), (0.0, 0.0, 0.0));
+        assert_eq!(f.bytes_transferred, 0);
+    }
+
+    #[test]
+    fn one_hop_routed_transfer_costs_exactly_a_local_transfer() {
+        let mut a = Fabric::single(UcieConfig::default());
+        let mut b = Fabric::new(UcieConfig::default(), TopologyKind::Ring, 4, 0);
+        let (ns, pj) = a.local_transfer(64_000);
+        let d = b.transfer(Endpoint::dram(0), Endpoint::dram(1), 64_000);
+        assert_eq!(d.hops, 1);
+        assert_eq!(d.delivery_ns.to_bits(), ns.to_bits());
+        assert_eq!(d.stall_ns.to_bits(), ns.to_bits());
+        assert_eq!(d.energy_pj.to_bits(), pj.to_bits());
+    }
+
+    #[test]
+    fn multi_hop_scales_delivery_and_energy_but_not_the_stall() {
+        let mut f = Fabric::new(UcieConfig::default(), TopologyKind::Line, 4, 0);
+        let bytes = 128_000u64;
+        let wire = bytes as f64 / 128.0;
+        let d = f.transfer(Endpoint::dram(0), Endpoint::dram(3), bytes);
+        assert_eq!(d.hops, 3);
+        assert_eq!(d.stall_ns.to_bits(), (80.0 + wire).to_bits());
+        assert_eq!(d.delivery_ns.to_bits(), (80.0 + 3.0 * wire).to_bits());
+        assert_eq!(d.energy_pj.to_bits(), (bytes as f64 * 8.0 * 0.6 * 3.0).to_bits());
+        // Every link on the route counted the full payload.
+        for hop in [(0, 1), (1, 2), (2, 3)] {
+            let state = &f.links[&Link::Inter { a: hop.0, b: hop.1 }];
+            assert_eq!((state.bytes, state.transfers), (bytes, 1));
+        }
+    }
+
+    #[test]
+    fn per_link_bytes_conserve_bytes_times_hops() {
+        let mut f = Fabric::new(UcieConfig::default(), TopologyKind::Mesh, 6, 0);
+        let mut expected = 0u64;
+        for (a, b, bytes) in [(0, 5, 1000u64), (2, 3, 500), (4, 1, 2048), (5, 0, 64)] {
+            let d = f.transfer(Endpoint::dram(a), Endpoint::rram(b), bytes);
+            expected += bytes * d.hops as u64;
+        }
+        let counted: u64 = f.link_states().map(|(_, s)| s.bytes).sum();
+        assert_eq!(counted, expected);
+    }
+
+    #[test]
+    fn peak_tracks_the_busiest_tick_window() {
+        let mut f = Fabric::single(UcieConfig::default());
+        f.local_transfer(10_000);
+        f.local_transfer(5_000); // same tick: accumulates
+        assert_eq!(f.links[&Link::Local { package: 0 }].peak_tick_bytes, 15_000);
+        f.advance(10.0 * TICK_NS); // next window is quieter
+        f.local_transfer(7_000);
+        let state = &f.links[&Link::Local { package: 0 }];
+        assert_eq!(state.peak_tick_bytes, 15_000);
+        assert_eq!(state.bytes, 22_000);
+        assert_eq!(state.peak_gbps(), 15.0); // 15 KB / 1 µs = 15 GB/s
+    }
+
+    #[test]
+    fn reset_zeroes_counters_but_keeps_the_topology() {
+        let mut f = Fabric::new(UcieConfig::default(), TopologyKind::Ring, 4, 0);
+        f.transfer(Endpoint::dram(0), Endpoint::dram(2), 4096);
+        f.advance(5.0 * TICK_NS);
+        f.reset();
+        assert_eq!((f.bytes_transferred, f.transfers), (0, 0));
+        assert_eq!(f.clock_ns(), 0.0);
+        assert!(f.link_states().all(|(_, s)| s.bytes == 0 && s.peak_tick_bytes == 0));
+        assert_eq!(f.kind(), TopologyKind::Ring);
+        assert_eq!(f.link_states().count(), 4 + 4); // 4 local + 4 ring links
+    }
+
+    #[test]
+    fn clone_preserves_counters_and_topology() {
+        let mut f = Fabric::new(UcieConfig::default(), TopologyKind::Mesh, 4, 0);
+        f.transfer(Endpoint::dram(0), Endpoint::dram(3), 9000);
+        let c = f.clone();
+        assert_eq!(c.bytes_transferred, f.bytes_transferred);
+        assert_eq!(c.kind(), TopologyKind::Mesh);
+        let (a, b): (Vec<_>, Vec<_>) = (
+            f.link_states().map(|(l, s)| (*l, s.bytes)).collect(),
+            c.link_states().map(|(l, s)| (*l, s.bytes)).collect(),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_sums_totals_and_maxes_peaks() {
+        let mut a = LinkState::default();
+        let mut b = LinkState::default();
+        a.record(1000, 10.0, 0.0);
+        b.record(3000, 30.0, 0.0);
+        a.merge(&b);
+        assert_eq!(a.bytes, 4000);
+        assert_eq!(a.transfers, 2);
+        assert_eq!(a.busy_ns, 40.0);
+        assert_eq!(a.peak_tick_bytes, 3000);
+    }
+}

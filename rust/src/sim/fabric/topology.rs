@@ -1,0 +1,494 @@
+//! Fabric topologies: which physical UCIe links exist between the
+//! chiplets of a multi-package deployment, and how a `(src, dst)`
+//! endpoint pair resolves to an explicit multi-hop link route.
+//!
+//! Every package is one DRAM + one RRAM chiplet joined by a *local*
+//! UCIe link (the link the single-package simulator has always
+//! modeled). Inter-package links connect DRAM dies — the DRAM chiplet
+//! is the package's fabric port, matching the CHIME floorplan where the
+//! LLM-side die fronts the package. The four topologies differ only in
+//! which DRAM-to-DRAM links exist and how package paths are chosen:
+//!
+//! ```text
+//! point-to-point        line                ring                mesh (w = ceil(sqrt(n)))
+//!   p0 ─── p1           p0 ── p1            p0 ── p1            p0 ── p1
+//!    │ ╲  ╱ │                  │             │      │            │      │
+//!    │  ╳   │                  p2            p3 ── p2            p2 ── p3
+//!    │ ╱  ╲ │                  │
+//!   p3 ─── p2                  p3
+//! ```
+//!
+//! Routes are canonical and deterministic: cross-package routes are
+//! built for `src.package < dst.package` and the opposite direction is
+//! the exact reversal, so `route(a, b)` always mirrors `route(b, a)`
+//! (locked by a property test).
+
+use crate::config::TopologyKind;
+
+/// Which die of a package an endpoint lives on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Chiplet {
+    /// The DDR die (LLM weights + KV; the package's fabric port).
+    Dram,
+    /// The RRAM CIM die (ViT weights).
+    Rram,
+}
+
+/// One chiplet of one package — the unit the fabric routes between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Endpoint {
+    /// Package index (0-based).
+    pub package: usize,
+    /// Which die of that package.
+    pub chiplet: Chiplet,
+}
+
+impl Endpoint {
+    /// The DRAM die of package `package`.
+    pub fn dram(package: usize) -> Endpoint {
+        Endpoint { package, chiplet: Chiplet::Dram }
+    }
+
+    /// The RRAM die of package `package`.
+    pub fn rram(package: usize) -> Endpoint {
+        Endpoint { package, chiplet: Chiplet::Rram }
+    }
+}
+
+/// One undirected physical UCIe link. `Inter` links are canonical
+/// (`a < b`) so both traversal directions hit the same counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Link {
+    /// The in-package DRAM↔RRAM link of `package`.
+    Local {
+        /// Package index.
+        package: usize,
+    },
+    /// The inter-package DRAM-to-DRAM link between packages `a < b`.
+    Inter {
+        /// Lower package index.
+        a: usize,
+        /// Higher package index.
+        b: usize,
+    },
+}
+
+impl Link {
+    /// Canonicalize an inter-package link (order-insensitive).
+    fn inter(x: usize, y: usize) -> Link {
+        Link::Inter { a: x.min(y), b: x.max(y) }
+    }
+
+    /// Short display label: `p2.local` / `p0-p1`.
+    pub fn label(&self) -> String {
+        match self {
+            Link::Local { package } => format!("p{package}.local"),
+            Link::Inter { a, b } => format!("p{a}-p{b}"),
+        }
+    }
+}
+
+/// A fabric topology over `packages()` DRAM+RRAM packages: which links
+/// exist ([`Topology::links`]) and how endpoint pairs route over them
+/// ([`Topology::route`]). Implementations only supply the package-level
+/// path for `a < b`; endpoint routing, reversal symmetry, and local-leg
+/// handling are provided.
+pub trait Topology {
+    /// The kind tag this topology was built from.
+    fn kind(&self) -> TopologyKind;
+
+    /// Number of packages spanned.
+    fn packages(&self) -> usize;
+
+    /// Ordered package sequence from `a` to `b`, both inclusive.
+    /// Only called with `a < b`; every consecutive pair must be a
+    /// physical inter-package link of the topology.
+    fn package_path(&self, a: usize, b: usize) -> Vec<usize>;
+
+    /// Upper bound on inter-package hops over all package pairs.
+    fn package_diameter(&self) -> usize;
+
+    /// Every inter-package link, canonical and deduplicated.
+    fn inter_links(&self) -> Vec<Link>;
+
+    /// Every physical link: one local link per package + inter links.
+    fn links(&self) -> Vec<Link> {
+        let mut v: Vec<Link> =
+            (0..self.packages()).map(|p| Link::Local { package: p }).collect();
+        v.extend(self.inter_links());
+        v
+    }
+
+    /// Upper bound on hops for any endpoint route: the package
+    /// diameter plus at most one local leg at each end.
+    fn diameter(&self) -> usize {
+        self.package_diameter() + 2
+    }
+
+    /// The explicit link route from `src` to `dst` (empty when they are
+    /// the same endpoint). Cross-package routes enter/leave through the
+    /// DRAM dies, with a local leg appended for RRAM endpoints;
+    /// `route(a, b)` is always the exact reversal of `route(b, a)`.
+    fn route(&self, src: Endpoint, dst: Endpoint) -> Vec<Link> {
+        if src == dst {
+            return Vec::new();
+        }
+        if src.package == dst.package {
+            return vec![Link::Local { package: src.package }];
+        }
+        if src.package > dst.package {
+            let mut rev = self.route(dst, src);
+            rev.reverse();
+            return rev;
+        }
+        let mut route = Vec::new();
+        if src.chiplet == Chiplet::Rram {
+            route.push(Link::Local { package: src.package });
+        }
+        let path = self.package_path(src.package, dst.package);
+        debug_assert!(path.first() == Some(&src.package));
+        debug_assert!(path.last() == Some(&dst.package));
+        for w in path.windows(2) {
+            route.push(Link::inter(w[0], w[1]));
+        }
+        if dst.chiplet == Chiplet::Rram {
+            route.push(Link::Local { package: dst.package });
+        }
+        route
+    }
+}
+
+/// Dedicated link between every package pair — the legacy model, where
+/// every cross-package transfer is exactly one inter hop.
+struct PointToPoint {
+    n: usize,
+}
+
+impl Topology for PointToPoint {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::PointToPoint
+    }
+
+    fn packages(&self) -> usize {
+        self.n
+    }
+
+    fn package_path(&self, a: usize, b: usize) -> Vec<usize> {
+        vec![a, b]
+    }
+
+    fn package_diameter(&self) -> usize {
+        if self.n > 1 { 1 } else { 0 }
+    }
+
+    fn inter_links(&self) -> Vec<Link> {
+        let mut v = Vec::new();
+        for a in 0..self.n {
+            for b in a + 1..self.n {
+                v.push(Link::Inter { a, b });
+            }
+        }
+        v
+    }
+}
+
+/// Open chain `p0 — p1 — … — p(n-1)`; routes walk the chain.
+struct Line {
+    n: usize,
+}
+
+impl Topology for Line {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Line
+    }
+
+    fn packages(&self) -> usize {
+        self.n
+    }
+
+    fn package_path(&self, a: usize, b: usize) -> Vec<usize> {
+        (a..=b).collect()
+    }
+
+    fn package_diameter(&self) -> usize {
+        self.n.saturating_sub(1)
+    }
+
+    fn inter_links(&self) -> Vec<Link> {
+        (1..self.n).map(|b| Link::Inter { a: b - 1, b }).collect()
+    }
+}
+
+/// Closed chain with a wraparound link; routes take the shorter arc
+/// (ascending on ties, so routes stay canonical).
+struct Ring {
+    n: usize,
+}
+
+impl Topology for Ring {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Ring
+    }
+
+    fn packages(&self) -> usize {
+        self.n
+    }
+
+    fn package_path(&self, a: usize, b: usize) -> Vec<usize> {
+        let fwd = b - a;
+        if fwd <= self.n - fwd {
+            (a..=b).collect()
+        } else {
+            let mut path = vec![a];
+            let mut p = a;
+            while p != b {
+                p = (p + self.n - 1) % self.n;
+                path.push(p);
+            }
+            path
+        }
+    }
+
+    fn package_diameter(&self) -> usize {
+        self.n / 2
+    }
+
+    fn inter_links(&self) -> Vec<Link> {
+        // BTreeSet dedupes the n=2 case, where 0→1 and the wraparound
+        // are the same canonical link.
+        let set: std::collections::BTreeSet<Link> = (0..self.n)
+            .filter(|_| self.n > 1)
+            .map(|i| Link::inter(i, (i + 1) % self.n))
+            .collect();
+        set.into_iter().collect()
+    }
+}
+
+/// Row-major 2D grid of width `w = ceil(sqrt(n))` (last row may be
+/// partial); routes are dimension-ordered (X then Y), which never
+/// leaves the populated region for `a < b` because rows fill top-down.
+struct Mesh {
+    n: usize,
+    w: usize,
+}
+
+impl Mesh {
+    fn new(n: usize) -> Mesh {
+        let mut w = 1;
+        while w * w < n {
+            w += 1;
+        }
+        Mesh { n, w }
+    }
+}
+
+impl Topology for Mesh {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Mesh
+    }
+
+    fn packages(&self) -> usize {
+        self.n
+    }
+
+    fn package_path(&self, a: usize, b: usize) -> Vec<usize> {
+        let xb = b % self.w;
+        let mut path = vec![a];
+        let mut cur = a;
+        while cur % self.w != xb {
+            cur = if cur % self.w < xb { cur + 1 } else { cur - 1 };
+            path.push(cur);
+        }
+        while cur / self.w != b / self.w {
+            cur += self.w; // a < b row-major ⇒ rows only increase
+            path.push(cur);
+        }
+        path
+    }
+
+    fn package_diameter(&self) -> usize {
+        if self.n <= 1 {
+            return 0;
+        }
+        let h = (self.n + self.w - 1) / self.w;
+        (self.w - 1) + (h - 1)
+    }
+
+    fn inter_links(&self) -> Vec<Link> {
+        let mut v = Vec::new();
+        for p in 0..self.n {
+            if p % self.w + 1 < self.w && p + 1 < self.n {
+                v.push(Link::Inter { a: p, b: p + 1 });
+            }
+            if p + self.w < self.n {
+                v.push(Link::Inter { a: p, b: p + self.w });
+            }
+        }
+        v.sort();
+        v
+    }
+}
+
+impl TopologyKind {
+    /// Construct the concrete topology over `packages` packages.
+    pub fn build(self, packages: usize) -> Box<dyn Topology + Send + Sync> {
+        match self {
+            TopologyKind::PointToPoint => Box::new(PointToPoint { n: packages }),
+            TopologyKind::Line => Box::new(Line { n: packages }),
+            TopologyKind::Ring => Box::new(Ring { n: packages }),
+            TopologyKind::Mesh => Box::new(Mesh::new(packages)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all(packages: usize) -> Vec<Box<dyn Topology + Send + Sync>> {
+        TopologyKind::ALL.iter().map(|k| k.build(packages)).collect()
+    }
+
+    #[test]
+    fn intra_package_routes_are_one_local_hop_on_every_topology() {
+        for topo in all(4) {
+            for p in 0..4 {
+                let route = topo.route(Endpoint::dram(p), Endpoint::rram(p));
+                assert_eq!(route, vec![Link::Local { package: p }], "{:?}", topo.kind());
+                assert!(topo.route(Endpoint::dram(p), Endpoint::dram(p)).is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn point_to_point_is_always_one_inter_hop() {
+        let topo = TopologyKind::PointToPoint.build(8);
+        for a in 0..8 {
+            for b in 0..8 {
+                if a == b {
+                    continue;
+                }
+                let route = topo.route(Endpoint::dram(a), Endpoint::dram(b));
+                assert_eq!(route, vec![Link::inter(a, b)]);
+            }
+        }
+        assert_eq!(topo.inter_links().len(), 8 * 7 / 2);
+    }
+
+    #[test]
+    fn line_routes_walk_the_chain() {
+        let topo = TopologyKind::Line.build(4);
+        let route = topo.route(Endpoint::dram(0), Endpoint::dram(3));
+        assert_eq!(
+            route,
+            vec![Link::inter(0, 1), Link::inter(1, 2), Link::inter(2, 3)]
+        );
+        assert_eq!(topo.package_diameter(), 3);
+        assert_eq!(topo.inter_links().len(), 3);
+    }
+
+    #[test]
+    fn ring_takes_the_shorter_arc_including_the_wraparound() {
+        let topo = TopologyKind::Ring.build(5);
+        // 0→4 wraps (1 hop) instead of walking 4 ascending hops.
+        assert_eq!(
+            topo.route(Endpoint::dram(0), Endpoint::dram(4)),
+            vec![Link::inter(0, 4)]
+        );
+        // 0→2 goes ascending (tie-free: 2 vs 3).
+        assert_eq!(
+            topo.route(Endpoint::dram(0), Endpoint::dram(2)),
+            vec![Link::inter(0, 1), Link::inter(1, 2)]
+        );
+        assert_eq!(topo.package_diameter(), 2);
+        assert_eq!(topo.inter_links().len(), 5);
+        // n=2 dedupes the wraparound into a single link.
+        assert_eq!(TopologyKind::Ring.build(2).inter_links().len(), 1);
+    }
+
+    #[test]
+    fn ring_tie_prefers_the_ascending_arc() {
+        let topo = TopologyKind::Ring.build(4);
+        assert_eq!(
+            topo.route(Endpoint::dram(0), Endpoint::dram(2)),
+            vec![Link::inter(0, 1), Link::inter(1, 2)]
+        );
+    }
+
+    #[test]
+    fn mesh_routes_are_dimension_ordered_and_stay_in_the_grid() {
+        // n=6, w=3: rows [0 1 2] / [3 4 5].
+        let topo = TopologyKind::Mesh.build(6);
+        assert_eq!(
+            topo.route(Endpoint::dram(0), Endpoint::dram(5)),
+            vec![Link::inter(0, 1), Link::inter(1, 2), Link::inter(2, 5)]
+        );
+        // Partial grids never route through a missing package.
+        for n in 1..=9 {
+            let topo = TopologyKind::Mesh.build(n);
+            for a in 0..n {
+                for b in a + 1..n {
+                    for p in topo.package_path(a, b) {
+                        assert!(p < n, "mesh n={n}: path {a}→{b} visits missing p{p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rram_endpoints_add_local_legs_at_each_end() {
+        let topo = TopologyKind::Ring.build(4);
+        let route = topo.route(Endpoint::rram(0), Endpoint::rram(1));
+        assert_eq!(
+            route,
+            vec![
+                Link::Local { package: 0 },
+                Link::inter(0, 1),
+                Link::Local { package: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn routes_are_symmetric_and_bounded_by_the_diameter() {
+        for n in 1..=9 {
+            for topo in all(n) {
+                for a in 0..n {
+                    for b in 0..n {
+                        for (src, dst) in [
+                            (Endpoint::dram(a), Endpoint::dram(b)),
+                            (Endpoint::rram(a), Endpoint::dram(b)),
+                            (Endpoint::rram(a), Endpoint::rram(b)),
+                        ] {
+                            let fwd = topo.route(src, dst);
+                            let mut bwd = topo.route(dst, src);
+                            bwd.reverse();
+                            assert_eq!(fwd, bwd, "{:?} n={n}", topo.kind());
+                            assert!(
+                                fwd.len() <= topo.diameter(),
+                                "{:?} n={n}: {} hops > diameter {}",
+                                topo.kind(),
+                                fwd.len(),
+                                topo.diameter()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn links_cover_one_local_per_package_plus_inter() {
+        for n in 1..=8 {
+            for topo in all(n) {
+                let links = topo.links();
+                let locals =
+                    links.iter().filter(|l| matches!(l, Link::Local { .. })).count();
+                assert_eq!(locals, n, "{:?}", topo.kind());
+                assert_eq!(links.len(), n + topo.inter_links().len());
+            }
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Memory subsystem models: M3D DRAM (tiered), M3D RRAM (endurance-aware),
-//! the UCIe die-to-die link, and the cycle-accurate timing subsystem
-//! (`cycle`) behind the same [`MemoryModel`] surface.
+//! and the cycle-accurate timing subsystem (`cycle`) behind the same
+//! [`MemoryModel`] surface. (The UCIe die-to-die link moved to the routed
+//! fabric subsystem, `sim::fabric`.)
 //!
 //! Two fidelities answer every stream-time/energy query (selected by
 //! `config::MemoryFidelity`, threaded through `ChimeHardware`):
@@ -17,12 +18,10 @@
 pub mod cycle;
 pub mod dram;
 pub mod rram;
-pub mod ucie;
 
 pub use cycle::{CycleDramState, CycleRramState};
 pub use dram::{DramState, KvResidency, TierState};
 pub use rram::RramState;
-pub use ucie::UcieLink;
 
 use crate::config::MemoryFidelity;
 use dram::WeightClass;

@@ -8,6 +8,7 @@
 
 pub mod chiplet;
 pub mod energy;
+pub mod fabric;
 pub mod kernels;
 pub mod memory;
 pub mod nmp;
@@ -15,8 +16,9 @@ pub mod nmp;
 use crate::config::{ChimeConfig, ChimeHardware, MllmConfig, WorkloadConfig};
 use crate::mapping::Plan;
 use crate::sim::energy::{Component, EnergyLedger};
+use crate::sim::fabric::Fabric;
 use crate::sim::kernels::{FusedKernel, FusedKind, Placement};
-use crate::sim::memory::{DramMem, DramState, RramMem, RramState, UcieLink};
+use crate::sim::memory::{DramMem, DramState, RramMem, RramState};
 
 use std::collections::BTreeMap;
 
@@ -122,7 +124,9 @@ pub struct SimEngine {
     pub hw: ChimeHardware,
     pub dram: DramMem,
     pub rram: RramMem,
-    pub ucie: UcieLink,
+    /// The engine's private UCIe fabric: a single-package fabric whose
+    /// local link is this package's DRAM↔RRAM DMA (`sim::fabric`).
+    pub fabric: Fabric,
     /// DRAM-only ablation mode (Fig 9).
     pub dram_only: bool,
 }
@@ -165,7 +169,7 @@ impl SimEngine {
             hw: hw.clone(),
             dram: DramMem::new(dram, hw.memory_fidelity),
             rram: RramMem::new(rram, hw.memory_fidelity),
-            ucie: UcieLink::new(hw.ucie.clone()),
+            fabric: Fabric::single(hw.ucie.clone()),
             dram_only,
         }
     }
@@ -181,7 +185,8 @@ impl SimEngine {
         for k in kernels {
             // Inbound cut-point transfer (AttnOut -> RRAM side etc.).
             if k.cut_in && prev_cut_out_bytes > 0 && !self.dram_only {
-                let (ns, pj) = self.ucie.transfer(prev_cut_out_bytes);
+                let (ns, pj) = self.fabric.local_transfer(prev_cut_out_bytes);
+                self.fabric.advance(ns);
                 stats.time_ns += ns;
                 stats.ucie_ns += ns;
                 stats.energy.deposit(Component::Ucie, pj);
@@ -195,12 +200,16 @@ impl SimEngine {
                     &self.hw.dram_nmp,
                     &mut self.dram,
                     &mut self.rram,
-                    &mut self.ucie,
+                    &mut self.fabric,
                 ),
                 Placement::RramChiplet => {
                     chiplet::rram_chiplet::execute(k, &self.hw.rram_nmp, &mut self.rram)
                 }
             };
+            // Keep the fabric's virtual clock in step with simulated time
+            // so per-tick peak tracking reflects sustained link load
+            // (telemetry only — never feeds back into costs).
+            self.fabric.advance(cost.time_ns);
             stats.time_ns += cost.time_ns;
             match k.placement {
                 Placement::DramChiplet => stats.dram_busy_ns += cost.time_ns,
@@ -219,7 +228,8 @@ impl SimEngine {
                 // placement actually changes; FFNOut back-transfers are
                 // handled below via kind.
                 if k.kind == FusedKind::FusedFfnAct {
-                    let (ns, pj) = self.ucie.transfer(prev_cut_out_bytes);
+                    let (ns, pj) = self.fabric.local_transfer(prev_cut_out_bytes);
+                    self.fabric.advance(ns);
                     stats.time_ns += ns;
                     stats.ucie_ns += ns;
                     stats.energy.deposit(Component::Ucie, pj);
@@ -396,9 +406,9 @@ mod tests {
         let mut engine = SimEngine::new(&cfg.hardware, &plan);
         let pos = plan.trace.prefill_len();
         let ks = plan.decode_kernels(pos);
-        let before = engine.ucie.bytes_transferred;
+        let before = engine.fabric.bytes_transferred;
         engine.run_kernels(&ks);
-        let moved = engine.ucie.bytes_transferred - before;
+        let moved = engine.fabric.bytes_transferred - before;
         // Two cut points per layer, each m=1 x d_model FP16.
         let expect = (2 * m.llm.n_layers * m.llm.d_model * 2) as u64;
         assert_eq!(moved, expect);

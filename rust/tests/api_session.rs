@@ -57,6 +57,8 @@ fn outcome_json(out: &ServeOutcome) -> String {
         ("rejected", (out.metrics.rejected as i64).into()),
         ("shed_count", (out.metrics.shed as i64).into()),
         ("tokens", (out.metrics.tokens as i64).into()),
+        ("steals", (out.metrics.steals as i64).into()),
+        ("stolen_bytes", (out.metrics.stolen_bytes as i64).into()),
     ])
     .pretty()
 }

@@ -283,6 +283,67 @@ fn unknown_memory_fidelity_exits_2_with_hint() {
 }
 
 #[test]
+fn unknown_topology_exits_2_with_hint() {
+    // Value typos are unknown-name errors listing the accepted fabrics.
+    for argv in [
+        ["serve", "--requests", "1", "--topology", "rign"].as_slice(),
+        ["simulate", "--model", "tiny", "--topology", "torus"].as_slice(),
+        ["sweep", "--topology", "star"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("unknown topology"), "{argv:?}: {err}");
+        assert!(err.contains("ring"), "hint must list fabrics:\n{err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+    // A value-less flag is a usage error naming the grammar.
+    let Some(out) = run_chime(&["serve", "--requests", "1", "--topology"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("point-to-point"), "{}", stderr_of(&out));
+    // A flag typo gets the edit-distance suggestion.
+    let Some(out) = run_chime(&["serve", "--topolgy", "ring", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("--topolgy"), "must name the bad flag:\n{err}");
+    assert!(err.contains("did you mean --topology?"), "must suggest the fix:\n{err}");
+}
+
+#[test]
+fn routed_topology_on_fabricless_backend_exits_2() {
+    // Same contract as --memory cycle: a routed fabric on a backend with
+    // no simulated chiplets is a usage error, not a silent no-op.
+    let Some(out) =
+        run_chime(&["serve", "--backend", "jetson", "--topology", "ring", "--requests", "1"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("fabric"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn routed_topology_steal_serve_exits_0() {
+    let Some(out) = run_chime(&[
+        "serve", "--model", "tiny", "--text", "8", "--out", "4", "--arrival", "poisson:8",
+        "--steal", "on", "--packages", "4", "--topology", "ring", "--requests", "8",
+        "--tokens", "16",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ring fabric"), "{stdout}");
+    assert!(stdout.contains("work steals:"), "{stdout}");
+}
+
+#[test]
 fn cycle_fidelity_on_memoryless_backend_exits_2() {
     // Same contract as the library path: --memory cycle on a backend with
     // no simulated chiplet memory is a usage error, not a silent no-op.

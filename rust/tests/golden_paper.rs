@@ -407,6 +407,85 @@ fn golden_tail_work_stealing() {
 }
 
 #[test]
+fn golden_fabric_topologies() {
+    // Acceptance gate for the routed-fabric refactor: at >= 4 packages
+    // with stealing on, every routed topology (line/ring/mesh) reports
+    // strictly positive stolen bytes and per-link peak GB/s, and a steal
+    // delay strictly above the 0-cost point-to-point baseline; at 1
+    // package all four topologies are identical by construction with no
+    // inter-package traffic.
+    let e = snapshot(results::fabric::run);
+    let points = e.json.get("points").as_arr().expect("fabric points");
+    assert_eq!(
+        points.len(),
+        results::tail::PACKAGES.len() * 4,
+        "packages x topology grid"
+    );
+    let point = |packages: i64, topology: &str| {
+        points
+            .iter()
+            .find(|p| {
+                p.get("packages").as_i64() == Some(packages)
+                    && p.get("topology").as_str() == Some(topology)
+            })
+            .unwrap_or_else(|| panic!("missing fabric point ({packages}, {topology})"))
+    };
+    let base = point(1, "point-to-point");
+    for topo in ["point-to-point", "line", "ring", "mesh"] {
+        let p = point(1, topo);
+        assert_eq!(p.get("steals").as_i64(), Some(0), "{topo}: no sibling at 1 package");
+        assert_eq!(p.get("inter_bytes").as_i64(), Some(0), "{topo}: no links at 1 package");
+        assert_eq!(
+            p.get("p99_latency_ms").as_f64(),
+            base.get("p99_latency_ms").as_f64(),
+            "{topo}: every topology must be identical at 1 package"
+        );
+    }
+    for packages in [4i64, 8] {
+        let p2p = point(packages, "point-to-point");
+        assert!(
+            p2p.get("steals").as_i64().unwrap() > 0,
+            "{packages} pkgs: skewed overload must steal"
+        );
+        assert!(
+            p2p.get("stolen_kb").as_f64().unwrap() > 0.0,
+            "{packages} pkgs: steal payloads are counted on every topology"
+        );
+        assert_eq!(
+            p2p.get("mean_steal_delay_us").as_f64(),
+            Some(0.0),
+            "{packages} pkgs: point-to-point is the 0-cost baseline"
+        );
+        assert_eq!(
+            p2p.get("inter_bytes").as_i64(),
+            Some(0),
+            "{packages} pkgs: free steals never touch the links"
+        );
+        for topo in ["line", "ring", "mesh"] {
+            let p = point(packages, topo);
+            assert!(p.get("steals").as_i64().unwrap() > 0, "{packages}/{topo}: no steals");
+            assert!(
+                p.get("stolen_kb").as_f64().unwrap() > 0.0,
+                "{packages}/{topo}: stolen bytes must be positive"
+            );
+            assert!(
+                p.get("mean_steal_delay_us").as_f64().unwrap()
+                    > p2p.get("mean_steal_delay_us").as_f64().unwrap(),
+                "{packages}/{topo}: routed steal delay must beat the 0-cost baseline"
+            );
+            assert!(
+                p.get("peak_inter_gbps").as_f64().unwrap() > 0.0,
+                "{packages}/{topo}: steal traffic must show up as per-link peak GB/s"
+            );
+            assert!(
+                p.get("inter_bytes").as_i64().unwrap() > 0,
+                "{packages}/{topo}: inter-package links must carry bytes"
+            );
+        }
+    }
+}
+
+#[test]
 fn golden_serve_outcome_wrapper_bit_identity() {
     // Locks the api_redesign acceptance criterion: the batch
     // `Backend::serve(Vec<_>)` is a wrapper over the streaming protocol,
@@ -440,6 +519,8 @@ fn golden_serve_outcome_wrapper_bit_identity() {
             ("rejected", (out.metrics.rejected as i64).into()),
             ("shed_count", (out.metrics.shed as i64).into()),
             ("tokens", (out.metrics.tokens as i64).into()),
+            ("steals", (out.metrics.steals as i64).into()),
+            ("stolen_bytes", (out.metrics.stolen_bytes as i64).into()),
         ])
     }
 

@@ -745,8 +745,11 @@ fn prop_parallel_drain_is_bit_identical_to_sequential() {
             ("rejected", (out.metrics.rejected as i64).into()),
             ("shed_count", (out.metrics.shed as i64).into()),
             ("tokens", (out.metrics.tokens as i64).into()),
+            ("steals", (out.metrics.steals as i64).into()),
+            ("stolen_bytes", (out.metrics.stolen_bytes as i64).into()),
             // Order-dependent float accumulations: these move if the
             // completion stream is replayed in any other order.
+            ("steal_delay_ns", out.metrics.steal_delay_ns.into()),
             ("energy_j", out.metrics.energy_j.into()),
             ("span_ns", out.metrics.span_ns().into()),
             ("service_stddev", out.metrics.service.stddev().into()),
@@ -788,6 +791,126 @@ fn prop_parallel_drain_is_bit_identical_to_sequential() {
             return Err(format!(
                 "parallel drain diverged (packages {packages}, steal {steal}):\n\
                  sequential:\n{seq}\nparallel:\n{par}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// A random chiplet endpoint over `packages` packages.
+fn random_endpoint(prng: &mut Prng, packages: usize) -> chime::sim::fabric::Endpoint {
+    use chime::sim::fabric::Endpoint;
+    let p = prng.range(0, packages);
+    if prng.bool() { Endpoint::dram(p) } else { Endpoint::rram(p) }
+}
+
+#[test]
+fn prop_fabric_routes_are_symmetric_bounded_and_physical() {
+    // Fabric routing invariants (sim::fabric::topology module docs), over
+    // random topology kinds, package counts, and endpoint pairs:
+    // (1) route(a, b) is the exact reversal of route(b, a);
+    // (2) hop count never exceeds the topology's endpoint diameter;
+    // (3) every hop is a physical link of the topology and no route
+    //     crosses the same link twice;
+    // (4) a route is empty iff src == dst.
+    use chime::config::TopologyKind;
+    use chime::sim::fabric::{Link, Topology};
+    use std::collections::BTreeSet;
+
+    check("fabric route invariants", |prng| {
+        let packages = prng.range(1, 13);
+        let kind = *prng.choice(&TopologyKind::ALL);
+        let topo = kind.build(packages);
+        let physical: BTreeSet<Link> = topo.links().into_iter().collect();
+        let src = random_endpoint(prng, packages);
+        let dst = random_endpoint(prng, packages);
+        let fwd = topo.route(src, dst);
+        let mut bwd = topo.route(dst, src);
+        bwd.reverse();
+        if fwd != bwd {
+            return Err(format!(
+                "{kind:?} n={packages}: {src:?}->{dst:?} is not the reversal of the \
+                 opposite direction: {fwd:?} vs {bwd:?}"
+            ));
+        }
+        if fwd.len() > topo.diameter() {
+            return Err(format!(
+                "{kind:?} n={packages}: {src:?}->{dst:?} takes {} hops, diameter {}",
+                fwd.len(),
+                topo.diameter()
+            ));
+        }
+        let mut crossed = BTreeSet::new();
+        for link in &fwd {
+            if !physical.contains(link) {
+                return Err(format!("{kind:?} n={packages}: {link:?} is not a physical link"));
+            }
+            if !crossed.insert(*link) {
+                return Err(format!(
+                    "{kind:?} n={packages}: {src:?}->{dst:?} crosses {link:?} twice"
+                ));
+            }
+        }
+        if (src == dst) != fwd.is_empty() {
+            return Err(format!(
+                "{kind:?} n={packages}: {src:?}->{dst:?} route emptiness is wrong: {fwd:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fabric_transfers_conserve_bytes_across_links() {
+    // Per-link byte conservation: after any sequence of routed transfers,
+    // the sum of per-link byte counters equals sum(bytes * hops) over the
+    // transfers, while the aggregate payload counter counts each transfer
+    // once — the same split the legacy UcieLink drew between payload and
+    // wire traffic.
+    use chime::config::{TopologyKind, UcieConfig};
+    use chime::sim::fabric::{Fabric, Topology};
+
+    check("fabric per-link byte conservation", |prng| {
+        let packages = prng.range(1, 9);
+        let kind = *prng.choice(&TopologyKind::ALL);
+        let mut fabric = Fabric::new(UcieConfig::default(), kind, packages, 0);
+        let mut expected_link_bytes = 0u64;
+        let mut expected_payload = 0u64;
+        for _ in 0..prng.range(1, 20) {
+            let src = random_endpoint(prng, packages);
+            let dst = random_endpoint(prng, packages);
+            let bytes = prng.range(0, 1_000_000) as u64;
+            let hops = fabric.topology().route(src, dst).len();
+            fabric.advance(prng.uniform(0.0, 1e4));
+            let d = fabric.transfer(src, dst, bytes);
+            if bytes == 0 || hops == 0 {
+                if d.hops != 0 || d.stall_ns != 0.0 || d.energy_pj != 0.0 {
+                    return Err(format!("{kind:?}: empty transfer was not free: {d:?}"));
+                }
+                continue;
+            }
+            expected_link_bytes += bytes * hops as u64;
+            expected_payload += bytes;
+            if d.hops != hops {
+                return Err(format!("{kind:?}: delivery hops {} != route hops {hops}", d.hops));
+            }
+            if d.delivery_ns < d.stall_ns {
+                return Err(format!(
+                    "{kind:?}: receiver got the payload before the sender unstalled: {d:?}"
+                ));
+            }
+        }
+        let link_bytes: u64 = fabric.link_states().map(|(_, s)| s.bytes).sum();
+        if link_bytes != expected_link_bytes {
+            return Err(format!(
+                "{kind:?} n={packages}: per-link bytes {link_bytes} != expected \
+                 {expected_link_bytes}"
+            ));
+        }
+        if fabric.bytes_transferred != expected_payload {
+            return Err(format!(
+                "{kind:?} n={packages}: payload counter {} != expected {expected_payload}",
+                fabric.bytes_transferred
             ));
         }
         Ok(())
