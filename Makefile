@@ -9,14 +9,15 @@
 #   make memcheck    cross-validate first-order vs cycle-accurate memory
 #   make tail        streaming-serve smoke (poisson arrivals + stealing, 2 fidelities)
 #   make fabric      routed-fabric grid: steals + per-link peaks, pkgs x topologies
+#   make serve-smoke HTTP/SSE listener + loadgen round trip, 2 fidelities
 #   make bench-snapshot  write the simulator perf snapshot to BENCH_$(PR).json
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
 
 # PR number stamped into the bench snapshot filename (results::perf::PR).
-PR := 006
+PR := 008
 
-.PHONY: artifacts build test pytest results golden memcheck tail fabric bench-snapshot api-smoke docs
+.PHONY: artifacts build test pytest results golden memcheck tail fabric serve-smoke bench-snapshot api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -58,6 +59,29 @@ tail: build
 # golden_fabric_topologies.
 fabric: build
 	cd rust && cargo run --release -- results --fig fabric
+
+# Network-serving smoke (DESIGN.md §13): bring up the HTTP/SSE listener
+# on an ephemeral loopback port, drive it with the open-loop wall-clock
+# load generator, and shut it down cleanly — at both memory fidelities.
+# The listener writes its bound address to a file so the recipe never
+# races the bind.
+serve-smoke: build
+	@set -e; cd rust; \
+	for mem in first-order cycle; do \
+		addr_file=target/serve_addr.txt; rm -f $$addr_file; \
+		./target/release/chime serve --listen 127.0.0.1:0 \
+			--addr-file $$addr_file --model tiny --text 8 --out 4 \
+			--memory $$mem & \
+		server=$$!; \
+		for i in $$(seq 1 100); do \
+			[ -s $$addr_file ] && break; sleep 0.1; \
+		done; \
+		[ -s $$addr_file ] || { echo "serve-smoke: listener never came up"; kill $$server; exit 1; }; \
+		./target/release/chime loadgen --target $$(cat $$addr_file) \
+			--requests 6 --arrival poisson:20 --tokens 8 --shutdown \
+			|| { kill $$server 2>/dev/null; exit 1; }; \
+		wait $$server; \
+	done
 
 # Simulator wall-clock benchmark (DESIGN.md §11): events/s and simulated
 # tok/s per backend × memory fidelity over the Table II zoo, written as

@@ -18,7 +18,7 @@
 //! request stream; `chime serve --arrival <spec>` is the CLI spelling.
 
 use crate::api::ChimeError;
-use crate::util::Json;
+use crate::util::{Json, Prng};
 
 /// Hint listing the accepted `--arrival` spellings.
 pub const ARRIVAL_HINT: &str = "burst poisson:<rps> trace:<file>";
@@ -148,7 +148,42 @@ impl ArrivalProcess {
                 "--arrival trace {path:?} contains no arrivals"
             )));
         }
+        // Ordering policy: traces need not be pre-sorted — entries are
+        // sorted by arrival here, and equal-time entries keep file order
+        // (stable sort). Downstream consumers (the pending heap, the
+        // loadgen's open-loop sleep-until pacing) all assume a
+        // non-decreasing timeline.
+        points.sort_by(|a, b| a.arrival_ns.total_cmp(&b.arrival_ns));
         Ok(points)
+    }
+
+    /// Materialize `n` arrival points from this process (the loadgen's
+    /// open-loop schedule; `api::Session::requests_for` is the
+    /// simulator-side equivalent that also synthesizes prompts):
+    ///
+    /// * `Burst` — `n` points at t=0;
+    /// * `Poisson` — `n` seeded cumulative exponential inter-arrivals,
+    ///   the same `Prng::exponential` stream convention as
+    ///   `model::workload::RequestStream`;
+    /// * `Trace` — the file's points (`n` is ignored; the file dictates
+    ///   the count), sorted per [`ArrivalProcess::trace_points`].
+    pub fn points(&self, seed: u64, n: usize) -> Result<Vec<ArrivalPoint>, ChimeError> {
+        match self {
+            ArrivalProcess::Burst => {
+                Ok(vec![ArrivalPoint { arrival_ns: 0.0, max_new_tokens: None }; n])
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                let mut prng = Prng::new(seed);
+                let mut clock_ns = 0.0;
+                Ok((0..n)
+                    .map(|_| {
+                        clock_ns += prng.exponential(*rate_per_s) * 1e9;
+                        ArrivalPoint { arrival_ns: clock_ns, max_new_tokens: None }
+                    })
+                    .collect())
+            }
+            ArrivalProcess::Trace { path } => Self::trace_points(path),
+        }
     }
 }
 
@@ -196,6 +231,48 @@ mod tests {
         assert_eq!(pts[0], ArrivalPoint { arrival_ns: 0.0, max_new_tokens: None });
         assert_eq!(pts[1].arrival_ns, 0.5e9);
         assert_eq!(pts[2], ArrivalPoint { arrival_ns: 1.5e9, max_new_tokens: Some(3) });
+    }
+
+    #[test]
+    fn trace_points_sort_unsorted_arrivals_stably() {
+        let path = std::env::temp_dir().join("chime_arrival_trace_sort_test.json");
+        // Out of order, with two equal-time entries whose token budgets
+        // distinguish them: the stable sort must keep file order (3 then 9).
+        std::fs::write(
+            &path,
+            r#"[2.0, {"arrival_s": 0.5, "tokens": 3}, 0.25, {"arrival_s": 0.5, "tokens": 9}]"#,
+        )
+        .unwrap();
+        let pts = ArrivalProcess::trace_points(path.to_str().unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        let arrivals: Vec<f64> = pts.iter().map(|p| p.arrival_ns).collect();
+        assert_eq!(arrivals, vec![0.25e9, 0.5e9, 0.5e9, 2.0e9]);
+        assert_eq!(pts[1].max_new_tokens, Some(3), "equal arrivals keep file order");
+        assert_eq!(pts[2].max_new_tokens, Some(9));
+    }
+
+    #[test]
+    fn points_cover_every_process_and_match_the_request_stream_convention() {
+        let burst = ArrivalProcess::Burst.points(7, 3).unwrap();
+        assert_eq!(burst.len(), 3);
+        assert!(burst.iter().all(|p| p.arrival_ns == 0.0 && p.max_new_tokens.is_none()));
+        // Poisson points replay the RequestStream cumulative-exponential
+        // convention bit for bit at the same seed and rate.
+        let poisson = ArrivalProcess::Poisson { rate_per_s: 50.0 }.points(7, 4).unwrap();
+        let mut prng = Prng::new(7);
+        let mut clock_ns = 0.0;
+        for p in &poisson {
+            clock_ns += prng.exponential(50.0) * 1e9;
+            assert_eq!(p.arrival_ns.to_bits(), clock_ns.to_bits());
+        }
+        assert!(poisson.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+        let path = std::env::temp_dir().join("chime_arrival_points_trace_test.json");
+        std::fs::write(&path, "[0.5, 0.25]").unwrap();
+        let process = ArrivalProcess::Trace { path: path.to_str().unwrap().to_string() };
+        let trace = process.points(7, 99).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(trace.len(), 2, "the file dictates the count");
+        assert_eq!(trace[0].arrival_ns, 0.25e9, "sorted");
     }
 
     #[test]

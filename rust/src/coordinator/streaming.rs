@@ -46,6 +46,7 @@
 use std::collections::{BTreeSet, BinaryHeap};
 
 use crate::api::ChimeError;
+use crate::util::Json;
 
 use super::metrics::ServingMetrics;
 use super::request::{ServeRequest, ServeResponse};
@@ -160,6 +161,64 @@ impl ServeEvent {
             ServeEvent::Token { .. } => "token",
             ServeEvent::Completed { .. } => "completed",
             ServeEvent::Stolen { .. } => "stolen",
+        }
+    }
+
+    /// Wire form of the event — the SSE `data:` payload of the network
+    /// serving front end (DESIGN.md §13). Every variant carries its
+    /// `kind` tag; `Completed` flattens the [`ServeResponse`] record
+    /// (token count rather than the token ids — the ids are synthetic).
+    /// `Shed` omits its arrival: shed arrivals are non-finite by
+    /// construction and have no JSON spelling.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServeEvent::Admitted { id, time_ns, package } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (*id as i64).into()),
+                ("time_ns", (*time_ns).into()),
+                ("package", package.map_or(Json::Null, Json::from)),
+            ]),
+            ServeEvent::Rejected { request, time_ns } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (request.id as i64).into()),
+                ("time_ns", (*time_ns).into()),
+                ("max_new_tokens", request.max_new_tokens.into()),
+            ]),
+            ServeEvent::Shed { request } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (request.id as i64).into()),
+                ("max_new_tokens", request.max_new_tokens.into()),
+            ]),
+            ServeEvent::FirstToken { id, time_ns } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (*id as i64).into()),
+                ("time_ns", (*time_ns).into()),
+            ]),
+            ServeEvent::Token { id, index, time_ns } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (*id as i64).into()),
+                ("index", (*index).into()),
+                ("time_ns", (*time_ns).into()),
+            ]),
+            ServeEvent::Completed { arrival_ns, time_ns, response } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (response.id as i64).into()),
+                ("arrival_ns", (*arrival_ns).into()),
+                ("time_ns", (*time_ns).into()),
+                ("tokens", response.tokens.len().into()),
+                ("queue_ns", response.queue_ns.into()),
+                ("ttft_ns", response.ttft_ns.into()),
+                ("service_ns", response.service_ns.into()),
+                ("energy_j", response.energy_j.into()),
+            ]),
+            ServeEvent::Stolen { id, from, to, bytes, time_ns } => Json::obj(vec![
+                ("kind", self.kind().into()),
+                ("id", (*id as i64).into()),
+                ("from", (*from).into()),
+                ("to", (*to).into()),
+                ("bytes", (*bytes as i64).into()),
+                ("time_ns", (*time_ns).into()),
+            ]),
         }
     }
 }
@@ -359,6 +418,43 @@ mod tests {
         let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
         assert_eq!(order, vec![0, 1, 3, 2]);
         assert_eq!(q.peek_arrival_ns(), None);
+    }
+
+    #[test]
+    fn events_serialize_with_kind_tags_and_finite_numbers() {
+        let admitted = ServeEvent::Admitted { id: 1, time_ns: 10.0, package: Some(0) };
+        assert_eq!(
+            admitted.to_json().compact(),
+            r#"{"id":1,"kind":"admitted","package":0,"time_ns":10}"#
+        );
+        let inline = ServeEvent::Admitted { id: 2, time_ns: 0.0, package: None };
+        assert!(inline.to_json().get("package").is_null());
+        let token = ServeEvent::Token { id: 1, index: 2, time_ns: 30.5 };
+        assert_eq!(token.to_json().compact(), r#"{"id":1,"index":2,"kind":"token","time_ns":30.5}"#);
+        // Shed requests carry a non-finite arrival, which has no JSON
+        // spelling — the wire form must omit it entirely.
+        let shed = ServeEvent::Shed { request: req(9, f64::INFINITY) };
+        let json = shed.to_json();
+        assert!(json.get("arrival_ns").is_null() && json.get("time_ns").is_null());
+        assert_eq!(json.get("kind").as_str(), Some("shed"));
+        let completed = ServeEvent::Completed {
+            arrival_ns: 5.0,
+            time_ns: 20.0,
+            response: ServeResponse {
+                id: 3,
+                tokens: vec![7, 8],
+                queue_ns: 1.0,
+                ttft_ns: 2.0,
+                service_ns: 15.0,
+                energy_j: 0.25,
+            },
+        };
+        let json = completed.to_json();
+        assert_eq!(json.get("tokens").as_i64(), Some(2));
+        assert_eq!(json.get("energy_j").as_f64(), Some(0.25));
+        for ev in [&admitted, &token, &completed] {
+            assert_eq!(ev.to_json().get("kind").as_str(), Some(ev.kind()));
+        }
     }
 
     #[test]

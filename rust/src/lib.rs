@@ -26,6 +26,10 @@
 //!   pipelined engine joining functional execution with simulated timing,
 //!   the event-driven streaming serving protocol with open-loop arrival
 //!   processes, and cross-package work stealing);
+//! - [`net`]: the std-only network serving front end — a minimal
+//!   HTTP/1.1 layer, the `chime serve --listen` SSE ingress over the
+//!   streaming protocol, and the `chime loadgen` open-loop wall-clock
+//!   driver (DESIGN.md §13);
 //! - [`results`]: the paper-results harness — one module per table/figure.
 //!
 //! See DESIGN.md (repo root) for the system inventory, the two-cut-point
@@ -42,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod mapping;
 pub mod model;
+pub mod net;
 pub mod results;
 pub mod runtime;
 pub mod sim;

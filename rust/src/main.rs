@@ -6,7 +6,10 @@
 //!   serve     — serve an open-loop request stream (sim | functional |
 //!               dram-only | jetson | facil backends; --arrival picks the
 //!               burst/poisson/trace process, --steal on enables
-//!               cross-package work stealing)
+//!               cross-package work stealing); with --listen HOST:PORT,
+//!               serve over HTTP/SSE instead (DESIGN.md §13)
+//!   loadgen   — open-loop wall-clock driver for a --listen server
+//!               (--target HOST:PORT; renders the tail-latency table)
 //!   sweep     — sequence-length sweep (Fig 8)
 //!   results   — regenerate paper tables/figures (--fig N | --all)
 //!   memcheck  — cross-validate first-order vs cycle-accurate memory
@@ -23,9 +26,12 @@
 //! subcommand validates its flags so typos get a suggestion instead of a
 //! silent no-op.
 
+use std::time::Duration;
+
 use chime::api::{ArrivalProcess, BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder};
 use chime::config::{MllmConfig, TopologyKind};
 use chime::coordinator::{BatchPolicy, RoutePolicy};
+use chime::net::{loadgen, LoadgenConfig, NetServer, ServeOpts};
 use chime::results;
 use chime::runtime::Manifest;
 use chime::util::stats::{fmt_bytes, fmt_ns};
@@ -48,6 +54,7 @@ fn run(args: &Args) -> Result<(), ChimeError> {
         Some("info") => cmd_info(args),
         Some("simulate") => cmd_simulate(args),
         Some("serve") => cmd_serve(args),
+        Some("loadgen") => cmd_loadgen(args),
         Some("sweep") => cmd_sweep(args),
         Some("results") => cmd_results(args),
         Some("memcheck") => cmd_memcheck(args),
@@ -58,7 +65,9 @@ fn run(args: &Args) -> Result<(), ChimeError> {
             Err(ChimeError::Unknown {
                 what: "command",
                 name: other.to_string(),
-                hint: Some("info simulate serve sweep results memcheck bench parity".to_string()),
+                hint: Some(
+                    "info simulate serve loadgen sweep results memcheck bench parity".to_string(),
+                ),
             })
         }
         None => {
@@ -83,6 +92,15 @@ COMMANDS:
             [--steal on|off] [--seed N] [--batch B] [--tokens N] [--packages N]
             [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
             [--topology point-to-point|line|ring|mesh]
+            [--listen HOST:PORT] [--deterministic] [--addr-file PATH]
+            With --listen: serve over HTTP/SSE instead of a local arrival
+            stream (POST /v1/submit, GET /v1/stream/<id>, GET /v1/metrics,
+            POST /v1/finish, POST /v1/shutdown); drive with `chime loadgen`
+  loadgen   --target HOST:PORT [--requests N] [--arrival burst|poisson:R|trace:FILE]
+            [--rate R] [--seed N] [--tokens N] [--prompt-tokens N]
+            [--timeout-s S] [--shutdown]
+            Open-loop wall-clock driver for a --listen server; renders the
+            p50/p95/p99 TTFT/TPOT/latency tail table
   sweep     [--model NAME] [--json] [--memory first-order|cycle]
             [--topology point-to-point|line|ring|mesh]
             Fig 8 sequence-length sweep
@@ -339,8 +357,18 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
         args,
         &["backend", "model", "requests", "arrival", "rate", "steal", "seed", "batch",
           "tokens", "packages", "route", "queue", "config", "out", "text", "artifacts",
-          "memory", "topology"],
+          "memory", "topology", "listen", "deterministic", "addr-file"],
     )?;
+    if args.flag("listen") {
+        return cmd_serve_listen(args);
+    }
+    for flag in ["deterministic", "addr-file"] {
+        if args.flag(flag) {
+            return Err(ChimeError::Invalid(format!(
+                "--{flag} applies only to the network listener (`chime serve --listen`)"
+            )));
+        }
+    }
     // Validated here for the spelling; the Session builder owns the
     // backend-compatibility checks (--memory cycle or a routed --topology
     // on a backend without the subsystem is a typed Invalid error, same
@@ -542,6 +570,160 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+/// `chime serve --listen`: the HTTP/SSE network front end. The session
+/// is built inside the server's engine thread (backends are not Send);
+/// this thread blocks in `join` until `/v1/shutdown` or SIGINT drains
+/// the listener.
+fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
+    let Some(listen) = args.get("listen") else {
+        return Err(ChimeError::Invalid(
+            "--listen expects HOST:PORT (e.g. 127.0.0.1:8080, or 127.0.0.1:0 for an \
+             ephemeral port)"
+                .to_string(),
+        ));
+    };
+    // The listener takes its arrivals from the wire, not from a local
+    // arrival process — reject the stream-shaping flags instead of
+    // silently ignoring them.
+    for flag in ["arrival", "rate", "requests", "seed"] {
+        if args.flag(flag) {
+            return Err(ChimeError::Invalid(format!(
+                "--{flag} does not apply to --listen: the listener takes arrivals from the \
+                 wire; shape the load with `chime loadgen --target <addr> --{flag} ...`"
+            )));
+        }
+    }
+    let steal = steal_arg(args)?;
+    let fidelity = memory_arg(args)?;
+    let topology = topology_arg(args)?;
+    let deterministic = args.flag("deterministic");
+    let default_tokens = usize_arg(args, "tokens", 64)?;
+    let backend_name = args.get_or("backend", "sim");
+    let kind = BackendKind::parse(backend_name).ok_or(ChimeError::Unknown {
+        what: "backend",
+        name: backend_name.to_string(),
+        hint: Some("sim functional dram-only jetson facil".to_string()),
+    })?;
+    let mut b = builder_from(args)?.model(args.get_or("model", "fastvlm-0.6b"));
+    match kind {
+        BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly => {
+            // Same mapping as the in-process serve path: `sim` runs the
+            // sharded coordinator at any package count.
+            let kind =
+                if kind == BackendKind::DramOnly { kind } else { BackendKind::Sharded };
+            let route_name = args.get_or("route", "rr");
+            let route = RoutePolicy::parse(route_name).ok_or(ChimeError::Unknown {
+                what: "route",
+                name: route_name.to_string(),
+                hint: Some("rr round-robin ll least-loaded".to_string()),
+            })?;
+            b = b
+                .backend(kind)
+                .packages(usize_arg(args, "packages", 1)?)
+                .route(route)
+                .batch(BatchPolicy {
+                    max_batch: usize_arg(args, "batch", 4)?,
+                    queue_capacity: usize_arg(
+                        args,
+                        "queue",
+                        BatchPolicy::default().queue_capacity,
+                    )?,
+                })
+                .work_stealing(steal);
+        }
+        BackendKind::Functional => {
+            b = b.backend(kind);
+            if let Some(dir) = args.get("artifacts") {
+                b = b.artifacts_dir(dir);
+            }
+        }
+        BackendKind::Jetson | BackendKind::Facil => {
+            b = b.backend(kind);
+        }
+    }
+    if let Some(f) = fidelity {
+        b = b.memory_fidelity(f);
+    }
+    if let Some(t) = topology {
+        b = b.topology(t);
+    }
+    let opts = ServeOpts {
+        deterministic,
+        default_max_new_tokens: default_tokens,
+        handle_signals: true,
+        ..ServeOpts::default()
+    };
+    let server = NetServer::spawn(listen, move || b.build(), opts)?;
+    println!("chime serve listening on http://{}", server.addr());
+    println!(
+        "  endpoints: POST /v1/submit  GET /v1/stream/<id>  GET /v1/metrics  \
+         POST /v1/finish  POST /v1/shutdown"
+    );
+    if deterministic {
+        println!(
+            "  deterministic replay mode: arrivals pinned from request bodies; tokens \
+             stream at finish"
+        );
+    }
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, format!("{}\n", server.addr()))
+            .map_err(|e| ChimeError::Runtime(format!("writing {path}: {e}")))?;
+    }
+    let s = server.join()?;
+    println!(
+        "served: {} submitted, {} completed, {} rejected, {} shed, {} tokens",
+        s.submitted, s.completed, s.rejected, s.shed, s.tokens
+    );
+    Ok(())
+}
+
+/// `chime loadgen`: drive a running `--listen` server open-loop and
+/// render the wall-clock tail table.
+fn cmd_loadgen(args: &Args) -> Result<(), ChimeError> {
+    ensure_known(
+        args,
+        &["target", "requests", "arrival", "rate", "seed", "tokens", "prompt-tokens",
+          "timeout-s", "shutdown"],
+    )?;
+    let Some(target) = args.get("target") else {
+        return Err(ChimeError::Invalid(
+            "--target expects HOST:PORT of a running `chime serve --listen` server".to_string(),
+        ));
+    };
+    let timeout_s = f64_arg(args, "timeout-s", 120.0)?;
+    if !timeout_s.is_finite() || timeout_s <= 0.0 {
+        return Err(ChimeError::Invalid(format!(
+            "--timeout-s must be finite and positive, got {timeout_s}"
+        )));
+    }
+    let cfg = LoadgenConfig {
+        target: target.to_string(),
+        requests: usize_arg(args, "requests", 16)?,
+        arrival: arrival_arg(args)?,
+        seed: usize_arg(args, "seed", 7)? as u64,
+        max_new_tokens: usize_arg(args, "tokens", 16)?,
+        prompt_tokens: usize_arg(args, "prompt-tokens", 8)?,
+        shutdown: args.flag("shutdown"),
+        timeout: Duration::from_secs_f64(timeout_s),
+    };
+    let report = loadgen::run(&cfg)?;
+    print!("{}", report.table);
+    if let Some(outcome) = &report.outcome {
+        println!("server outcome (virtual time): {}", outcome.get("metrics").compact());
+    }
+    if !report.errors.is_empty() {
+        for e in report.errors.iter().take(5) {
+            eprintln!("chime loadgen: {e}");
+        }
+        return Err(ChimeError::Runtime(format!(
+            "{} of {} requests failed",
+            report.errors.len(),
+            report.samples.len() + report.errors.len()
+        )));
     }
     Ok(())
 }

@@ -1,0 +1,363 @@
+//! Minimal HTTP/1.1 layer for the network serving front end.
+//!
+//! std-only (DESIGN.md §13): `std::net` sockets plus hand-rolled
+//! request parsing — no hyper, no tokio. The layer is deliberately
+//! narrow: exactly what the `/v1/*` endpoints of [`crate::net::server`]
+//! need, with hard size caps so a hostile peer cannot balloon memory,
+//! and every malformed input mapped to a 4xx the same way the CLI maps
+//! usage mistakes to exit 2 ([`status_for`] is the HTTP spelling of
+//! `ChimeError::exit_code`: 4xx ↔ exit 2, 5xx ↔ exit 1).
+//!
+//! Unsupported-by-design: chunked transfer encoding (clients must send
+//! `Content-Length`), HTTP/2, keep-alive (every response closes the
+//! connection — the loadgen opens one connection per call, and SSE
+//! streams are one long-lived response by construction).
+
+use std::io::{BufRead, Read};
+
+use crate::api::ChimeError;
+use crate::util::Json;
+
+/// Size caps applied while reading one request. Defaults are generous
+/// for the JSON bodies the protocol uses and small enough that a
+/// garbage peer cannot make the server buffer unbounded input.
+#[derive(Debug, Clone)]
+pub struct HttpCaps {
+    /// Longest accepted request/header line, bytes (without CRLF).
+    pub max_line: usize,
+    /// Most header lines accepted per request.
+    pub max_headers: usize,
+    /// Largest accepted declared body, bytes.
+    pub max_body: usize,
+}
+
+impl Default for HttpCaps {
+    fn default() -> Self {
+        HttpCaps { max_line: 8 * 1024, max_headers: 64, max_body: 1024 * 1024 }
+    }
+}
+
+/// One parsed request: method + target + lowercased headers + raw body.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Request target as sent (path + optional query string).
+    pub target: String,
+    /// Headers in arrival order, names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First value of a header, by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The target's path component (query string stripped).
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+}
+
+/// A protocol-level failure while reading or routing a request: an HTTP
+/// status plus a one-line message the server echoes back as JSON.
+#[derive(Debug, Clone)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+
+    /// Lift a typed [`ChimeError`] onto the wire (see [`status_for`]).
+    pub fn from_chime(e: &ChimeError) -> HttpError {
+        HttpError { status: status_for(e), message: e.to_string() }
+    }
+}
+
+/// HTTP status for a [`ChimeError`], mirroring the exit-code taxonomy:
+/// caller-fixable mistakes (exit 2) become 4xx, environment/runtime
+/// failures (exit 1) become 5xx.
+pub fn status_for(e: &ChimeError) -> u16 {
+    match e {
+        ChimeError::Unknown { .. } => 404,
+        ChimeError::Unsupported { .. } => 405,
+        ChimeError::Config(_) | ChimeError::UnknownFlag { .. } | ChimeError::Invalid(_) => 400,
+        ChimeError::BackendUnavailable { .. } => 503,
+        ChimeError::Runtime(_) => 500,
+    }
+}
+
+/// Reason phrase for the status line.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Response header block opening an SSE stream (the one response shape
+/// that is not a fixed-length [`HttpResponse`]).
+pub const SSE_PREAMBLE: &str = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                                Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+
+/// One fixed-length response (the SSE stream writes [`SSE_PREAMBLE`] +
+/// frames instead).
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// `Allow:` header value for 405 responses.
+    pub allow: Option<&'static str>,
+}
+
+impl HttpResponse {
+    /// A JSON response (the body is the value's pretty serialization, so
+    /// shapes like the finish outcome stay bit-identical to the
+    /// library-side serializer).
+    pub fn json(status: u16, value: &Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: value.pretty().into_bytes(),
+            allow: None,
+        }
+    }
+
+    /// The canonical error body: `{"error": <message>, "status": N}`.
+    pub fn error(err: &HttpError) -> HttpResponse {
+        HttpResponse::json(
+            err.status,
+            &Json::obj(vec![
+                ("error", err.message.as_str().into()),
+                ("status", (err.status as i64).into()),
+            ]),
+        )
+    }
+
+    /// Serialize status line + headers + body.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        if let Some(allow) = self.allow {
+            head.push_str(&format!("Allow: {allow}\r\n"));
+        }
+        head.push_str("\r\n");
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+/// Read one CRLF/LF-terminated line, rejecting lines over `cap` bytes
+/// (the cap is what makes a garbage peer cheap: we never buffer more
+/// than `cap + 2` bytes looking for the terminator).
+fn read_line_capped<R: BufRead>(r: &mut R, cap: usize) -> Result<String, HttpError> {
+    let mut buf = Vec::new();
+    let n = (&mut *r)
+        .take(cap as u64 + 2)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::new(400, format!("reading request: {e}")))?;
+    if n == 0 {
+        return Err(HttpError::new(400, "connection closed before a full request"));
+    }
+    if !buf.ends_with(b"\n") {
+        return Err(HttpError::new(
+            400,
+            format!("request line exceeds {cap} bytes or is truncated"),
+        ));
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| HttpError::new(400, "request contains non-UTF-8 bytes"))
+}
+
+/// Read and validate one request under `caps`. POST/PUT bodies require
+/// `Content-Length` (411 without one, 413 over the cap); chunked
+/// transfer encoding is rejected up front.
+pub fn read_request<R: BufRead>(r: &mut R, caps: &HttpCaps) -> Result<HttpRequest, HttpError> {
+    let line = read_line_capped(r, caps.max_line)?;
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+        _ => {
+            return Err(HttpError::new(
+                400,
+                format!("malformed request line {line:?} (want \"METHOD /path HTTP/1.1\")"),
+            ))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(400, format!("unsupported protocol {version:?}")));
+    }
+    if !method.chars().all(|c| c.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, format!("malformed method {method:?}")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line_capped(r, caps.max_line)?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= caps.max_headers {
+            return Err(HttpError::new(
+                400,
+                format!("more than {} header lines", caps.max_headers),
+            ));
+        }
+        let (name, value) = line.split_once(':').ok_or_else(|| {
+            HttpError::new(400, format!("malformed header line {line:?}"))
+        })?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = HttpRequest { method, target, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::new(
+            400,
+            "chunked transfer encoding is not supported; send Content-Length",
+        ));
+    }
+    let declared = match req.header("content-length") {
+        None => None,
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            HttpError::new(400, format!("malformed Content-Length {v:?}"))
+        })?),
+    };
+    let body = match declared {
+        None if matches!(req.method.as_str(), "POST" | "PUT") => {
+            return Err(HttpError::new(
+                411,
+                format!("{} {} requires Content-Length", req.method, req.path()),
+            ))
+        }
+        None | Some(0) => Vec::new(),
+        Some(n) if n > caps.max_body => {
+            return Err(HttpError::new(
+                413,
+                format!("declared body of {n} bytes exceeds the {}-byte cap", caps.max_body),
+            ))
+        }
+        Some(n) => {
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)
+                .map_err(|_| HttpError::new(400, "connection closed before the declared body"))?;
+            body
+        }
+    };
+    Ok(HttpRequest { body, ..req })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<HttpRequest, HttpError> {
+        read_request(&mut BufReader::new(raw.as_bytes()), &HttpCaps::default())
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_query_target() {
+        let req = parse(
+            "POST /v1/submit?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/submit?x=1");
+        assert_eq!(req.path(), "/v1/submit");
+        assert_eq!(req.header("host"), Some("h"));
+        assert_eq!(req.body, b"{\"a\":1}");
+        // Bare-LF line endings are tolerated too.
+        let lf = parse("GET /v1/metrics HTTP/1.1\nHost: h\n\n").unwrap();
+        assert_eq!(lf.method, "GET");
+        assert!(lf.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_inputs_map_to_400_411_413() {
+        for (raw, want) in [
+            ("TOTAL GARBAGE\r\n\r\n", 400),                                  // no version
+            ("GET /x HTTP/2.0\r\n\r\n", 400),                               // wrong protocol
+            ("get /x HTTP/1.1\r\n\r\n", 400),                               // lowercase method
+            ("GET /x HTTP/1.1\r\nbroken header\r\n\r\n", 400),              // no colon
+            ("POST /x HTTP/1.1\r\n\r\n", 411),                              // no length
+            ("POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),      // bad length
+            ("POST /x HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n", 413),  // over cap
+            ("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 400),
+            ("POST /x HTTP/1.1\r\nContent-Length: 9\r\n\r\nshort", 400),    // truncated body
+            ("", 400),                                                      // closed early
+        ] {
+            let err = parse(raw).unwrap_err();
+            assert_eq!(err.status, want, "{raw:?}: {}", err.message);
+        }
+    }
+
+    #[test]
+    fn line_and_header_caps_bound_hostile_input() {
+        let caps = HttpCaps { max_line: 64, max_headers: 2, max_body: 64 };
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(200));
+        let err = read_request(&mut BufReader::new(long.as_bytes()), &caps).unwrap_err();
+        assert_eq!(err.status, 400);
+        let many = "GET / HTTP/1.1\r\nA: 1\r\nB: 2\r\nC: 3\r\n\r\n";
+        let err = read_request(&mut BufReader::new(many.as_bytes()), &caps).unwrap_err();
+        assert_eq!(err.status, 400);
+        assert!(err.message.contains("header lines"), "{}", err.message);
+    }
+
+    #[test]
+    fn chime_errors_map_like_exit_codes() {
+        // 4xx ↔ exit 2 (caller-fixable), 5xx ↔ exit 1 (environment).
+        let cases: Vec<(ChimeError, u16)> = vec![
+            (ChimeError::Unknown { what: "route", name: "x".into(), hint: None }, 404),
+            (ChimeError::Unsupported { backend: "sim", what: "x" }, 405),
+            (ChimeError::Invalid("x".into()), 400),
+            (ChimeError::Config("x".into()), 400),
+            (ChimeError::UnknownFlag { flag: "x".into(), suggestion: None }, 400),
+            (ChimeError::BackendUnavailable { backend: "functional", reason: "x".into() }, 503),
+            (ChimeError::Runtime("x".into()), 500),
+        ];
+        for (e, status) in cases {
+            assert_eq!(status_for(&e), status, "{e}");
+            let wire_is_usage = status < 500;
+            assert_eq!(wire_is_usage, e.exit_code() == 2, "{e}");
+            let resp = HttpResponse::error(&HttpError::from_chime(&e));
+            assert_eq!(resp.status, status);
+        }
+    }
+
+    #[test]
+    fn responses_serialize_with_length_and_close() {
+        let resp = HttpResponse::json(200, &Json::obj(vec![("ok", true.into())]));
+        let text = String::from_utf8(resp.to_bytes()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: "), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with('}'), "{text}");
+        let with_allow = HttpResponse {
+            allow: Some("POST"),
+            ..HttpResponse::error(&HttpError::new(405, "nope"))
+        };
+        let text = String::from_utf8(with_allow.to_bytes()).unwrap();
+        assert!(text.contains("Allow: POST\r\n"), "{text}");
+    }
+}

@@ -1,0 +1,454 @@
+//! `chime loadgen`: open-loop wall-clock load generator for a running
+//! `chime serve --listen` target.
+//!
+//! One worker thread per request sleeps until its [`ArrivalProcess`]
+//! point, POSTs `/v1/submit`, opens the request's SSE stream, and
+//! timestamps first-token / per-token / completion frames with the host
+//! monotonic clock. The report renders the same p50/p95/p99 TTFT / TPOT
+//! / latency table as `results::tail` — but measured over the wire in
+//! wall-clock time rather than inside the simulator's virtual timeline,
+//! making this the first component where throughput is judged in real
+//! time against host cores (ROADMAP items 1 and 2).
+//!
+//! The client side is std-only like the server: a blocking
+//! `TcpStream` + the [`super::http`] caps-checked parser in reverse
+//! (status line + headers + Content-Length body).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::api::{ArrivalProcess, ChimeError};
+use crate::results::tail::tail_percentiles;
+use crate::util::{table, Json, Table};
+
+use super::server::resolve_addr;
+
+/// One loadgen run: target, demand shape, and per-request budgets.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// `HOST:PORT` of a running `chime serve --listen`.
+    pub target: String,
+    /// Requests to fire (ignored for `trace:` — the file dictates it).
+    pub requests: usize,
+    /// Open-loop arrival schedule (burst / poisson / trace).
+    pub arrival: ArrivalProcess,
+    /// Seed for the Poisson schedule.
+    pub seed: u64,
+    /// Decode budget per request (traces may override per point).
+    pub max_new_tokens: usize,
+    /// Synthetic prompt length submitted with each request.
+    pub prompt_tokens: usize,
+    /// Finish + shut the server down after the run (smoke-test mode).
+    pub shutdown: bool,
+    /// Per-connection I/O timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            target: String::new(),
+            requests: 16,
+            arrival: ArrivalProcess::Burst,
+            seed: 7,
+            max_new_tokens: 16,
+            prompt_tokens: 8,
+            shutdown: false,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Wall-clock measurements for one completed request.
+#[derive(Debug, Clone)]
+pub struct RequestSample {
+    pub id: u64,
+    /// Submit → first-token frame, ns (None for zero-token requests).
+    pub ttft_ns: Option<f64>,
+    /// Mean first-token → completion spacing per decode token, ns.
+    pub tpot_ns: Option<f64>,
+    /// Submit → completed frame, ns.
+    pub latency_ns: f64,
+    /// Tokens the server reported in the completion frame.
+    pub tokens: u64,
+}
+
+/// The run's outcome: samples, failures, and the rendered tail table.
+pub struct LoadgenReport {
+    pub samples: Vec<RequestSample>,
+    /// Per-request failures (connect errors, rejected/shed terminals).
+    pub errors: Vec<String>,
+    /// First submit → last terminal frame, seconds.
+    pub wall_s: f64,
+    /// Rendered p50/p95/p99 table (the `results::tail` format).
+    pub table: String,
+    /// The server's canonical `ServeOutcome` JSON (shutdown mode only).
+    pub outcome: Option<Json>,
+}
+
+/// Fire the configured request set at the target and collect the report.
+/// A malformed `--target` is a usage error (exit 2); an unreachable or
+/// non-chime target is a runtime error (exit 1).
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, ChimeError> {
+    let addr = resolve_addr("target", &cfg.target)?;
+    probe(addr, cfg.timeout)?;
+    let points = cfg.arrival.points(cfg.seed, cfg.requests)?;
+    let t0 = Instant::now();
+    let mut results: Vec<Result<RequestSample, String>> = Vec::with_capacity(points.len());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(points.len());
+        for (i, point) in points.iter().enumerate() {
+            let cfg = &*cfg;
+            handles.push(scope.spawn(move || {
+                let at = t0 + Duration::from_nanos(point.arrival_ns as u64);
+                std::thread::sleep(at.saturating_duration_since(Instant::now()));
+                drive_request(
+                    addr,
+                    i as u64,
+                    cfg.prompt_tokens,
+                    point.max_new_tokens.unwrap_or(cfg.max_new_tokens),
+                    cfg.timeout,
+                )
+            }));
+        }
+        for h in handles {
+            results.push(h.join().unwrap_or_else(|_| Err("worker panicked".to_string())));
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut samples = Vec::new();
+    let mut errors = Vec::new();
+    for r in results {
+        match r {
+            Ok(s) => samples.push(s),
+            Err(e) => errors.push(e),
+        }
+    }
+    samples.sort_by_key(|s| s.id);
+    let outcome = if cfg.shutdown {
+        let (status, body) = http_call(addr, "POST", "/v1/finish", None, cfg.timeout)?;
+        let text = String::from_utf8_lossy(&body).into_owned();
+        if status != 200 {
+            return Err(ChimeError::Runtime(format!("finish returned {status}: {text}")));
+        }
+        let json = Json::parse(&text)
+            .map_err(|e| ChimeError::Runtime(format!("finish body is not JSON: {e}")))?;
+        let (status, _) = http_call(addr, "POST", "/v1/shutdown", None, cfg.timeout)?;
+        if status != 200 {
+            return Err(ChimeError::Runtime(format!("shutdown returned {status}")));
+        }
+        Some(json)
+    } else {
+        None
+    };
+    let table = render_table(&cfg.arrival, &samples, wall_s);
+    Ok(LoadgenReport { samples, errors, wall_s, table, outcome })
+}
+
+/// Preflight: the target must answer `/v1/metrics` like a chime server.
+fn probe(addr: SocketAddr, timeout: Duration) -> Result<(), ChimeError> {
+    let (status, body) = http_call(addr, "GET", "/v1/metrics", None, timeout)
+        .map_err(|e| ChimeError::Runtime(format!("--target {addr} unreachable: {e}")))?;
+    if status != 200 {
+        return Err(ChimeError::Runtime(format!(
+            "--target {addr} is not a chime server (/v1/metrics returned {status})"
+        )));
+    }
+    let json = Json::parse(&String::from_utf8_lossy(&body))
+        .map_err(|e| ChimeError::Runtime(format!("--target {addr} metrics not JSON: {e}")))?;
+    if json.get("server").get("deterministic").as_bool() == Some(true) {
+        eprintln!(
+            "warning: target runs --deterministic (tokens stream only at finish); \
+             wall-clock TTFT/TPOT will be degenerate"
+        );
+    }
+    Ok(())
+}
+
+/// Submit one request and follow its SSE stream to the terminal frame.
+fn drive_request(
+    addr: SocketAddr,
+    id: u64,
+    prompt_tokens: usize,
+    max_new_tokens: usize,
+    timeout: Duration,
+) -> Result<RequestSample, String> {
+    let body = Json::obj(vec![
+        ("id", (id as i64).into()),
+        ("prompt_tokens", prompt_tokens.into()),
+        ("max_new_tokens", max_new_tokens.into()),
+    ]);
+    let submitted = Instant::now();
+    let (status, reply) = http_call(addr, "POST", "/v1/submit", Some(&body), timeout)
+        .map_err(|e| format!("request {id}: submit: {e}"))?;
+    if status != 200 {
+        return Err(format!(
+            "request {id}: submit returned {status}: {}",
+            String::from_utf8_lossy(&reply)
+        ));
+    }
+    let mut sse = SseStream::open(addr, &format!("/v1/stream/{id}"), timeout)
+        .map_err(|e| format!("request {id}: stream: {e}"))?;
+    let mut first_token: Option<Instant> = None;
+    loop {
+        let Some((event, data)) =
+            sse.next_frame().map_err(|e| format!("request {id}: stream: {e}"))?
+        else {
+            return Err(format!("request {id}: stream ended before a terminal event"));
+        };
+        match event.as_str() {
+            "first-token" => first_token = Some(Instant::now()),
+            "token" => {}
+            "completed" => {
+                let done = Instant::now();
+                let frame = Json::parse(&data)
+                    .map_err(|e| format!("request {id}: completed frame not JSON: {e}"))?;
+                let tokens = frame.get("tokens").as_i64().unwrap_or(0).max(0) as u64;
+                let latency_ns = done.duration_since(submitted).as_nanos() as f64;
+                let ttft_ns =
+                    first_token.map(|t| t.duration_since(submitted).as_nanos() as f64);
+                let tpot_ns = match (first_token, tokens) {
+                    (Some(t), n) if n > 0 => {
+                        Some(done.duration_since(t).as_nanos() as f64 / n as f64)
+                    }
+                    _ => None,
+                };
+                return Ok(RequestSample { id, ttft_ns, tpot_ns, latency_ns, tokens });
+            }
+            "rejected" | "shed" => {
+                return Err(format!("request {id}: server terminated it as {event:?}"))
+            }
+            // `admitted`, `stolen`, and the final `done` marker carry no
+            // timing we sample; `done` is followed by stream EOF.
+            _ => {}
+        }
+    }
+}
+
+/// The wall-clock tail table (same shape as `results::tail`).
+fn render_table(arrival: &ArrivalProcess, samples: &[RequestSample], wall_s: f64) -> String {
+    let mut t = Table::new(
+        &format!("Loadgen wall-clock tail — arrival {}, {} completed", arrival.spec(),
+                 samples.len()),
+        &["metric", "p50 (ms)", "p95 (ms)", "p99 (ms)", "mean (ms)", "samples"],
+    );
+    let rows: [(&str, Vec<f64>); 3] = [
+        ("TTFT", samples.iter().filter_map(|s| s.ttft_ns).collect()),
+        ("TPOT", samples.iter().filter_map(|s| s.tpot_ns).collect()),
+        ("latency", samples.iter().map(|s| s.latency_ns).collect()),
+    ];
+    for (name, xs) in rows {
+        if xs.is_empty() {
+            t.row(vec![name.to_string(), "-".into(), "-".into(), "-".into(), "-".into(),
+                       "0".into()]);
+            continue;
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let n = xs.len();
+        let (p50, p95, p99) = tail_percentiles(xs);
+        t.row(vec![
+            name.to_string(),
+            table::f(p50 / 1e6, 2),
+            table::f(p95 / 1e6, 2),
+            table::f(p99 / 1e6, 2),
+            table::f(mean / 1e6, 2),
+            n.to_string(),
+        ]);
+    }
+    let tokens: u64 = samples.iter().map(|s| s.tokens).sum();
+    let mut out = t.render();
+    out.push_str(&format!(
+        "achieved: {} requests in {:.2}s ({:.1} req/s, {} tokens)\n",
+        samples.len(),
+        wall_s,
+        samples.len() as f64 / wall_s.max(1e-9),
+        tokens,
+    ));
+    out
+}
+
+/// One blocking HTTP exchange: write the request, read status line +
+/// headers + body (Content-Length, or to EOF when absent).
+pub(crate) fn http_call(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+    timeout: Duration,
+) -> Result<(u16, Vec<u8>), String> {
+    let stream = TcpStream::connect_timeout(&addr, timeout).map_err(|e| e.to_string())?;
+    stream.set_read_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let payload = body.map(|b| b.compact().into_bytes()).unwrap_or_default();
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
+    if body.is_some() {
+        head.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            payload.len()
+        ));
+    }
+    head.push_str("\r\n");
+    writer.write_all(head.as_bytes()).map_err(|e| e.to_string())?;
+    writer.write_all(&payload).map_err(|e| e.to_string())?;
+    writer.flush().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let (status, content_length) = read_response_head(&mut reader)?;
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body).map_err(|e| format!("body: {e}"))?;
+        }
+        None => {
+            reader.read_to_end(&mut body).map_err(|e| format!("body: {e}"))?;
+        }
+    }
+    Ok((status, body))
+}
+
+/// Parse `HTTP/1.1 <status> ...` + headers; return (status, CL if any).
+fn read_response_head<R: BufRead>(reader: &mut R) -> Result<(u16, Option<usize>), String> {
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("status line: {e}"))?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("not an HTTP response: {:?}", line.trim_end()));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line: {:?}", line.trim_end()))?;
+    let mut content_length = None;
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header).map_err(|e| format!("headers: {e}"))?;
+        let header = header.trim_end();
+        if n == 0 || header.is_empty() {
+            return Ok((status, content_length));
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse::<usize>().ok();
+            }
+        }
+    }
+}
+
+/// A live SSE subscription: frames come back as (event, data) pairs.
+pub(crate) struct SseStream {
+    reader: BufReader<TcpStream>,
+}
+
+impl SseStream {
+    pub(crate) fn open(
+        addr: SocketAddr,
+        path: &str,
+        timeout: Duration,
+    ) -> Result<SseStream, String> {
+        let stream = TcpStream::connect_timeout(&addr, timeout).map_err(|e| e.to_string())?;
+        stream.set_read_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+        stream.set_write_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+        let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+        writer
+            .write_all(
+                format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+                    .as_bytes(),
+            )
+            .map_err(|e| e.to_string())?;
+        writer.flush().map_err(|e| e.to_string())?;
+        let mut reader = BufReader::new(stream);
+        let (status, _) = read_response_head(&mut reader)?;
+        if status != 200 {
+            return Err(format!("stream returned {status}"));
+        }
+        Ok(SseStream { reader })
+    }
+
+    /// The next `event:`/`data:` frame, or `None` at end of stream.
+    pub(crate) fn next_frame(&mut self) -> Result<Option<(String, String)>, String> {
+        let mut event = None;
+        let mut data = None;
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let line = line.trim_end_matches(['\r', '\n']);
+            if line.is_empty() {
+                if let (Some(e), Some(d)) = (event.take(), data.take()) {
+                    return Ok(Some((e, d)));
+                }
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = Some(v.to_string());
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = Some(v.to_string());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_table_renders_tail_rows_and_achieved_rate() {
+        let samples = vec![
+            RequestSample {
+                id: 0,
+                ttft_ns: Some(2e6),
+                tpot_ns: Some(0.5e6),
+                latency_ns: 10e6,
+                tokens: 16,
+            },
+            RequestSample {
+                id: 1,
+                ttft_ns: Some(4e6),
+                tpot_ns: Some(0.7e6),
+                latency_ns: 20e6,
+                tokens: 16,
+            },
+        ];
+        let text = render_table(&ArrivalProcess::Burst, &samples, 0.5);
+        for needle in ["TTFT", "TPOT", "latency", "p50 (ms)", "p99 (ms)", "achieved: 2 requests",
+                       "32 tokens"] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Zero-token runs render placeholder rows instead of panicking.
+        let bare = vec![RequestSample {
+            id: 0,
+            ttft_ns: None,
+            tpot_ns: None,
+            latency_ns: 1e6,
+            tokens: 0,
+        }];
+        let text = render_table(&ArrivalProcess::Burst, &bare, 0.1);
+        assert!(text.contains("TTFT") && text.contains('-'));
+    }
+
+    #[test]
+    fn dead_targets_are_runtime_errors_not_usage_errors() {
+        // Bind-then-drop guarantees a dead port.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = LoadgenConfig {
+            target: dead.to_string(),
+            requests: 1,
+            timeout: Duration::from_millis(500),
+            ..LoadgenConfig::default()
+        };
+        let err = run(&cfg).unwrap_err();
+        assert_eq!(err.exit_code(), 1, "{err}");
+        assert!(err.to_string().contains("unreachable"), "{err}");
+        let bad = LoadgenConfig { target: "not-an-addr".to_string(), ..LoadgenConfig::default() };
+        assert_eq!(run(&bad).unwrap_err().exit_code(), 2);
+    }
+}

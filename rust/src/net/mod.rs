@@ -1,0 +1,30 @@
+//! Network serving front end (DESIGN.md §13): the std-only HTTP/SSE
+//! ingress that turns the embeddable serving API into a system real
+//! traffic can hit, plus the open-loop wall-clock load generator that
+//! benchmarks it.
+//!
+//! * [`http`] — a minimal HTTP/1.1 layer over `std::net`: request-line /
+//!   header / body parsing with hard size caps, and the
+//!   `ChimeError` → status mapping that mirrors the CLI's exit-code
+//!   philosophy (4xx ⇔ usage/exit 2, 5xx ⇔ runtime/exit 1).
+//! * [`server`] — `chime serve --listen <addr>`: `POST /v1/submit`,
+//!   `GET /v1/stream/<id>` (typed `ServeEvent`s as SSE),
+//!   `GET /v1/metrics`, `POST /v1/finish`, `POST /v1/shutdown`, with
+//!   graceful drain on SIGINT. The simulator stays virtual-time; only
+//!   arrival timestamps come from the wire, and `--deterministic` pins
+//!   them from the request body so a served run is bit-identical to the
+//!   in-process batch path.
+//! * [`loadgen`] — `chime loadgen --target <addr>`: fires N requests
+//!   open-loop per an `ArrivalProcess` schedule from worker threads and
+//!   renders the `results::tail` p50/p95/p99 table from wall-clock
+//!   TTFT/TPOT/latency samples.
+//!
+//! No new dependencies: sockets are `std::net`, JSON is
+//! `util::json::Json`, signals are a raw `signal(2)` declaration.
+
+pub mod http;
+pub mod loadgen;
+pub mod server;
+
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use server::{outcome_to_json, NetServer, ServeOpts, ServeSummary};

@@ -1,0 +1,915 @@
+//! `chime serve --listen`: the HTTP/SSE ingress over the streaming
+//! serving protocol (DESIGN.md §13).
+//!
+//! One engine thread owns the [`Session`] and its `ServingSession` and
+//! multiplexes three duties in a poll loop: accept new connections
+//! (non-blocking listener), drain handler commands (mpsc), and tick the
+//! engine. Each accepted connection gets a short-lived handler thread
+//! that parses the request ([`super::http`]), sends one [`EngineCmd`]
+//! with a reply channel, and writes the response; SSE subscribers hold
+//! a frame receiver and stream until the request completes or the
+//! client disconnects.
+//!
+//! ## Endpoints
+//!
+//! * `POST /v1/submit` — body `{"id": 0, "prompt_tokens": 8,
+//!   "max_new_tokens": 16, "arrival_offset_s": 0.25}` (every field
+//!   optional; `prompt` may spell the token ids explicitly). Replies
+//!   with the assigned id and any immediate events.
+//! * `GET /v1/stream/<id>` — Server-Sent Events: each engine event for
+//!   that request as `event: <kind>\ndata: <json>\n\n`, replayed from
+//!   the start for late subscribers, terminated by `event: done`.
+//! * `GET /v1/metrics` — server config echo + live counters + the
+//!   outcome once finished.
+//! * `POST /v1/finish` — drain the engine and return the canonical
+//!   [`ServeOutcome`] JSON ([`outcome_to_json`]); idempotent.
+//! * `POST /v1/shutdown` — finish (if needed) and stop the listener.
+//!
+//! ## Determinism boundary
+//!
+//! The simulator under the server always runs virtual time; the wire
+//! only contributes arrival timestamps. In live mode (default) a
+//! request with no `arrival_offset_s` arrives at the wall-clock offset
+//! since server start, and the engine ticks eagerly so SSE frames flow
+//! as the virtual timeline advances. With [`ServeOpts::deterministic`]
+//! the engine never ticks between submits — exactly the submit-all +
+//! finish discipline of the batch `Session::serve` — so a fixed request
+//! set with pinned `arrival_offset_s` values produces a bit-identical
+//! [`ServeOutcome`] over the wire (the loopback golden test in
+//! `tests/net_serving.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{ChimeError, ServeEvent, ServeRequest, ServingSession, Session};
+use crate::coordinator::ServeOutcome;
+use crate::util::Json;
+
+use super::http::{self, HttpCaps, HttpError, HttpRequest, HttpResponse};
+
+/// Engine-loop poll period while idle (connections, commands, ticks).
+const POLL: Duration = Duration::from_millis(2);
+
+/// SSE terminator frame: the stream is complete, no more events follow.
+const DONE_FRAME: &str = "event: done\ndata: {}\n\n";
+
+/// Server behavior knobs (`chime serve --listen` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Replay mode: never tick between submits, so the outcome is
+    /// bit-identical to batch `Session::serve` of the same requests
+    /// (tokens stream only at finish). Default: live eager ticking.
+    pub deterministic: bool,
+    /// `max_new_tokens` for submits that do not spell one.
+    pub default_max_new_tokens: usize,
+    /// Request body size cap, bytes.
+    pub max_body_bytes: usize,
+    /// Install a SIGINT/SIGTERM handler that drains gracefully (the CLI
+    /// path sets this; library users and tests keep their own handlers).
+    pub handle_signals: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            deterministic: false,
+            default_max_new_tokens: 64,
+            max_body_bytes: HttpCaps::default().max_body,
+            handle_signals: false,
+        }
+    }
+}
+
+/// What the engine loop served, reported after shutdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeSummary {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub tokens: u64,
+}
+
+/// Canonical JSON for a [`ServeOutcome`] — the single serializer behind
+/// `POST /v1/finish`, `GET /v1/metrics`, and the loopback golden test
+/// (both sides of the bit-identity assertion go through this function).
+pub fn outcome_to_json(out: &ServeOutcome) -> Json {
+    let responses = out
+        .responses
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", (r.id as i64).into()),
+                ("tokens", r.tokens.len().into()),
+                ("queue_ns", r.queue_ns.into()),
+                ("ttft_ns", r.ttft_ns.into()),
+                ("service_ns", r.service_ns.into()),
+                ("energy_j", r.energy_j.into()),
+            ])
+        })
+        .collect();
+    let m = &out.metrics;
+    Json::obj(vec![
+        ("responses", Json::Arr(responses)),
+        ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("completed", (m.completed as i64).into()),
+                ("admitted", (m.admitted as i64).into()),
+                ("rejected", (m.rejected as i64).into()),
+                ("shed", (m.shed as i64).into()),
+                ("tokens", (m.tokens as i64).into()),
+                ("steals", (m.steals as i64).into()),
+                ("stolen_bytes", (m.stolen_bytes as i64).into()),
+                ("steal_delay_ns", m.steal_delay_ns.into()),
+                ("energy_j", m.energy_j.into()),
+                ("tokens_per_s", m.tokens_per_s().into()),
+            ]),
+        ),
+    ])
+}
+
+/// Resolve `HOST:PORT` for `--listen`/`--target`. Malformed spellings
+/// are usage errors (exit 2 on the CLI); a well-formed address that is
+/// simply dead surfaces later as a Runtime (exit 1) connect/bind error.
+pub fn resolve_addr(flag: &str, spec: &str) -> Result<SocketAddr, ChimeError> {
+    if let Ok(addr) = spec.parse::<SocketAddr>() {
+        return Ok(addr);
+    }
+    match spec.to_socket_addrs() {
+        Ok(mut addrs) => addrs.next().ok_or_else(|| {
+            ChimeError::Invalid(format!("--{flag} {spec:?} resolves to no address"))
+        }),
+        Err(e) => Err(ChimeError::Invalid(format!(
+            "--{flag} expects HOST:PORT (e.g. 127.0.0.1:8080), got {spec:?}: {e}"
+        ))),
+    }
+}
+
+/// A running listener: spawned engine thread + bound address. Request a
+/// stop with [`NetServer::request_shutdown`] (or `POST /v1/shutdown`,
+/// or SIGINT under [`ServeOpts::handle_signals`]), then [`NetServer::join`].
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Result<ServeSummary, ChimeError>>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (port 0 picks an ephemeral port) and start the
+    /// engine loop. `make_session` runs on the engine thread because
+    /// backends are not `Send`; a build failure is reported here
+    /// synchronously. Returns once the server is accepting.
+    pub fn spawn<F>(listen: &str, make_session: F, opts: ServeOpts) -> Result<NetServer, ChimeError>
+    where
+        F: FnOnce() -> Result<Session, ChimeError> + Send + 'static,
+    {
+        let addr = resolve_addr("listen", listen)?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| ChimeError::Runtime(format!("binding {listen}: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| ChimeError::Runtime(format!("reading bound address: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| ChimeError::Runtime(format!("non-blocking listener: {e}")))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let (ready_tx, ready_rx) = channel::<Result<(), ChimeError>>();
+        let thread = std::thread::Builder::new()
+            .name("chime-net-engine".to_string())
+            .spawn(move || {
+                let mut session = match make_session() {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.clone()));
+                        return Err(e);
+                    }
+                };
+                engine_loop(listener, &mut session, &opts, &flag)
+            })
+            .map_err(|e| ChimeError::Runtime(format!("spawning engine thread: {e}")))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(NetServer { addr, shutdown, thread: Some(thread) }),
+            Ok(Err(e)) => {
+                let _ = thread.join();
+                Err(e)
+            }
+            // Channel closed without a message: the thread died before
+            // building; surface its error (or the panic).
+            Err(_) => match thread.join() {
+                Ok(r) => Err(r.err().unwrap_or_else(|| {
+                    ChimeError::Runtime("engine thread exited before ready".to_string())
+                })),
+                Err(_) => Err(ChimeError::Runtime("engine thread panicked".to_string())),
+            },
+        }
+    }
+
+    /// The bound listen address (resolves `--listen 127.0.0.1:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the engine loop to drain and exit (observed within [`POLL`]).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for the engine loop to exit and return its summary.
+    pub fn join(mut self) -> Result<ServeSummary, ChimeError> {
+        let thread = self.thread.take().expect("join consumes the only handle");
+        thread
+            .join()
+            .map_err(|_| ChimeError::Runtime("engine thread panicked".to_string()))?
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // A dropped-without-join server must not pin the process: the
+        // loop notices the flag at its next poll and exits.
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// A parsed `POST /v1/submit` body.
+struct SubmitBody {
+    id: Option<u64>,
+    prompt: Option<Vec<i32>>,
+    prompt_tokens: Option<usize>,
+    max_new_tokens: Option<usize>,
+    arrival_offset_s: Option<f64>,
+    image_seed: Option<u64>,
+}
+
+const SUBMIT_FIELDS: [&str; 6] =
+    ["id", "prompt", "prompt_tokens", "max_new_tokens", "arrival_offset_s", "image_seed"];
+
+fn parse_submit(body: &[u8]) -> Result<SubmitBody, HttpError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| HttpError::new(400, "submit body is not UTF-8"))?;
+    let json = Json::parse(text)
+        .map_err(|e| HttpError::new(400, format!("submit body is not valid JSON: {e}")))?;
+    let obj = json
+        .as_obj()
+        .ok_or_else(|| HttpError::new(400, "submit body must be a JSON object"))?;
+    for key in obj.keys() {
+        if !SUBMIT_FIELDS.contains(&key.as_str()) {
+            return Err(HttpError::new(
+                400,
+                format!("unknown submit field {key:?} (accepted: {})", SUBMIT_FIELDS.join(", ")),
+            ));
+        }
+    }
+    let uint = |key: &str| -> Result<Option<u64>, HttpError> {
+        match json.get(key) {
+            Json::Null => Ok(None),
+            v => v
+                .as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .map(Some)
+                .ok_or_else(|| {
+                    HttpError::new(400, format!("{key:?} must be a non-negative integer"))
+                }),
+        }
+    };
+    let prompt = match json.get("prompt") {
+        Json::Null => None,
+        v => {
+            let arr = v.as_arr().ok_or_else(|| {
+                HttpError::new(400, "\"prompt\" must be an array of token ids")
+            })?;
+            let mut tokens = Vec::with_capacity(arr.len());
+            for t in arr {
+                let id = t.as_i64().and_then(|n| i32::try_from(n).ok()).ok_or_else(|| {
+                    HttpError::new(400, "\"prompt\" entries must be integer token ids")
+                })?;
+                tokens.push(id);
+            }
+            Some(tokens)
+        }
+    };
+    let prompt_tokens = uint("prompt_tokens")?.map(|n| n as usize);
+    if prompt.is_some() && prompt_tokens.is_some() {
+        return Err(HttpError::new(
+            400,
+            "pass either \"prompt\" (explicit ids) or \"prompt_tokens\" (a length), not both",
+        ));
+    }
+    let arrival_offset_s = match json.get("arrival_offset_s") {
+        Json::Null => None,
+        v => Some(v.as_f64().ok_or_else(|| {
+            HttpError::new(400, "\"arrival_offset_s\" must be a number (seconds)")
+        })?),
+    };
+    Ok(SubmitBody {
+        id: uint("id")?,
+        prompt,
+        prompt_tokens,
+        max_new_tokens: uint("max_new_tokens")?.map(|n| n as usize),
+        arrival_offset_s,
+        image_seed: uint("image_seed")?,
+    })
+}
+
+/// One handler→engine command, with a reply channel.
+enum EngineCmd {
+    Submit(SubmitBody, Sender<Result<Json, HttpError>>),
+    Subscribe(u64, Sender<Result<Receiver<String>, HttpError>>),
+    Metrics(Sender<Json>),
+    /// Drain + finish (idempotent); replies with the canonical outcome
+    /// JSON body. Shutdown sends this first, then sets the stop flag.
+    Finish(Sender<Result<Vec<u8>, HttpError>>),
+}
+
+#[derive(Default)]
+struct Counts {
+    submitted: u64,
+    admitted: u64,
+    completed: u64,
+    rejected: u64,
+    shed: u64,
+    tokens: u64,
+    steals: u64,
+}
+
+/// Engine-thread state: the serving session plus request logs, SSE
+/// subscriber channels, and live counters.
+struct Engine<'s> {
+    serving: Option<ServingSession<'s>>,
+    deterministic: bool,
+    default_tokens: usize,
+    epoch: Instant,
+    /// Config echo included in `/v1/metrics`.
+    info: Json,
+    /// Ids ever submitted (pre-guards the protocol's duplicate panic).
+    ids: BTreeSet<u64>,
+    next_auto_id: u64,
+    /// Full per-request event history, for SSE replay to late (or
+    /// deterministic-mode) subscribers.
+    log: BTreeMap<u64, Vec<ServeEvent>>,
+    /// Live SSE subscribers by request id.
+    subs: BTreeMap<u64, Vec<Sender<String>>>,
+    counts: Counts,
+    /// The canonical outcome JSON once finished.
+    outcome: Option<Json>,
+    fatal: Option<ChimeError>,
+}
+
+impl<'s> Engine<'s> {
+    fn handle(&mut self, cmd: EngineCmd) {
+        match cmd {
+            EngineCmd::Submit(body, reply) => {
+                let result = self.submit(body);
+                let _ = reply.send(result);
+            }
+            EngineCmd::Subscribe(id, reply) => {
+                let result = self.subscribe(id);
+                let _ = reply.send(result);
+            }
+            EngineCmd::Metrics(reply) => {
+                let _ = reply.send(self.metrics());
+            }
+            EngineCmd::Finish(reply) => {
+                let result = self.finish();
+                let _ = reply.send(result);
+            }
+        }
+    }
+
+    fn submit(&mut self, body: SubmitBody) -> Result<Json, HttpError> {
+        if let Some(e) = &self.fatal {
+            return Err(HttpError::new(500, format!("serving engine failed: {e}")));
+        }
+        if self.outcome.is_some() {
+            return Err(HttpError::new(
+                400,
+                "session already finished (POST /v1/finish); restart the server to serve more",
+            ));
+        }
+        let id = body.id.unwrap_or(self.next_auto_id);
+        if !self.ids.insert(id) {
+            return Err(HttpError::new(400, format!("duplicate request id {id}")));
+        }
+        self.next_auto_id = self.next_auto_id.max(id + 1);
+        let prompt = match (body.prompt, body.prompt_tokens) {
+            (Some(tokens), _) => tokens,
+            (None, Some(n)) => vec![0; n],
+            (None, None) => Vec::new(),
+        };
+        // Live mode stamps wire time; deterministic mode pins t=0 so an
+        // offset-less replay matches a burst. Non-finite offsets flow
+        // through: the engine sheds them (its malformed-arrival path).
+        let arrival_ns = match body.arrival_offset_s {
+            Some(s) => s * 1e9,
+            None if self.deterministic => 0.0,
+            None => self.epoch.elapsed().as_nanos() as f64,
+        };
+        let req = ServeRequest {
+            id,
+            prompt,
+            image_seed: body.image_seed.unwrap_or(id),
+            max_new_tokens: body.max_new_tokens.unwrap_or(self.default_tokens),
+            arrival_ns,
+        };
+        self.counts.submitted += 1;
+        let serving = self.serving.as_mut().expect("present until finished");
+        let events = serving.submit(req);
+        let immediate: Vec<Json> = events.iter().map(|e| e.to_json()).collect();
+        self.publish(events);
+        Ok(Json::obj(vec![
+            ("id", (id as i64).into()),
+            ("status", "submitted".into()),
+            ("events", Json::Arr(immediate)),
+        ]))
+    }
+
+    /// Advance the engine one event in live mode. Returns whether any
+    /// work happened (idle loops back off to [`POLL`]).
+    fn tick_once(&mut self) -> bool {
+        if self.deterministic || self.fatal.is_some() {
+            return false;
+        }
+        let Some(serving) = self.serving.as_mut() else { return false };
+        match serving.tick() {
+            Ok(events) if events.is_empty() => false,
+            Ok(events) => {
+                self.publish(events);
+                true
+            }
+            Err(e) => {
+                self.fatal = Some(e);
+                false
+            }
+        }
+    }
+
+    /// Record events in the per-request log, bump counters, and fan
+    /// frames out to live SSE subscribers.
+    fn publish(&mut self, events: Vec<ServeEvent>) {
+        for ev in events {
+            let id = ev.id();
+            match &ev {
+                ServeEvent::Admitted { .. } => self.counts.admitted += 1,
+                ServeEvent::Rejected { .. } => self.counts.rejected += 1,
+                ServeEvent::Shed { .. } => self.counts.shed += 1,
+                ServeEvent::Stolen { .. } => self.counts.steals += 1,
+                ServeEvent::Completed { response, .. } => {
+                    self.counts.completed += 1;
+                    self.counts.tokens += response.tokens.len() as u64;
+                }
+                ServeEvent::FirstToken { .. } | ServeEvent::Token { .. } => {}
+            }
+            let terminal = matches!(
+                ev,
+                ServeEvent::Completed { .. } | ServeEvent::Rejected { .. } | ServeEvent::Shed { .. }
+            );
+            if let Some(senders) = self.subs.get_mut(&id) {
+                let frame = sse_frame(&ev);
+                // A send error means the subscriber hung up; forget it.
+                senders.retain(|tx| tx.send(frame.clone()).is_ok());
+                if terminal {
+                    for tx in senders.iter() {
+                        let _ = tx.send(DONE_FRAME.to_string());
+                    }
+                    self.subs.remove(&id);
+                }
+            }
+            self.log.entry(id).or_default().push(ev);
+        }
+    }
+
+    fn subscribe(&mut self, id: u64) -> Result<Receiver<String>, HttpError> {
+        if !self.ids.contains(&id) {
+            return Err(HttpError::new(
+                404,
+                format!("unknown request id {id} (POST /v1/submit first)"),
+            ));
+        }
+        let (tx, rx) = channel();
+        let mut terminal = false;
+        if let Some(history) = self.log.get(&id) {
+            for ev in history {
+                let _ = tx.send(sse_frame(ev));
+                terminal |= matches!(
+                    ev,
+                    ServeEvent::Completed { .. }
+                        | ServeEvent::Rejected { .. }
+                        | ServeEvent::Shed { .. }
+                );
+            }
+        }
+        if terminal {
+            // Replay-only: the done frame ends the stream; dropping tx
+            // closes the channel after the buffered frames drain.
+            let _ = tx.send(DONE_FRAME.to_string());
+        } else {
+            self.subs.entry(id).or_default().push(tx);
+        }
+        Ok(rx)
+    }
+
+    fn metrics(&self) -> Json {
+        let state = if self.fatal.is_some() {
+            "failed"
+        } else if self.outcome.is_some() {
+            "finished"
+        } else {
+            "serving"
+        };
+        let c = &self.counts;
+        let mut pairs = vec![
+            ("server", self.info.clone()),
+            ("state", state.into()),
+            (
+                "counts",
+                Json::obj(vec![
+                    ("submitted", (c.submitted as i64).into()),
+                    ("admitted", (c.admitted as i64).into()),
+                    ("completed", (c.completed as i64).into()),
+                    ("rejected", (c.rejected as i64).into()),
+                    ("shed", (c.shed as i64).into()),
+                    ("tokens", (c.tokens as i64).into()),
+                    ("steals", (c.steals as i64).into()),
+                ]),
+            ),
+            ("outcome", self.outcome.clone().unwrap_or(Json::Null)),
+        ];
+        if let Some(e) = &self.fatal {
+            pairs.push(("error", e.to_string().into()));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Drain (publishing the drained events) and finish. Idempotent:
+    /// repeated calls return the cached outcome body byte-for-byte.
+    fn finish(&mut self) -> Result<Vec<u8>, HttpError> {
+        if let Some(e) = &self.fatal {
+            return Err(HttpError::new(500, format!("serving engine failed: {e}")));
+        }
+        if let Some(done) = &self.outcome {
+            return Ok(done.pretty().into_bytes());
+        }
+        let mut serving = self.serving.take().expect("present until finished");
+        match serving.drain() {
+            Ok(events) => self.publish(events),
+            Err(e) => {
+                self.fatal = Some(e.clone());
+                return Err(HttpError::new(500, format!("draining serving engine: {e}")));
+            }
+        }
+        match serving.finish() {
+            Ok(out) => {
+                let json = outcome_to_json(&out);
+                let body = json.pretty().into_bytes();
+                self.outcome = Some(json);
+                Ok(body)
+            }
+            Err(e) => {
+                self.fatal = Some(e.clone());
+                Err(HttpError::new(500, format!("finishing serving engine: {e}")))
+            }
+        }
+    }
+
+    fn summary(&self) -> ServeSummary {
+        let c = &self.counts;
+        ServeSummary {
+            submitted: c.submitted,
+            completed: c.completed,
+            rejected: c.rejected,
+            shed: c.shed,
+            tokens: c.tokens,
+        }
+    }
+}
+
+fn sse_frame(ev: &ServeEvent) -> String {
+    format!("event: {}\ndata: {}\n\n", ev.kind(), ev.to_json().compact())
+}
+
+/// Config echo in `/v1/metrics`, so a loadgen can report what it hit.
+fn server_info(session: &Session, opts: &ServeOpts) -> Json {
+    Json::obj(vec![
+        ("protocol", "chime-serve/1".into()),
+        ("backend", session.backend_name().into()),
+        ("model", session.model().name.as_str().into()),
+        ("memory", session.memory_fidelity().name().into()),
+        ("topology", session.topology().name().into()),
+        ("deterministic", opts.deterministic.into()),
+    ])
+}
+
+/// The engine loop: accept + dispatch + tick until a shutdown request
+/// (flag, `/v1/shutdown`, or SIGINT under `handle_signals`), then drain
+/// gracefully and report the summary.
+fn engine_loop(
+    listener: TcpListener,
+    session: &mut Session,
+    opts: &ServeOpts,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<ServeSummary, ChimeError> {
+    if opts.handle_signals {
+        signals::install();
+    }
+    let info = server_info(session, opts);
+    let caps = HttpCaps { max_body: opts.max_body_bytes, ..HttpCaps::default() };
+    let mut engine = Engine {
+        serving: Some(session.open_serving()?),
+        deterministic: opts.deterministic,
+        default_tokens: opts.default_max_new_tokens,
+        epoch: Instant::now(),
+        info,
+        ids: BTreeSet::new(),
+        next_auto_id: 0,
+        log: BTreeMap::new(),
+        subs: BTreeMap::new(),
+        counts: Counts::default(),
+        outcome: None,
+        fatal: None,
+    };
+    let (cmd_tx, cmd_rx) = channel::<EngineCmd>();
+    loop {
+        // New connections → handler threads (short-lived; SSE handlers
+        // live for the stream).
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = cmd_tx.clone();
+                    let caps = caps.clone();
+                    let stop = Arc::clone(shutdown);
+                    std::thread::spawn(move || handle_connection(stream, &tx, &caps, &stop));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // Transient accept failure (e.g. aborted handshake):
+                // back off one poll period and keep serving.
+                Err(_) => {
+                    std::thread::sleep(POLL);
+                    break;
+                }
+            }
+        }
+        let mut worked = false;
+        while let Ok(cmd) = cmd_rx.try_recv() {
+            engine.handle(cmd);
+            worked = true;
+        }
+        worked |= engine.tick_once();
+        if shutdown.load(Ordering::SeqCst) || signals::requested() {
+            // Graceful drain: every in-flight request completes (into
+            // the log/metrics) before the listener goes away.
+            let _ = engine.finish();
+            return Ok(engine.summary());
+        }
+        if !worked {
+            std::thread::sleep(POLL);
+        }
+    }
+}
+
+/// What the router decided to do with one parsed request.
+enum Routed {
+    Respond(HttpResponse),
+    Stream(Receiver<String>),
+    /// Respond, then raise the shutdown flag (after the reply is on the
+    /// wire, so the client sees a clean 200).
+    Shutdown(HttpResponse),
+}
+
+fn dispatch(req: &HttpRequest, tx: &Sender<EngineCmd>) -> Result<Routed, HttpError> {
+    // Engine gone ⇒ the server is between drain and exit.
+    let closed = || HttpError::new(503, "server is shutting down");
+    let path = req.path();
+    match (req.method.as_str(), path) {
+        ("POST", "/v1/submit") => {
+            let body = parse_submit(&req.body)?;
+            let (reply_tx, reply_rx) = channel();
+            tx.send(EngineCmd::Submit(body, reply_tx)).map_err(|_| closed())?;
+            let json = reply_rx.recv().map_err(|_| closed())??;
+            Ok(Routed::Respond(HttpResponse::json(200, &json)))
+        }
+        ("GET", p) if p.starts_with("/v1/stream/") => {
+            let raw = &p["/v1/stream/".len()..];
+            let id: u64 = raw.parse().map_err(|_| {
+                HttpError::new(400, format!("stream id must be a request id, got {raw:?}"))
+            })?;
+            let (reply_tx, reply_rx) = channel();
+            tx.send(EngineCmd::Subscribe(id, reply_tx)).map_err(|_| closed())?;
+            let frames = reply_rx.recv().map_err(|_| closed())??;
+            Ok(Routed::Stream(frames))
+        }
+        ("GET", "/v1/metrics") => {
+            let (reply_tx, reply_rx) = channel();
+            tx.send(EngineCmd::Metrics(reply_tx)).map_err(|_| closed())?;
+            let json = reply_rx.recv().map_err(|_| closed())?;
+            Ok(Routed::Respond(HttpResponse::json(200, &json)))
+        }
+        ("POST", "/v1/finish") | ("POST", "/v1/shutdown") => {
+            let (reply_tx, reply_rx) = channel();
+            tx.send(EngineCmd::Finish(reply_tx)).map_err(|_| closed())?;
+            let body = reply_rx.recv().map_err(|_| closed())??;
+            let resp = HttpResponse {
+                status: 200,
+                content_type: "application/json",
+                body,
+                allow: None,
+            };
+            if path == "/v1/shutdown" {
+                Ok(Routed::Shutdown(resp))
+            } else {
+                Ok(Routed::Respond(resp))
+            }
+        }
+        // Known routes with the wrong method get a 405 + Allow.
+        (_, "/v1/submit") | (_, "/v1/finish") | (_, "/v1/shutdown") => Err(HttpError::new(
+            405,
+            format!("{path} accepts POST, not {}", req.method),
+        )),
+        (_, "/v1/metrics") => {
+            Err(HttpError::new(405, format!("{path} accepts GET, not {}", req.method)))
+        }
+        (_, p) if p.starts_with("/v1/stream/") => {
+            Err(HttpError::new(405, format!("{path} accepts GET, not {}", req.method)))
+        }
+        _ => Err(HttpError::new(
+            404,
+            format!(
+                "no route {path:?} (endpoints: POST /v1/submit, GET /v1/stream/<id>, \
+                 GET /v1/metrics, POST /v1/finish, POST /v1/shutdown)"
+            ),
+        )),
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: &Sender<EngineCmd>,
+    caps: &HttpCaps,
+    shutdown: &AtomicBool,
+) {
+    // A peer that opens a connection and goes silent would otherwise pin
+    // this handler forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let Ok(reader_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(reader_half);
+    let mut writer = stream;
+    let routed = http::read_request(&mut reader, caps)
+        .and_then(|req| allowed_methods_guard(&req).and_then(|()| dispatch(&req, tx)));
+    match routed {
+        Ok(Routed::Respond(resp)) => {
+            let _ = writer.write_all(&resp.to_bytes());
+        }
+        Ok(Routed::Shutdown(resp)) => {
+            let _ = writer.write_all(&resp.to_bytes());
+            let _ = writer.flush();
+            shutdown.store(true, Ordering::SeqCst);
+        }
+        Ok(Routed::Stream(frames)) => {
+            if writer.write_all(http::SSE_PREAMBLE.as_bytes()).is_err() {
+                return;
+            }
+            let _ = writer.flush();
+            // Blocks between events; ends when the engine sends `done`
+            // and drops the sender, or when the client hangs up (the
+            // write fails, we drop the receiver, the engine forgets us
+            // on its next send).
+            for frame in frames {
+                if writer.write_all(frame.as_bytes()).and_then(|()| writer.flush()).is_err() {
+                    break;
+                }
+            }
+        }
+        Err(err) => {
+            let mut resp = HttpResponse::error(&err);
+            if err.status == 405 {
+                resp.allow = Some(if err.message.contains("accepts GET") { "GET" } else { "POST" });
+            }
+            let _ = writer.write_all(&resp.to_bytes());
+        }
+    }
+    let _ = writer.flush();
+}
+
+/// Methods the server understands at all; anything else is 405 before
+/// routing (e.g. `BREW /v1/metrics`).
+fn allowed_methods_guard(req: &HttpRequest) -> Result<(), HttpError> {
+    match req.method.as_str() {
+        "GET" | "POST" | "HEAD" | "PUT" | "DELETE" => Ok(()),
+        other => Err(HttpError::new(405, format!("method {other:?} is not supported"))),
+    }
+}
+
+/// SIGINT/SIGTERM → graceful drain, without a signal-handling crate:
+/// libc is always linked, so declare `signal(2)` directly and flip an
+/// atomic the engine loop polls (nothing async-signal-unsafe runs in
+/// the handler).
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod signals {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_bodies_parse_and_validate() {
+        let ok = parse_submit(
+            br#"{"id": 3, "prompt_tokens": 8, "max_new_tokens": 16, "arrival_offset_s": 0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.id, Some(3));
+        assert_eq!(ok.prompt_tokens, Some(8));
+        assert_eq!(ok.max_new_tokens, Some(16));
+        assert_eq!(ok.arrival_offset_s, Some(0.5));
+        assert!(ok.prompt.is_none() && ok.image_seed.is_none());
+        let explicit = parse_submit(br#"{"prompt": [5, 6, 7]}"#).unwrap();
+        assert_eq!(explicit.prompt, Some(vec![5, 6, 7]));
+        // Empty object: everything defaulted downstream.
+        assert!(parse_submit(b"{}").unwrap().id.is_none());
+        for bad in [
+            &b"not json"[..],
+            br#"[1, 2]"#,
+            br#"{"id": -1}"#,
+            br#"{"id": 1.5}"#,
+            br#"{"prompt": "hi"}"#,
+            br#"{"prompt": [1], "prompt_tokens": 4}"#,
+            br#"{"arrival_offset_s": "soon"}"#,
+            br#"{"max_new_tokenz": 4}"#,
+        ] {
+            let err = parse_submit(bad).unwrap_err();
+            assert_eq!(err.status, 400, "{:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn listen_addrs_resolve_or_reject_as_usage_errors() {
+        let ok = resolve_addr("listen", "127.0.0.1:0").unwrap();
+        assert_eq!(ok.port(), 0);
+        for bad in ["", "not-an-addr", "127.0.0.1", "127.0.0.1:notaport", ":::::"] {
+            let err = resolve_addr("listen", bad).unwrap_err();
+            assert_eq!(err.exit_code(), 2, "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn outcome_serializer_covers_every_metric_field() {
+        let out = ServeOutcome {
+            responses: vec![],
+            shed: vec![],
+            metrics: Default::default(),
+        };
+        let json = outcome_to_json(&out);
+        for key in
+            ["completed", "admitted", "rejected", "shed", "tokens", "steals", "stolen_bytes",
+             "steal_delay_ns", "energy_j", "tokens_per_s"]
+        {
+            assert!(!json.get("metrics").get(key).is_null(), "missing metrics.{key}");
+        }
+        assert_eq!(json.get("responses").as_arr().unwrap().len(), 0);
+    }
+}

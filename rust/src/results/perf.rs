@@ -27,8 +27,8 @@ use crate::util::{table, Json, Table};
 
 use super::Experiment;
 
-/// PR number stamped into the snapshot (`BENCH_006.json`).
-pub const PR: usize = 6;
+/// PR number stamped into the snapshot (`BENCH_008.json`).
+pub const PR: usize = 8;
 
 /// The backend variants the matrix sweeps. `Sharded4Par` is the same
 /// deployment as `Sharded4` with [`ShardedServer::set_parallel`] on —

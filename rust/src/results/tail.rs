@@ -78,6 +78,18 @@ pub fn tail_requests() -> Vec<ServeRequest> {
         .collect()
 }
 
+/// p50/p95/p99 of a sample buffer (sorted once, read three times) —
+/// shared between this virtual-time table and the wall-clock tail table
+/// `net::loadgen` renders from wire measurements.
+pub fn tail_percentiles(mut samples: Vec<f64>) -> (f64, f64, f64) {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    (
+        percentile_sorted(&samples, 50.0),
+        percentile_sorted(&samples, 95.0),
+        percentile_sorted(&samples, 99.0),
+    )
+}
+
 pub fn compute() -> Vec<TailPoint> {
     let model = MllmConfig::fastvlm_0_6b();
     let mut cfg = ChimeConfig::default();
@@ -101,31 +113,27 @@ pub fn compute() -> Vec<TailPoint> {
             assert_eq!(outcome.responses.len(), REQUESTS, "tail stream must fully drain");
             assert!(outcome.shed.is_empty(), "queue depth 1024 must not shed 48 requests");
 
-            // Sort each metric buffer once; the three percentile reads
-            // per metric then cost O(n) instead of three O(n log n) sorts.
-            let sorted = |xs: Vec<f64>| {
-                let mut xs = xs;
-                xs.sort_by(|a, b| a.total_cmp(b));
-                xs
-            };
-            let ttft = sorted(outcome.responses.iter().map(|r| r.queue_ns + r.ttft_ns).collect());
-            let tpot = sorted(outcome.responses.iter().map(|r| r.tpot_ns()).collect());
-            let latency =
-                sorted(outcome.responses.iter().map(|r| r.total_latency_ns()).collect());
+            let (p50_ttft, p95_ttft, p99_ttft) = tail_percentiles(
+                outcome.responses.iter().map(|r| r.queue_ns + r.ttft_ns).collect(),
+            );
+            let (p50_tpot, p95_tpot, p99_tpot) =
+                tail_percentiles(outcome.responses.iter().map(|r| r.tpot_ns()).collect());
+            let (p50_lat, p95_lat, p99_lat) =
+                tail_percentiles(outcome.responses.iter().map(|r| r.total_latency_ns()).collect());
             let metrics = outcome.metrics;
             out.push(TailPoint {
                 model: model.name.clone(),
                 packages,
                 steal,
-                p50_ttft_ms: percentile_sorted(&ttft, 50.0) / 1e6,
-                p95_ttft_ms: percentile_sorted(&ttft, 95.0) / 1e6,
-                p99_ttft_ms: percentile_sorted(&ttft, 99.0) / 1e6,
-                p50_tpot_ms: percentile_sorted(&tpot, 50.0) / 1e6,
-                p95_tpot_ms: percentile_sorted(&tpot, 95.0) / 1e6,
-                p99_tpot_ms: percentile_sorted(&tpot, 99.0) / 1e6,
-                p50_latency_ms: percentile_sorted(&latency, 50.0) / 1e6,
-                p95_latency_ms: percentile_sorted(&latency, 95.0) / 1e6,
-                p99_latency_ms: percentile_sorted(&latency, 99.0) / 1e6,
+                p50_ttft_ms: p50_ttft / 1e6,
+                p95_ttft_ms: p95_ttft / 1e6,
+                p99_ttft_ms: p99_ttft / 1e6,
+                p50_tpot_ms: p50_tpot / 1e6,
+                p95_tpot_ms: p95_tpot / 1e6,
+                p99_tpot_ms: p99_tpot / 1e6,
+                p50_latency_ms: p50_lat / 1e6,
+                p95_latency_ms: p95_lat / 1e6,
+                p99_latency_ms: p99_lat / 1e6,
                 tokens_per_s: metrics.tokens_per_s(),
                 tokens_per_j: metrics.tokens_per_j(),
                 tokens: metrics.tokens,

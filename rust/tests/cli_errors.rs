@@ -97,7 +97,7 @@ fn misspelled_flag_exits_2_with_suggestion() {
 
 #[test]
 fn misspelled_flag_is_rejected_on_every_subcommand() {
-    for cmd in ["info", "simulate", "serve", "sweep", "results", "parity"] {
+    for cmd in ["info", "simulate", "serve", "loadgen", "sweep", "results", "parity"] {
         let Some(out) = run_chime(&[cmd, "--completely-bogus-flag"]) else {
             return;
         };
@@ -367,6 +367,95 @@ fn cycle_fidelity_simulate_exits_0() {
     assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("\"mode\": \"chime+cycle\""), "{stdout}");
+}
+
+#[test]
+fn malformed_listen_addrs_exit_2() {
+    // The --listen grammar is HOST:PORT; every malformed spelling is a
+    // usage error naming the expected shape, never a bind attempt.
+    for argv in [
+        ["serve", "--listen"].as_slice(), // value-less flag
+        ["serve", "--listen", "not-an-addr"].as_slice(),
+        ["serve", "--listen", "127.0.0.1:notaport"].as_slice(),
+        ["serve", "--listen", "127.0.0.1"].as_slice(), // port missing
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("listen"), "{argv:?}: {err}");
+        assert!(err.contains("HOST:PORT"), "must name the grammar:\n{err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+    // Batch-mode load-shaping flags conflict with the listener, which
+    // takes arrivals from the wire; the message routes to `chime loadgen`.
+    for flag in ["--arrival", "--requests"] {
+        let Some(out) = run_chime(&["serve", "--listen", "127.0.0.1:0", flag, "poisson:4"]) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{flag}; stderr:\n{}", stderr_of(&out));
+        assert!(stderr_of(&out).contains("loadgen"), "{flag}: {}", stderr_of(&out));
+    }
+    // Listener-only flags are rejected in batch mode.
+    let Some(out) = run_chime(&["serve", "--deterministic", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--listen"), "{}", stderr_of(&out));
+    // A flag typo gets the edit-distance suggestion.
+    let Some(out) = run_chime(&["serve", "--listn", "127.0.0.1:0"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("did you mean --listen?"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn malformed_loadgen_target_exits_2() {
+    for argv in [
+        ["loadgen"].as_slice(), // --target is required
+        ["loadgen", "--target"].as_slice(),
+        ["loadgen", "--target", "not-an-addr"].as_slice(),
+        ["loadgen", "--target", "127.0.0.1:notaport"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("target"), "{argv:?}: {err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+    // A flag typo gets the edit-distance suggestion.
+    let Some(out) = run_chime(&["loadgen", "--tagret", "127.0.0.1:80"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("did you mean --target?"), "{}", stderr_of(&out));
+    // A bad timeout is a usage error too.
+    let Some(out) = run_chime(&["loadgen", "--target", "127.0.0.1:80", "--timeout-s", "-5"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("timeout"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn loadgen_dead_target_exits_1_as_runtime_error() {
+    // A well-formed address nobody listens on is a runtime failure
+    // (exit 1), not a usage error: the command line was fine.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let Some(out) = run_chime(&["loadgen", "--target", &addr, "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(1), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("unreachable"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
 }
 
 #[test]

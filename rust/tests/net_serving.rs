@@ -1,0 +1,322 @@
+//! Integration tests for the network serving front end (`chime::net`).
+//!
+//! The headline assertions (ISSUE 8 acceptance criteria):
+//!
+//! * **Deterministic loopback** — a fixed request set driven through
+//!   `serve --listen` + real HTTP sockets yields a `ServeOutcome`
+//!   canonical JSON **bit-identical** to the same requests run
+//!   in-process via `Session::serve`, for the sim and the sharded
+//!   2-package backends. Both sides parse the same decimal offset
+//!   strings and scale by 1e9, so the arrival f64s (and everything
+//!   derived from them) are bitwise equal.
+//! * **SSE replay** — the event stream for one request replays the
+//!   exact `ServeEvent` sequence a hand-driven `ServingSession`
+//!   produces, frame for frame.
+//!
+//! Plus HTTP-layer robustness against hostile/malformed traffic and an
+//! in-process `loadgen` end-to-end run, all against loopback listeners
+//! on ephemeral ports.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use chime::api::{ArrivalProcess, BackendKind, ChimeError, ServeRequest, Session};
+use chime::net::{outcome_to_json, LoadgenConfig, NetServer, ServeOpts};
+use chime::util::Json;
+
+/// (id, max_new_tokens, arrival offset in seconds — kept as the decimal
+/// *string* so the wire body and the in-process request parse the same
+/// spelling). Ids 2 and 3 share an arrival to exercise the
+/// submission-order tiebreak; id 1 is a zero-token inline completion.
+const FIXTURE: &[(u64, usize, &str)] = &[
+    (0, 4, "0"),
+    (1, 0, "0.0005"),
+    (2, 6, "0.001"),
+    (3, 2, "0.001"),
+    (4, 4, "0.002"),
+    (5, 3, "0.0025"),
+];
+
+fn make_session(kind: BackendKind, packages: usize) -> Result<Session, ChimeError> {
+    Session::builder()
+        .model("tiny")
+        .text_tokens(8)
+        .output_tokens(4)
+        .image_size(64)
+        .backend(kind)
+        .packages(packages)
+        .build()
+}
+
+fn spawn(kind: BackendKind, packages: usize, deterministic: bool) -> NetServer {
+    NetServer::spawn(
+        "127.0.0.1:0",
+        move || make_session(kind, packages),
+        ServeOpts { deterministic, ..ServeOpts::default() },
+    )
+    .expect("loopback ephemeral listener must come up")
+}
+
+/// One raw HTTP exchange (Connection: close, read to EOF).
+fn raw_call(addr: SocketAddr, raw: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(raw).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").expect("response must have a header block");
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, body.to_string())
+}
+
+fn call(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!("Content-Length: {}\r\n", b.len()));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    raw_call(addr, req.as_bytes())
+}
+
+fn submit_fixture(addr: SocketAddr) {
+    for (id, tokens, off) in FIXTURE {
+        let body =
+            format!(r#"{{"id": {id}, "max_new_tokens": {tokens}, "arrival_offset_s": {off}}}"#);
+        let (status, reply) = call(addr, "POST", "/v1/submit", Some(&body));
+        assert_eq!(status, 200, "submit {id}: {reply}");
+    }
+}
+
+fn fixture_requests() -> Vec<ServeRequest> {
+    FIXTURE
+        .iter()
+        .map(|&(id, tokens, off)| ServeRequest {
+            id,
+            prompt: vec![],
+            image_seed: id,
+            max_new_tokens: tokens,
+            arrival_ns: off.parse::<f64>().unwrap() * 1e9,
+        })
+        .collect()
+}
+
+/// Read the full SSE stream for a request (terminates at the `done`
+/// frame, after which the server closes the connection).
+fn read_sse(addr: SocketAddr, id: u64) -> Vec<(String, String)> {
+    let (_, body) = call(addr, "GET", &format!("/v1/stream/{id}"), None);
+    let mut frames = Vec::new();
+    let (mut event, mut data) = (None, None);
+    for line in body.lines() {
+        if line.is_empty() {
+            if let (Some(e), Some(d)) = (event.take(), data.take()) {
+                frames.push((e, d));
+            }
+        } else if let Some(v) = line.strip_prefix("event: ") {
+            event = Some(v.to_string());
+        } else if let Some(v) = line.strip_prefix("data: ") {
+            data = Some(v.to_string());
+        }
+    }
+    frames
+}
+
+fn shutdown_and_join(server: NetServer) -> chime::net::ServeSummary {
+    let (status, _) = call(server.addr(), "POST", "/v1/shutdown", None);
+    assert_eq!(status, 200);
+    server.join().expect("engine thread must exit cleanly")
+}
+
+#[test]
+fn deterministic_loopback_matches_in_process_session() {
+    for (kind, packages) in [(BackendKind::Sim, 1), (BackendKind::Sharded, 2)] {
+        let server = spawn(kind, packages, true);
+        let addr = server.addr();
+        submit_fixture(addr);
+        let (status, wire) = call(addr, "POST", "/v1/finish", None);
+        assert_eq!(status, 200, "{wire}");
+
+        // The in-process reference: identical requests, identical
+        // submission order, through the batch entry point.
+        let mut session = make_session(kind, packages).unwrap();
+        let out = session.serve(fixture_requests()).unwrap();
+        let reference = outcome_to_json(&out).pretty();
+        assert_eq!(wire, reference, "{kind:?}/{packages}p wire vs in-process outcome");
+        assert_eq!(out.responses.len(), FIXTURE.len());
+
+        // Finish is idempotent, byte for byte.
+        let (status, again) = call(addr, "POST", "/v1/finish", None);
+        assert_eq!(status, 200);
+        assert_eq!(again, wire);
+        // The session is closed to new work once finished.
+        let (status, reply) = call(addr, "POST", "/v1/submit", Some(r#"{"id": 99}"#));
+        assert_eq!(status, 400, "{reply}");
+        shutdown_and_join(server);
+    }
+}
+
+#[test]
+fn sse_stream_replays_the_hand_driven_event_sequence() {
+    let server = spawn(BackendKind::Sharded, 2, true);
+    let addr = server.addr();
+    submit_fixture(addr);
+    let (status, _) = call(addr, "POST", "/v1/finish", None);
+    assert_eq!(status, 200);
+    let frames = read_sse(addr, 2);
+
+    // Hand-drive the exact same protocol sequence in-process.
+    let mut session = make_session(BackendKind::Sharded, 2).unwrap();
+    let mut serving = session.open_serving().unwrap();
+    let mut events = Vec::new();
+    for req in fixture_requests() {
+        events.extend(serving.submit(req));
+    }
+    events.extend(serving.drain().unwrap());
+    let expected: Vec<(String, String)> = events
+        .iter()
+        .filter(|e| e.id() == 2)
+        .map(|e| (e.kind().to_string(), e.to_json().compact()))
+        .chain(std::iter::once(("done".to_string(), "{}".to_string())))
+        .collect();
+    assert!(expected.len() > 2, "request 2 must have a token stream");
+    assert_eq!(frames, expected, "SSE must replay the hand-driven event sequence exactly");
+    shutdown_and_join(server);
+}
+
+#[test]
+fn http_layer_rejects_malformed_traffic_without_dying() {
+    let server = spawn(BackendKind::Sim, 1, false);
+    let addr = server.addr();
+
+    // Garbage request line.
+    let (status, body) = raw_call(addr, b"TOTAL GARBAGE\r\n\r\n");
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("error"), "{body}");
+    // Unknown route, wrong methods (known routes answer with Allow).
+    assert_eq!(call(addr, "GET", "/v2/nope", None).0, 404);
+    assert_eq!(call(addr, "GET", "/v1/submit", None).0, 405);
+    assert_eq!(call(addr, "DELETE", "/v1/metrics", None).0, 405);
+    assert_eq!(call(addr, "DELETE", "/v1/stream/0", None).0, 405);
+    // Oversized declared body, missing Content-Length.
+    let (status, _) = raw_call(addr, b"POST /v1/submit HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n");
+    assert_eq!(status, 413);
+    let (status, _) = raw_call(addr, b"POST /v1/submit HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 411);
+    // Body-level validation.
+    assert_eq!(call(addr, "POST", "/v1/submit", Some("not json")).0, 400);
+    assert_eq!(call(addr, "POST", "/v1/submit", Some(r#"{"max_new_tokenz": 4}"#)).0, 400);
+    assert_eq!(call(addr, "GET", "/v1/stream/xyz", None).0, 400);
+    assert_eq!(call(addr, "GET", "/v1/stream/42", None).0, 404);
+    // A non-finite arrival offset is shed by the engine, not a crash.
+    let (status, reply) =
+        call(addr, "POST", "/v1/submit", Some(r#"{"id": 7, "arrival_offset_s": 1e999}"#));
+    assert_eq!(status, 200, "{reply}");
+    assert!(reply.contains("shed"), "{reply}");
+
+    // A real request whose SSE client disconnects mid-stream: the
+    // server must neither panic nor leak the session.
+    let (status, reply) =
+        call(addr, "POST", "/v1/submit", Some(r#"{"id": 0, "max_new_tokens": 6}"#));
+    assert_eq!(status, 200, "{reply}");
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.write_all(b"GET /v1/stream/0 HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut first = [0u8; 16];
+        s.read_exact(&mut first).unwrap(); // the stream is live...
+    } // ...and the client hangs up here.
+
+    // The live engine keeps ticking: request 0 completes and the server
+    // still answers.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = call(addr, "GET", "/v1/metrics", None);
+        assert_eq!(status, 200);
+        let json = Json::parse(&body).unwrap();
+        if json.get("counts").get("completed").as_i64() == Some(1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "request 0 never completed: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (status, _) = call(addr, "POST", "/v1/finish", None);
+    assert_eq!(status, 200);
+    shutdown_and_join(server);
+}
+
+#[test]
+fn metrics_reports_server_config_and_counts() {
+    let server = spawn(BackendKind::Sharded, 2, true);
+    let addr = server.addr();
+    let (status, body) = call(addr, "GET", "/v1/metrics", None);
+    assert_eq!(status, 200);
+    let json = Json::parse(&body).unwrap();
+    let info = json.get("server");
+    assert_eq!(info.get("protocol").as_str(), Some("chime-serve/1"));
+    assert_eq!(info.get("model").as_str(), Some("tiny"));
+    assert_eq!(info.get("deterministic").as_bool(), Some(true));
+    for key in ["backend", "memory", "topology"] {
+        assert!(info.get(key).as_str().is_some(), "missing server.{key} in {body}");
+    }
+    assert_eq!(json.get("state").as_str(), Some("serving"));
+    assert!(json.get("outcome").is_null());
+
+    let (status, _) = call(
+        addr,
+        "POST",
+        "/v1/submit",
+        Some(r#"{"id": 0, "max_new_tokens": 2, "arrival_offset_s": 0}"#),
+    );
+    assert_eq!(status, 200);
+    let (status, _) = call(addr, "POST", "/v1/finish", None);
+    assert_eq!(status, 200);
+    let (_, body) = call(addr, "GET", "/v1/metrics", None);
+    let json = Json::parse(&body).unwrap();
+    assert_eq!(json.get("state").as_str(), Some("finished"));
+    assert_eq!(json.get("counts").get("submitted").as_i64(), Some(1));
+    assert_eq!(json.get("counts").get("completed").as_i64(), Some(1));
+    assert_eq!(json.get("outcome").get("metrics").get("completed").as_i64(), Some(1));
+    let summary = shutdown_and_join(server);
+    assert_eq!(summary.submitted, 1);
+    assert_eq!(summary.completed, 1);
+}
+
+#[test]
+fn loadgen_drives_a_live_server_end_to_end() {
+    let server = spawn(BackendKind::Sim, 1, false);
+    let cfg = LoadgenConfig {
+        target: server.addr().to_string(),
+        requests: 4,
+        arrival: ArrivalProcess::Poisson { rate_per_s: 50.0 },
+        seed: 7,
+        max_new_tokens: 3,
+        prompt_tokens: 4,
+        shutdown: true,
+        timeout: Duration::from_secs(30),
+    };
+    let report = chime::net::loadgen::run(&cfg).unwrap();
+    assert!(report.errors.is_empty(), "{:?}", report.errors);
+    assert_eq!(report.samples.len(), 4);
+    assert!(report.samples.iter().all(|s| s.tokens == 3), "{:?}", report.samples);
+    assert!(
+        report.samples.iter().all(|s| s.ttft_ns.is_some() && s.latency_ns > 0.0),
+        "{:?}",
+        report.samples
+    );
+    for needle in ["TTFT", "TPOT", "latency", "p99 (ms)", "achieved: 4 requests"] {
+        assert!(report.table.contains(needle), "missing {needle:?} in:\n{}", report.table);
+    }
+    let outcome = report.outcome.expect("shutdown mode fetches the outcome");
+    assert_eq!(outcome.get("metrics").get("completed").as_i64(), Some(4));
+    // The loadgen's shutdown POST stops the listener; join reports what
+    // it served.
+    let summary = server.join().unwrap();
+    assert_eq!(summary.submitted, 4);
+    assert_eq!(summary.completed, 4);
+    assert_eq!(summary.tokens, 12);
+}

@@ -1028,6 +1028,39 @@ fn prop_cycle_fidelity_bounds_first_order_with_identical_accounting() {
 }
 
 #[test]
+fn prop_arrival_spec_round_trips() {
+    // `ArrivalProcess::spec()` is the canonical spelling: parsing it back
+    // must reproduce the exact process (bit-exact Poisson rate — Rust's
+    // f64 Display emits the shortest round-trippable form — and the
+    // verbatim trace path), across rates spanning ten orders of magnitude
+    // and hostile path charsets (colons, dots, slashes).
+    use chime::coordinator::ArrivalProcess;
+
+    check("arrival spec round-trip", |prng| {
+        let p = match prng.range(0, 3) {
+            0 => ArrivalProcess::Burst,
+            1 => {
+                let rate_per_s = prng.uniform(0.1, 10.0) * 10f64.powf(prng.uniform(-3.0, 7.0));
+                ArrivalProcess::Poisson { rate_per_s }
+            }
+            _ => {
+                let charset = ['a', 'z', '0', '_', '-', '.', '/', ':'];
+                let len = prng.range(1, 24);
+                let path: String = (0..len).map(|_| *prng.choice(&charset)).collect();
+                ArrivalProcess::Trace { path }
+            }
+        };
+        let spec = p.spec();
+        let back = ArrivalProcess::parse(&spec)
+            .map_err(|e| format!("canonical spec {spec:?} failed to parse: {e}"))?;
+        if back != p {
+            return Err(format!("round-trip mismatch: {p:?} -> {spec:?} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_prefill_cost_exceeds_single_decode_step() {
     check("prefill > decode step", |prng| {
         let llm = random_llm(prng);
