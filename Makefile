@@ -10,14 +10,16 @@
 #   make tail        streaming-serve smoke (poisson arrivals + stealing, 2 fidelities)
 #   make fabric      routed-fabric grid: steals + per-link peaks, pkgs x topologies
 #   make serve-smoke HTTP/SSE listener + loadgen round trip, 2 fidelities
+#   make trace-smoke record + sanity-check Chrome traces, 2 fidelities
 #   make bench-snapshot  write the simulator perf snapshot to BENCH_$(PR).json
+#   make hotpath-snapshot  write the serving hot-path profile to HOTPATH_$(PR).json
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
 
-# PR number stamped into the bench snapshot filename (results::perf::PR).
-PR := 008
+# PR number stamped into the snapshot filenames (results::perf::PR).
+PR := 009
 
-.PHONY: artifacts build test pytest results golden memcheck tail fabric serve-smoke bench-snapshot api-smoke docs
+.PHONY: artifacts build test pytest results golden memcheck tail fabric serve-smoke trace-smoke bench-snapshot hotpath-snapshot api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -83,12 +85,44 @@ serve-smoke: build
 		wait $$server; \
 	done
 
+# Observability smoke (DESIGN.md §14): record a Chrome trace from the
+# single-inference and streaming-serve paths at both memory fidelities
+# and require a well-formed traceEvents document with fabric-leg
+# instants. The byte-determinism *gate* is
+# traces_are_deterministic_and_sessions_start_fresh (library) and
+# serve_trace_out_writes_a_deterministic_chrome_trace (net) in
+# `make test`.
+trace-smoke: build
+	@set -e; cd rust; \
+	for mem in first-order cycle; do \
+		trace=target/trace_smoke_$$mem.json; rm -f $$trace; \
+		./target/release/chime simulate --model tiny --text 8 --out 4 \
+			--memory $$mem --trace-out $$trace; \
+		grep -q '"traceEvents"' $$trace; \
+		grep -q '"decode"' $$trace; \
+		rm -f $$trace; \
+		./target/release/chime serve --arrival poisson:8 --steal on \
+			--packages 4 --topology ring --requests 8 --tokens 16 \
+			--model tiny --text 8 --out 4 --memory $$mem --trace-out $$trace; \
+		grep -q '"traceEvents"' $$trace; \
+		grep -q '"fabric_leg"' $$trace; \
+		rm -f $$trace; \
+	done
+
 # Simulator wall-clock benchmark (DESIGN.md §11): events/s and simulated
 # tok/s per backend × memory fidelity over the Table II zoo, written as
 # canonical JSON. Wall numbers are machine-dependent — the snapshot is a
 # per-PR trajectory (EXPERIMENTS.md), not a golden file.
 bench-snapshot: build
 	cd rust && cargo run --release -- bench --snapshot ../BENCH_$(PR).json
+
+# Serving hot-path wall-clock profile (ROADMAP item 4, DESIGN.md §14):
+# wall time per instrumented span class (tick / submit / steal_pass)
+# over the sharded serve loop at both memory fidelities, written as
+# canonical JSON. Like the bench snapshot, a per-PR trajectory —
+# machine-dependent wall numbers, not a golden file.
+hotpath-snapshot: build
+	cd rust && cargo run --release -- bench --quick --profile ../HOTPATH_$(PR).json
 
 # Every example is a thin shell over chime::api::Session; running them
 # end to end smoke-tests the whole public API surface.

@@ -159,6 +159,23 @@ pub trait Backend {
     fn memory(&self) -> Option<MemoryView<'_>> {
         None
     }
+
+    /// Enable/disable span tracing for subsequent runs (DESIGN.md §14).
+    /// Provided as a no-op: backends without an instrumented engine
+    /// (functional runtime, analytic baselines) ignore it and
+    /// [`Backend::take_trace`] stays `None`.
+    fn set_tracing(&mut self, _on: bool) {}
+
+    /// Enable tracing with wall-clock self-profiling on top
+    /// (`chime bench --profile`). Provided as a no-op, like
+    /// [`Backend::set_tracing`].
+    fn set_profiling(&mut self, _on: bool) {}
+
+    /// Detach the recorded trace, if tracing was enabled and this backend
+    /// records one (tracing turns off on take).
+    fn take_trace(&mut self) -> Option<crate::obs::Tracer> {
+        None
+    }
 }
 
 /// Lift a [`BaselineStats`] (Jetson/FACIL analytic models) into the
@@ -297,6 +314,18 @@ impl Backend for SimulatedServer {
     fn memory(&self) -> Option<MemoryView<'_>> {
         self.last_infer_memory().map(|(dram, rram)| MemoryView { dram, rram })
     }
+
+    fn set_tracing(&mut self, on: bool) {
+        SimulatedServer::set_tracing(self, on);
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        SimulatedServer::set_profiling(self, on);
+    }
+
+    fn take_trace(&mut self) -> Option<crate::obs::Tracer> {
+        SimulatedServer::take_trace(self)
+    }
 }
 
 impl Backend for ShardedServer {
@@ -334,6 +363,18 @@ impl Backend for ShardedServer {
 
     fn memory(&self) -> Option<MemoryView<'_>> {
         self.last_infer_memory().map(|(dram, rram)| MemoryView { dram, rram })
+    }
+
+    fn set_tracing(&mut self, on: bool) {
+        ShardedServer::set_tracing(self, on);
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        ShardedServer::set_profiling(self, on);
+    }
+
+    fn take_trace(&mut self) -> Option<crate::obs::Tracer> {
+        ShardedServer::take_trace(self)
     }
 }
 
@@ -422,6 +463,18 @@ impl Backend for DramOnlyBackend {
 
     fn memory(&self) -> Option<MemoryView<'_>> {
         Backend::memory(&self.inner)
+    }
+
+    fn set_tracing(&mut self, on: bool) {
+        Backend::set_tracing(&mut self.inner, on);
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        Backend::set_profiling(&mut self.inner, on);
+    }
+
+    fn take_trace(&mut self) -> Option<crate::obs::Tracer> {
+        Backend::take_trace(&mut self.inner)
     }
 }
 

@@ -72,6 +72,21 @@ impl SimulatedServer {
     pub fn last_infer_memory(&self) -> Option<(&DramState, &RramState)> {
         self.inner.last_infer_memory()
     }
+
+    /// Enable/disable span tracing (forwarded to the sharded core).
+    pub fn set_tracing(&mut self, on: bool) {
+        self.inner.set_tracing(on);
+    }
+
+    /// Enable tracing with wall-clock self-profiling (forwarded).
+    pub fn set_profiling(&mut self, on: bool) {
+        self.inner.set_profiling(on);
+    }
+
+    /// Detach the recorded trace (forwarded to the sharded core).
+    pub fn take_trace(&mut self) -> Option<crate::obs::Tracer> {
+        self.inner.take_trace()
+    }
 }
 
 /// One-timebase queueing ledger for a sequential (single-stream) server.

@@ -1,4 +1,14 @@
 //! Serving metrics registry: latency distributions, throughput, energy.
+//!
+//! **Zero-denominator policy:** every rate/mean helper
+//! ([`ServingMetrics::tokens_per_s`], [`ServingMetrics::requests_per_s`],
+//! [`ServingMetrics::mean_queue_ns`],
+//! [`ServingMetrics::mean_steal_delay_ns`],
+//! [`ServingMetrics::tokens_per_j`]) returns `0.0` — never `NaN` or
+//! `inf` — when its denominator is empty or zero. Consumers (the
+//! canonical serve-outcome JSON, the Prometheus exposition) rely on
+//! every value being finite; `rate_helpers_are_zero_not_nan_on_empty`
+//! locks the policy per helper.
 
 use crate::util::stats::{percentile, Summary};
 
@@ -86,7 +96,8 @@ impl ServingMetrics {
         self.steal_delay_ns += delay_ns;
     }
 
-    /// Mean routed delivery latency per steal (ns); 0 with no steals.
+    /// Mean routed delivery latency per steal (ns); `0.0` with no steals
+    /// (zero-denominator policy, see the module doc).
     pub fn mean_steal_delay_ns(&self) -> f64 {
         if self.steals == 0 {
             return 0.0;
@@ -103,7 +114,8 @@ impl ServingMetrics {
         (self.last_completion_ns - self.first_arrival_ns).max(0.0)
     }
 
-    /// System throughput over the covered span (tokens/s).
+    /// System throughput over the covered span (tokens/s); `0.0` when no
+    /// request completed, so the span is empty (zero-denominator policy).
     pub fn tokens_per_s(&self) -> f64 {
         if self.span_ns() <= 0.0 {
             return 0.0;
@@ -111,7 +123,8 @@ impl ServingMetrics {
         self.tokens as f64 / (self.span_ns() / 1e9)
     }
 
-    /// Requests/s over the covered span.
+    /// Requests/s over the covered span; `0.0` on an empty span
+    /// (zero-denominator policy, see the module doc).
     pub fn requests_per_s(&self) -> f64 {
         if self.span_ns() <= 0.0 {
             return 0.0;
@@ -127,6 +140,8 @@ impl ServingMetrics {
         percentile(&mut self.ttft_ns, p)
     }
 
+    /// Mean admission-queue wait (ns); `0.0` with no completions
+    /// (zero-denominator policy, see the module doc).
     pub fn mean_queue_ns(&self) -> f64 {
         if self.queue_ns.is_empty() {
             return 0.0;
@@ -134,6 +149,9 @@ impl ServingMetrics {
         self.queue_ns.iter().sum::<f64>() / self.queue_ns.len() as f64
     }
 
+    /// Energy efficiency (tokens/J); `0.0` when no energy was metered —
+    /// zero, not `inf`, even if tokens were somehow counted without
+    /// energy (zero-denominator policy, see the module doc).
     pub fn tokens_per_j(&self) -> f64 {
         if self.energy_j <= 0.0 {
             return 0.0;
@@ -200,6 +218,29 @@ mod tests {
         assert_eq!(m.stolen_bytes, 4000);
         assert_eq!(m.steal_delay_ns, 500.0);
         assert_eq!(m.mean_steal_delay_ns(), 250.0);
+    }
+
+    #[test]
+    fn rate_helpers_are_zero_not_nan_on_empty() {
+        // One assertion per rate/mean helper: a fresh registry (every
+        // denominator zero) yields exactly 0.0 — the finite-by-policy
+        // contract the Prometheus exposition and outcome JSON rely on.
+        let m = ServingMetrics::new();
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert_eq!(m.requests_per_s(), 0.0);
+        assert_eq!(m.mean_queue_ns(), 0.0);
+        assert_eq!(m.mean_steal_delay_ns(), 0.0);
+        assert_eq!(m.tokens_per_j(), 0.0);
+        // Default-built (not ::new) has a 0-width span, not a negative
+        // one — the guards hold there too.
+        let d = ServingMetrics::default();
+        assert_eq!(d.tokens_per_s(), 0.0);
+        assert_eq!(d.requests_per_s(), 0.0);
+        // Tokens counted without metered energy must not divide by zero.
+        let mut e = ServingMetrics::new();
+        e.tokens = 5;
+        assert_eq!(e.tokens_per_j(), 0.0);
+        assert!(e.tokens_per_s().is_finite());
     }
 
     #[test]

@@ -41,6 +41,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::config::{ChimeConfig, ChimeHardware, MllmConfig, TopologyKind, WorkloadConfig};
 use crate::mapping::planner::DecodeTemplate;
 use crate::mapping::Plan;
+use crate::obs::{self, MemStalls, Tracer, Track};
 use crate::sim::fabric::{Delivery, Endpoint, Fabric, Link, LinkState};
 use crate::sim::memory::{DramState, RramState};
 use crate::sim::{InferenceStats, PhaseStats, SimEngine};
@@ -224,7 +225,13 @@ impl PackageState {
     /// the virtual clock by the pipelined tick span, and retire finished
     /// requests. Returns the tick's event stream (`FirstToken`/`Token`
     /// per slot, `Completed` per retirement).
-    fn step(&mut self) -> Vec<ServeEvent> {
+    ///
+    /// With a tracer attached the tick additionally records one
+    /// `package_step` span and the fabric-leg / memory-stall deltas it
+    /// caused (DESIGN.md §14) — a read-only side channel: snapshots are
+    /// taken before and after the exact same pricing code, so a traced
+    /// tick prices identically to an untraced one.
+    fn step(&mut self, pkg: usize, tracer: Option<&mut Tracer>) -> Vec<ServeEvent> {
         // An idle package fast-forwards its clock to the earliest arrival.
         if self.batcher.active() == 0 {
             if let Some(t) = self.queue.peek_arrival_ns() {
@@ -261,6 +268,12 @@ impl PackageState {
         if self.batcher.active() == 0 {
             return Vec::new();
         }
+        let span_start_ns = self.clock_ns;
+        let fabric_before =
+            if tracer.is_some() { obs::link_snapshot(&self.engine.fabric) } else { Vec::new() };
+        let stalls_before =
+            if tracer.is_some() { MemStalls::of(&self.engine) } else { MemStalls::default() };
+        let mut step_energy_j = 0.0;
 
         // Price each slot's step on this package's shared hardware state.
         let slot_ids: Vec<usize> = self.batcher.slots.iter().map(|s| s.request_idx).collect();
@@ -278,12 +291,48 @@ impl PackageState {
                 self.engine.run_kernels(&self.template.kernels)
             };
             a.energy_j += stats.energy.total_joules();
+            step_energy_j += stats.energy.total_joules();
             costs.push((stats.dram_busy_ns, stats.rram_busy_ns + stats.ucie_ns));
         }
 
         // One pipelined tick across this package's batch.
         let (plan_tick, finished) = self.batcher.tick(&costs);
         self.clock_ns += plan_tick.pipelined_ns;
+
+        if let Some(tr) = tracer {
+            tr.span(
+                pkg,
+                Track::Coordinator,
+                "package_step",
+                span_start_ns,
+                self.clock_ns,
+                vec![
+                    ("slots", (slot_ids.len() as f64).into()),
+                    ("energy_j", step_energy_j.into()),
+                ],
+            );
+            // The engine's fabric is package-local (`Local { package: 0 }`):
+            // remap its legs onto this package's global index.
+            for (link, bytes, transfers) in obs::link_deltas(&self.engine.fabric, &fabric_before) {
+                let global = match link {
+                    Link::Local { .. } => Link::Local { package: pkg },
+                    inter => inter,
+                };
+                tr.instant(
+                    pkg,
+                    Track::Fabric,
+                    "fabric_leg",
+                    self.clock_ns,
+                    vec![
+                        ("link", obs::link_label(&global).into()),
+                        ("bytes", (bytes as f64).into()),
+                        ("transfers", (transfers as f64).into()),
+                    ],
+                );
+            }
+            let stall_delta = MemStalls::of(&self.engine).minus(&stalls_before);
+            obs::trace_stalls(tr, pkg, self.clock_ns, &stall_delta);
+        }
 
         let mut events = Vec::with_capacity(slot_ids.len() + finished.len());
         for &idx in &slot_ids {
@@ -415,6 +464,12 @@ pub struct ShardedServer {
     /// Engine state of the most recent `run_inference_with` call, kept so
     /// callers can inspect KV residency / endurance after an inference.
     last_infer: Option<SimEngine>,
+    /// Span/event recorder (DESIGN.md §14). `None` (the default) is the
+    /// zero-overhead path: every instrumented site is gated on this
+    /// option and never snapshots, allocates, or reads a clock. Enabling
+    /// it never changes a simulated number — the recorder is a read-only
+    /// side channel (locked by `tracing_is_a_bitwise_noop_on_outcomes`).
+    tracer: Option<Tracer>,
 }
 
 impl ShardedServer {
@@ -489,6 +544,7 @@ impl ShardedServer {
             cfg: cfg.clone(),
             dram_only,
             last_infer: None,
+            tracer: None,
         }
     }
 
@@ -526,6 +582,38 @@ impl ShardedServer {
         self.parallel
     }
 
+    /// Enable/disable span tracing for subsequent runs (`--trace-out`).
+    /// Off by default; while on, serving sessions fall back from the
+    /// parallel to the (bit-identical) sequential drain so the record
+    /// stream is deterministic.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.tracer = if on { Some(Tracer::new()) } else { None };
+    }
+
+    /// Enable tracing with wall-clock self-profiling on top
+    /// (`chime bench --profile`): per-span-class wall time aggregates
+    /// beside the virtual-time records. Wall times never enter the trace
+    /// export, so traces stay deterministic.
+    pub fn set_profiling(&mut self, on: bool) {
+        self.tracer = if on { Some(Tracer::with_profiling()) } else { None };
+    }
+
+    /// Whether a tracer is attached.
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// The tracer, for mid-run inspection (profile aggregates).
+    pub fn trace(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Detach and return the recorded trace (tracing turns off). `None`
+    /// when tracing was never enabled.
+    pub fn take_trace(&mut self) -> Option<Tracer> {
+        self.tracer.take()
+    }
+
     /// The model this deployment serves.
     pub fn model(&self) -> &MllmConfig {
         &self.model
@@ -555,7 +643,50 @@ impl ShardedServer {
             let engine = SimEngine::new(&self.cfg.hardware, &plan);
             (plan, engine)
         };
+        let tracing = self.tracer.is_some();
+        let fabric_before =
+            if tracing { obs::link_snapshot(&engine.fabric) } else { Vec::new() };
+        let stalls_before = if tracing { MemStalls::of(&engine) } else { MemStalls::default() };
         let stats = engine.run_inference(&plan);
+        if let Some(tr) = self.tracer.as_mut() {
+            // Phase spans laid end to end on package 0's coordinator
+            // track: encode, prefill, then the whole decode loop.
+            let mut cursor = 0.0;
+            for (name, phase) in
+                [("encode", &stats.encode), ("prefill", &stats.prefill), ("decode", &stats.decode)]
+            {
+                tr.span(
+                    0,
+                    Track::Coordinator,
+                    name,
+                    cursor,
+                    cursor + phase.time_ns,
+                    vec![
+                        ("kernels", (phase.kernels as f64).into()),
+                        ("energy_j", phase.energy.total_joules().into()),
+                        ("dram_busy_ns", phase.dram_busy_ns.into()),
+                        ("rram_busy_ns", phase.rram_busy_ns.into()),
+                        ("ucie_ns", phase.ucie_ns.into()),
+                    ],
+                );
+                cursor += phase.time_ns;
+            }
+            for (link, bytes, transfers) in obs::link_deltas(&engine.fabric, &fabric_before) {
+                tr.instant(
+                    0,
+                    Track::Fabric,
+                    "fabric_leg",
+                    cursor,
+                    vec![
+                        ("link", obs::link_label(&link).into()),
+                        ("bytes", (bytes as f64).into()),
+                        ("transfers", (transfers as f64).into()),
+                    ],
+                );
+            }
+            let stall_delta = MemStalls::of(&engine).minus(&stalls_before);
+            obs::trace_stalls(tr, 0, cursor, &stall_delta);
+        }
         self.last_infer = Some(engine);
         stats
     }
@@ -605,6 +736,29 @@ impl ShardedServer {
             merged.entry(*link).or_default().merge(state);
         }
         merged
+    }
+
+    /// Live engine telemetry for export (DESIGN.md §14): the merged
+    /// per-link fabric counters flattened onto canonical labels, plus the
+    /// memory stall-cause totals summed over the package engines (all
+    /// zero at first-order fidelity). Read-only — safe to call mid-run.
+    pub fn telemetry(&self) -> obs::EngineTelemetry {
+        let links = self
+            .fabric_links()
+            .iter()
+            .map(|(link, s)| obs::LinkTelemetry {
+                link: obs::link_label(link),
+                bytes: s.bytes,
+                transfers: s.transfers,
+                busy_ns: s.busy_ns,
+                peak_gbps: s.peak_gbps(),
+            })
+            .collect();
+        let mut stalls = MemStalls::default();
+        for p in &self.packages {
+            stalls.accumulate(&MemStalls::of(&p.engine));
+        }
+        obs::EngineTelemetry { links, stalls }
     }
 
     /// Bytes one steal moves across the fabric: fixed control metadata,
@@ -663,6 +817,12 @@ impl ShardedServer {
         }
         self.steal_fabric.reset();
         self.rr_next = 0;
+        // A fresh session records a fresh trace (wall-clock profile
+        // aggregates carry across sessions — `chime bench --profile`
+        // measures many serve calls into one baseline).
+        if let Some(t) = &self.tracer {
+            self.tracer = Some(t.fresh());
+        }
         let index = EventIndex::new(&self.packages);
         ShardedSession {
             srv: self,
@@ -690,6 +850,17 @@ impl ShardedServer {
             session.submit(r);
         }
         session.finish()
+    }
+}
+
+/// One `Track::Serving` instant per protocol event — the trace-side
+/// mirror of the event stream (`prop_trace_spans_are_well_nested_and_conserving`
+/// counts them one to one). `Shed` events carry a non-finite arrival and
+/// no timestamp; their instants land at `fallback_ns`.
+fn trace_serve_events(tracer: &mut Tracer, events: &[ServeEvent], fallback_ns: f64) {
+    for ev in events {
+        let ts = ev.time_ns().filter(|t| t.is_finite()).unwrap_or(fallback_ns);
+        tracer.instant(0, Track::Serving, ev.kind(), ts, vec![("id", (ev.id() as f64).into())]);
     }
 }
 
@@ -722,6 +893,7 @@ impl ShardedSession<'_> {
     /// Panics on a duplicate request id — ids key batch slots, and a
     /// collision would corrupt accounting mid-flight.
     pub fn submit(&mut self, req: ServeRequest) -> Vec<ServeEvent> {
+        let wall = self.srv.tracer.as_ref().and_then(|t| t.wall_start());
         let req = match super::streaming::guard_submission(
             &mut self.seen,
             &mut self.metrics,
@@ -729,10 +901,19 @@ impl ShardedSession<'_> {
             req,
         ) {
             Ok(req) => req,
-            Err(events) => return events,
+            Err(events) => {
+                if let Some(tr) = self.srv.tracer.as_mut() {
+                    trace_serve_events(tr, &events, 0.0);
+                    tr.wall_end("submit", wall);
+                }
+                return events;
+            }
         };
         self.pending.push(req, self.seq);
         self.seq += 1;
+        if let Some(tr) = self.srv.tracer.as_mut() {
+            tr.wall_end("submit", wall);
+        }
         Vec::new()
     }
 
@@ -740,6 +921,7 @@ impl ShardedSession<'_> {
     /// arrival and the earliest package tick — and return the events it
     /// produced. An empty vector means the session is idle (drained).
     pub fn tick(&mut self) -> Vec<ServeEvent> {
+        let wall = self.srv.tracer.as_ref().and_then(|t| t.wall_start());
         // The two candidate events: the next arrival, and the package
         // whose next tick starts earliest in virtual time (indexed; same
         // lowest-index tie-break as the legacy linear scan).
@@ -759,7 +941,9 @@ impl ShardedSession<'_> {
             events = self.process_arrival(req);
         } else {
             now_ns = t_pkg;
-            events = self.srv.packages[who].step();
+            // Disjoint field borrows: the stepping package and the tracer.
+            let ShardedServer { packages, tracer, .. } = &mut *self.srv;
+            events = packages[who].step(who, tracer.as_mut());
             self.index.refresh(who, &self.srv.packages);
             for ev in &events {
                 if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
@@ -770,6 +954,10 @@ impl ShardedSession<'_> {
         }
         if self.srv.steal {
             events.extend(self.steal_pass(now_ns));
+        }
+        if let Some(tr) = self.srv.tracer.as_mut() {
+            trace_serve_events(tr, &events, now_ns);
+            tr.wall_end("tick", wall);
         }
         events
     }
@@ -796,7 +984,14 @@ impl ShardedSession<'_> {
     /// completion streams are merged back in sequential event-loop order
     /// — bit-identical to the sequential drain.
     pub fn finish(mut self) -> ServeOutcome {
-        if self.srv.parallel && !self.srv.steal && self.srv.packages.len() > 1 {
+        // Tracing forces the sequential drain: the two are bit-identical
+        // on outcomes, but only the sequential loop threads the tracer
+        // through every step in deterministic order.
+        if self.srv.parallel
+            && !self.srv.steal
+            && self.srv.tracer.is_none()
+            && self.srv.packages.len() > 1
+        {
             self.drain_parallel();
         }
         self.drain();
@@ -830,7 +1025,8 @@ impl ShardedSession<'_> {
                 .srv
                 .packages
                 .iter_mut()
-                .map(|p| {
+                .enumerate()
+                .map(|(pkg, p)| {
                     scope.spawn(move || {
                         let mut comps = Vec::new();
                         loop {
@@ -838,7 +1034,7 @@ impl ShardedSession<'_> {
                             if !tick_ns.is_finite() {
                                 return comps;
                             }
-                            for ev in p.step() {
+                            for ev in p.step(pkg, None) {
                                 if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
                                     comps.push((tick_ns, arrival_ns, response));
                                 }
@@ -933,6 +1129,7 @@ impl ShardedSession<'_> {
     /// what stops one idle package from draining every victim queue at a
     /// single instant.
     fn steal_pass(&mut self, now_ns: f64) -> Vec<ServeEvent> {
+        let wall = self.srv.tracer.as_ref().and_then(|t| t.wall_start());
         let mut events = Vec::new();
         let mut stole = vec![false; self.srv.packages.len()];
         loop {
@@ -967,6 +1164,11 @@ impl ShardedSession<'_> {
             // topologies charge the delivery latency (the thief cannot
             // start the request before the payload lands) and per-hop
             // UCIe link energy.
+            let fabric_before = if self.srv.tracer.is_some() {
+                obs::link_snapshot(&self.srv.steal_fabric)
+            } else {
+                Vec::new()
+            };
             let delivery = if self.srv.steal_fabric.kind() == TopologyKind::PointToPoint {
                 Delivery::free()
             } else {
@@ -977,6 +1179,24 @@ impl ShardedSession<'_> {
                     bytes,
                 )
             };
+            if let Some(tr) = self.srv.tracer.as_mut() {
+                // Steal-fabric links already carry global package indices.
+                for (link, leg_bytes, transfers) in
+                    obs::link_deltas(&self.srv.steal_fabric, &fabric_before)
+                {
+                    tr.instant(
+                        thief,
+                        Track::Fabric,
+                        "fabric_leg",
+                        now_ns,
+                        vec![
+                            ("link", obs::link_label(&link).into()),
+                            ("bytes", (leg_bytes as f64).into()),
+                            ("transfers", (transfers as f64).into()),
+                        ],
+                    );
+                }
+            }
             self.srv.packages[thief].receive_stolen(req, now_ns + delivery.delivery_ns);
             stole[thief] = true;
             self.metrics.record_steal(bytes, delivery.delivery_ns);
@@ -990,6 +1210,9 @@ impl ShardedSession<'_> {
                 bytes,
                 time_ns: now_ns,
             });
+        }
+        if let Some(tr) = self.srv.tracer.as_mut() {
+            tr.wall_end("steal_pass", wall);
         }
         events
     }
@@ -1022,6 +1245,10 @@ impl super::streaming::ServeProtocol for ShardedSession<'_> {
 
     fn finish(&mut self) -> ServeOutcome {
         self.take_outcome()
+    }
+
+    fn telemetry(&self) -> Option<obs::EngineTelemetry> {
+        Some(self.srv.telemetry())
     }
 }
 
@@ -1706,5 +1933,183 @@ mod tests {
         let solo =
             ShardedServer::new(&model, &cfg, BatchPolicy::default(), 1, RoutePolicy::RoundRobin);
         assert_eq!(budget, solo.kv_budget_bytes_per_package());
+    }
+
+    #[test]
+    fn tracing_is_a_bitwise_noop_on_outcomes() {
+        // The load-bearing invariant of the obs subsystem: attaching a
+        // tracer must not move a single bit of any simulated number —
+        // instrumentation is a read-only side channel, not a behavioral
+        // fork. Exercised with stealing on (the most coupled path).
+        let (model, mut cfg) = tiny_cfg();
+        cfg.hardware.topology.kind = TopologyKind::Ring;
+        let skew: Vec<usize> = (0..12).map(|i| if i % 2 == 0 { 32 } else { 1 }).collect();
+        let run = |traced: bool| {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+                3,
+                RoutePolicy::RoundRobin,
+            );
+            srv.set_work_stealing(true);
+            srv.set_tracing(traced);
+            let out = srv.serve(burst(&skew));
+            let trace = srv.take_trace();
+            assert_eq!(trace.is_some(), traced);
+            if traced {
+                assert!(!trace.unwrap().is_empty(), "a traced drain must record spans");
+            }
+            out
+        };
+        let (off, on) = (run(false), run(true));
+        assert_eq!(off.responses.len(), on.responses.len());
+        for (a, b) in off.responses.iter().zip(&on.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits());
+            assert_eq!(a.ttft_ns.to_bits(), b.ttft_ns.to_bits());
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+        assert_eq!(off.metrics.energy_j.to_bits(), on.metrics.energy_j.to_bits());
+        assert_eq!(off.metrics.span_ns().to_bits(), on.metrics.span_ns().to_bits());
+    }
+
+    #[test]
+    fn traced_fabric_legs_conserve_the_link_byte_counters() {
+        // Σ `fabric_leg` bytes in the trace, grouped by link label, must
+        // equal the merged per-link byte counters exactly — the trace is
+        // an event-level decomposition of the same traffic.
+        let (model, mut cfg) = tiny_cfg();
+        cfg.hardware.topology.kind = TopologyKind::Ring;
+        let skew: Vec<usize> = (0..16).map(|i| if i % 2 == 0 { 64 } else { 1 }).collect();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+            4,
+            RoutePolicy::RoundRobin,
+        );
+        srv.set_work_stealing(true);
+        srv.set_tracing(true);
+        let out = srv.serve(burst(&skew));
+        assert!(out.metrics.steals > 0, "the skewed drain must steal");
+        let trace = srv.take_trace().expect("tracing was on");
+        let mut traced: BTreeMap<String, u64> = BTreeMap::new();
+        for r in trace.records() {
+            if r.name != "fabric_leg" {
+                continue;
+            }
+            let link = r
+                .args
+                .iter()
+                .find(|(k, _)| *k == "link")
+                .and_then(|(_, v)| v.as_str())
+                .expect("fabric_leg instants carry a link label")
+                .to_string();
+            let bytes = r
+                .args
+                .iter()
+                .find(|(k, _)| *k == "bytes")
+                .and_then(|(_, v)| v.as_f64())
+                .expect("fabric_leg instants carry a byte count") as u64;
+            *traced.entry(link).or_default() += bytes;
+        }
+        let counters: BTreeMap<String, u64> = srv
+            .fabric_links()
+            .iter()
+            .filter(|(_, s)| s.bytes > 0)
+            .map(|(l, s)| (crate::obs::link_label(l), s.bytes))
+            .collect();
+        assert!(!counters.is_empty());
+        assert_eq!(traced, counters, "trace legs must decompose the link counters");
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_sessions_start_fresh() {
+        let (model, cfg) = tiny_cfg();
+        let run = || {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy::default(),
+                2,
+                RoutePolicy::LeastLoaded,
+            );
+            srv.set_tracing(true);
+            let mut reqs = burst(&[4, 0, 2, 6]);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ns = i as f64 * 3e4;
+            }
+            let _ = srv.serve(reqs);
+            srv.take_trace().unwrap().chrome_trace().pretty()
+        };
+        assert_eq!(run(), run(), "same seed, byte-identical trace export");
+
+        // A second session must not accumulate the first session's records.
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::RoundRobin);
+        srv.set_tracing(true);
+        let _ = srv.serve(burst(&[4; 4]));
+        let first_len = srv.trace().unwrap().records().len();
+        let _ = srv.serve(burst(&[4; 4]));
+        let second_len = srv.trace().unwrap().records().len();
+        assert!(first_len > 0);
+        assert_eq!(first_len, second_len, "each session records a fresh trace");
+    }
+
+    #[test]
+    fn serving_instants_mirror_the_event_stream() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv =
+            ShardedServer::new(&model, &cfg, BatchPolicy::default(), 2, RoutePolicy::RoundRobin);
+        srv.set_tracing(true);
+        let mut session = srv.open_serving();
+        let mut kinds: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for r in burst(&[3, 0, 2]) {
+            for ev in session.submit(r) {
+                *kinds.entry(ev.kind()).or_default() += 1;
+            }
+        }
+        loop {
+            let events = session.tick();
+            if events.is_empty() {
+                break;
+            }
+            for ev in &events {
+                *kinds.entry(ev.kind()).or_default() += 1;
+            }
+        }
+        drop(session);
+        let trace = srv.take_trace().unwrap();
+        let mut traced: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for r in trace.records() {
+            if r.track == Track::Serving {
+                *traced.entry(r.name).or_default() += 1;
+            }
+        }
+        assert_eq!(traced, kinds, "one serving instant per protocol event");
+    }
+
+    #[test]
+    fn telemetry_aggregates_links_and_stalls() {
+        let (model, mut cfg) = tiny_cfg();
+        cfg.hardware.topology.kind = TopologyKind::Ring;
+        let skew: Vec<usize> = (0..16).map(|i| if i % 2 == 0 { 64 } else { 1 }).collect();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+            4,
+            RoutePolicy::RoundRobin,
+        );
+        srv.set_work_stealing(true);
+        let _ = srv.serve(burst(&skew));
+        let t = srv.telemetry();
+        assert_eq!(t.links.len(), srv.fabric_links().len());
+        assert!(t.links.iter().any(|l| l.link.starts_with("local") && l.bytes > 0));
+        assert!(t.links.iter().any(|l| l.link.starts_with("inter") && l.bytes > 0));
+        // First-order memory fidelity (the default) has no stall causes.
+        assert!(!t.stalls.any());
     }
 }

@@ -241,6 +241,15 @@ pub trait ServeProtocol {
     /// order, shed requests, merged metrics). Call after draining; the
     /// [`ServingSession`] wrapper enforces this by consuming itself.
     fn finish(&mut self) -> ServeOutcome;
+
+    /// Live engine-side telemetry — per-link fabric counters and memory
+    /// stall totals — for mid-run export (the net server's Prometheus
+    /// endpoint, DESIGN.md §14). `None` (the default) for engines
+    /// without a simulated fabric: the functional PJRT runtime and the
+    /// analytic baselines.
+    fn telemetry(&self) -> Option<crate::obs::EngineTelemetry> {
+        None
+    }
 }
 
 /// Caller-facing handle for one streaming serving session, returned by
@@ -264,6 +273,11 @@ impl<'a> ServingSession<'a> {
     /// Advance by one event (see [`ServeProtocol::tick`]).
     pub fn tick(&mut self) -> Result<Vec<ServeEvent>, ChimeError> {
         self.inner.tick()
+    }
+
+    /// Live engine telemetry (see [`ServeProtocol::telemetry`]).
+    pub fn telemetry(&self) -> Option<crate::obs::EngineTelemetry> {
+        self.inner.telemetry()
     }
 
     /// Tick until idle, returning every event produced.

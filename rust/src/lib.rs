@@ -30,6 +30,10 @@
 //!   HTTP/1.1 layer, the `chime serve --listen` SSE ingress over the
 //!   streaming protocol, and the `chime loadgen` open-loop wall-clock
 //!   driver (DESIGN.md §13);
+//! - [`obs`]: zero-overhead-when-disabled observability — the
+//!   virtual-time span/event [`obs::Tracer`], the Chrome
+//!   trace-event/Perfetto exporter behind `--trace-out`, and the
+//!   Prometheus text exposition for `/v1/metrics` (DESIGN.md §14);
 //! - [`results`]: the paper-results harness — one module per table/figure.
 //!
 //! See DESIGN.md (repo root) for the system inventory, the two-cut-point
@@ -47,6 +51,7 @@ pub mod coordinator;
 pub mod mapping;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod results;
 pub mod runtime;
 pub mod sim;

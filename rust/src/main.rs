@@ -28,7 +28,9 @@
 
 use std::time::Duration;
 
-use chime::api::{ArrivalProcess, BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder};
+use chime::api::{
+    ArrivalProcess, Backend as _, BackendKind, ChimeError, MemoryFidelity, Session, SessionBuilder,
+};
 use chime::config::{MllmConfig, TopologyKind};
 use chime::coordinator::{BatchPolicy, RoutePolicy};
 use chime::net::{loadgen, LoadgenConfig, NetServer, ServeOpts};
@@ -87,20 +89,23 @@ COMMANDS:
   info      [--models] [--hardware]           Table II / III / IV configs
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
             [--memory first-order|cycle] [--topology point-to-point|line|ring|mesh]
+            [--trace-out FILE]  write the run's Chrome trace-event JSON (Perfetto)
   serve     [--backend sim|functional|dram-only|jetson|facil] [--model NAME]
             [--requests N] [--arrival burst|poisson:R|trace:FILE] [--rate R]
             [--steal on|off] [--seed N] [--batch B] [--tokens N] [--packages N]
             [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
             [--topology point-to-point|line|ring|mesh]
             [--listen HOST:PORT] [--deterministic] [--addr-file PATH]
+            [--trace-out FILE]
             With --listen: serve over HTTP/SSE instead of a local arrival
             stream (POST /v1/submit, GET /v1/stream/<id>, GET /v1/metrics,
             POST /v1/finish, POST /v1/shutdown); drive with `chime loadgen`
   loadgen   --target HOST:PORT [--requests N] [--arrival burst|poisson:R|trace:FILE]
             [--rate R] [--seed N] [--tokens N] [--prompt-tokens N]
-            [--timeout-s S] [--shutdown]
+            [--timeout-s S] [--shutdown] [--json FILE]
             Open-loop wall-clock driver for a --listen server; renders the
-            p50/p95/p99 TTFT/TPOT/latency tail table
+            p50/p95/p99 TTFT/TPOT/latency tail table (--json writes the
+            same numbers as canonical JSON)
   sweep     [--model NAME] [--json] [--memory first-order|cycle]
             [--topology point-to-point|line|ring|mesh]
             Fig 8 sequence-length sweep
@@ -108,7 +113,8 @@ COMMANDS:
             [--all] [--json] [--baselines]
   memcheck  [--json]                          first-order vs cycle divergence
   bench     [--json] [--quick] [--snapshot PATH] [--requests N] [--tokens N]
-            [--iters N]                       simulator events/s benchmark
+            [--iters N] [--profile PATH]      simulator events/s benchmark
+            (--profile writes the wall-clock-per-span-class HOTPATH baseline)
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
 MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
@@ -202,6 +208,30 @@ fn arrival_arg(args: &Args) -> Result<ArrivalProcess, ChimeError> {
     }
 }
 
+/// `--trace-out FILE`: where to write the Chrome trace-event JSON
+/// (load in Perfetto / `chrome://tracing`), or a typed usage error for
+/// the value-less spelling.
+fn trace_out_arg(args: &Args) -> Result<Option<String>, ChimeError> {
+    match args.get("trace-out") {
+        None if args.flag("trace-out") => Err(ChimeError::Invalid(
+            "--trace-out expects a file path for the Chrome trace-event JSON".to_string(),
+        )),
+        None => Ok(None),
+        Some(p) => Ok(Some(p.to_string())),
+    }
+}
+
+/// Write the recorded trace of a session's backend as Chrome
+/// trace-event JSON (shared by `simulate --trace-out` and the
+/// non-listen `serve --trace-out` path).
+fn write_trace(session: &mut Session, path: &str) -> Result<(), ChimeError> {
+    let tracer = session.backend_mut().take_trace().unwrap_or_default();
+    std::fs::write(path, format!("{}\n", tracer.chrome_trace().pretty()))
+        .map_err(|e| ChimeError::Runtime(format!("writing trace {path}: {e}")))?;
+    println!("wrote trace {path}");
+    Ok(())
+}
+
 /// `--steal on|off` as a bool, or a typed usage error — never a silent
 /// default for a malformed or value-less spelling.
 fn steal_arg(args: &Args) -> Result<bool, ChimeError> {
@@ -285,11 +315,18 @@ fn cmd_info(args: &Args) -> Result<(), ChimeError> {
 fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
     ensure_known(
         args,
-        &["model", "all", "dram-only", "out", "text", "json", "config", "memory", "topology"],
+        &["model", "all", "dram-only", "out", "text", "json", "config", "memory", "topology",
+          "trace-out"],
     )?;
     let kind = if args.flag("dram-only") { BackendKind::DramOnly } else { BackendKind::Sim };
     let fidelity = memory_arg(args)?;
     let topology = topology_arg(args)?;
+    let trace_out = trace_out_arg(args)?;
+    if trace_out.is_some() && args.flag("all") {
+        return Err(ChimeError::Invalid(
+            "--trace-out records one model's run; pass a single --model, not --all".to_string(),
+        ));
+    }
     let mode = kind.name();
     let models: Vec<MllmConfig> = if args.flag("all") {
         MllmConfig::paper_models()
@@ -315,7 +352,13 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
             b = b.topology(t);
         }
         let mut session = b.build()?;
+        if trace_out.is_some() {
+            session.backend_mut().set_tracing(true);
+        }
         let stats = session.infer()?;
+        if let Some(path) = &trace_out {
+            write_trace(&mut session, path)?;
+        }
         let mode = if kind == BackendKind::Sim { "chime" } else { mode };
         // Label from the session's *effective* fidelity, so a cycle run
         // selected via a --config file is reported the same as --memory.
@@ -357,7 +400,7 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
         args,
         &["backend", "model", "requests", "arrival", "rate", "steal", "seed", "batch",
           "tokens", "packages", "route", "queue", "config", "out", "text", "artifacts",
-          "memory", "topology", "listen", "deterministic", "addr-file"],
+          "memory", "topology", "listen", "deterministic", "addr-file", "trace-out"],
     )?;
     if args.flag("listen") {
         return cmd_serve_listen(args);
@@ -375,6 +418,7 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
     // as the config-file path).
     let fidelity = memory_arg(args)?;
     let topology = topology_arg(args)?;
+    let trace_out = trace_out_arg(args)?;
     let n = usize_arg(args, "requests", 16)?;
     let arrival = arrival_arg(args)?;
     let steal = steal_arg(args)?;
@@ -393,6 +437,17 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
         return Err(ChimeError::Invalid(format!(
             "backend {} has no sibling packages to steal between; --steal applies to \
              the sharded simulator backends",
+            kind.name()
+        )));
+    }
+    // The trace is the simulator's virtual timeline — baselines and the
+    // functional path record nothing, so reject instead of writing an
+    // empty file.
+    if trace_out.is_some()
+        && !matches!(kind, BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly)
+    {
+        return Err(ChimeError::Invalid(format!(
+            "backend {} records no trace; --trace-out applies to the simulator backends",
             kind.name()
         )));
     }
@@ -512,6 +567,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 b = b.topology(t);
             }
             let mut session = b.build()?;
+            if trace_out.is_some() {
+                session.backend_mut().set_tracing(true);
+            }
             let tokens = usize_arg(args, "tokens", 64)?;
             let reqs = session.requests_for(&arrival, seed, n, tokens)?;
             // Drive the streaming protocol directly so the steal events
@@ -569,6 +627,9 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                     out.shed.iter().map(|r| r.id).collect::<Vec<_>>()
                 );
             }
+            if let Some(path) = &trace_out {
+                write_trace(&mut session, path)?;
+            }
         }
     }
     Ok(())
@@ -600,6 +661,7 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
     let steal = steal_arg(args)?;
     let fidelity = memory_arg(args)?;
     let topology = topology_arg(args)?;
+    let trace_out = trace_out_arg(args)?;
     let deterministic = args.flag("deterministic");
     let default_tokens = usize_arg(args, "tokens", 64)?;
     let backend_name = args.get_or("backend", "sim");
@@ -608,6 +670,14 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
         name: backend_name.to_string(),
         hint: Some("sim functional dram-only jetson facil".to_string()),
     })?;
+    if trace_out.is_some()
+        && !matches!(kind, BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly)
+    {
+        return Err(ChimeError::Invalid(format!(
+            "backend {} records no trace; --trace-out applies to the simulator backends",
+            kind.name()
+        )));
+    }
     let mut b = builder_from(args)?.model(args.get_or("model", "fastvlm-0.6b"));
     match kind {
         BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly => {
@@ -655,6 +725,7 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
         deterministic,
         default_max_new_tokens: default_tokens,
         handle_signals: true,
+        trace_out: trace_out.as_deref().map(std::path::PathBuf::from),
         ..ServeOpts::default()
     };
     let server = NetServer::spawn(listen, move || b.build(), opts)?;
@@ -678,6 +749,9 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
         "served: {} submitted, {} completed, {} rejected, {} shed, {} tokens",
         s.submitted, s.completed, s.rejected, s.shed, s.tokens
     );
+    if let Some(path) = &trace_out {
+        println!("wrote trace {path}");
+    }
     Ok(())
 }
 
@@ -687,13 +761,18 @@ fn cmd_loadgen(args: &Args) -> Result<(), ChimeError> {
     ensure_known(
         args,
         &["target", "requests", "arrival", "rate", "seed", "tokens", "prompt-tokens",
-          "timeout-s", "shutdown"],
+          "timeout-s", "shutdown", "json"],
     )?;
     let Some(target) = args.get("target") else {
         return Err(ChimeError::Invalid(
             "--target expects HOST:PORT of a running `chime serve --listen` server".to_string(),
         ));
     };
+    if args.flag("json") && args.get("json").is_none() {
+        return Err(ChimeError::Invalid(
+            "--json expects a file path for the canonical loadgen report".to_string(),
+        ));
+    }
     let timeout_s = f64_arg(args, "timeout-s", 120.0)?;
     if !timeout_s.is_finite() || timeout_s <= 0.0 {
         return Err(ChimeError::Invalid(format!(
@@ -712,6 +791,11 @@ fn cmd_loadgen(args: &Args) -> Result<(), ChimeError> {
     };
     let report = loadgen::run(&cfg)?;
     print!("{}", report.table);
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, format!("{}\n", report.to_json().pretty()))
+            .map_err(|e| ChimeError::Runtime(format!("writing {path}: {e}")))?;
+        println!("wrote {path}");
+    }
     if let Some(outcome) = &report.outcome {
         println!("server outcome (virtual time): {}", outcome.get("metrics").compact());
     }
@@ -753,10 +837,15 @@ fn cmd_memcheck(args: &Args) -> Result<(), ChimeError> {
 }
 
 fn cmd_bench(args: &Args) -> Result<(), ChimeError> {
-    ensure_known(args, &["json", "quick", "snapshot", "requests", "tokens", "iters"])?;
+    ensure_known(args, &["json", "quick", "snapshot", "requests", "tokens", "iters", "profile"])?;
     if args.flag("snapshot") && args.get("snapshot").is_none() {
         return Err(ChimeError::Invalid(
             "--snapshot expects a file path (e.g. BENCH_006.json)".to_string(),
+        ));
+    }
+    if args.flag("profile") && args.get("profile").is_none() {
+        return Err(ChimeError::Invalid(
+            "--profile expects a file path (e.g. HOTPATH_009.json)".to_string(),
         ));
     }
     let mut bc = if args.flag("quick") {
@@ -780,6 +869,13 @@ fn cmd_bench(args: &Args) -> Result<(), ChimeError> {
     }
     if let Some(path) = args.get("snapshot") {
         std::fs::write(path, format!("{}\n", e.json.pretty()))
+            .map_err(|err| ChimeError::Runtime(format!("writing {path}: {err}")))?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("profile") {
+        let profile = results::perf::profile_with(&bc);
+        println!("{}", profile.text);
+        std::fs::write(path, format!("{}\n", profile.json.pretty()))
             .map_err(|err| ChimeError::Runtime(format!("writing {path}: {err}")))?;
         println!("wrote {path}");
     }

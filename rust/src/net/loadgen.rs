@@ -87,6 +87,80 @@ pub struct LoadgenReport {
     pub outcome: Option<Json>,
 }
 
+impl LoadgenReport {
+    /// The canonical JSON body behind `chime loadgen --json FILE`. The
+    /// tail statistics come from the same [`metric_rows`] computation the
+    /// rendered table prints, so the two report identical numbers
+    /// (`loadgen_json_report_matches_the_table` locks this). Metrics with
+    /// no samples (e.g. TTFT on a zero-token run) serialize as `null`,
+    /// mirroring the table's placeholder row.
+    pub fn to_json(&self) -> Json {
+        let metrics = metric_rows(&self.samples)
+            .into_iter()
+            .map(|(name, stats)| {
+                let value = match stats {
+                    None => Json::Null,
+                    Some(s) => Json::obj(vec![
+                        ("p50_ns", s.p50_ns.into()),
+                        ("p95_ns", s.p95_ns.into()),
+                        ("p99_ns", s.p99_ns.into()),
+                        ("mean_ns", s.mean_ns.into()),
+                        ("samples", s.samples.into()),
+                    ]),
+                };
+                (name, value)
+            })
+            .collect();
+        let tokens: u64 = self.samples.iter().map(|s| s.tokens).sum();
+        Json::obj(vec![
+            ("metrics", Json::obj(metrics)),
+            (
+                "achieved",
+                Json::obj(vec![
+                    ("requests", self.samples.len().into()),
+                    ("errors", self.errors.len().into()),
+                    ("wall_s", self.wall_s.into()),
+                    (
+                        "req_per_s",
+                        (self.samples.len() as f64 / self.wall_s.max(1e-9)).into(),
+                    ),
+                    ("tokens", (tokens as f64).into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Summary statistics for one wall-clock tail metric. Computed once and
+/// consumed by both the rendered table and the `--json` report.
+#[derive(Debug, Clone, Copy)]
+struct MetricStats {
+    p50_ns: f64,
+    p95_ns: f64,
+    p99_ns: f64,
+    mean_ns: f64,
+    samples: usize,
+}
+
+fn metric_stats(xs: Vec<f64>) -> Option<MetricStats> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mean_ns = xs.iter().sum::<f64>() / xs.len() as f64;
+    let samples = xs.len();
+    let (p50_ns, p95_ns, p99_ns) = tail_percentiles(xs);
+    Some(MetricStats { p50_ns, p95_ns, p99_ns, mean_ns, samples })
+}
+
+/// The three reported tail metrics, in table row order.
+fn metric_rows(samples: &[RequestSample]) -> [(&'static str, Option<MetricStats>); 3] {
+    [
+        ("TTFT", metric_stats(samples.iter().filter_map(|s| s.ttft_ns).collect())),
+        ("TPOT", metric_stats(samples.iter().filter_map(|s| s.tpot_ns).collect())),
+        ("latency", metric_stats(samples.iter().map(|s| s.latency_ns).collect())),
+    ]
+}
+
 /// Fire the configured request set at the target and collect the report.
 /// A malformed `--target` is a usage error (exit 2); an unreachable or
 /// non-chime target is a runtime error (exit 1).
@@ -233,27 +307,19 @@ fn render_table(arrival: &ArrivalProcess, samples: &[RequestSample], wall_s: f64
                  samples.len()),
         &["metric", "p50 (ms)", "p95 (ms)", "p99 (ms)", "mean (ms)", "samples"],
     );
-    let rows: [(&str, Vec<f64>); 3] = [
-        ("TTFT", samples.iter().filter_map(|s| s.ttft_ns).collect()),
-        ("TPOT", samples.iter().filter_map(|s| s.tpot_ns).collect()),
-        ("latency", samples.iter().map(|s| s.latency_ns).collect()),
-    ];
-    for (name, xs) in rows {
-        if xs.is_empty() {
+    for (name, stats) in metric_rows(samples) {
+        let Some(s) = stats else {
             t.row(vec![name.to_string(), "-".into(), "-".into(), "-".into(), "-".into(),
                        "0".into()]);
             continue;
-        }
-        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
-        let n = xs.len();
-        let (p50, p95, p99) = tail_percentiles(xs);
+        };
         t.row(vec![
             name.to_string(),
-            table::f(p50 / 1e6, 2),
-            table::f(p95 / 1e6, 2),
-            table::f(p99 / 1e6, 2),
-            table::f(mean / 1e6, 2),
-            n.to_string(),
+            table::f(s.p50_ns / 1e6, 2),
+            table::f(s.p95_ns / 1e6, 2),
+            table::f(s.p99_ns / 1e6, 2),
+            table::f(s.mean_ns / 1e6, 2),
+            s.samples.to_string(),
         ]);
     }
     let tokens: u64 = samples.iter().map(|s| s.tokens).sum();
@@ -430,6 +496,68 @@ mod tests {
         }];
         let text = render_table(&ArrivalProcess::Burst, &bare, 0.1);
         assert!(text.contains("TTFT") && text.contains('-'));
+    }
+
+    #[test]
+    fn loadgen_json_report_matches_the_table() {
+        let samples = vec![
+            RequestSample {
+                id: 0,
+                ttft_ns: Some(2e6),
+                tpot_ns: Some(0.5e6),
+                latency_ns: 10e6,
+                tokens: 16,
+            },
+            RequestSample {
+                id: 1,
+                ttft_ns: Some(4e6),
+                tpot_ns: Some(0.7e6),
+                latency_ns: 20e6,
+                tokens: 16,
+            },
+        ];
+        let table = render_table(&ArrivalProcess::Burst, &samples, 0.5);
+        let report = LoadgenReport {
+            samples,
+            errors: vec![],
+            wall_s: 0.5,
+            table: table.clone(),
+            outcome: None,
+        };
+        let json = report.to_json();
+        // Every tail cell the table prints is the JSON number rendered
+        // through the same formatter — one computation, two views.
+        for name in ["TTFT", "TPOT", "latency"] {
+            let m = json.get("metrics").get(name);
+            for key in ["p50_ns", "p95_ns", "p99_ns", "mean_ns"] {
+                let v = m.get(key).as_f64().unwrap_or_else(|| panic!("{name}.{key} missing"));
+                let cell = table::f(v / 1e6, 2);
+                assert!(table.contains(&cell), "{name}.{key} = {cell} not in table:\n{table}");
+            }
+        }
+        assert_eq!(json.get("achieved").get("requests").as_i64(), Some(2));
+        assert_eq!(json.get("achieved").get("tokens").as_i64(), Some(32));
+        assert_eq!(json.get("achieved").get("req_per_s").as_f64(), Some(4.0));
+        // Same report serializes byte-identically (canonical writer).
+        assert_eq!(report.to_json().pretty(), json.pretty());
+        // Sample-less metrics are null, mirroring the placeholder rows.
+        let bare = LoadgenReport {
+            samples: vec![RequestSample {
+                id: 0,
+                ttft_ns: None,
+                tpot_ns: None,
+                latency_ns: 1e6,
+                tokens: 0,
+            }],
+            errors: vec![],
+            wall_s: 0.1,
+            table: String::new(),
+            outcome: None,
+        };
+        let j = bare.to_json();
+        assert!(j.get("metrics").get("TTFT").is_null());
+        assert!(j.get("metrics").get("TPOT").is_null());
+        assert!(!j.get("metrics").get("latency").is_null());
     }
 
     #[test]

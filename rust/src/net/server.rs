@@ -47,8 +47,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::api::{ChimeError, ServeEvent, ServeRequest, ServingSession, Session};
+use crate::api::{Backend as _, ChimeError, ServeEvent, ServeRequest, ServingSession, Session};
 use crate::coordinator::ServeOutcome;
+use crate::obs::prom::PromText;
 use crate::util::Json;
 
 use super::http::{self, HttpCaps, HttpError, HttpRequest, HttpResponse};
@@ -73,6 +74,10 @@ pub struct ServeOpts {
     /// Install a SIGINT/SIGTERM handler that drains gracefully (the CLI
     /// path sets this; library users and tests keep their own handlers).
     pub handle_signals: bool,
+    /// Record the virtual-time trace of the served session and write it
+    /// as Chrome trace-event JSON here when the server drains
+    /// (`chime serve --listen ... --trace-out FILE`).
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -82,6 +87,7 @@ impl Default for ServeOpts {
             default_max_new_tokens: 64,
             max_body_bytes: HttpCaps::default().max_body,
             handle_signals: false,
+            trace_out: None,
         }
     }
 }
@@ -328,6 +334,8 @@ enum EngineCmd {
     Submit(SubmitBody, Sender<Result<Json, HttpError>>),
     Subscribe(u64, Sender<Result<Receiver<String>, HttpError>>),
     Metrics(Sender<Json>),
+    /// `GET /v1/metrics?format=prometheus`: the text exposition.
+    MetricsProm(Sender<String>),
     /// Drain + finish (idempotent); replies with the canonical outcome
     /// JSON body. Shutdown sends this first, then sets the stop flag.
     Finish(Sender<Result<Vec<u8>, HttpError>>),
@@ -380,6 +388,9 @@ impl<'s> Engine<'s> {
             }
             EngineCmd::Metrics(reply) => {
                 let _ = reply.send(self.metrics());
+            }
+            EngineCmd::MetricsProm(reply) => {
+                let _ = reply.send(self.prometheus());
             }
             EngineCmd::Finish(reply) => {
                 let result = self.finish();
@@ -520,14 +531,18 @@ impl<'s> Engine<'s> {
         Ok(rx)
     }
 
-    fn metrics(&self) -> Json {
-        let state = if self.fatal.is_some() {
+    fn state(&self) -> &'static str {
+        if self.fatal.is_some() {
             "failed"
         } else if self.outcome.is_some() {
             "finished"
         } else {
             "serving"
-        };
+        }
+    }
+
+    fn metrics(&self) -> Json {
+        let state = self.state();
         let c = &self.counts;
         let mut pairs = vec![
             ("server", self.info.clone()),
@@ -550,6 +565,142 @@ impl<'s> Engine<'s> {
             pairs.push(("error", e.to_string().into()));
         }
         Json::obj(pairs)
+    }
+
+    /// Prometheus text exposition of the same counters `/v1/metrics`
+    /// serves as JSON, plus live engine telemetry (fabric links, memory
+    /// stall causes) while the session is open. The request counters are
+    /// the ones the finish outcome reconciles against.
+    fn prometheus(&self) -> String {
+        let mut p = PromText::new();
+        let c = &self.counts;
+        p.counter(
+            "chime_requests_submitted_total",
+            "Requests received over the wire.",
+            c.submitted as f64,
+        );
+        p.counter(
+            "chime_requests_admitted_total",
+            "Requests admitted by the serving engine.",
+            c.admitted as f64,
+        );
+        p.counter(
+            "chime_requests_completed_total",
+            "Requests that ran to completion.",
+            c.completed as f64,
+        );
+        p.counter(
+            "chime_requests_rejected_total",
+            "Requests rejected at admission.",
+            c.rejected as f64,
+        );
+        p.counter("chime_requests_shed_total", "Requests shed under load.", c.shed as f64);
+        p.counter(
+            "chime_tokens_total",
+            "Tokens generated across completed requests.",
+            c.tokens as f64,
+        );
+        p.counter("chime_steals_total", "Cross-package work steals.", c.steals as f64);
+        p.header("chime_server_state", "Engine state (1 on the active state).", "gauge");
+        let state = self.state();
+        for s in ["serving", "finished", "failed"] {
+            p.sample("chime_server_state", &[("state", s)], if s == state { 1.0 } else { 0.0 });
+        }
+        if let Some(t) = self.serving.as_ref().and_then(|s| s.telemetry()) {
+            p.header(
+                "chime_fabric_link_bytes_total",
+                "Payload bytes that crossed each fabric link.",
+                "counter",
+            );
+            for l in &t.links {
+                p.sample(
+                    "chime_fabric_link_bytes_total",
+                    &[("link", l.link.as_str())],
+                    l.bytes as f64,
+                );
+            }
+            p.header(
+                "chime_fabric_link_transfers_total",
+                "Transfers that crossed each fabric link.",
+                "counter",
+            );
+            for l in &t.links {
+                p.sample(
+                    "chime_fabric_link_transfers_total",
+                    &[("link", l.link.as_str())],
+                    l.transfers as f64,
+                );
+            }
+            p.header(
+                "chime_fabric_link_busy_seconds_total",
+                "Wire-serialization time per fabric link.",
+                "counter",
+            );
+            for l in &t.links {
+                p.sample(
+                    "chime_fabric_link_busy_seconds_total",
+                    &[("link", l.link.as_str())],
+                    l.busy_ns / 1e9,
+                );
+            }
+            p.header(
+                "chime_fabric_link_peak_gbps",
+                "Peak sustained bandwidth per link over any tick window.",
+                "gauge",
+            );
+            for l in &t.links {
+                p.sample(
+                    "chime_fabric_link_peak_gbps",
+                    &[("link", l.link.as_str())],
+                    l.peak_gbps,
+                );
+            }
+            let st = &t.stalls;
+            p.header("chime_dram_stall_seconds_total", "DRAM stall time by cause.", "counter");
+            p.sample(
+                "chime_dram_stall_seconds_total",
+                &[("cause", "precharge")],
+                st.dram_precharge_ns / 1e9,
+            );
+            p.sample("chime_dram_stall_seconds_total", &[("cause", "tfaw")], st.dram_faw_ns / 1e9);
+            p.sample(
+                "chime_dram_stall_seconds_total",
+                &[("cause", "refresh")],
+                st.dram_refresh_ns / 1e9,
+            );
+            p.counter(
+                "chime_dram_activations_total",
+                "DRAM whole-row activations issued.",
+                st.dram_activations as f64,
+            );
+            p.counter(
+                "chime_dram_row_conflicts_total",
+                "DRAM row conflicts (precharge before activate).",
+                st.dram_row_conflicts as f64,
+            );
+            p.header("chime_rram_stall_seconds_total", "RRAM stall time by cause.", "counter");
+            p.sample(
+                "chime_rram_stall_seconds_total",
+                &[("cause", "pulse")],
+                st.rram_pulse_ns / 1e9,
+            );
+            p.sample(
+                "chime_rram_stall_seconds_total",
+                &[("cause", "verify")],
+                st.rram_verify_ns / 1e9,
+            );
+            p.sample(
+                "chime_rram_stall_seconds_total",
+                &[("cause", "remap")],
+                st.rram_remap_ns / 1e9,
+            );
+            p.counter(
+                "chime_rram_remaps_total",
+                "RRAM wear remaps performed.",
+                st.rram_remaps as f64,
+            );
+        }
+        p.render()
     }
 
     /// Drain (publishing the drained events) and finish. Idempotent:
@@ -599,6 +750,12 @@ fn sse_frame(ev: &ServeEvent) -> String {
     format!("event: {}\ndata: {}\n\n", ev.kind(), ev.to_json().compact())
 }
 
+/// The `format` query parameter of a request target, if any.
+fn format_param(target: &str) -> Option<&str> {
+    let (_, query) = target.split_once('?')?;
+    query.split('&').find_map(|kv| kv.strip_prefix("format="))
+}
+
 /// Config echo in `/v1/metrics`, so a loadgen can report what it hit.
 fn server_info(session: &Session, opts: &ServeOpts) -> Json {
     Json::obj(vec![
@@ -608,6 +765,7 @@ fn server_info(session: &Session, opts: &ServeOpts) -> Json {
         ("memory", session.memory_fidelity().name().into()),
         ("topology", session.topology().name().into()),
         ("deterministic", opts.deterministic.into()),
+        ("tracing", opts.trace_out.is_some().into()),
     ])
 }
 
@@ -622,6 +780,10 @@ fn engine_loop(
 ) -> Result<ServeSummary, ChimeError> {
     if opts.handle_signals {
         signals::install();
+    }
+    if opts.trace_out.is_some() {
+        // Before open_serving, so the session starts with a fresh trace.
+        session.backend_mut().set_tracing(true);
     }
     let info = server_info(session, opts);
     let caps = HttpCaps { max_body: opts.max_body_bytes, ..HttpCaps::default() };
@@ -640,7 +802,7 @@ fn engine_loop(
         fatal: None,
     };
     let (cmd_tx, cmd_rx) = channel::<EngineCmd>();
-    loop {
+    let summary = loop {
         // New connections → handler threads (short-lived; SSE handlers
         // live for the stream).
         loop {
@@ -671,12 +833,19 @@ fn engine_loop(
             // Graceful drain: every in-flight request completes (into
             // the log/metrics) before the listener goes away.
             let _ = engine.finish();
-            return Ok(engine.summary());
+            break engine.summary();
         }
         if !worked {
             std::thread::sleep(POLL);
         }
+    };
+    drop(engine);
+    if let Some(path) = &opts.trace_out {
+        let tracer = session.backend_mut().take_trace().unwrap_or_default();
+        std::fs::write(path, format!("{}\n", tracer.chrome_trace().pretty()))
+            .map_err(|e| ChimeError::Runtime(format!("writing trace {}: {e}", path.display())))?;
     }
+    Ok(summary)
 }
 
 /// What the router decided to do with one parsed request.
@@ -710,12 +879,29 @@ fn dispatch(req: &HttpRequest, tx: &Sender<EngineCmd>) -> Result<Routed, HttpErr
             let frames = reply_rx.recv().map_err(|_| closed())??;
             Ok(Routed::Stream(frames))
         }
-        ("GET", "/v1/metrics") => {
-            let (reply_tx, reply_rx) = channel();
-            tx.send(EngineCmd::Metrics(reply_tx)).map_err(|_| closed())?;
-            let json = reply_rx.recv().map_err(|_| closed())?;
-            Ok(Routed::Respond(HttpResponse::json(200, &json)))
-        }
+        ("GET", "/v1/metrics") => match format_param(&req.target) {
+            Some("prometheus") => {
+                let (reply_tx, reply_rx) = channel();
+                tx.send(EngineCmd::MetricsProm(reply_tx)).map_err(|_| closed())?;
+                let text = reply_rx.recv().map_err(|_| closed())?;
+                Ok(Routed::Respond(HttpResponse {
+                    status: 200,
+                    content_type: "text/plain; version=0.0.4",
+                    body: text.into_bytes(),
+                    allow: None,
+                }))
+            }
+            Some("json") | None => {
+                let (reply_tx, reply_rx) = channel();
+                tx.send(EngineCmd::Metrics(reply_tx)).map_err(|_| closed())?;
+                let json = reply_rx.recv().map_err(|_| closed())?;
+                Ok(Routed::Respond(HttpResponse::json(200, &json)))
+            }
+            Some(other) => Err(HttpError::new(
+                400,
+                format!("unknown metrics format {other:?} (accepted: json, prometheus)"),
+            )),
+        },
         ("POST", "/v1/finish") | ("POST", "/v1/shutdown") => {
             let (reply_tx, reply_rx) = channel();
             tx.send(EngineCmd::Finish(reply_tx)).map_err(|_| closed())?;

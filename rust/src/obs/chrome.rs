@@ -1,0 +1,132 @@
+//! Chrome trace-event export: turns a [`Tracer`] into the JSON object
+//! format Perfetto (ui.perfetto.dev) and `chrome://tracing` load.
+//!
+//! Mapping (DESIGN.md §14): Chrome *process* = CHIME package, Chrome
+//! *thread* = per-package track (coordinator / dram / rram / fabric /
+//! serving). Spans become `ph: "X"` complete events, instants become
+//! `ph: "i"` thread-scoped instant events; `ts`/`dur` are microseconds
+//! of *virtual* simulation time, so a fixed seed serializes to a
+//! byte-identical file through the canonical [`Json`] writer (sorted
+//! object keys, deterministic number formatting).
+
+use std::collections::BTreeSet;
+
+use crate::util::Json;
+
+use super::Tracer;
+
+/// Nanoseconds → trace-event microseconds.
+fn us(ns: f64) -> f64 {
+    ns / 1000.0
+}
+
+/// The full trace-event JSON document for a recorded run.
+pub fn trace_json(tracer: &Tracer) -> Json {
+    let mut events = Vec::new();
+
+    // Metadata first: stable process/thread names so Perfetto labels the
+    // timelines. Sorted sets keep the order deterministic regardless of
+    // recording order.
+    let pids: BTreeSet<usize> = tracer.records().iter().map(|r| r.pid).collect();
+    let tracks: BTreeSet<(usize, usize, &'static str)> =
+        tracer.records().iter().map(|r| (r.pid, r.track.tid(), r.track.name())).collect();
+    for pid in &pids {
+        events.push(Json::obj(vec![
+            ("ph", "M".into()),
+            ("name", "process_name".into()),
+            ("pid", (*pid).into()),
+            ("tid", 0usize.into()),
+            ("args", Json::obj(vec![("name", format!("package{pid}").into())])),
+        ]));
+    }
+    for (pid, tid, name) in &tracks {
+        events.push(Json::obj(vec![
+            ("ph", "M".into()),
+            ("name", "thread_name".into()),
+            ("pid", (*pid).into()),
+            ("tid", (*tid).into()),
+            ("args", Json::obj(vec![("name", (*name).into())])),
+        ]));
+    }
+
+    for r in tracer.records() {
+        let args = Json::Obj(r.args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect());
+        let mut fields = vec![
+            ("name", r.name.into()),
+            ("cat", r.track.name().into()),
+            ("pid", r.pid.into()),
+            ("tid", r.track.tid().into()),
+            ("ts", us(r.start_ns).into()),
+            ("args", args),
+        ];
+        match r.dur_ns {
+            Some(dur) => {
+                fields.push(("ph", "X".into()));
+                fields.push(("dur", us(dur).into()));
+            }
+            None => {
+                fields.push(("ph", "i".into()));
+                fields.push(("s", "t".into()));
+            }
+        }
+        events.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("displayTimeUnit", "ms".into()),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Track;
+    use super::*;
+
+    fn sample() -> Tracer {
+        let mut t = Tracer::new();
+        t.span(1, Track::Coordinator, "package_step", 2000.0, 5000.0, vec![
+            ("slots", 2.0.into()),
+        ]);
+        t.instant(0, Track::Serving, "admitted", 1500.0, vec![("id", 3.0.into())]);
+        t.instant(1, Track::Fabric, "fabric_leg", 5000.0, vec![
+            ("link", "local1".into()),
+            ("bytes", 4096.0.into()),
+        ]);
+        t
+    }
+
+    #[test]
+    fn export_is_valid_json_with_metadata_and_events() {
+        let doc = sample().chrome_trace();
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 pids + 3 distinct (pid, track) threads + 3 records.
+        assert_eq!(events.len(), 2 + 3 + 3);
+        let span = events.iter().find(|e| e.get("ph").as_str() == Some("X")).unwrap();
+        assert_eq!(span.get("name").as_str(), Some("package_step"));
+        assert_eq!(span.get("ts").as_f64(), Some(2.0), "µs of virtual time");
+        assert_eq!(span.get("dur").as_f64(), Some(3.0));
+        assert_eq!(span.get("pid").as_usize(), Some(1));
+        let inst = events.iter().find(|e| e.get("name").as_str() == Some("fabric_leg")).unwrap();
+        assert_eq!(inst.get("ph").as_str(), Some("i"));
+        assert_eq!(inst.get("s").as_str(), Some("t"), "thread-scoped instant");
+        assert_eq!(inst.get("args").get("bytes").as_i64(), Some(4096));
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let a = sample().chrome_trace().pretty();
+        let b = sample().chrome_trace().pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("\"process_name\""));
+        assert!(a.contains("\"package1\""));
+        assert!(a.contains("\"thread_name\""));
+    }
+
+    #[test]
+    fn empty_tracer_exports_an_empty_event_list() {
+        let doc = Tracer::new().chrome_trace();
+        assert_eq!(doc.get("traceEvents").as_arr().unwrap().len(), 0);
+    }
+}

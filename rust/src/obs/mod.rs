@@ -1,0 +1,476 @@
+//! Observability: deterministic span/event tracing, Chrome-trace export,
+//! Prometheus text exposition, and wall-clock self-profiling (DESIGN.md
+//! §14).
+//!
+//! The subsystem is std-only and **zero-overhead when disabled**: every
+//! instrumented layer holds an `Option<Tracer>` (default `None`) and the
+//! instrumentation is a read-only side channel — enabling it never
+//! changes a simulated timestamp, an energy figure, or a byte counter.
+//! The serving drain falls back from the parallel to the sequential
+//! driver while tracing (the two are bit-identical by construction, see
+//! `ShardedSession::finish`), so a traced run still produces the exact
+//! golden numbers.
+//!
+//! Three consumers sit on top of one [`Tracer`]:
+//!
+//! * [`chrome`] — Chrome trace-event / Perfetto-loadable JSON
+//!   (`chime simulate|serve --trace-out FILE`): process = package,
+//!   track = chiplet/coordinator/fabric, args carry bytes, energy, and
+//!   stall causes. Serialization goes through the canonical
+//!   [`crate::util::Json`] writer, so a fixed seed yields a
+//!   byte-identical trace.
+//! * [`prom`] — Prometheus text exposition
+//!   (`GET /v1/metrics?format=prometheus` on the net server), rendering
+//!   the serving counters, per-link fabric telemetry, and memory stall
+//!   totals. Every exported value is finite by policy.
+//! * profiling (`chime bench --profile`) — wall-clock time per
+//!   instrumented span class, aggregated into the `HOTPATH_*.json`
+//!   baseline (ROADMAP item 4). Wall times never enter the trace JSON —
+//!   they exist only in the profile aggregate, so traces stay
+//!   deterministic.
+
+pub mod chrome;
+pub mod prom;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::sim::fabric::{Fabric, Link};
+use crate::sim::memory::{DramMem, RramMem};
+use crate::sim::SimEngine;
+use crate::util::Json;
+
+/// One timeline per (package, track) pair in the exported trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// Per-package serving coordinator: tick spans, admission work.
+    Coordinator,
+    /// DRAM chiplet: stall-cause instants.
+    Dram,
+    /// RRAM chiplet: stall-cause instants.
+    Rram,
+    /// UCIe fabric: per-link leg instants (bytes conservation).
+    Fabric,
+    /// Global serving-protocol transitions (one instant per
+    /// [`crate::coordinator::ServeEvent`]).
+    Serving,
+}
+
+impl Track {
+    /// Stable thread id for the Chrome export.
+    pub fn tid(self) -> usize {
+        match self {
+            Track::Coordinator => 0,
+            Track::Dram => 1,
+            Track::Rram => 2,
+            Track::Fabric => 3,
+            Track::Serving => 4,
+        }
+    }
+
+    /// Track name for the Chrome thread-name metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            Track::Coordinator => "coordinator",
+            Track::Dram => "dram",
+            Track::Rram => "rram",
+            Track::Fabric => "fabric",
+            Track::Serving => "serving",
+        }
+    }
+}
+
+/// One recorded span (duration) or instant (point event), in virtual
+/// nanoseconds. Spans on one (pid, track) timeline never overlap — the
+/// recorder is driven by sequential per-package clocks — which is the
+/// well-nestedness invariant `prop_trace_spans_are_well_nested_and_conserving`
+/// locks.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// Span class ("package_step", "prefill", "fabric_leg", ...).
+    pub name: &'static str,
+    /// Owning package (Chrome process id).
+    pub pid: usize,
+    /// Timeline within the package.
+    pub track: Track,
+    /// Virtual start time (ns).
+    pub start_ns: f64,
+    /// Duration in virtual ns; `None` marks an instant event.
+    pub dur_ns: Option<f64>,
+    /// Structured payload (bytes, energy, stall cause, ...).
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// The span/event recorder. Owned (optionally) by the instrumented
+/// layers; collected once at the end of a run via `take_trace`.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    records: Vec<Record>,
+    profiling: bool,
+    profile: BTreeMap<&'static str, (u64, f64)>,
+}
+
+impl Tracer {
+    /// A recording tracer (profiling off): deterministic virtual-time
+    /// records only.
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    /// A recording tracer that additionally aggregates wall-clock time
+    /// per span class (`chime bench --profile`).
+    pub fn with_profiling() -> Tracer {
+        Tracer { profiling: true, ..Tracer::default() }
+    }
+
+    /// Whether wall-clock profiling is on.
+    pub fn profiling(&self) -> bool {
+        self.profiling
+    }
+
+    /// A tracer with the records dropped (new serving session). The mode
+    /// and the wall-clock profile aggregates carry over — profiling spans
+    /// many sessions (`chime bench --profile`), traces cover one.
+    pub fn fresh(&self) -> Tracer {
+        Tracer {
+            records: Vec::new(),
+            profiling: self.profiling,
+            profile: self.profile.clone(),
+        }
+    }
+
+    /// Record a complete span `[start_ns, end_ns]` on a timeline.
+    pub fn span(
+        &mut self,
+        pid: usize,
+        track: Track,
+        name: &'static str,
+        start_ns: f64,
+        end_ns: f64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.records.push(Record {
+            name,
+            pid,
+            track,
+            start_ns,
+            dur_ns: Some((end_ns - start_ns).max(0.0)),
+            args,
+        });
+    }
+
+    /// Record an instant event at `ts_ns` on a timeline.
+    pub fn instant(
+        &mut self,
+        pid: usize,
+        track: Track,
+        name: &'static str,
+        ts_ns: f64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.records.push(Record { name, pid, track, start_ns: ts_ns, dur_ns: None, args });
+    }
+
+    /// Start a wall-clock measurement (Some only while profiling, so the
+    /// disabled path never touches the OS clock).
+    pub fn wall_start(&self) -> Option<Instant> {
+        if self.profiling {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a wall-clock measurement against a span class.
+    pub fn wall_end(&mut self, name: &'static str, started: Option<Instant>) {
+        if let Some(t0) = started {
+            let e = self.profile.entry(name).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += t0.elapsed().as_nanos() as f64;
+        }
+    }
+
+    /// All records, in deterministic recording order.
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    /// Whether anything has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Wall-clock profile: span class -> (count, total wall ns).
+    pub fn profile_entries(&self) -> &BTreeMap<&'static str, (u64, f64)> {
+        &self.profile
+    }
+
+    /// The Chrome trace-event export (see [`chrome::trace_json`]).
+    pub fn chrome_trace(&self) -> Json {
+        chrome::trace_json(self)
+    }
+}
+
+/// Canonical label for a fabric link, shared between trace args and
+/// Prometheus series so the two reconcile textually.
+pub fn link_label(link: &Link) -> String {
+    match link {
+        Link::Local { package } => format!("local{package}"),
+        Link::Inter { a, b } => format!("inter{a}-{b}"),
+    }
+}
+
+/// Per-link byte/transfer snapshot of a fabric, for delta-based leg
+/// events (a traced region snapshots before/after and emits one
+/// `fabric_leg` instant per link that moved — Σ leg bytes therefore
+/// equals the link counters exactly).
+pub fn link_snapshot(fabric: &Fabric) -> Vec<(Link, u64, u64)> {
+    fabric.link_states().map(|(l, s)| (*l, s.bytes, s.transfers)).collect()
+}
+
+/// Links whose byte counters advanced since `before`, with the deltas.
+pub fn link_deltas(fabric: &Fabric, before: &[(Link, u64, u64)]) -> Vec<(Link, u64, u64)> {
+    let prior: BTreeMap<Link, (u64, u64)> =
+        before.iter().map(|&(l, b, t)| (l, (b, t))).collect();
+    fabric
+        .link_states()
+        .filter_map(|(l, s)| {
+            let (b0, t0) = prior.get(l).copied().unwrap_or((0, 0));
+            if s.bytes > b0 {
+                Some((*l, s.bytes - b0, s.transfers - t0))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Cumulative memory stall-cause totals of one engine's chiplet pair, by
+/// cause. All zero at first-order fidelity — the cycle subsystem is
+/// where the causes exist (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemStalls {
+    /// DRAM precharge (row-conflict) stall, ns.
+    pub dram_precharge_ns: f64,
+    /// DRAM tFAW-window stall, ns.
+    pub dram_faw_ns: f64,
+    /// DRAM refresh stall, ns.
+    pub dram_refresh_ns: f64,
+    /// DRAM whole-row activations issued.
+    pub dram_activations: u64,
+    /// DRAM row conflicts (precharge-before-activate events).
+    pub dram_row_conflicts: u64,
+    /// RRAM sense-amp pulse occupancy stall, ns.
+    pub rram_pulse_ns: f64,
+    /// RRAM SET/RESET verify-pulse time, ns.
+    pub rram_verify_ns: f64,
+    /// RRAM wear-remap bookkeeping stall, ns.
+    pub rram_remap_ns: f64,
+    /// RRAM wear remaps performed.
+    pub rram_remaps: u64,
+}
+
+impl MemStalls {
+    /// Snapshot the cumulative stall counters of one engine.
+    pub fn of(engine: &SimEngine) -> MemStalls {
+        let mut s = MemStalls::default();
+        if let DramMem::CycleAccurate(c) = &engine.dram {
+            s.dram_precharge_ns = c.precharge_stall_ns;
+            s.dram_faw_ns = c.faw_stall_ns;
+            s.dram_refresh_ns = c.refresh_stall_ns;
+            s.dram_activations = c.activations;
+            s.dram_row_conflicts = c.row_conflicts;
+        }
+        if let RramMem::CycleAccurate(c) = &engine.rram {
+            s.rram_pulse_ns = c.pulse_stall_ns;
+            s.rram_verify_ns = c.verify_ns;
+            s.rram_remap_ns = c.remap_stall_ns;
+            s.rram_remaps = c.remaps;
+        }
+        s
+    }
+
+    /// Component-wise difference (`self` is the later snapshot).
+    pub fn minus(&self, earlier: &MemStalls) -> MemStalls {
+        MemStalls {
+            dram_precharge_ns: self.dram_precharge_ns - earlier.dram_precharge_ns,
+            dram_faw_ns: self.dram_faw_ns - earlier.dram_faw_ns,
+            dram_refresh_ns: self.dram_refresh_ns - earlier.dram_refresh_ns,
+            dram_activations: self.dram_activations - earlier.dram_activations,
+            dram_row_conflicts: self.dram_row_conflicts - earlier.dram_row_conflicts,
+            rram_pulse_ns: self.rram_pulse_ns - earlier.rram_pulse_ns,
+            rram_verify_ns: self.rram_verify_ns - earlier.rram_verify_ns,
+            rram_remap_ns: self.rram_remap_ns - earlier.rram_remap_ns,
+            rram_remaps: self.rram_remaps - earlier.rram_remaps,
+        }
+    }
+
+    /// Component-wise sum (aggregation over packages).
+    pub fn accumulate(&mut self, other: &MemStalls) {
+        self.dram_precharge_ns += other.dram_precharge_ns;
+        self.dram_faw_ns += other.dram_faw_ns;
+        self.dram_refresh_ns += other.dram_refresh_ns;
+        self.dram_activations += other.dram_activations;
+        self.dram_row_conflicts += other.dram_row_conflicts;
+        self.rram_pulse_ns += other.rram_pulse_ns;
+        self.rram_verify_ns += other.rram_verify_ns;
+        self.rram_remap_ns += other.rram_remap_ns;
+        self.rram_remaps += other.rram_remaps;
+    }
+
+    /// Whether any stall-cause counter is non-zero.
+    pub fn any(&self) -> bool {
+        *self != MemStalls::default()
+    }
+}
+
+/// Emit the DRAM/RRAM stall-cause instants for one traced region, if any
+/// cause advanced (first-order fidelity records nothing).
+pub fn trace_stalls(tracer: &mut Tracer, pid: usize, ts_ns: f64, delta: &MemStalls) {
+    let dram_any = delta.dram_precharge_ns > 0.0
+        || delta.dram_faw_ns > 0.0
+        || delta.dram_refresh_ns > 0.0;
+    if dram_any {
+        tracer.instant(
+            pid,
+            Track::Dram,
+            "dram_stall",
+            ts_ns,
+            vec![
+                ("precharge_ns", delta.dram_precharge_ns.into()),
+                ("tfaw_ns", delta.dram_faw_ns.into()),
+                ("refresh_ns", delta.dram_refresh_ns.into()),
+                ("row_conflicts", (delta.dram_row_conflicts as f64).into()),
+            ],
+        );
+    }
+    let rram_any =
+        delta.rram_pulse_ns > 0.0 || delta.rram_verify_ns > 0.0 || delta.rram_remap_ns > 0.0;
+    if rram_any {
+        tracer.instant(
+            pid,
+            Track::Rram,
+            "rram_stall",
+            ts_ns,
+            vec![
+                ("pulse_ns", delta.rram_pulse_ns.into()),
+                ("verify_ns", delta.rram_verify_ns.into()),
+                ("remap_ns", delta.rram_remap_ns.into()),
+                ("remaps", (delta.rram_remaps as f64).into()),
+            ],
+        );
+    }
+}
+
+/// Per-link fabric telemetry, flattened for export.
+#[derive(Debug, Clone)]
+pub struct LinkTelemetry {
+    /// Canonical link label (see [`link_label`]).
+    pub link: String,
+    /// Total payload bytes that crossed the link.
+    pub bytes: u64,
+    /// Transfers that crossed the link.
+    pub transfers: u64,
+    /// Total wire-serialization time, ns.
+    pub busy_ns: f64,
+    /// Peak sustained bandwidth over any tick window, GB/s.
+    pub peak_gbps: f64,
+}
+
+/// Live engine-side telemetry a serving protocol can expose mid-run
+/// (fabric links + memory stall totals), rendered by the net server's
+/// Prometheus endpoint.
+#[derive(Debug, Clone, Default)]
+pub struct EngineTelemetry {
+    /// Per-link fabric counters, in canonical link order.
+    pub links: Vec<LinkTelemetry>,
+    /// Memory stall-cause totals summed over packages.
+    pub stalls: MemStalls,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{TopologyKind, UcieConfig};
+    use crate::sim::fabric::Endpoint;
+
+    #[test]
+    fn disabled_tracer_paths_cost_nothing_and_record_nothing() {
+        let t = Tracer::new();
+        assert!(t.is_empty());
+        assert!(!t.profiling());
+        assert!(t.wall_start().is_none(), "no OS clock without profiling");
+    }
+
+    #[test]
+    fn spans_and_instants_record_in_order() {
+        let mut t = Tracer::new();
+        t.span(0, Track::Coordinator, "package_step", 10.0, 30.0, vec![("slots", 2.0.into())]);
+        t.instant(0, Track::Serving, "admitted", 12.0, vec![("id", 7.0.into())]);
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.records()[0].dur_ns, Some(20.0));
+        assert_eq!(t.records()[1].dur_ns, None);
+        assert_eq!(t.records()[1].name, "admitted");
+    }
+
+    #[test]
+    fn fresh_keeps_the_mode_and_drops_the_records() {
+        let mut t = Tracer::with_profiling();
+        t.instant(0, Track::Serving, "x", 0.0, vec![]);
+        let f = t.fresh();
+        assert!(f.is_empty());
+        assert!(f.profiling());
+    }
+
+    #[test]
+    fn profiling_aggregates_wall_time_per_span_class() {
+        let mut t = Tracer::with_profiling();
+        for _ in 0..3 {
+            let w = t.wall_start();
+            assert!(w.is_some());
+            t.wall_end("tick", w);
+        }
+        let (count, wall_ns) = t.profile_entries()["tick"];
+        assert_eq!(count, 3);
+        assert!(wall_ns >= 0.0);
+    }
+
+    #[test]
+    fn link_deltas_report_only_links_that_moved() {
+        let mut f = Fabric::new(UcieConfig::default(), TopologyKind::Line, 4, 0);
+        let before = link_snapshot(&f);
+        let d = f.transfer(Endpoint::dram(0), Endpoint::dram(2), 1000);
+        assert_eq!(d.hops, 2);
+        let deltas = link_deltas(&f, &before);
+        assert_eq!(deltas.len(), 2, "two line hops moved");
+        assert!(deltas.iter().all(|&(_, bytes, transfers)| bytes == 1000 && transfers == 1));
+        let labels: Vec<String> = deltas.iter().map(|(l, _, _)| link_label(l)).collect();
+        assert_eq!(labels, vec!["inter0-1".to_string(), "inter1-2".to_string()]);
+    }
+
+    #[test]
+    fn mem_stalls_delta_and_accumulate_are_componentwise() {
+        let a = MemStalls { dram_refresh_ns: 10.0, rram_remaps: 3, ..MemStalls::default() };
+        let b = MemStalls { dram_refresh_ns: 4.0, rram_remaps: 1, ..MemStalls::default() };
+        let d = a.minus(&b);
+        assert_eq!(d.dram_refresh_ns, 6.0);
+        assert_eq!(d.rram_remaps, 2);
+        assert!(d.any());
+        assert!(!MemStalls::default().any());
+        let mut sum = b;
+        sum.accumulate(&d);
+        assert_eq!(sum, a);
+    }
+
+    #[test]
+    fn stall_instants_only_fire_when_a_cause_advanced() {
+        let mut t = Tracer::new();
+        trace_stalls(&mut t, 0, 5.0, &MemStalls::default());
+        assert!(t.is_empty(), "first-order fidelity records nothing");
+        let d = MemStalls { dram_faw_ns: 1.0, rram_verify_ns: 2.0, ..MemStalls::default() };
+        trace_stalls(&mut t, 0, 5.0, &d);
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.records()[0].track, Track::Dram);
+        assert_eq!(t.records()[1].track, Track::Rram);
+    }
+}

@@ -1,0 +1,125 @@
+//! Prometheus text exposition (format version 0.0.4): the `# HELP` /
+//! `# TYPE` / sample-line format `GET /v1/metrics?format=prometheus`
+//! serves on the net server.
+//!
+//! Naming conventions (DESIGN.md §14): every series is prefixed
+//! `chime_`, counters end in `_total`, times are exported in seconds
+//! (`_seconds_total`), and label values are escaped per the exposition
+//! spec. Every exported value is **finite by policy** — non-finite
+//! inputs are clamped to 0 so a scrape can never see `NaN` (the
+//! `ServingMetrics` rate helpers uphold the same policy at the source).
+
+/// Incremental builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+/// Render a sample value: integers without a fraction, non-finite
+/// clamped to 0 (see module policy).
+fn fmt_value(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+impl PromText {
+    /// An empty document.
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Write the `# HELP` / `# TYPE` header for a metric family.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Write one sample line, with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {}\n", fmt_value(value)));
+    }
+
+    /// Header + single unlabeled sample: a simple counter.
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, &[], value);
+    }
+
+    /// Header + single unlabeled sample: a simple gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// The finished exposition text.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_the_exposition_shape() {
+        let mut p = PromText::new();
+        p.counter("chime_tokens_total", "Tokens generated.", 42.0);
+        p.gauge("chime_tokens_per_s", "Serving throughput.", 1.5);
+        let text = p.render();
+        assert!(text.contains("# HELP chime_tokens_total Tokens generated.\n"));
+        assert!(text.contains("# TYPE chime_tokens_total counter\n"));
+        assert!(text.contains("\nchime_tokens_total 42\n"));
+        assert!(text.contains("# TYPE chime_tokens_per_s gauge\n"));
+        assert!(text.contains("\nchime_tokens_per_s 1.5\n"));
+        assert!(text.ends_with('\n'), "exposition must end with a newline");
+    }
+
+    #[test]
+    fn labeled_series_group_under_one_header() {
+        let mut p = PromText::new();
+        p.header("chime_fabric_link_bytes_total", "Payload bytes per link.", "counter");
+        p.sample("chime_fabric_link_bytes_total", &[("link", "local0")], 100.0);
+        p.sample("chime_fabric_link_bytes_total", &[("link", "inter0-1")], 250.0);
+        let text = p.render();
+        assert_eq!(text.matches("# TYPE").count(), 1);
+        assert!(text.contains("chime_fabric_link_bytes_total{link=\"local0\"} 100\n"));
+        assert!(text.contains("chime_fabric_link_bytes_total{link=\"inter0-1\"} 250\n"));
+    }
+
+    #[test]
+    fn values_are_always_finite_and_integers_stay_integral() {
+        assert_eq!(fmt_value(f64::NAN), "0");
+        assert_eq!(fmt_value(f64::INFINITY), "0");
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(0.25), "0.25");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = PromText::new();
+        p.sample("m", &[("l", "a\"b\\c")], 1.0);
+        assert_eq!(p.render(), "m{l=\"a\\\"b\\\\c\"} 1\n");
+    }
+}

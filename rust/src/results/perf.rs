@@ -27,8 +27,9 @@ use crate::util::{table, Json, Table};
 
 use super::Experiment;
 
-/// PR number stamped into the snapshot (`BENCH_008.json`).
-pub const PR: usize = 8;
+/// PR number stamped into the snapshots (`BENCH_009.json`,
+/// `HOTPATH_009.json`).
+pub const PR: usize = 9;
 
 /// The backend variants the matrix sweeps. `Sharded4Par` is the same
 /// deployment as `Sharded4` with [`ShardedServer::set_parallel`] on —
@@ -264,6 +265,83 @@ pub fn run() -> Experiment {
     run_with(&BenchConfig::paper())
 }
 
+/// `chime bench --profile`: self-profile the serving hot path and report
+/// host wall time per instrumented span class (tick / submit /
+/// steal_pass). Runs the sharded deployment — work stealing on, so every
+/// class is exercised — over the sweep's models at both fidelities with
+/// the observability profiler enabled, and aggregates the per-class
+/// wall-clock totals into the `HOTPATH_<pr>.json` baseline (ROADMAP
+/// item 4). Wall times are machine-dependent; calls-per-class are
+/// deterministic for a fixed config.
+pub fn profile_with(bc: &BenchConfig) -> Experiment {
+    let mut totals: std::collections::BTreeMap<&'static str, (u64, f64)> =
+        std::collections::BTreeMap::new();
+    for m in &bc.models {
+        for fidelity in [MemoryFidelity::FirstOrder, MemoryFidelity::CycleAccurate] {
+            let mut cfg = ChimeConfig::default();
+            cfg.workload.output_tokens = bc.tokens;
+            cfg.hardware.memory_fidelity = fidelity;
+            let policy = BatchPolicy { max_batch: 2, queue_capacity: bc.requests.max(1) };
+            let mut srv = BenchBackend::Sharded4.build(m, &cfg, &policy);
+            srv.set_work_stealing(true);
+            srv.set_profiling(true);
+            for _ in 0..bc.iters.max(1) {
+                let out = srv.serve(burst_requests(bc.requests, bc.tokens));
+                assert!(out.shed.is_empty(), "profile burst must fit the queue capacity");
+            }
+            let tracer = srv.take_trace().expect("profiling installs a tracer");
+            for (&class, &(calls, wall_ns)) in tracer.profile_entries() {
+                let e = totals.entry(class).or_insert((0, 0.0));
+                e.0 += calls;
+                e.1 += wall_ns;
+            }
+        }
+    }
+    let grand_total_ns: f64 = totals.values().map(|&(_, ns)| ns).sum();
+    let mut t = Table::new(
+        "Bench — serving hot-path profile (wall clock per span class, machine-dependent)",
+        &["span class", "calls", "wall (ms)", "mean (us)", "share"],
+    );
+    let mut rows = Vec::new();
+    for (&class, &(calls, wall_ns)) in &totals {
+        let mean_ns = if calls > 0 { wall_ns / calls as f64 } else { 0.0 };
+        let share = if grand_total_ns > 0.0 { wall_ns / grand_total_ns } else { 0.0 };
+        t.row(vec![
+            class.to_string(),
+            calls.to_string(),
+            table::f(wall_ns / 1e6, 3),
+            table::f(mean_ns / 1e3, 2),
+            format!("{:.1}%", share * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("class", class.into()),
+            ("calls", (calls as i64).into()),
+            ("wall_ns", wall_ns.into()),
+            ("mean_ns", mean_ns.into()),
+            ("share", share.into()),
+        ]));
+    }
+    let json = Json::obj(vec![
+        ("bench", "chime serving hot-path profile".into()),
+        ("pr", PR.into()),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", bc.requests.into()),
+                ("tokens_per_request", bc.tokens.into()),
+                ("iters", bc.iters.into()),
+                (
+                    "models",
+                    Json::Arr(bc.models.iter().map(|m| m.name.as_str().into()).collect()),
+                ),
+            ]),
+        ),
+        ("total_wall_ns", grand_total_ns.into()),
+        ("spans", Json::Arr(rows)),
+    ]);
+    Experiment { id: "hotpath", text: t.render(), json }
+}
+
 pub fn run_with(bc: &BenchConfig) -> Experiment {
     let points = compute(bc);
     let mut t = Table::new(
@@ -322,8 +400,29 @@ mod tests {
         let bc = BenchConfig::quick();
         let pts = compute(&bc);
         let s = snapshot_json(&pts, &bc).pretty();
-        assert!(s.contains("\"pr\": 6"));
+        assert!(s.contains(&format!("\"pr\": {PR}")));
         assert!(s.contains("\"events_per_wall_s\""));
         assert!(s.contains("\"sharded4-par\""));
+    }
+
+    #[test]
+    fn profile_reports_wall_time_per_span_class() {
+        let e = profile_with(&BenchConfig::quick());
+        let spans = e.json.get("spans").as_arr().unwrap().clone();
+        assert!(!spans.is_empty(), "profiled run must record span classes");
+        let classes: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("class").as_str()).collect();
+        for required in ["tick", "submit"] {
+            assert!(classes.contains(&required), "missing class {required:?} in {classes:?}");
+        }
+        let mut share_sum = 0.0;
+        for s in &spans {
+            assert!(s.get("calls").as_i64().unwrap() > 0);
+            assert!(s.get("wall_ns").as_f64().unwrap() >= 0.0);
+            share_sum += s.get("share").as_f64().unwrap();
+        }
+        assert!((share_sum - 1.0).abs() < 1e-9, "shares must sum to 1, got {share_sum}");
+        assert!(e.json.pretty().contains(&format!("\"pr\": {PR}")));
+        assert!(e.text.contains("span class"));
     }
 }

@@ -113,6 +113,8 @@ pub struct CycleDramState {
     pub refresh_stall_ns: f64,
     /// Diagnostics: total tFAW stall time (ns).
     pub faw_stall_ns: f64,
+    /// Diagnostics: total precharge (row-conflict) stall time (ns).
+    pub precharge_stall_ns: f64,
     /// Diagnostics: whole-row activations issued.
     pub activations: u64,
     /// Diagnostics: row conflicts (precharge-before-activate events).
@@ -130,6 +132,7 @@ impl CycleDramState {
             refresh_debt_ns: 0.0,
             refresh_stall_ns: 0.0,
             faw_stall_ns: 0.0,
+            precharge_stall_ns: 0.0,
             activations: 0,
             row_conflicts: 0,
         }
@@ -210,6 +213,7 @@ impl CycleDramState {
         self.row_conflicts += conflicts;
         self.faw_stall_ns += faw_ns;
         self.refresh_stall_ns += refresh_ns;
+        self.precharge_stall_ns += conflict_ns;
         quant_ns + conflict_ns + lead_ns + faw_ns + refresh_ns
     }
 
@@ -360,6 +364,10 @@ mod tests {
         // ...while an interleaved KV stream on the same tier precharges them.
         cy.kv_stream_ns(&[(0, 10_000_000)]);
         assert!(cy.row_conflicts > before, "tag switch must conflict");
+        assert!(
+            cy.precharge_stall_ns > 0.0,
+            "conflicts must show up in the precharge stall diagnostic"
+        );
     }
 
     #[test]

@@ -76,6 +76,10 @@ pub struct CycleRramState {
     pub remaps: u64,
     /// Diagnostics: total sense-amp occupancy stall (ns).
     pub pulse_stall_ns: f64,
+    /// Diagnostics: total SET/RESET verify-pulse time (ns).
+    pub verify_ns: f64,
+    /// Diagnostics: total remap bookkeeping stall (ns).
+    pub remap_stall_ns: f64,
 }
 
 impl CycleRramState {
@@ -91,6 +95,8 @@ impl CycleRramState {
             region_writes: vec![0; regions],
             remaps: 0,
             pulse_stall_ns: 0.0,
+            verify_ns: 0.0,
+            remap_stall_ns: 0.0,
         }
     }
 
@@ -158,6 +164,12 @@ impl CycleRramState {
         }
         self.remaps += remaps;
         self.pulse_stall_ns += stall;
+        // Diagnostics only: attribute the verify share of the pulse train
+        // and the remap bookkeeping latency to their causes (the returned
+        // time is unchanged — these never feed back into timing).
+        self.verify_ns +=
+            pulses * self.base.cfg.write_latency_ns * self.timing.verify_frac / self.timing.mat_groups;
+        self.remap_stall_ns += remaps as f64 * self.timing.remap_ns;
         stall + lead + remaps as f64 * self.timing.remap_ns
     }
 
@@ -296,5 +308,8 @@ mod tests {
         let cy_t = cy.offload_kv(4 << 20);
         assert_eq!(cy.remaps, 4);
         assert!(cy_t >= fo_t + 4.0 * cy.timing.remap_ns - 1e-9);
+        // The stall-cause diagnostics attribute the same events.
+        assert_eq!(cy.remap_stall_ns, 4.0 * cy.timing.remap_ns);
+        assert!(cy.verify_ns > 0.0, "writes must log verify-pulse time");
     }
 }

@@ -459,6 +459,101 @@ fn loadgen_dead_target_exits_1_as_runtime_error() {
 }
 
 #[test]
+fn observability_value_flags_reject_valueless_spellings() {
+    // --trace-out / --profile / --json (loadgen) are value flags: the
+    // value-less spelling is a usage error naming the expected value,
+    // caught before any work (or any socket) happens.
+    for argv in [
+        ["simulate", "--model", "tiny", "--trace-out"].as_slice(),
+        ["serve", "--requests", "1", "--trace-out"].as_slice(),
+        ["serve", "--listen", "127.0.0.1:0", "--trace-out"].as_slice(),
+        ["bench", "--quick", "--profile"].as_slice(),
+        ["loadgen", "--target", "127.0.0.1:80", "--json"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("expects a file path"), "{argv:?}: {err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+}
+
+#[test]
+fn observability_flag_typos_exit_2_with_suggestion() {
+    let Some(out) = run_chime(&["simulate", "--model", "tiny", "--trace-ouy", "t.json"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("--trace-ouy"), "must name the bad flag:\n{err}");
+    assert!(err.contains("did you mean --trace-out?"), "must suggest the fix:\n{err}");
+
+    let Some(out) = run_chime(&["bench", "--quick", "--profle", "h.json"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("did you mean --profile?"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn trace_out_usage_conflicts_exit_2() {
+    // --trace-out records one model's run: it conflicts with --all.
+    let Some(out) = run_chime(&["simulate", "--all", "--trace-out", "t.json"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("single --model"), "{}", stderr_of(&out));
+    // Backends without a simulator record no trace: rejected, not an
+    // empty file.
+    let Some(out) =
+        run_chime(&["serve", "--backend", "jetson", "--trace-out", "t.json", "--requests", "1"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("records no trace"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn unwritable_trace_out_exits_1_as_runtime_error() {
+    // The command line is fine; the filesystem refuses. Runtime failure
+    // (exit 1), after the simulation itself succeeded.
+    let Some(out) = run_chime(&[
+        "simulate", "--model", "tiny", "--out", "4", "--text", "8",
+        "--trace-out", "/nonexistent-chime-dir/trace.json",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(1), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("writing trace"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn trace_out_simulate_writes_a_chrome_trace() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cli_errors_simulate_trace.json");
+    let Some(out) = run_chime(&[
+        "simulate", "--model", "tiny", "--out", "4", "--text", "8", "--memory", "cycle",
+        "--trace-out", path.to_str().unwrap(),
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("wrote trace"), "{:?}", out.stdout);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(text.contains("\"traceEvents\""), "{text}");
+    assert!(text.contains("\"process_name\""), "{text}");
+    // The inference phases land on the coordinator track.
+    assert!(text.contains("\"decode\""), "{text}");
+}
+
+#[test]
 fn happy_paths_still_exit_0() {
     let Some(out) = run_chime(&["info", "--models"]) else {
         return;

@@ -287,6 +287,97 @@ fn metrics_reports_server_config_and_counts() {
 }
 
 #[test]
+fn prometheus_exposition_reconciles_with_the_finish_outcome() {
+    // ISSUE 9 acceptance: the counters scraped from
+    // `GET /v1/metrics?format=prometheus` must reconcile with the
+    // `/v1/finish` ServeOutcome — same requests, same tokens.
+    let server = spawn(BackendKind::Sharded, 2, true);
+    let addr = server.addr();
+
+    // Before any traffic: a well-formed exposition with zeroed counters
+    // and the serving state flagged active.
+    let (status, prom) = call(addr, "GET", "/v1/metrics?format=prometheus", None);
+    assert_eq!(status, 200);
+    assert!(prom.contains("# TYPE chime_requests_submitted_total counter"), "{prom}");
+    assert!(prom.contains("chime_requests_submitted_total 0\n"), "{prom}");
+    assert!(prom.contains("chime_server_state{state=\"serving\"} 1\n"), "{prom}");
+    assert!(prom.ends_with('\n'), "exposition must end with a newline");
+
+    submit_fixture(addr);
+    let (status, wire) = call(addr, "POST", "/v1/finish", None);
+    assert_eq!(status, 200, "{wire}");
+    let outcome = Json::parse(&wire).unwrap();
+    let completed = outcome.get("metrics").get("completed").as_i64().unwrap();
+    let tokens = outcome.get("metrics").get("tokens").as_i64().unwrap();
+    let expected_tokens: usize = FIXTURE.iter().map(|&(_, t, _)| t).sum();
+    assert_eq!(completed as usize, FIXTURE.len());
+    assert_eq!(tokens as usize, expected_tokens);
+
+    let (status, prom) = call(addr, "GET", "/v1/metrics?format=prometheus", None);
+    assert_eq!(status, 200);
+    for needle in [
+        format!("chime_requests_submitted_total {}\n", FIXTURE.len()),
+        format!("chime_requests_admitted_total {completed}\n"),
+        format!("chime_requests_completed_total {completed}\n"),
+        format!("chime_requests_rejected_total 0\n"),
+        format!("chime_tokens_total {tokens}\n"),
+        "chime_server_state{state=\"finished\"} 1\n".to_string(),
+        "chime_server_state{state=\"serving\"} 0\n".to_string(),
+    ] {
+        assert!(prom.contains(&needle), "missing {needle:?} in:\n{prom}");
+    }
+
+    // JSON stays the default (and the explicit spelling), unknown
+    // formats are a 400 naming the accepted ones.
+    let (status, body) = call(addr, "GET", "/v1/metrics", None);
+    assert_eq!(status, 200);
+    assert!(Json::parse(&body).is_ok(), "default stays JSON: {body}");
+    let (status, body) = call(addr, "GET", "/v1/metrics?format=json", None);
+    assert_eq!(status, 200);
+    assert!(Json::parse(&body).is_ok(), "{body}");
+    let (status, body) = call(addr, "GET", "/v1/metrics?format=xml", None);
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("prometheus"), "400 must name the accepted formats: {body}");
+    shutdown_and_join(server);
+}
+
+#[test]
+fn serve_trace_out_writes_a_deterministic_chrome_trace() {
+    // ServeOpts::trace_out: the engine thread records the served session
+    // and writes Chrome trace-event JSON at drain. Same fixture, same
+    // seed -> byte-identical file (golden determinism).
+    let dir = std::env::temp_dir();
+    let run = |name: &str| -> String {
+        let path = dir.join(name);
+        let opts = ServeOpts {
+            deterministic: true,
+            trace_out: Some(path.clone()),
+            ..ServeOpts::default()
+        };
+        let server =
+            NetServer::spawn("127.0.0.1:0", move || make_session(BackendKind::Sharded, 2), opts)
+                .expect("loopback ephemeral listener must come up");
+        let addr = server.addr();
+        submit_fixture(addr);
+        let (status, _) = call(addr, "POST", "/v1/finish", None);
+        assert_eq!(status, 200);
+        shutdown_and_join(server);
+        let text = std::fs::read_to_string(&path).expect("trace file must exist after join");
+        let _ = std::fs::remove_file(&path);
+        text
+    };
+    let (a, b) = (run("chime_net_trace_a.json"), run("chime_net_trace_b.json"));
+    let json = Json::parse(&a).expect("trace must be valid JSON");
+    let events = json.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty(), "a served session must record events");
+    // Perfetto-relevant shape: metadata names the processes/tracks, and
+    // the serving instants are present.
+    assert!(a.contains("\"process_name\""), "{a}");
+    assert!(a.contains("\"completed\""), "{a}");
+    assert_eq!(a, b, "same fixture, byte-identical trace export");
+}
+
+#[test]
 fn loadgen_drives_a_live_server_end_to_end() {
     let server = spawn(BackendKind::Sim, 1, false);
     let cfg = LoadgenConfig {

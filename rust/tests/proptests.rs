@@ -1061,6 +1061,134 @@ fn prop_arrival_spec_round_trips() {
 }
 
 #[test]
+fn prop_trace_spans_are_well_nested_and_conserving() {
+    // Observability invariants (DESIGN.md §14), per random traced serving
+    // case over topology kinds, package counts, queue policies, and both
+    // steal modes:
+    // (1) well-nestedness — spans on each (package, track) timeline are
+    //     sequential, non-overlapping virtual intervals with monotone
+    //     start times, and every timestamp/duration is finite and >= 0;
+    // (2) mirroring — the Serving track carries exactly one instant per
+    //     streamed ServeEvent, kind for kind;
+    // (3) conservation — Σ `fabric_leg` bytes in the trace args, grouped
+    //     by link label, equals the per-link fabric byte counters exactly.
+    use chime::config::{ChimeConfig, TopologyKind, WorkloadConfig};
+    use chime::coordinator::{BatchPolicy, RoutePolicy, ServeRequest, ShardedServer};
+    use chime::obs::{link_label, Track};
+    use std::collections::BTreeMap;
+
+    let model = MllmConfig::tiny();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+
+    check("trace well-nestedness + conservation", |prng| {
+        let packages = prng.range(1, 4);
+        cfg.hardware.topology.kind = *prng.choice(&TopologyKind::ALL);
+        let route = if prng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+        let policy = BatchPolicy {
+            max_batch: prng.range(1, 4),
+            queue_capacity: prng.range(1, 10),
+        };
+        let n = prng.range(1, 10);
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: prng.range(0, 6),
+                arrival_ns: prng.uniform(0.0, 5e8),
+            })
+            .collect();
+        let mut srv = ShardedServer::new(&model, &cfg, policy, packages, route);
+        srv.set_work_stealing(prng.bool());
+        srv.set_tracing(true);
+        let mut session = srv.open_serving();
+        let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+        for r in requests {
+            for ev in session.submit(r) {
+                *kinds.entry(ev.kind().to_string()).or_default() += 1;
+            }
+        }
+        for ev in session.drain() {
+            *kinds.entry(ev.kind().to_string()).or_default() += 1;
+        }
+        let out = session.finish();
+        if out.responses.len() + out.shed.len() != n {
+            return Err("traced drain lost requests".into());
+        }
+        let trace = srv.take_trace().expect("tracing was on");
+
+        // (1) spans per (pid, track) timeline are monotone and disjoint.
+        let mut cursor: BTreeMap<(usize, Track), f64> = BTreeMap::new();
+        for r in trace.records() {
+            if !r.start_ns.is_finite() || r.start_ns < 0.0 {
+                return Err(format!("record {:?} has a bad start {}", r.name, r.start_ns));
+            }
+            let Some(dur) = r.dur_ns else { continue };
+            if !dur.is_finite() || dur < 0.0 {
+                return Err(format!("span {:?} has a bad duration {dur}", r.name));
+            }
+            let open = cursor.entry((r.pid, r.track)).or_insert(0.0);
+            if r.start_ns < *open {
+                return Err(format!(
+                    "span {:?} on pid {} track {:?} starts at {} inside the previous \
+                     span (open until {})",
+                    r.name, r.pid, r.track, r.start_ns, open
+                ));
+            }
+            *open = r.start_ns + dur;
+        }
+
+        // (2) one Serving-track instant per streamed protocol event.
+        let mut traced_kinds: BTreeMap<String, usize> = BTreeMap::new();
+        for r in trace.records() {
+            if r.track == Track::Serving {
+                *traced_kinds.entry(r.name.to_string()).or_default() += 1;
+            }
+        }
+        if traced_kinds != kinds {
+            return Err(format!(
+                "serving instants {traced_kinds:?} != event stream {kinds:?}"
+            ));
+        }
+
+        // (3) Σ fabric-leg bytes per link == the fabric link counters.
+        let mut legs: BTreeMap<String, u64> = BTreeMap::new();
+        for r in trace.records() {
+            if r.name != "fabric_leg" {
+                continue;
+            }
+            let link = r
+                .args
+                .iter()
+                .find(|(k, _)| *k == "link")
+                .and_then(|(_, v)| v.as_str())
+                .ok_or_else(|| "fabric_leg instant without a link label".to_string())?
+                .to_string();
+            let bytes = r
+                .args
+                .iter()
+                .find(|(k, _)| *k == "bytes")
+                .and_then(|(_, v)| v.as_f64())
+                .ok_or_else(|| "fabric_leg instant without a byte count".to_string())?;
+            *legs.entry(link).or_default() += bytes as u64;
+        }
+        let counters: BTreeMap<String, u64> = srv
+            .fabric_links()
+            .iter()
+            .filter(|(_, s)| s.bytes > 0)
+            .map(|(l, s)| (link_label(l), s.bytes))
+            .collect();
+        if legs != counters {
+            return Err(format!(
+                "trace legs {legs:?} do not decompose the link counters {counters:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_prefill_cost_exceeds_single_decode_step() {
     check("prefill > decode step", |prng| {
         let llm = random_llm(prng);
