@@ -11,15 +11,16 @@
 #   make fabric      routed-fabric grid: steals + per-link peaks, pkgs x topologies
 #   make serve-smoke HTTP/SSE listener + loadgen round trip, 2 fidelities
 #   make trace-smoke record + sanity-check Chrome traces, 2 fidelities
+#   make exec-smoke  parallel executor: deterministic + wall-clock, 2 fidelities
 #   make bench-snapshot  write the simulator perf snapshot to BENCH_$(PR).json
 #   make hotpath-snapshot  write the serving hot-path profile to HOTPATH_$(PR).json
 #   make api-smoke   run every example through the chime::api::Session path
 #   make docs        build the public-API docs (missing docs denied on api)
 
 # PR number stamped into the snapshot filenames (results::perf::PR).
-PR := 009
+PR := 010
 
-.PHONY: artifacts build test pytest results golden memcheck tail fabric serve-smoke trace-smoke bench-snapshot hotpath-snapshot api-smoke docs
+.PHONY: artifacts build test pytest results golden memcheck tail fabric serve-smoke trace-smoke exec-smoke bench-snapshot hotpath-snapshot api-smoke docs
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -107,6 +108,22 @@ trace-smoke: build
 		grep -q '"traceEvents"' $$trace; \
 		grep -q '"fabric_leg"' $$trace; \
 		rm -f $$trace; \
+	done
+
+# Parallel executor smoke (DESIGN.md §15): the deterministic windowed
+# drain (--threads 4, outcome bit-identical to --threads 1 — the gate is
+# prop_exec_drain_is_bit_identical_to_sequential in `make test`) and the
+# free-running wall-clock executor (--wall, conservation-gated), at both
+# memory fidelities.
+exec-smoke: build
+	@set -e; cd rust; \
+	for mem in first-order cycle; do \
+		./target/release/chime serve --packages 4 --requests 8 --tokens 16 \
+			--arrival poisson:8 --model tiny --text 8 --out 4 \
+			--memory $$mem --threads 4; \
+		./target/release/chime serve --packages 4 --requests 8 --tokens 16 \
+			--arrival poisson:8 --model tiny --text 8 --out 4 \
+			--memory $$mem --threads 4 --wall; \
 	done
 
 # Simulator wall-clock benchmark (DESIGN.md §11): events/s and simulated

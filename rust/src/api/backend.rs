@@ -138,6 +138,25 @@ pub trait Backend {
         session.finish()
     }
 
+    /// Serve a request stream in free-running wall-clock mode on up to
+    /// `threads` executor worker threads (`chime serve --wall`,
+    /// DESIGN.md §15): host events/s scales with threads; the outcome
+    /// promises conservation (every offered request completed, rejected,
+    /// or shed exactly once), not bit-reproducibility.
+    ///
+    /// Provided as `Unsupported`: only the simulator-backed sharded
+    /// deployments have independent per-package engines to race.
+    fn serve_wall_clock(
+        &mut self,
+        _requests: Vec<ServeRequest>,
+        _threads: usize,
+    ) -> Result<crate::exec::WallReport, ChimeError> {
+        Err(ChimeError::Unsupported {
+            backend: self.name(),
+            what: "wall-clock parallel execution (sim/sharded/dram-only only)",
+        })
+    }
+
     /// Request sizing this backend dictates, when it does (the functional
     /// artifacts fix prompt length and vocabulary).
     fn request_profile(&self) -> Option<RequestProfile> {
@@ -311,6 +330,14 @@ impl Backend for SimulatedServer {
         Ok(ServingSession::new(Box::new(SimulatedServer::open_serving(self))))
     }
 
+    fn serve_wall_clock(
+        &mut self,
+        requests: Vec<ServeRequest>,
+        threads: usize,
+    ) -> Result<crate::exec::WallReport, ChimeError> {
+        Ok(SimulatedServer::serve_wall_clock(self, requests, threads))
+    }
+
     fn memory(&self) -> Option<MemoryView<'_>> {
         self.last_infer_memory().map(|(dram, rram)| MemoryView { dram, rram })
     }
@@ -351,6 +378,14 @@ impl Backend for ShardedServer {
 
     fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
         Ok(ServingSession::new(Box::new(ShardedServer::open_serving(self))))
+    }
+
+    fn serve_wall_clock(
+        &mut self,
+        requests: Vec<ServeRequest>,
+        threads: usize,
+    ) -> Result<crate::exec::WallReport, ChimeError> {
+        Ok(crate::exec::serve_wall_clock(self, requests, threads))
     }
 
     fn package_completed(&self) -> Option<Vec<u64>> {
@@ -431,6 +466,12 @@ impl DramOnlyBackend {
     pub fn set_work_stealing(&mut self, on: bool) {
         self.inner.set_work_stealing(on);
     }
+
+    /// Set the executor worker-thread count for serving drains
+    /// (forwarded to the underlying coordinator; DESIGN.md §15).
+    pub fn set_threads(&mut self, n: usize) {
+        self.inner.set_threads(n);
+    }
 }
 
 // Pure forwarding to `<ShardedServer as Backend>`: the dram-only
@@ -451,6 +492,14 @@ impl Backend for DramOnlyBackend {
 
     fn open_serving(&mut self) -> Result<ServingSession<'_>, ChimeError> {
         Backend::open_serving(&mut self.inner)
+    }
+
+    fn serve_wall_clock(
+        &mut self,
+        requests: Vec<ServeRequest>,
+        threads: usize,
+    ) -> Result<crate::exec::WallReport, ChimeError> {
+        Backend::serve_wall_clock(&mut self.inner, requests, threads)
     }
 
     fn package_completed(&self) -> Option<Vec<u64>> {

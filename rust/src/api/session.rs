@@ -53,6 +53,7 @@ pub struct SessionBuilder {
     route: RoutePolicy,
     batch: BatchPolicy,
     steal: bool,
+    threads: usize,
     memory: Option<MemoryFidelity>,
     topology: Option<TopologyKind>,
     config_file: Option<String>,
@@ -71,6 +72,7 @@ impl Default for SessionBuilder {
             route: RoutePolicy::RoundRobin,
             batch: BatchPolicy::default(),
             steal: false,
+            threads: 1,
             memory: None,
             topology: None,
             config_file: None,
@@ -139,6 +141,20 @@ impl SessionBuilder {
     /// elsewhere is a build error rather than a silent no-op.
     pub fn work_stealing(mut self, on: bool) -> Self {
         self.steal = on;
+        self
+    }
+
+    /// Executor worker threads for serving drains (default 1, the
+    /// classic single-thread event loop; `chime serve --threads N`,
+    /// DESIGN.md §15). With `n > 1` the simulator backends drain
+    /// arrival-free windows on up to `n` scoped worker threads — the
+    /// outcome stays bit-identical to the sequential path. Only
+    /// meaningful on the simulator backends (sim/sharded/dram-only);
+    /// requesting it elsewhere is a build error rather than a silent
+    /// no-op, and `0` is rejected (a zero-worker executor can never
+    /// drain).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
         self
     }
 
@@ -306,6 +322,29 @@ impl SessionBuilder {
                 "queue_capacity 0 can never admit a request".to_string(),
             ));
         }
+        if self.threads == 0 {
+            return Err(ChimeError::Invalid(
+                "threads 0 can never drain a session; the executor needs at least \
+                 one worker thread"
+                    .to_string(),
+            ));
+        }
+        // Executor threads drive the simulator event loop; a sequential
+        // single-stream backend has no event loop to parallelize, so a
+        // multi-thread request there is rejected rather than silently
+        // running single-threaded.
+        if self.threads > 1
+            && matches!(
+                self.backend,
+                BackendKind::Functional | BackendKind::Jetson | BackendKind::Facil
+            )
+        {
+            return Err(ChimeError::Invalid(format!(
+                "backend {} is a single sequential stream; threads > 1 applies \
+                 to the sim/sharded/dram-only backends",
+                self.backend.name()
+            )));
+        }
         // Work stealing moves queued work between sibling packages; on a
         // backend with no package dimension the knob would be silently
         // ignored, so it is rejected instead.
@@ -325,7 +364,9 @@ impl SessionBuilder {
                             .to_string(),
                     ));
                 }
-                Box::new(SimulatedServer::new(&model, &cfg, self.batch.clone()))
+                let mut srv = SimulatedServer::new(&model, &cfg, self.batch.clone());
+                srv.set_threads(self.threads);
+                Box::new(srv)
             }
             BackendKind::Sharded => {
                 let mut srv = ShardedServer::new(
@@ -336,6 +377,7 @@ impl SessionBuilder {
                     self.route,
                 );
                 srv.set_work_stealing(self.steal);
+                srv.set_threads(self.threads);
                 Box::new(srv)
             }
             BackendKind::DramOnly => {
@@ -347,6 +389,7 @@ impl SessionBuilder {
                     self.route,
                 );
                 srv.set_work_stealing(self.steal);
+                srv.set_threads(self.threads);
                 Box::new(srv)
             }
             BackendKind::Functional => {
@@ -360,7 +403,7 @@ impl SessionBuilder {
                 Box::new(FacilBackend::new(model.clone(), cfg.workload.clone()))
             }
         };
-        Ok(Session { model, cfg, backend })
+        Ok(Session { model, cfg, backend, threads: self.threads })
     }
 }
 
@@ -370,6 +413,7 @@ pub struct Session {
     model: MllmConfig,
     cfg: ChimeConfig,
     backend: Box<dyn Backend>,
+    threads: usize,
 }
 
 impl Session {
@@ -414,6 +458,12 @@ impl Session {
         self.backend.kind()
     }
 
+    /// Executor worker-thread count serving drains run on
+    /// ([`SessionBuilder::threads`]; 1 = the sequential event loop).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
     /// Run one VQA inference under the session's default workload.
     pub fn infer(&mut self) -> Result<InferenceStats, ChimeError> {
         let w = self.cfg.workload.clone();
@@ -430,6 +480,20 @@ impl Session {
     /// drain-everything wrapper over [`Session::open_serving`].)
     pub fn serve(&mut self, requests: Vec<ServeRequest>) -> Result<ServeOutcome, ChimeError> {
         self.backend.serve(requests)
+    }
+
+    /// Serve a request stream in free-running wall-clock mode on up to
+    /// `threads` executor worker threads (`chime serve --wall`,
+    /// DESIGN.md §15). Host events/s scales with threads; the outcome
+    /// promises conservation, not bit-reproducibility — use
+    /// [`Session::serve`] with [`SessionBuilder::threads`] for the
+    /// deterministic parallel path. Simulator backends only.
+    pub fn serve_wall_clock(
+        &mut self,
+        requests: Vec<ServeRequest>,
+        threads: usize,
+    ) -> Result<crate::exec::WallReport, ChimeError> {
+        self.backend.serve_wall_clock(requests, threads)
     }
 
     /// Open an event-driven streaming serving session on the backend:
@@ -849,6 +913,45 @@ mod tests {
                 .unwrap();
             let out = s.serve(ServeRequest::burst(4, 4)).unwrap();
             assert_eq!(out.responses.len(), 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn executor_threads_validate_and_stay_bit_identical() {
+        // 0 workers can never drain: typed usage error, exit 2.
+        let err = tiny_builder().threads(0).build().unwrap_err();
+        assert!(matches!(err, ChimeError::Invalid(_)), "{err:?}");
+        assert_eq!(err.exit_code(), 2);
+        // Sequential single-stream backends have no event loop to
+        // parallelize; threads > 1 there is a usage error, threads(1)
+        // (the default, nothing to ignore) is fine.
+        for kind in [BackendKind::Jetson, BackendKind::Facil, BackendKind::Functional] {
+            let err = Session::builder().backend(kind).threads(4).build().unwrap_err();
+            assert!(matches!(err, ChimeError::Invalid(_)), "{kind:?}: {err:?}");
+            assert_eq!(err.exit_code(), 2);
+            assert!(!matches!(
+                Session::builder().backend(kind).threads(1).build(),
+                Err(ChimeError::Invalid(_))
+            ));
+        }
+        // The deterministic contract end to end: a multi-thread sharded
+        // session serves bit-identically to the single-thread one.
+        let serve = |threads: usize| {
+            let mut s = tiny_builder()
+                .backend(BackendKind::Sharded)
+                .packages(2)
+                .route(RoutePolicy::LeastLoaded)
+                .threads(threads)
+                .build()
+                .unwrap();
+            s.serve(ServeRequest::burst(6, 4)).unwrap()
+        };
+        let (seq, par) = (serve(1), serve(4));
+        assert_eq!(seq.responses.len(), par.responses.len());
+        for (a, b) in seq.responses.iter().zip(&par.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
         }
     }
 

@@ -73,6 +73,22 @@ impl SimulatedServer {
         self.inner.last_infer_memory()
     }
 
+    /// Set the executor worker-thread count for serving drains
+    /// (forwarded to the sharded core; DESIGN.md §15).
+    pub fn set_threads(&mut self, n: usize) {
+        self.inner.set_threads(n);
+    }
+
+    /// Serve in free-running wall-clock mode on the parallel executor
+    /// (forwarded to the sharded core; DESIGN.md §15).
+    pub fn serve_wall_clock(
+        &mut self,
+        requests: Vec<ServeRequest>,
+        threads: usize,
+    ) -> crate::exec::WallReport {
+        crate::exec::serve_wall_clock(&mut self.inner, requests, threads)
+    }
+
     /// Enable/disable span tracing (forwarded to the sharded core).
     pub fn set_tracing(&mut self, on: bool) {
         self.inner.set_tracing(on);

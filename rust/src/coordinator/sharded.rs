@@ -112,7 +112,12 @@ struct ActiveRequest {
 
 /// One DRAM+RRAM machine pair: private plan replica, simulator state,
 /// admission queue, batcher, and virtual clock.
-struct PackageState {
+///
+/// Crate-visible so the wall-clock executor (`crate::exec`, DESIGN.md
+/// §15) can drive packages from its worker threads through the same
+/// `admit`/`step` methods the virtual-time loop uses; the fields stay
+/// private to this module.
+pub(crate) struct PackageState {
     plan: Plan,
     engine: SimEngine,
     /// §Perf: reusable decode schedule, patched per slot position.
@@ -172,7 +177,7 @@ impl PackageState {
     /// Global virtual time at which this package can next make progress:
     /// its clock while a batch is resident, else the arrival of the
     /// earliest queued request (an idle package fast-forwards to it).
-    fn next_event_ns(&self) -> f64 {
+    pub(crate) fn next_event_ns(&self) -> f64 {
         if self.batcher.active() > 0 {
             return self.clock_ns;
         }
@@ -184,13 +189,13 @@ impl PackageState {
 
     /// Outstanding decode tokens (batched + queued) — the least-loaded
     /// routing signal.
-    fn load_tokens(&self) -> usize {
+    pub(crate) fn load_tokens(&self) -> usize {
         self.batcher.outstanding_tokens() + self.queued_tokens
     }
 
     /// Try to admit a request; on backpressure the request is handed back
     /// to the caller (it is shed, not lost).
-    fn admit(&mut self, req: ServeRequest) -> Result<(), ServeRequest> {
+    pub(crate) fn admit(&mut self, req: ServeRequest) -> Result<(), ServeRequest> {
         let tokens = req.max_new_tokens;
         match self.queue.admit(req) {
             Ok(()) => {
@@ -231,7 +236,7 @@ impl PackageState {
     /// caused (DESIGN.md §14) — a read-only side channel: snapshots are
     /// taken before and after the exact same pricing code, so a traced
     /// tick prices identically to an untraced one.
-    fn step(&mut self, pkg: usize, tracer: Option<&mut Tracer>) -> Vec<ServeEvent> {
+    pub(crate) fn step(&mut self, pkg: usize, tracer: Option<&mut Tracer>) -> Vec<ServeEvent> {
         // An idle package fast-forwards its clock to the earliest arrival.
         if self.batcher.active() == 0 {
             if let Some(t) = self.queue.peek_arrival_ns() {
@@ -455,6 +460,12 @@ pub struct ShardedServer {
     /// Parallel per-package drain for the batch path (off by default;
     /// `set_parallel`). Bit-identical to sequential by construction.
     parallel: bool,
+    /// Executor worker threads for serving drains (`set_threads`,
+    /// DESIGN.md §15). 1 (the default) keeps the classic single-thread
+    /// event loop; >1 routes `ShardedSession::finish` through the
+    /// windowed thread-per-package executor drain — still bit-identical
+    /// to sequential by construction.
+    threads: usize,
     /// Resolved model/config kept for the `api::Backend` one-shot
     /// inference surface (`run_inference_with`).
     model: MllmConfig,
@@ -540,6 +551,7 @@ impl ShardedServer {
             steal: false,
             steal_fabric,
             parallel: false,
+            threads: 1,
             model: model.clone(),
             cfg: cfg.clone(),
             dram_only,
@@ -580,6 +592,29 @@ impl ShardedServer {
     /// Whether parallel per-package draining is enabled.
     pub fn parallel_enabled(&self) -> bool {
         self.parallel
+    }
+
+    /// Set the executor worker-thread count for serving drains
+    /// (`--threads N`, `Session::builder().threads(n)`; DESIGN.md §15).
+    /// With `n > 1` and stealing off, `ShardedSession::finish` drains
+    /// every arrival-free window of the event loop on up to `n` scoped
+    /// worker threads (one package chunk each) and merges the completion
+    /// streams back in exact sequential event-loop order, so the outcome
+    /// stays bit-identical to the single-thread path (locked by
+    /// `exec_drain_is_bit_identical_to_sequential` and
+    /// `prop_exec_drain_is_bit_identical_to_sequential`). With stealing
+    /// on — cross-package coupling at every event — the sequential loop
+    /// runs regardless, exactly like `set_parallel`. Panics on 0: a
+    /// zero-worker executor can never drain (the CLI and the session
+    /// builder reject it with a usage error first).
+    pub fn set_threads(&mut self, n: usize) {
+        assert!(n >= 1, "the executor needs at least one worker thread");
+        self.threads = n;
+    }
+
+    /// The configured executor worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Enable/disable span tracing for subsequent runs (`--trace-out`).
@@ -836,6 +871,20 @@ impl ShardedServer {
         }
     }
 
+    /// Crate-internal entry for the wall-clock executor
+    /// (`exec::serve_wall_clock`, DESIGN.md §15): reset the scheduling
+    /// state exactly like `open_serving` and hand the package array to
+    /// the worker threads. Hardware state (KV occupancy, endurance wear)
+    /// persists across sessions, as everywhere else.
+    pub(crate) fn begin_wall_session(&mut self) -> &mut [PackageState] {
+        for p in &mut self.packages {
+            p.reset_session();
+        }
+        self.steal_fabric.reset();
+        self.rr_next = 0;
+        &mut self.packages
+    }
+
     /// Serve a request stream in virtual time. Returns completions in
     /// global completion order, shed requests, and merged metrics.
     /// Request ids must be unique within one call (they key batch slots);
@@ -984,14 +1033,23 @@ impl ShardedSession<'_> {
     /// completion streams are merged back in sequential event-loop order
     /// — bit-identical to the sequential drain.
     pub fn finish(mut self) -> ServeOutcome {
-        // Tracing forces the sequential drain: the two are bit-identical
-        // on outcomes, but only the sequential loop threads the tracer
-        // through every step in deterministic order.
-        if self.srv.parallel
+        // The executor drain (threads > 1) subsumes the older tail-only
+        // parallel drain: it parallelizes every arrival-free window, not
+        // just the final one, and it threads per-worker tracers through
+        // the steps, so it runs under tracing too. Stealing couples the
+        // packages at every event — both parallel paths stand down and
+        // the sequential loop runs (bit-identity is then trivial).
+        if self.srv.threads > 1 && !self.srv.steal {
+            self.drain_exec();
+        } else if self.srv.parallel
             && !self.srv.steal
             && self.srv.tracer.is_none()
             && self.srv.packages.len() > 1
         {
+            // Tracing forces the sequential drain here: the two are
+            // bit-identical on outcomes, but only the sequential loop
+            // threads the one shared tracer through every step in
+            // deterministic order.
             self.drain_parallel();
         }
         self.drain();
@@ -1060,6 +1118,112 @@ impl ShardedSession<'_> {
         }
         for i in 0..self.srv.packages.len() {
             self.index.refresh(i, &self.srv.packages);
+        }
+    }
+
+    /// Executor drain (DESIGN.md §15): partition virtual time at the
+    /// pending arrival timestamps and run each arrival-free *window* on
+    /// up to `ShardedServer::threads` scoped worker threads, one package
+    /// chunk per worker. Within a window the packages are independent
+    /// simulators (stealing is off, and arrivals — the only cross-package
+    /// coupling, via routing and shared admission — sit exactly at the
+    /// window boundaries), so each package steps privately while its next
+    /// event starts *strictly before* the next arrival; the strict bound
+    /// mirrors `tick`'s arrival-first tie-break (`t_arr <= t_pkg`). The
+    /// collected tick streams merge by `(tick start, package, seq)` —
+    /// per-package tick times are non-decreasing, so the sort reproduces
+    /// the sequential loop's first-strict-minimum selection — and
+    /// `metrics.record` replays in that merge order (its float
+    /// accumulations are order-dependent; out-of-order replay would be
+    /// correct arithmetic but not bit-identical). The boundary arrival
+    /// itself is then processed by one ordinary sequential `tick`.
+    ///
+    /// Under tracing each worker records into a fresh per-worker
+    /// [`Tracer`]; the worker tracks merge deterministically into the
+    /// session tracer (`Tracer::merge_workers`) and the serving instants
+    /// replay in merge order, so a fixed request stream yields the same
+    /// trace for every worker count — though not the byte-same record
+    /// order as the sequential loop, which interleaves tick spans and
+    /// serving instants differently. Outcomes are bit-identical either
+    /// way (tracing is a bitwise no-op on every simulated number).
+    fn drain_exec(&mut self) {
+        let workers = self.srv.threads.min(self.srv.packages.len()).max(1);
+        loop {
+            let t_arr = self.pending.peek_arrival_ns().unwrap_or(f64::INFINITY);
+            let tracing = self.srv.tracer.is_some();
+            let n = self.srv.packages.len();
+            let chunk = n.div_ceil(workers);
+            // (tick start, package, per-package seq, tick events).
+            let mut ticks: Vec<(f64, usize, usize, Vec<ServeEvent>)> = Vec::new();
+            let mut worker_traces: Vec<Tracer> = Vec::new();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .srv
+                    .packages
+                    .chunks_mut(chunk)
+                    .enumerate()
+                    .map(|(w, slab)| {
+                        scope.spawn(move || {
+                            let mut tr = tracing.then(Tracer::new);
+                            let mut out = Vec::new();
+                            for (off, p) in slab.iter_mut().enumerate() {
+                                let pkg = w * chunk + off;
+                                let mut seq = 0usize;
+                                loop {
+                                    // Times are never NaN (module docs),
+                                    // so `>=` is the exact negation of
+                                    // the strict window bound.
+                                    let tick_ns = p.next_event_ns();
+                                    if tick_ns >= t_arr {
+                                        break;
+                                    }
+                                    let events = p.step(pkg, tr.as_mut());
+                                    if events.is_empty() {
+                                        // No progress (mirrors the
+                                        // sequential drain's stop).
+                                        break;
+                                    }
+                                    out.push((tick_ns, pkg, seq, events));
+                                    seq += 1;
+                                }
+                            }
+                            (out, tr)
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    let (out, tr) = h.join().expect("exec worker thread panicked");
+                    ticks.extend(out);
+                    if let Some(tr) = tr {
+                        worker_traces.push(tr);
+                    }
+                }
+            });
+            ticks.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+            if let Some(tr) = self.srv.tracer.as_mut() {
+                tr.merge_workers(worker_traces);
+            }
+            for (tick_ns, _pkg, _seq, events) in &ticks {
+                for ev in events {
+                    if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
+                        self.metrics.record(*arrival_ns, response);
+                        self.done.push((*arrival_ns, response.clone()));
+                    }
+                }
+                if let Some(tr) = self.srv.tracer.as_mut() {
+                    trace_serve_events(tr, events, *tick_ns);
+                }
+            }
+            for i in 0..self.srv.packages.len() {
+                self.index.refresh(i, &self.srv.packages);
+            }
+            if self.pending.peek_arrival_ns().is_none() {
+                return;
+            }
+            // Every package now sits at or past `t_arr`: the sequential
+            // tick processes exactly the boundary arrival (admission,
+            // routing, inline zero-token completion) in loop order.
+            self.tick();
         }
     }
 
@@ -1869,6 +2033,132 @@ mod tests {
             "order-dependent Welford summary must replay identically"
         );
         assert_eq!(seq.metrics.span_ns().to_bits(), par.metrics.span_ns().to_bits());
+    }
+
+    #[test]
+    fn exec_drain_is_bit_identical_to_sequential() {
+        // The windowed executor drain (threads > 1) parallelizes every
+        // arrival-free window under active mid-stream arrivals — not just
+        // the tail — and must still replay the completion stream in exact
+        // sequential event-loop order: every float in every response and
+        // in the merged metrics matches bitwise, for even and uneven
+        // package/worker chunkings alike.
+        let (model, cfg) = tiny_cfg();
+        let skew = [8usize, 1, 5, 0, 7, 2, 3, 6, 4, 1, 2, 8];
+        let run = |threads: usize| {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 64 },
+                4,
+                RoutePolicy::LeastLoaded,
+            );
+            srv.set_threads(threads);
+            let mut reqs = burst(&skew);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ns = i as f64 * 3e4;
+            }
+            srv.serve(reqs)
+        };
+        let seq = run(1);
+        for threads in [2, 3, 4, 7] {
+            let exec = run(threads);
+            assert_eq!(seq.responses.len(), exec.responses.len(), "threads {threads}");
+            for (a, b) in seq.responses.iter().zip(&exec.responses) {
+                assert_eq!(a.id, b.id, "threads {threads}");
+                assert_eq!(a.queue_ns.to_bits(), b.queue_ns.to_bits(), "threads {threads}");
+                assert_eq!(a.ttft_ns.to_bits(), b.ttft_ns.to_bits(), "threads {threads}");
+                assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits(), "threads {threads}");
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "threads {threads}");
+            }
+            assert_eq!(seq.metrics.completed, exec.metrics.completed);
+            assert_eq!(seq.metrics.tokens, exec.metrics.tokens);
+            assert_eq!(
+                seq.metrics.energy_j.to_bits(),
+                exec.metrics.energy_j.to_bits(),
+                "threads {threads}: order-dependent energy accumulation must replay identically"
+            );
+            assert_eq!(
+                seq.metrics.service.stddev().to_bits(),
+                exec.metrics.service.stddev().to_bits(),
+                "threads {threads}: order-dependent Welford summary must replay identically"
+            );
+            assert_eq!(seq.metrics.span_ns().to_bits(), exec.metrics.span_ns().to_bits());
+        }
+    }
+
+    #[test]
+    fn exec_drain_with_stealing_falls_back_to_the_sequential_loop() {
+        // Stealing couples the packages at every event, so the executor
+        // stands down and the sequential loop runs: threads must be a
+        // bitwise no-op on a stealing session (and steals must still
+        // fire, proving the path wasn't silently disabled).
+        let (model, cfg) = tiny_cfg();
+        let skew: Vec<usize> = (0..12).map(|i| if i % 2 == 0 { 32 } else { 1 }).collect();
+        let run = |threads: usize| {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 1024 },
+                3,
+                RoutePolicy::RoundRobin,
+            );
+            srv.set_work_stealing(true);
+            srv.set_threads(threads);
+            srv.serve(burst(&skew))
+        };
+        let (one, four) = (run(1), run(4));
+        assert!(one.metrics.steals > 0, "the skewed drain must steal");
+        assert_eq!(one.metrics.steals, four.metrics.steals);
+        assert_eq!(one.responses.len(), four.responses.len());
+        for (a, b) in one.responses.iter().zip(&four.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+        assert_eq!(one.metrics.energy_j.to_bits(), four.metrics.energy_j.to_bits());
+    }
+
+    #[test]
+    fn exec_drain_traces_deterministically_across_worker_counts() {
+        // Per-worker tracers merge by (start, pid, per-worker order) —
+        // keys that are invariant to how packages were chunked across
+        // workers — so a fixed stream must export the byte-same Chrome
+        // trace for every thread count, and tracing must stay a bitwise
+        // no-op on the outcome.
+        let (model, cfg) = tiny_cfg();
+        let run = |threads: usize, traced: bool| {
+            let mut srv = ShardedServer::new(
+                &model,
+                &cfg,
+                BatchPolicy { max_batch: 2, queue_capacity: 64 },
+                4,
+                RoutePolicy::LeastLoaded,
+            );
+            srv.set_threads(threads);
+            srv.set_tracing(traced);
+            let mut reqs = burst(&[6, 1, 4, 0, 3, 5, 2, 7]);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.arrival_ns = i as f64 * 4e4;
+            }
+            let out = srv.serve(reqs);
+            (out, srv.take_trace().map(|t| t.chrome_trace().pretty()))
+        };
+        let (seq_out, _) = run(1, false);
+        let (t2_out, t2_trace) = run(2, true);
+        let (t4_out, t4_trace) = run(4, true);
+        for exec in [&t2_out, &t4_out] {
+            assert_eq!(seq_out.responses.len(), exec.responses.len());
+            for (a, b) in seq_out.responses.iter().zip(&exec.responses) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.service_ns.to_bits(), b.service_ns.to_bits());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            }
+            assert_eq!(seq_out.metrics.energy_j.to_bits(), exec.metrics.energy_j.to_bits());
+        }
+        let (t2_trace, t4_trace) = (t2_trace.unwrap(), t4_trace.unwrap());
+        assert!(!t2_trace.is_empty());
+        assert_eq!(t2_trace, t4_trace, "worker count must not move a traced byte");
     }
 
     #[test]

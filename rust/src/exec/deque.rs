@@ -1,0 +1,428 @@
+//! Lock-free Chase-Lev work-stealing deque (DESIGN.md §15).
+//!
+//! One owner, many thieves: the worker that owns the deque pushes and
+//! pops at the *bottom* in LIFO order (hot work stays cache-warm), while
+//! any number of [`Stealer`] clones take from the *top* in FIFO order
+//! (the oldest queued item moves, which is also the fairest one to
+//! migrate). The only synchronized contention point is the last item,
+//! resolved by a single compare-exchange on `top`.
+//!
+//! The implementation follows the classic formulation of Chase & Lev
+//! ("Dynamic circular work-stealing deque", SPAA '05) with the C11
+//! memory orderings of Lê et al. ("Correct and efficient work-stealing
+//! for weak memory models", PPoPP '13), written here from first
+//! principles over `std::sync::atomic` — no dependencies, per the
+//! repo-wide std-only rule.
+//!
+//! Memory reclamation is grow-by-retire: when the circular buffer fills,
+//! the owner allocates a doubled buffer, copies the live window, and
+//! *retires* the old allocation instead of freeing it (a thief may still
+//! be reading a slot). Retired buffers are freed when the shared state
+//! drops — bounded by O(capacity) total, since sizes double.
+//!
+//! Items are returned by value; `T` must be `Send` because items cross
+//! from the owner thread to thief threads. The deque makes no `Sync`
+//! demand on `T` — each item is only ever observed by the one thread
+//! that popped or stole it.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicIsize, AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A circular buffer of `MaybeUninit`-like raw slots. Slot reads/writes
+/// race by design (a thief may read a slot the owner is overwriting);
+/// the Chase-Lev index protocol guarantees a racing read is never
+/// *used* — the compare-exchange on `top` fails for the loser — so the
+/// value-copy is done with volatile-free raw pointer reads on
+/// `ManuallyDrop`-semantics storage.
+struct Buffer<T> {
+    /// Power-of-two capacity; index masking is `i & (cap - 1)`.
+    cap: usize,
+    /// Raw storage. Slots hold bitwise copies of `T`; ownership is
+    /// tracked purely by the `top`/`bottom` indices.
+    slots: *mut T,
+}
+
+impl<T> Buffer<T> {
+    fn alloc(cap: usize) -> Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        let mut v = Vec::<T>::with_capacity(cap);
+        let slots = v.as_mut_ptr();
+        std::mem::forget(v);
+        Buffer { cap, slots }
+    }
+
+    /// Reconstitute the allocation for drop. Length 0: the live items
+    /// were either taken (and dropped elsewhere) or copied into a grown
+    /// buffer, so the storage is freed without running destructors.
+    unsafe fn dealloc(&self) {
+        drop(Vec::from_raw_parts(self.slots, 0, self.cap));
+    }
+
+    unsafe fn write(&self, index: isize, value: T) {
+        self.slots.add(index as usize & (self.cap - 1)).write(value);
+    }
+
+    unsafe fn read(&self, index: isize) -> T {
+        self.slots.add(index as usize & (self.cap - 1)).read()
+    }
+}
+
+/// State shared between the [`Worker`] and its [`Stealer`]s.
+struct Inner<T> {
+    /// Next index to steal from (grows monotonically).
+    top: AtomicIsize,
+    /// Next index the owner writes (only the owner moves it).
+    bottom: AtomicIsize,
+    /// Current circular buffer. Only the owner swaps it (on grow);
+    /// thieves load it after reading `top`.
+    buffer: AtomicPtr<Buffer<T>>,
+    /// Buffers replaced by grows, kept alive until drop because a
+    /// concurrent thief may still be reading the old allocation.
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+}
+
+// The protocol moves `T` values across threads (owner → thief), so the
+// shared state is Send/Sync exactly when `T: Send`. No `T: Sync` bound:
+// no two threads ever hold a reference to the same item.
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Sole owner now: drop any items still queued, then every
+        // allocation (current + retired).
+        let top = self.top.load(Ordering::Relaxed);
+        let bottom = self.bottom.load(Ordering::Relaxed);
+        let buf = self.buffer.load(Ordering::Relaxed);
+        unsafe {
+            for i in top..bottom {
+                drop((*buf).read(i));
+            }
+            (*buf).dealloc();
+            drop(Box::from_raw(buf));
+            for old in self.retired.lock().unwrap().drain(..) {
+                (*old).dealloc();
+                drop(Box::from_raw(old));
+            }
+        }
+    }
+}
+
+/// The owning end: push/pop at the bottom (LIFO). `Send` but not `Sync`
+/// — exactly one thread may own it at a time (a static test in
+/// `exec::tests` asserts both bounds).
+pub struct Worker<T> {
+    inner: Arc<Inner<T>>,
+    /// Strips the auto-`Sync` that `Arc<Inner>` would otherwise grant:
+    /// push/pop are single-owner operations.
+    _not_sync: PhantomData<std::cell::Cell<()>>,
+}
+
+/// A thieving end: steal from the top (FIFO). Cloneable and shareable;
+/// any thread may steal through any clone concurrently.
+pub struct Stealer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Outcome of a [`Stealer::steal`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal<T> {
+    /// Got the oldest queued item.
+    Taken(T),
+    /// The deque was observed empty.
+    Empty,
+    /// Lost a race (with the owner or another thief); worth retrying.
+    Retry,
+}
+
+const INITIAL_CAP: usize = 16;
+
+/// Build a deque: the owner's [`Worker`] plus one [`Stealer`] to clone.
+pub fn deque<T: Send>() -> (Worker<T>, Stealer<T>) {
+    let buffer = Box::into_raw(Box::new(Buffer::alloc(INITIAL_CAP)));
+    let inner = Arc::new(Inner {
+        top: AtomicIsize::new(0),
+        bottom: AtomicIsize::new(0),
+        buffer: AtomicPtr::new(buffer),
+        retired: Mutex::new(Vec::new()),
+    });
+    let stealer = Stealer { inner: Arc::clone(&inner) };
+    (Worker { inner, _not_sync: PhantomData }, stealer)
+}
+
+impl<T: Send> Worker<T> {
+    /// Push at the bottom. Never blocks; grows the buffer when full.
+    pub fn push(&self, value: T) {
+        let inner = &*self.inner;
+        let b = inner.bottom.load(Ordering::Relaxed);
+        let t = inner.top.load(Ordering::Acquire);
+        let mut buf = inner.buffer.load(Ordering::Relaxed);
+        unsafe {
+            if b - t >= (*buf).cap as isize {
+                buf = self.grow(buf, t, b);
+            }
+            (*buf).write(b, value);
+        }
+        // Release: the slot write must be visible before the new bottom.
+        inner.bottom.store(b + 1, Ordering::Release);
+    }
+
+    /// Pop at the bottom (LIFO). `None` when empty. On the last item,
+    /// races thieves via the `top` compare-exchange.
+    pub fn pop(&self) -> Option<T> {
+        let inner = &*self.inner;
+        let b = inner.bottom.load(Ordering::Relaxed) - 1;
+        let buf = inner.buffer.load(Ordering::Relaxed);
+        // Publish the claim on slot b before reading top (SeqCst fence
+        // pairing with the fence in steal).
+        inner.bottom.store(b, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = inner.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: undo the claim.
+            inner.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let value = unsafe { (*buf).read(b) };
+        if t == b {
+            // Last item: win it from any concurrent thief.
+            let won = inner
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            inner.bottom.store(b + 1, Ordering::Relaxed);
+            if won {
+                Some(value)
+            } else {
+                // A thief took it; the bitwise copy in `value` must not
+                // drop here (the thief owns the item now).
+                std::mem::forget(value);
+                None
+            }
+        } else {
+            Some(value)
+        }
+    }
+
+    /// Items currently queued (owner's view; advisory under contention).
+    pub fn len(&self) -> usize {
+        let b = self.inner.bottom.load(Ordering::Relaxed);
+        let t = self.inner.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Whether the owner's view of the deque is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hand out another thieving end.
+    pub fn stealer(&self) -> Stealer<T> {
+        Stealer { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Double the buffer, copying the live window `[t, b)`. The old
+    /// buffer is retired, not freed — a concurrent thief may be mid-read.
+    unsafe fn grow(&self, old: *mut Buffer<T>, t: isize, b: isize) -> *mut Buffer<T> {
+        let new = Box::into_raw(Box::new(Buffer::alloc((*old).cap * 2)));
+        for i in t..b {
+            (*new).write(i, (*old).read(i));
+        }
+        self.inner.buffer.store(new, Ordering::Release);
+        self.inner.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T: Send> Stealer<T> {
+    /// Steal from the top (FIFO). Single attempt: [`Steal::Retry`] means
+    /// a race was lost and the caller may loop or move to another victim.
+    pub fn steal(&self) -> Steal<T> {
+        let inner = &*self.inner;
+        let t = inner.top.load(Ordering::Acquire);
+        // Pair with the fence in pop: after it, this load observes any
+        // bottom decrement that claimed slot t.
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = inner.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Read the item *before* the CAS; on CAS failure the copy is
+        // forgotten (someone else owns it), on success it is ours.
+        let buf = inner.buffer.load(Ordering::Acquire);
+        let value = unsafe { (*buf).read(t) };
+        match inner.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed) {
+            Ok(_) => Steal::Taken(value),
+            Err(_) => {
+                std::mem::forget(value);
+                Steal::Retry
+            }
+        }
+    }
+
+    /// Steal with bounded retries, collapsing [`Steal::Retry`] loops.
+    /// `None` means the deque looked empty (or stayed contended).
+    pub fn steal_some(&self) -> Option<T> {
+        for _ in 0..4 {
+            match self.steal() {
+                Steal::Taken(v) => return Some(v),
+                Steal::Empty => return None,
+                Steal::Retry => std::hint::spin_loop(),
+            }
+        }
+        None
+    }
+
+    /// Advisory queue length from the thief side.
+    pub fn len(&self) -> usize {
+        let b = self.inner.bottom.load(Ordering::Acquire);
+        let t = self.inner.top.load(Ordering::Acquire);
+        (b - t).max(0) as usize
+    }
+
+    /// Whether the thief's view of the deque is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Stealer<T> {
+    fn clone(&self) -> Stealer<T> {
+        Stealer { inner: Arc::clone(&self.inner) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn owner_pops_lifo_thief_steals_fifo() {
+        let (w, s) = deque::<u32>();
+        for i in 0..4 {
+            w.push(i);
+        }
+        // Thief sees the *oldest* item.
+        assert_eq!(s.steal(), Steal::Taken(0));
+        // Owner sees the *newest*.
+        assert_eq!(w.pop(), Some(3));
+        assert_eq!(s.steal(), Steal::Taken(1));
+        assert_eq!(w.pop(), Some(2));
+        assert_eq!(w.pop(), None);
+        assert_eq!(s.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn grows_past_the_initial_capacity_without_loss() {
+        let (w, s) = deque::<usize>();
+        let n = INITIAL_CAP * 8 + 3;
+        for i in 0..n {
+            w.push(i);
+        }
+        assert_eq!(w.len(), n);
+        assert_eq!(s.len(), n);
+        // FIFO from the top across every grow boundary.
+        for want in 0..n {
+            assert_eq!(s.steal(), Steal::Taken(want));
+        }
+        assert_eq!(s.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn interleaved_push_pop_preserves_stack_order() {
+        let (w, _s) = deque::<u32>();
+        w.push(1);
+        w.push(2);
+        assert_eq!(w.pop(), Some(2));
+        w.push(3);
+        assert_eq!(w.pop(), Some(3));
+        assert_eq!(w.pop(), Some(1));
+        assert_eq!(w.pop(), None);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn queued_items_drop_exactly_once_on_deque_drop() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Token;
+        impl Drop for Token {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        DROPS.store(0, Ordering::SeqCst);
+        {
+            let (w, s) = deque::<Token>();
+            for _ in 0..40 {
+                w.push(Token); // crosses a grow at 16
+            }
+            drop(w.pop().unwrap()); // 1 dropped by the owner
+            match s.steal() {
+                Steal::Taken(t) => drop(t), // 1 dropped by the thief
+                other => panic!("expected a steal, got {other:?}"),
+            }
+        } // remaining 38 dropped by Inner::drop
+        assert_eq!(DROPS.load(Ordering::SeqCst), 40);
+    }
+
+    /// Multi-thread conservation: every pushed item is popped or stolen
+    /// exactly once — no loss, no duplication — under real contention
+    /// (the satellite stress test; single-thread order is locked above).
+    #[test]
+    fn stress_every_item_popped_or_stolen_exactly_once() {
+        const ITEMS: usize = 20_000;
+        const THIEVES: usize = 4;
+        let (w, s) = deque::<usize>();
+        let taken: Vec<Stealer<usize>> = (0..THIEVES).map(|_| s.clone()).collect();
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let mut seen: Vec<Vec<usize>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for thief in taken {
+                let done = &done;
+                handles.push(scope.spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match thief.steal() {
+                            Steal::Taken(v) => got.push(v),
+                            Steal::Retry => std::hint::spin_loop(),
+                            Steal::Empty => {
+                                if done.load(Ordering::SeqCst) && thief.is_empty() {
+                                    break;
+                                }
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                    got
+                }));
+            }
+            // Owner: interleave pushes with occasional pops.
+            let mut owner_got = Vec::new();
+            for i in 0..ITEMS {
+                w.push(i);
+                if i % 3 == 0 {
+                    if let Some(v) = w.pop() {
+                        owner_got.push(v);
+                    }
+                }
+            }
+            while let Some(v) = w.pop() {
+                owner_got.push(v);
+            }
+            done.store(true, Ordering::SeqCst);
+            seen.push(owner_got);
+            for h in handles {
+                seen.push(h.join().unwrap());
+            }
+        });
+        let total: usize = seen.iter().map(|v| v.len()).sum();
+        assert_eq!(total, ITEMS, "items lost or duplicated under contention");
+        let unique: BTreeSet<usize> = seen.iter().flatten().copied().collect();
+        assert_eq!(unique.len(), ITEMS, "duplicate deliveries under contention");
+        assert_eq!(unique.iter().next_back(), Some(&(ITEMS - 1)));
+    }
+}

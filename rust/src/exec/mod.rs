@@ -1,0 +1,500 @@
+//! Parallel serving runtime (DESIGN.md §15): thread-per-package
+//! execution for the sharded coordinator.
+//!
+//! Two execution modes share this subsystem, split by what they promise:
+//!
+//! * **Deterministic seeded mode** — `ShardedSession::finish` with
+//!   `ShardedServer::set_threads(n > 1)` drains every arrival-free
+//!   window of the virtual-time event loop on up to `n` scoped worker
+//!   threads (one package chunk each) and merges the per-tick event
+//!   streams back by `(tick_start_ns, package, seq)`, the exact
+//!   sequential event-loop order. The `ServeOutcome` is **bit-identical**
+//!   to the single-thread path (locked by
+//!   `exec_drain_is_bit_identical_to_sequential` and
+//!   `prop_exec_drain_is_bit_identical_to_sequential`). That drain lives
+//!   beside the event loop in `coordinator::sharded`; this module
+//!   provides its thread plumbing rationale and the shared deque.
+//!
+//! * **Free-running wall-clock mode** — [`serve_wall_clock`] abandons
+//!   the global virtual-time total order entirely: worker threads race
+//!   over real time, each driving its own package chunk through the
+//!   same `admit`/`step` methods, pulling admissions from a per-worker
+//!   injector and *work stealing* queued requests from sibling workers
+//!   through the lock-free Chase-Lev [`deque`]. Host events/s scales
+//!   with threads; per-request simulated numbers are still priced by
+//!   the same per-package simulators, but cross-package interleaving is
+//!   racy by design, so outcomes are **not** bit-reproducible across
+//!   runs. What it does promise — and assert — is conservation: every
+//!   offered request is completed, rejected, or shed, exactly once.
+//!
+//! Everything here is std-only: the deque is written over
+//! `std::sync::atomic` (no crossbeam), threads are `std::thread::scope`
+//! scoped borrows, and the injectors reuse the coordinator's
+//! `AdmissionQueue`.
+
+pub mod deque;
+
+pub use deque::{deque, Steal, Stealer, Worker};
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::coordinator::sharded::PackageState;
+use crate::coordinator::streaming::guard_submission;
+use crate::coordinator::{
+    AdmissionQueue, ServeEvent, ServeOutcome, ServeRequest, ServeResponse, ServingMetrics,
+    ShardedServer,
+};
+
+/// What one wall-clock serve produced: the merged [`ServeOutcome`] plus
+/// the host-side execution counters the virtual-time path has no notion
+/// of.
+#[derive(Debug, Clone)]
+pub struct WallReport {
+    /// Completions (sorted by simulated completion instant, then id —
+    /// the same order `ShardedSession::finish` uses), shed requests, and
+    /// merged metrics. Conservation holds:
+    /// `responses.len() + shed.len() == offered`.
+    pub outcome: ServeOutcome,
+    /// Host wall-clock time the executor ran for (ns).
+    pub wall_ns: f64,
+    /// Serve events the package steps emitted (FirstToken/Token/
+    /// Completed), plus one per inline zero-token completion — the
+    /// numerator of the events/s scaling metric.
+    pub events: u64,
+    /// Worker threads actually used: `threads.min(packages)`.
+    pub workers: usize,
+    /// Requests migrated between workers through the Chase-Lev deques.
+    pub deque_steals: u64,
+}
+
+/// Per-worker tallies carried back to the merge step.
+#[derive(Default)]
+struct WorkerResult {
+    /// `(arrival_ns, response)` per completion, in this worker's local
+    /// completion order.
+    completions: Vec<(f64, ServeResponse)>,
+    /// Requests this worker's whole package chunk refused (every queue
+    /// full at admission time).
+    rejected: Vec<ServeRequest>,
+    events: u64,
+    deque_steals: u64,
+}
+
+/// Serve `requests` in free-running wall-clock mode on up to `threads`
+/// worker threads (DESIGN.md §15).
+///
+/// Architecture — one admission thread (the caller's) plus
+/// `threads.min(packages)` workers over `std::thread::scope`:
+///
+/// 1. The admission thread guards submissions exactly like the
+///    streaming protocol (duplicate ids panic, non-finite arrivals are
+///    shed and recorded) and round-robins the schedulable requests into
+///    per-worker [`AdmissionQueue`] injectors sized to the offered load,
+///    so injection itself can never reject.
+/// 2. Each worker owns a contiguous package chunk (`chunks_mut` — no
+///    locks on simulator state), one Chase-Lev [`Worker`] deque, and
+///    [`Stealer`] handles to every sibling. Its loop: drain injector →
+///    deque; pop deque → admit into the least-loaded chunk package with
+///    failover across the chunk (all full ⇒ rejected — wall mode does
+///    not fail over across workers, the deque steal path is how load
+///    migrates instead); zero-token requests complete inline at
+///    arrival, mirroring the sequential engine's contract; step every
+///    package whose `next_event_ns` is finite; when nothing progressed,
+///    steal a queued request from a sibling's deque before going idle.
+/// 3. Termination is by conservation, not time: an `outstanding`
+///    counter starts at the schedulable count and decrements exactly
+///    once per completion/rejection; workers exit when arrivals are
+///    done and it reaches zero.
+///
+/// The merge sorts completions by simulated completion instant
+/// (`arrival + total_latency`, then id — the `ShardedSession::finish`
+/// order) and replays them into one [`ServingMetrics`], then asserts
+/// conservation: `admitted + rejected + shed == offered` and
+/// `responses.len() == admitted`.
+///
+/// Panics on `threads == 0` (the CLI and session builder reject it
+/// first) and on a duplicate request id, per the protocol contract.
+pub fn serve_wall_clock(
+    srv: &mut ShardedServer,
+    requests: Vec<ServeRequest>,
+    threads: usize,
+) -> WallReport {
+    assert!(threads >= 1, "the wall-clock executor needs at least one worker thread");
+    let offered = requests.len();
+
+    // Admission guard: duplicate ids panic, non-finite arrivals shed.
+    let mut metrics = ServingMetrics::new();
+    let mut shed: Vec<ServeRequest> = Vec::new();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut schedulable: Vec<ServeRequest> = Vec::with_capacity(offered);
+    for req in requests {
+        if let Ok(req) = guard_submission(&mut seen, &mut metrics, &mut shed, req) {
+            schedulable.push(req);
+        }
+    }
+
+    let packages = srv.begin_wall_session();
+    let npkg = packages.len();
+    let chunk = npkg.div_ceil(threads.min(npkg).max(1));
+    // The number of chunks `chunks_mut` actually yields — NOT
+    // `threads.min(npkg)`: 4 packages on 3 threads chunk as 2+2, i.e.
+    // two workers, and sizing injectors/deques for three would park
+    // round-robined requests on a mailbox nobody drains.
+    let workers = npkg.div_ceil(chunk);
+
+    // Injectors sized to the offered load: injection never rejects, so
+    // the only rejections are package-queue backpressure at admit time.
+    let injectors: Vec<AdmissionQueue> =
+        (0..workers).map(|_| AdmissionQueue::new(schedulable.len().max(1))).collect();
+    let outstanding = AtomicUsize::new(schedulable.len());
+    let arrivals_done = AtomicBool::new(false);
+
+    let mut decks: Vec<Worker<ServeRequest>> = Vec::with_capacity(workers);
+    let mut stealers: Vec<Stealer<ServeRequest>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (w, s) = deque::deque();
+        decks.push(w);
+        stealers.push(s);
+    }
+
+    let start = Instant::now();
+    let mut per_worker: Vec<WorkerResult> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = packages
+            .chunks_mut(chunk)
+            .zip(decks)
+            .enumerate()
+            .map(|(w, (slab, own))| {
+                let injector = &injectors[w];
+                let siblings: Vec<Stealer<ServeRequest>> = stealers
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != w)
+                    .map(|(_, s)| s.clone())
+                    .collect();
+                let outstanding = &outstanding;
+                let arrivals_done = &arrivals_done;
+                scope.spawn(move || {
+                    worker_loop(w, chunk, slab, own, injector, siblings, outstanding, arrivals_done)
+                })
+            })
+            .collect();
+
+        // This thread is the admission thread: round-robin injection,
+        // concurrent with the workers already draining.
+        for (i, req) in schedulable.into_iter().enumerate() {
+            injectors[i % workers]
+                .admit(req)
+                .expect("injectors are sized to the offered load and never closed early");
+        }
+        for inj in &injectors {
+            inj.close();
+        }
+        arrivals_done.store(true, Ordering::SeqCst);
+
+        for h in handles {
+            per_worker.push(h.join().expect("wall-clock worker thread panicked"));
+        }
+    });
+    let wall_ns = start.elapsed().as_nanos() as f64;
+
+    // Merge: simulated-completion order (then id), exactly like
+    // `ShardedSession::finish`, so downstream percentile/JSON consumers
+    // see the same shape either way.
+    let mut completions: Vec<(f64, ServeResponse)> = Vec::new();
+    let mut rejected: Vec<ServeRequest> = Vec::new();
+    let mut events: u64 = 0;
+    let mut deque_steals: u64 = 0;
+    for r in per_worker {
+        completions.extend(r.completions);
+        rejected.extend(r.rejected);
+        events += r.events;
+        deque_steals += r.deque_steals;
+    }
+    completions.sort_by(|a, b| {
+        let da = a.0 + a.1.total_latency_ns();
+        let db = b.0 + b.1.total_latency_ns();
+        da.total_cmp(&db).then(a.1.id.cmp(&b.1.id))
+    });
+    rejected.sort_by_key(|r| r.id);
+    for r in rejected {
+        metrics.record_rejected();
+        shed.push(r);
+    }
+    for (arrival_ns, resp) in &completions {
+        metrics.record_admitted();
+        metrics.record(*arrival_ns, resp);
+    }
+    let responses: Vec<ServeResponse> = completions.into_iter().map(|(_, r)| r).collect();
+
+    assert_eq!(
+        metrics.offered() as usize,
+        offered,
+        "wall-clock conservation violated: every offered request must be \
+         admitted, rejected, or shed exactly once"
+    );
+    assert_eq!(
+        responses.len() as u64,
+        metrics.admitted,
+        "wall-clock conservation violated: completion events must equal admissions"
+    );
+
+    WallReport {
+        outcome: ServeOutcome { responses, shed, metrics },
+        wall_ns,
+        events,
+        workers,
+        deque_steals,
+    }
+}
+
+/// One worker's life: injector → deque → package admission → simulator
+/// steps, stealing from siblings when starved, until the system drains.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    w: usize,
+    chunk: usize,
+    slab: &mut [PackageState],
+    own: Worker<ServeRequest>,
+    injector: &AdmissionQueue,
+    siblings: Vec<Stealer<ServeRequest>>,
+    outstanding: &AtomicUsize,
+    arrivals_done: &AtomicBool,
+) -> WorkerResult {
+    let mut res = WorkerResult::default();
+    loop {
+        let mut progress = false;
+
+        // Injector → deque (non-blocking; the injector is this worker's
+        // admission mailbox, the deque is what siblings can steal from).
+        for req in injector.try_pop_batch(usize::MAX) {
+            own.push(req);
+            progress = true;
+        }
+
+        // Deque → package admission.
+        while let Some(req) = own.pop() {
+            progress = true;
+            if req.max_new_tokens == 0 {
+                // Zero-token contract (see `ServeResponse`): no
+                // schedulable work, completes at arrival with zeros.
+                let resp = ServeResponse {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    queue_ns: 0.0,
+                    ttft_ns: 0.0,
+                    service_ns: 0.0,
+                    energy_j: 0.0,
+                };
+                res.completions.push((req.arrival_ns, resp));
+                res.events += 1;
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            // Least-loaded within this worker's chunk, failing over
+            // across the chunk; rejected only when the whole chunk is
+            // out of queue capacity.
+            let mut order: Vec<usize> = (0..slab.len()).collect();
+            order.sort_by_key(|&i| slab[i].load_tokens());
+            let mut req = Some(req);
+            for &i in &order {
+                match slab[i].admit(req.take().unwrap()) {
+                    Ok(()) => break,
+                    Err(r) => req = Some(r),
+                }
+            }
+            if let Some(r) = req {
+                res.rejected.push(r);
+                outstanding.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+
+        // Step every package that can make progress.
+        for (off, p) in slab.iter_mut().enumerate() {
+            if p.next_event_ns().is_finite() {
+                let events = p.step(w * chunk + off, None);
+                if !events.is_empty() {
+                    progress = true;
+                }
+                res.events += events.len() as u64;
+                for ev in events {
+                    if let ServeEvent::Completed { arrival_ns, response, .. } = ev {
+                        res.completions.push((arrival_ns, response));
+                        outstanding.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+        if progress {
+            continue;
+        }
+
+        // Starved: steal a queued request from a sibling's deque.
+        let mut stole = false;
+        for s in &siblings {
+            if let Some(req) = s.steal_some() {
+                own.push(req);
+                res.deque_steals += 1;
+                stole = true;
+                break;
+            }
+        }
+        if stole {
+            continue;
+        }
+
+        // Drained? Conservation-based exit: all arrivals injected and
+        // every schedulable request retired (completed or rejected).
+        if arrivals_done.load(Ordering::SeqCst) && outstanding.load(Ordering::SeqCst) == 0 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChimeConfig, MllmConfig, WorkloadConfig};
+    use crate::coordinator::{BatchPolicy, RoutePolicy};
+
+    fn assert_send<T: Send>() {}
+    fn assert_sync<T: Sync>() {}
+
+    /// Satellite audit: every type that crosses the executor's thread
+    /// boundary is `Send` (moved/borrowed into scoped workers) and the
+    /// shared handles are `Sync`. Compile-time only — a regression (say,
+    /// an `Rc` slipping into `ServeRequest`) fails the build here with a
+    /// readable error instead of deep inside `thread::scope` inference.
+    /// `Worker<T>` is deliberately *not* `Sync` (single-owner pushes);
+    /// that half of the contract is enforced by the `PhantomData<Cell>`
+    /// marker in `exec::deque` and cannot be asserted positively here.
+    #[test]
+    fn serving_types_are_send_sync_across_the_executor_boundary() {
+        assert_send::<ServeRequest>();
+        assert_send::<ServeResponse>();
+        assert_send::<ServeEvent>();
+        assert_send::<ServeOutcome>();
+        assert_send::<ServingMetrics>();
+        assert_send::<PackageState>();
+        assert_send::<AdmissionQueue>();
+        assert_sync::<AdmissionQueue>();
+        assert_send::<Worker<ServeRequest>>();
+        assert_send::<Stealer<ServeRequest>>();
+        assert_sync::<Stealer<ServeRequest>>();
+        assert_send::<WallReport>();
+    }
+
+    fn tiny_cfg() -> (MllmConfig, ChimeConfig) {
+        let mut cfg = ChimeConfig::default();
+        cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+        (MllmConfig::tiny(), cfg)
+    }
+
+    fn mixed_requests(n: usize) -> Vec<ServeRequest> {
+        let skew = [3usize, 1, 4, 0, 5, 2];
+        (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: skew[i % skew.len()],
+                arrival_ns: i as f64 * 2.0e4,
+            })
+            .collect()
+    }
+
+    /// The acceptance-criteria conservation smoke: a multi-thread wall
+    /// run over a mixed stream (zero-token inline completions, a NaN
+    /// arrival to shed, staggered arrivals) accounts for every offered
+    /// request exactly once.
+    #[test]
+    fn wall_clock_serving_conserves_every_request() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy { max_batch: 2, queue_capacity: 64 },
+            4,
+            RoutePolicy::LeastLoaded,
+        );
+        let mut reqs = mixed_requests(24);
+        reqs.push(ServeRequest {
+            id: 99,
+            prompt: vec![],
+            image_seed: 99,
+            max_new_tokens: 4,
+            arrival_ns: f64::NAN,
+        });
+        let offered = reqs.len();
+
+        let report = serve_wall_clock(&mut srv, reqs, 4);
+        let m = &report.outcome.metrics;
+        assert_eq!(m.offered() as usize, offered);
+        assert_eq!((m.admitted + m.rejected + m.shed) as usize, offered);
+        assert_eq!(report.outcome.responses.len() as u64, m.admitted);
+        assert_eq!(report.outcome.responses.len() + report.outcome.shed.len(), offered);
+        assert_eq!(m.shed, 1, "exactly the NaN arrival is shed");
+        assert_eq!(report.workers, 4);
+        assert!(report.wall_ns > 0.0);
+        assert!(report.events >= m.completed, "every completion is an event");
+        // Zero-token requests complete inline with the zero contract.
+        for r in report.outcome.responses.iter().filter(|r| r.tokens.is_empty()) {
+            assert_eq!(r.total_latency_ns(), 0.0);
+        }
+        // Exactly-once delivery: no response id appears twice.
+        let ids: std::collections::BTreeSet<u64> =
+            report.outcome.responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), report.outcome.responses.len());
+    }
+
+    /// Backpressure path: a tiny queue capacity forces rejections, which
+    /// must show up in `rejected` + `shed` without breaking conservation,
+    /// on the single-worker degenerate case too.
+    #[test]
+    fn wall_clock_backpressure_rejects_without_losing_requests() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy { max_batch: 1, queue_capacity: 1 },
+            2,
+            RoutePolicy::RoundRobin,
+        );
+        // A t=0 burst: far more work than 2 packages × (1 slot + 1 queue
+        // entry) can hold at once.
+        let reqs = ServeRequest::burst(16, 6);
+        let report = serve_wall_clock(&mut srv, reqs, 2);
+        let m = &report.outcome.metrics;
+        assert_eq!(m.offered(), 16);
+        assert!(m.rejected > 0, "a saturating burst must hit backpressure");
+        assert_eq!(report.outcome.responses.len() as u64, m.admitted);
+        assert_eq!(report.outcome.responses.len() + report.outcome.shed.len(), 16);
+        assert_eq!(m.shed, 0);
+    }
+
+    /// Oversubscription clamps: more threads than packages still runs
+    /// (workers == packages), and one thread is the sequential floor.
+    #[test]
+    fn wall_clock_worker_count_clamps_to_packages() {
+        let (model, cfg) = tiny_cfg();
+        let mut srv = ShardedServer::new(
+            &model,
+            &cfg,
+            BatchPolicy { max_batch: 2, queue_capacity: 64 },
+            2,
+            RoutePolicy::LeastLoaded,
+        );
+        let report = serve_wall_clock(&mut srv, mixed_requests(8), 16);
+        assert_eq!(report.workers, 2);
+        assert_eq!(report.outcome.metrics.offered(), 8);
+
+        let report = serve_wall_clock(&mut srv, mixed_requests(8), 1);
+        assert_eq!(report.workers, 1);
+        assert_eq!(report.outcome.responses.len() + report.outcome.shed.len(), 8);
+        assert_eq!(report.deque_steals, 0, "a lone worker has nobody to steal from");
+    }
+}

@@ -26,6 +26,12 @@
 //!   pipelined engine joining functional execution with simulated timing,
 //!   the event-driven streaming serving protocol with open-loop arrival
 //!   processes, and cross-package work stealing);
+//! - [`exec`]: the parallel serving runtime — a lock-free Chase-Lev
+//!   work-stealing deque ([`exec::deque`], atomics only), the
+//!   free-running wall-clock executor ([`exec::serve_wall_clock`]) with
+//!   thread-per-package-chunk workers behind `--threads N --wall`, and
+//!   the thread plumbing for the deterministic windowed executor drain
+//!   in [`coordinator::sharded::ShardedSession`] (DESIGN.md §15);
 //! - [`net`]: the std-only network serving front end — a minimal
 //!   HTTP/1.1 layer, the `chime serve --listen` SSE ingress over the
 //!   streaming protocol, and the `chime loadgen` open-loop wall-clock
@@ -48,6 +54,7 @@ pub mod api;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod mapping;
 pub mod model;
 pub mod net;

@@ -89,12 +89,15 @@ COMMANDS:
   info      [--models] [--hardware]           Table II / III / IV configs
   simulate  [--model NAME] [--all] [--dram-only] [--out N] [--text N] [--json]
             [--memory first-order|cycle] [--topology point-to-point|line|ring|mesh]
-            [--trace-out FILE]  write the run's Chrome trace-event JSON (Perfetto)
+            [--threads N] [--trace-out FILE]  write the run's Chrome trace-event JSON
   serve     [--backend sim|functional|dram-only|jetson|facil] [--model NAME]
             [--requests N] [--arrival burst|poisson:R|trace:FILE] [--rate R]
             [--steal on|off] [--seed N] [--batch B] [--tokens N] [--packages N]
             [--route rr|least-loaded] [--queue N] [--memory first-order|cycle]
             [--topology point-to-point|line|ring|mesh]
+            [--threads N]  executor worker threads (deterministic: outcomes stay
+            bit-identical to --threads 1)  [--wall]  free-running wall-clock
+            executor (host events/s scales with --threads; sim backends only)
             [--listen HOST:PORT] [--deterministic] [--addr-file PATH]
             [--trace-out FILE]
             With --listen: serve over HTTP/SSE instead of a local arrival
@@ -113,8 +116,10 @@ COMMANDS:
             [--all] [--json] [--baselines]
   memcheck  [--json]                          first-order vs cycle divergence
   bench     [--json] [--quick] [--snapshot PATH] [--requests N] [--tokens N]
-            [--iters N] [--profile PATH]      simulator events/s benchmark
-            (--profile writes the wall-clock-per-span-class HOTPATH baseline)
+            [--iters N] [--threads N] [--profile PATH]
+            simulator events/s benchmark; --threads sizes the sharded4-exec
+            executor column (--profile writes the wall-clock-per-span-class
+            HOTPATH baseline)
   parity    [--artifacts DIR]                 verify PJRT vs AOT oracle
 
 MODELS: fastvlm-0.6b fastvlm-1.7b mobilevlm-1.7b mobilevlm-3b tiny"
@@ -232,6 +237,26 @@ fn write_trace(session: &mut Session, path: &str) -> Result<(), ChimeError> {
     Ok(())
 }
 
+/// `--threads N` as the executor worker count (DESIGN.md §15), or a
+/// typed usage error: the value-less spelling and 0 are both rejected (a
+/// zero-worker executor can never drain a session).
+fn threads_arg(args: &Args) -> Result<usize, ChimeError> {
+    if args.flag("threads") && args.get("threads").is_none() {
+        return Err(ChimeError::Invalid(
+            "--threads expects a worker count (e.g. --threads 4)".to_string(),
+        ));
+    }
+    let n = usize_arg(args, "threads", 1)?;
+    if n == 0 {
+        return Err(ChimeError::Invalid(
+            "--threads 0 can never drain a session; the executor needs at least one \
+             worker thread"
+                .to_string(),
+        ));
+    }
+    Ok(n)
+}
+
 /// `--steal on|off` as a bool, or a typed usage error — never a silent
 /// default for a malformed or value-less spelling.
 fn steal_arg(args: &Args) -> Result<bool, ChimeError> {
@@ -316,8 +341,9 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
     ensure_known(
         args,
         &["model", "all", "dram-only", "out", "text", "json", "config", "memory", "topology",
-          "trace-out"],
+          "threads", "trace-out"],
     )?;
+    let threads = threads_arg(args)?;
     let kind = if args.flag("dram-only") { BackendKind::DramOnly } else { BackendKind::Sim };
     let fidelity = memory_arg(args)?;
     let topology = topology_arg(args)?;
@@ -344,7 +370,7 @@ fn cmd_simulate(args: &Args) -> Result<(), ChimeError> {
     );
     let mut json_rows = Vec::new();
     for m in &models {
-        let mut b = builder_from(args)?.model_config(m.clone()).backend(kind);
+        let mut b = builder_from(args)?.model_config(m.clone()).backend(kind).threads(threads);
         if let Some(f) = fidelity {
             b = b.memory_fidelity(f);
         }
@@ -400,7 +426,8 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
         args,
         &["backend", "model", "requests", "arrival", "rate", "steal", "seed", "batch",
           "tokens", "packages", "route", "queue", "config", "out", "text", "artifacts",
-          "memory", "topology", "listen", "deterministic", "addr-file", "trace-out"],
+          "memory", "topology", "threads", "wall", "listen", "deterministic", "addr-file",
+          "trace-out"],
     )?;
     if args.flag("listen") {
         return cmd_serve_listen(args);
@@ -419,6 +446,8 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
     let fidelity = memory_arg(args)?;
     let topology = topology_arg(args)?;
     let trace_out = trace_out_arg(args)?;
+    let threads = threads_arg(args)?;
+    let wall = args.flag("wall");
     let n = usize_arg(args, "requests", 16)?;
     let arrival = arrival_arg(args)?;
     let steal = steal_arg(args)?;
@@ -448,6 +477,43 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
     {
         return Err(ChimeError::Invalid(format!(
             "backend {} records no trace; --trace-out applies to the simulator backends",
+            kind.name()
+        )));
+    }
+    // Wall-clock mode races worker threads over real time — there is no
+    // deterministic virtual timeline to record, and its work migration is
+    // the executor's deques, not the virtual-time steal pass. Both
+    // combinations would otherwise be silent lies, so they are rejected.
+    if wall && trace_out.is_some() {
+        return Err(ChimeError::Invalid(
+            "--wall runs the free-running executor, whose event interleaving is not \
+             deterministic; --trace-out needs the seeded virtual-time mode (drop --wall, \
+             or drop --trace-out and read the host counters it prints instead)"
+                .to_string(),
+        ));
+    }
+    if wall && steal {
+        return Err(ChimeError::Invalid(
+            "--steal is the virtual-time cross-package policy; in --wall mode work \
+             migrates through the executor's work-stealing deques instead (drop --steal)"
+                .to_string(),
+        ));
+    }
+    if wall && !matches!(kind, BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly) {
+        return Err(ChimeError::Invalid(format!(
+            "backend {} is a single sequential stream; --wall applies to the \
+             sim/sharded/dram-only backends",
+            kind.name()
+        )));
+    }
+    // Same contract as the Session builder: executor threads drive the
+    // simulator's package event loops; a sequential baseline has none.
+    if threads > 1
+        && !matches!(kind, BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly)
+    {
+        return Err(ChimeError::Invalid(format!(
+            "backend {} is a single sequential stream; --threads > 1 applies to the \
+             sim/sharded/dram-only backends",
             kind.name()
         )));
     }
@@ -559,7 +625,8 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
                 .packages(packages)
                 .route(route)
                 .batch(policy)
-                .work_stealing(steal);
+                .work_stealing(steal)
+                .threads(threads);
             if let Some(f) = fidelity {
                 b = b.memory_fidelity(f);
             }
@@ -572,6 +639,50 @@ fn cmd_serve(args: &Args) -> Result<(), ChimeError> {
             }
             let tokens = usize_arg(args, "tokens", 64)?;
             let reqs = session.requests_for(&arrival, seed, n, tokens)?;
+            if wall {
+                let report = session.serve_wall_clock(reqs, threads)?;
+                let mut metrics = report.outcome.metrics.clone();
+                let p50 = metrics.latency_percentile_ns(50.0);
+                let p99 = metrics.latency_percentile_ns(99.0);
+                println!(
+                    "wall-clock CHIME serving {} ({} package{}, {} worker thread{}, \
+                     {} arrivals{}): {} reqs completed, {} rejected, {} shed, {} tokens, \
+                     {:.1} tok/s simulated, p50 latency {}, p99 {}",
+                    session.model().name,
+                    packages,
+                    if packages == 1 { "" } else { "s" },
+                    report.workers,
+                    if report.workers == 1 { "" } else { "s" },
+                    arrival.spec(),
+                    if kind == BackendKind::DramOnly { ", dram-only" } else { "" },
+                    metrics.completed,
+                    metrics.rejected,
+                    metrics.shed,
+                    metrics.tokens,
+                    metrics.tokens_per_s(),
+                    fmt_ns(p50),
+                    fmt_ns(p99),
+                );
+                println!(
+                    "  host: {:.1} ms wall, {:.0} events/s, {} deque steal{}",
+                    report.wall_ns / 1e6,
+                    if report.wall_ns > 0.0 {
+                        report.events as f64 / (report.wall_ns / 1e9)
+                    } else {
+                        0.0
+                    },
+                    report.deque_steals,
+                    if report.deque_steals == 1 { "" } else { "s" },
+                );
+                if !report.outcome.shed.is_empty() {
+                    println!(
+                        "  returned request ids (rejected by backpressure or shed as \
+                         malformed): {:?}",
+                        report.outcome.shed.iter().map(|r| r.id).collect::<Vec<_>>()
+                    );
+                }
+                return Ok(());
+            }
             // Drive the streaming protocol directly so the steal events
             // are observable (the batch wrapper discards the stream).
             let mut serving = session.open_serving()?;
@@ -658,6 +769,16 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
             )));
         }
     }
+    // The listener's engine loop already free-runs against wire arrivals;
+    // --wall (the batch wall-clock executor) has no meaning here.
+    if args.flag("wall") {
+        return Err(ChimeError::Invalid(
+            "--wall does not apply to --listen: the listener already runs in wall-clock \
+             time against wire arrivals; use --threads N to widen its executor"
+                .to_string(),
+        ));
+    }
+    let threads = threads_arg(args)?;
     let steal = steal_arg(args)?;
     let fidelity = memory_arg(args)?;
     let topology = topology_arg(args)?;
@@ -675,6 +796,15 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
     {
         return Err(ChimeError::Invalid(format!(
             "backend {} records no trace; --trace-out applies to the simulator backends",
+            kind.name()
+        )));
+    }
+    if threads > 1
+        && !matches!(kind, BackendKind::Sim | BackendKind::Sharded | BackendKind::DramOnly)
+    {
+        return Err(ChimeError::Invalid(format!(
+            "backend {} is a single sequential stream; --threads > 1 applies to the \
+             sim/sharded/dram-only backends",
             kind.name()
         )));
     }
@@ -703,7 +833,8 @@ fn cmd_serve_listen(args: &Args) -> Result<(), ChimeError> {
                         BatchPolicy::default().queue_capacity,
                     )?,
                 })
-                .work_stealing(steal);
+                .work_stealing(steal)
+                .threads(threads);
         }
         BackendKind::Functional => {
             b = b.backend(kind);
@@ -837,7 +968,10 @@ fn cmd_memcheck(args: &Args) -> Result<(), ChimeError> {
 }
 
 fn cmd_bench(args: &Args) -> Result<(), ChimeError> {
-    ensure_known(args, &["json", "quick", "snapshot", "requests", "tokens", "iters", "profile"])?;
+    ensure_known(
+        args,
+        &["json", "quick", "snapshot", "requests", "tokens", "iters", "profile", "threads"],
+    )?;
     if args.flag("snapshot") && args.get("snapshot").is_none() {
         return Err(ChimeError::Invalid(
             "--snapshot expects a file path (e.g. BENCH_006.json)".to_string(),
@@ -856,6 +990,11 @@ fn cmd_bench(args: &Args) -> Result<(), ChimeError> {
     bc.requests = usize_arg(args, "requests", bc.requests)?;
     bc.tokens = usize_arg(args, "tokens", bc.tokens)?;
     bc.iters = usize_arg(args, "iters", bc.iters)?;
+    if args.flag("threads") {
+        // threads_arg owns the valueless / zero usage errors; the bench
+        // default stays the 4-worker exec column, not the serve default.
+        bc.exec_threads = threads_arg(args)?;
+    }
     if bc.requests == 0 || bc.tokens == 0 || bc.iters == 0 {
         return Err(ChimeError::Invalid(
             "--requests, --tokens, and --iters must be >= 1".to_string(),

@@ -6,9 +6,10 @@
 //! timestamps first-token / per-token / completion frames with the host
 //! monotonic clock. The report renders the same p50/p95/p99 TTFT / TPOT
 //! / latency table as `results::tail` — but measured over the wire in
-//! wall-clock time rather than inside the simulator's virtual timeline,
-//! making this the first component where throughput is judged in real
-//! time against host cores (ROADMAP items 1 and 2).
+//! wall-clock time rather than inside the simulator's virtual timeline.
+//! Pair it with a `--listen` server built with `--threads N` (the
+//! parallel executor, DESIGN.md §15) to measure how wire-visible
+//! throughput scales with host worker threads.
 //!
 //! The client side is std-only like the server: a blocking
 //! `TcpStream` + the [`super::http`] caps-checked parser in reverse

@@ -764,6 +764,7 @@ fn server_info(session: &Session, opts: &ServeOpts) -> Json {
         ("model", session.model().name.as_str().into()),
         ("memory", session.memory_fidelity().name().into()),
         ("topology", session.topology().name().into()),
+        ("threads", (session.threads() as i64).into()),
         ("deterministic", opts.deterministic.into()),
         ("tracing", opts.trace_out.is_some().into()),
     ])

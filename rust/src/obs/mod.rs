@@ -209,6 +209,36 @@ impl Tracer {
     pub fn chrome_trace(&self) -> Json {
         chrome::trace_json(self)
     }
+
+    /// Merge per-worker tracers from an executor drain (DESIGN.md §15)
+    /// into this tracer, deterministically: the union of the worker
+    /// records is sorted by `(start time, package, per-worker order)`
+    /// and appended, and the wall-clock profile aggregates are summed.
+    ///
+    /// The sort key is invariant to how packages were chunked across
+    /// workers: one package's records always come from exactly one
+    /// worker, in non-decreasing start order, so ties on
+    /// `(start, package)` are resolved within a single worker and the
+    /// per-worker index preserves that worker's recording order. A fixed
+    /// request stream therefore merges to the byte-same trace for every
+    /// worker count (locked by
+    /// `exec_drain_traces_deterministically_across_worker_counts`).
+    pub fn merge_workers(&mut self, workers: Vec<Tracer>) {
+        let mut tagged: Vec<(usize, Record)> = Vec::new();
+        for w in workers {
+            let Tracer { records, profile, .. } = w;
+            for (name, (count, wall_ns)) in profile {
+                let e = self.profile.entry(name).or_insert((0, 0.0));
+                e.0 += count;
+                e.1 += wall_ns;
+            }
+            tagged.extend(records.into_iter().enumerate());
+        }
+        tagged.sort_by(|(ia, a), (ib, b)| {
+            a.start_ns.total_cmp(&b.start_ns).then(a.pid.cmp(&b.pid)).then(ia.cmp(ib))
+        });
+        self.records.extend(tagged.into_iter().map(|(_, r)| r));
+    }
 }
 
 /// Canonical label for a fabric link, shared between trace args and
@@ -460,6 +490,57 @@ mod tests {
         let mut sum = b;
         sum.accumulate(&d);
         assert_eq!(sum, a);
+    }
+
+    #[test]
+    fn merge_workers_is_chunking_invariant_and_sums_profiles() {
+        // Two workers with one package each vs one worker holding both
+        // (recorded in a different package order): the merged record
+        // stream must sort to the identical sequence, because the key
+        // (start, pid, per-worker order) never depends on the chunking.
+        let mut w0 = Tracer::new();
+        w0.span(0, Track::Coordinator, "package_step", 10.0, 20.0, vec![]);
+        w0.span(0, Track::Coordinator, "package_step", 20.0, 30.0, vec![]);
+        let mut w1 = Tracer::new();
+        w1.span(1, Track::Coordinator, "package_step", 5.0, 10.0, vec![]);
+        w1.instant(1, Track::Dram, "dram_stall", 10.0, vec![]);
+        let mut big = Tracer::new();
+        big.span(1, Track::Coordinator, "package_step", 5.0, 10.0, vec![]);
+        big.instant(1, Track::Dram, "dram_stall", 10.0, vec![]);
+        big.span(0, Track::Coordinator, "package_step", 10.0, 20.0, vec![]);
+        big.span(0, Track::Coordinator, "package_step", 20.0, 30.0, vec![]);
+        let mut two = Tracer::new();
+        two.merge_workers(vec![w0, w1]);
+        let mut one = Tracer::new();
+        one.merge_workers(vec![big]);
+        let key = |t: &Tracer| {
+            t.records()
+                .iter()
+                .map(|r| (r.start_ns.to_bits(), r.pid, r.name))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&two), key(&one));
+        // Equal-start ties across packages resolve by package index.
+        assert_eq!(
+            key(&two),
+            vec![
+                (5.0f64.to_bits(), 1, "package_step"),
+                (10.0f64.to_bits(), 0, "package_step"),
+                (10.0f64.to_bits(), 1, "dram_stall"),
+                (20.0f64.to_bits(), 0, "package_step"),
+            ]
+        );
+        // Worker profile aggregates sum into the session profile.
+        let mut main = Tracer::with_profiling();
+        let w = main.wall_start();
+        main.wall_end("tick", w);
+        let mut prof = Tracer::with_profiling();
+        for _ in 0..2 {
+            let w = prof.wall_start();
+            prof.wall_end("tick", w);
+        }
+        main.merge_workers(vec![prof]);
+        assert_eq!(main.profile_entries()["tick"].0, 3);
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //! locked byte for byte by the `golden_paper` suite) — it is reachable
 //! only via `chime bench` and `chime results --fig perf`. The
 //! simulated-side numbers in each row (tokens, span, sim tok/s) *are*
-//! deterministic, and bit-identical between `sharded4` and
-//! `sharded4-par` by the parallel-drain construction.
+//! deterministic, and bit-identical across `sharded4`, `sharded4-par`,
+//! and `sharded4-exec` by the parallel-drain and windowed-executor
+//! constructions (DESIGN.md §11 and §15).
 
 use std::time::Instant;
 
@@ -27,13 +28,15 @@ use crate::util::{table, Json, Table};
 
 use super::Experiment;
 
-/// PR number stamped into the snapshots (`BENCH_009.json`,
-/// `HOTPATH_009.json`).
-pub const PR: usize = 9;
+/// PR number stamped into the snapshots (`BENCH_010.json`,
+/// `HOTPATH_010.json`).
+pub const PR: usize = 10;
 
 /// The backend variants the matrix sweeps. `Sharded4Par` is the same
-/// deployment as `Sharded4` with [`ShardedServer::set_parallel`] on —
-/// its simulated outcome is bit-identical, only the wall time moves.
+/// deployment as `Sharded4` with [`ShardedServer::set_parallel`] on,
+/// and `Sharded4Exec` the same with the windowed executor drain
+/// ([`ShardedServer::set_threads`] 4, DESIGN.md §15) — both simulated
+/// outcomes are bit-identical to `Sharded4`, only the wall time moves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BenchBackend {
     /// Single-package heterogeneous CHIME simulator.
@@ -44,14 +47,17 @@ pub enum BenchBackend {
     Sharded4,
     /// Four packages, parallel per-package drain (scoped threads).
     Sharded4Par,
+    /// Four packages, windowed executor drain on 4 worker threads.
+    Sharded4Exec,
 }
 
 impl BenchBackend {
-    pub const ALL: [BenchBackend; 4] = [
+    pub const ALL: [BenchBackend; 5] = [
         BenchBackend::Sim,
         BenchBackend::DramOnly,
         BenchBackend::Sharded4,
         BenchBackend::Sharded4Par,
+        BenchBackend::Sharded4Exec,
     ];
 
     pub fn name(self) -> &'static str {
@@ -60,17 +66,24 @@ impl BenchBackend {
             BenchBackend::DramOnly => "dram-only",
             BenchBackend::Sharded4 => "sharded4",
             BenchBackend::Sharded4Par => "sharded4-par",
+            BenchBackend::Sharded4Exec => "sharded4-exec",
         }
     }
 
     fn packages(self) -> usize {
         match self {
             BenchBackend::Sim | BenchBackend::DramOnly => 1,
-            BenchBackend::Sharded4 | BenchBackend::Sharded4Par => 4,
+            BenchBackend::Sharded4 | BenchBackend::Sharded4Par | BenchBackend::Sharded4Exec => 4,
         }
     }
 
-    fn build(self, model: &MllmConfig, cfg: &ChimeConfig, policy: &BatchPolicy) -> ShardedServer {
+    fn build(
+        self,
+        model: &MllmConfig,
+        cfg: &ChimeConfig,
+        policy: &BatchPolicy,
+        exec_threads: usize,
+    ) -> ShardedServer {
         let mut srv = match self {
             BenchBackend::DramOnly => ShardedServer::new_dram_only(
                 model,
@@ -88,6 +101,9 @@ impl BenchBackend {
             ),
         };
         srv.set_parallel(self == BenchBackend::Sharded4Par);
+        if self == BenchBackend::Sharded4Exec {
+            srv.set_threads(exec_threads);
+        }
         srv
     }
 }
@@ -100,18 +116,33 @@ pub struct BenchConfig {
     pub tokens: usize,
     /// Timed repetitions per cell; the row reports the minimum.
     pub iters: usize,
+    /// Executor worker threads for the `sharded4-exec` column
+    /// (`chime bench --threads N`).
+    pub exec_threads: usize,
     pub models: Vec<MllmConfig>,
 }
 
 impl BenchConfig {
     /// Default sweep: Table II zoo, 8-request burst, 16 tokens each.
     pub fn paper() -> BenchConfig {
-        BenchConfig { requests: 8, tokens: 16, iters: 3, models: MllmConfig::paper_models() }
+        BenchConfig {
+            requests: 8,
+            tokens: 16,
+            iters: 3,
+            exec_threads: 4,
+            models: MllmConfig::paper_models(),
+        }
     }
 
     /// CI/test sweep: tiny model only, single timed iteration.
     pub fn quick() -> BenchConfig {
-        BenchConfig { requests: 4, tokens: 8, iters: 1, models: vec![MllmConfig::tiny()] }
+        BenchConfig {
+            requests: 4,
+            tokens: 8,
+            iters: 1,
+            exec_threads: 4,
+            models: vec![MllmConfig::tiny()],
+        }
     }
 }
 
@@ -168,7 +199,7 @@ fn measure(
 
     // Instrumented pass (untimed): drive the streaming session to count
     // the event stream and take the simulated-side outcome.
-    let mut srv = backend.build(model, &cfg, &policy);
+    let mut srv = backend.build(model, &cfg, &policy, bc.exec_threads);
     let mut session = srv.open_serving();
     for r in reqs.clone() {
         session.submit(r);
@@ -183,7 +214,7 @@ fn measure(
     // parallel variant takes its scoped-thread drain inside `finish`.
     let mut wall_ns = f64::INFINITY;
     for _ in 0..bc.iters.max(1) {
-        let mut srv = backend.build(model, &cfg, &policy);
+        let mut srv = backend.build(model, &cfg, &policy, bc.exec_threads);
         let t0 = Instant::now();
         let timed = srv.serve(reqs.clone());
         let dt_ns = t0.elapsed().as_secs_f64() * 1e9;
@@ -251,6 +282,7 @@ pub fn snapshot_json(points: &[PerfPoint], bc: &BenchConfig) -> Json {
                 ("requests", bc.requests.into()),
                 ("tokens_per_request", bc.tokens.into()),
                 ("iters", bc.iters.into()),
+                ("exec_threads", bc.exec_threads.into()),
                 (
                     "models",
                     Json::Arr(bc.models.iter().map(|m| m.name.as_str().into()).collect()),
@@ -282,7 +314,7 @@ pub fn profile_with(bc: &BenchConfig) -> Experiment {
             cfg.workload.output_tokens = bc.tokens;
             cfg.hardware.memory_fidelity = fidelity;
             let policy = BatchPolicy { max_batch: 2, queue_capacity: bc.requests.max(1) };
-            let mut srv = BenchBackend::Sharded4.build(m, &cfg, &policy);
+            let mut srv = BenchBackend::Sharded4.build(m, &cfg, &policy, bc.exec_threads);
             srv.set_work_stealing(true);
             srv.set_profiling(true);
             for _ in 0..bc.iters.max(1) {
@@ -383,15 +415,18 @@ mod tests {
             assert!(p.events_per_wall_s > 0.0);
             assert!(p.sim_span_ns > 0.0 && p.sim_tokens_per_s > 0.0);
         }
-        // The parallel variant is the same simulation: every simulated-
-        // side number matches its sequential row bit for bit.
+        // The parallel variants are the same simulation: every simulated-
+        // side number matches the sequential row bit for bit.
         for memory in ["first-order", "cycle"] {
             let find = |b: &str| pts.iter().find(|p| p.backend == b && p.memory == memory).unwrap();
-            let (seq, par) = (find("sharded4"), find("sharded4-par"));
-            assert_eq!(par.tokens, seq.tokens);
-            assert_eq!(par.events, seq.events);
-            assert_eq!(par.sim_span_ns.to_bits(), seq.sim_span_ns.to_bits());
-            assert_eq!(par.sim_tokens_per_s.to_bits(), seq.sim_tokens_per_s.to_bits());
+            let seq = find("sharded4");
+            for variant in ["sharded4-par", "sharded4-exec"] {
+                let par = find(variant);
+                assert_eq!(par.tokens, seq.tokens, "{variant}/{memory}");
+                assert_eq!(par.events, seq.events, "{variant}/{memory}");
+                assert_eq!(par.sim_span_ns.to_bits(), seq.sim_span_ns.to_bits());
+                assert_eq!(par.sim_tokens_per_s.to_bits(), seq.sim_tokens_per_s.to_bits());
+            }
         }
     }
 
@@ -403,6 +438,7 @@ mod tests {
         assert!(s.contains(&format!("\"pr\": {PR}")));
         assert!(s.contains("\"events_per_wall_s\""));
         assert!(s.contains("\"sharded4-par\""));
+        assert!(s.contains("\"sharded4-exec\""));
     }
 
     #[test]

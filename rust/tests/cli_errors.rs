@@ -554,6 +554,104 @@ fn trace_out_simulate_writes_a_chrome_trace() {
 }
 
 #[test]
+fn malformed_threads_exits_2() {
+    // --threads is a value flag: value-less, zero, and non-numeric
+    // spellings are usage errors on every subcommand that takes it.
+    for argv in [
+        ["serve", "--requests", "1", "--threads"].as_slice(), // value-less
+        ["serve", "--requests", "1", "--threads", "0"].as_slice(),
+        ["serve", "--requests", "1", "--threads", "many"].as_slice(),
+        ["simulate", "--model", "tiny", "--threads", "0"].as_slice(),
+        ["serve", "--listen", "127.0.0.1:0", "--threads", "0"].as_slice(),
+        ["bench", "--quick", "--threads", "0"].as_slice(),
+    ] {
+        let Some(out) = run_chime(argv) else {
+            return;
+        };
+        assert_eq!(out.status.code(), Some(2), "{argv:?}; stderr:\n{}", stderr_of(&out));
+        let err = stderr_of(&out);
+        assert!(err.contains("threads"), "{argv:?}: {err}");
+        assert!(!err.contains("panicked"), "{argv:?} panicked:\n{err}");
+    }
+    // A flag typo gets the edit-distance suggestion.
+    let Some(out) = run_chime(&["serve", "--thread", "4", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("--thread"), "must name the bad flag:\n{err}");
+    assert!(err.contains("did you mean --threads?"), "must suggest the fix:\n{err}");
+    // Executor threads need the simulator's package dimension.
+    let Some(out) =
+        run_chime(&["serve", "--backend", "jetson", "--threads", "4", "--requests", "1"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("sequential stream"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn wall_mode_usage_conflicts_exit_2() {
+    // --wall free-runs over host time: no deterministic virtual timeline
+    // to trace, and work migration happens in the executor's deques.
+    let Some(out) = run_chime(&[
+        "serve", "--wall", "--trace-out", "t.json", "--requests", "1",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    let err = stderr_of(&out);
+    assert!(err.contains("--wall") && err.contains("--trace-out"), "{err}");
+
+    let Some(out) = run_chime(&["serve", "--wall", "--steal", "on", "--requests", "1"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("deques"), "{}", stderr_of(&out));
+
+    // Sequential backends have no executor to free-run.
+    let Some(out) = run_chime(&["serve", "--backend", "jetson", "--wall", "--requests", "1"])
+    else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("sequential stream"), "{}", stderr_of(&out));
+
+    // The listener already runs wall-clock against wire arrivals.
+    let Some(out) = run_chime(&["serve", "--listen", "127.0.0.1:0", "--wall"]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(2), "stderr:\n{}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("--listen"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn threads_and_wall_happy_paths_exit_0() {
+    // Deterministic executor drain: same output contract as --threads 1.
+    let Some(out) = run_chime(&[
+        "serve", "--model", "tiny", "--text", "8", "--out", "4", "--packages", "2",
+        "--requests", "4", "--tokens", "3", "--threads", "2",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("reqs completed"), "{:?}", out.stdout);
+
+    // Free-running wall-clock mode prints the host counters.
+    let Some(out) = run_chime(&[
+        "serve", "--model", "tiny", "--text", "8", "--out", "4", "--packages", "2",
+        "--requests", "4", "--tokens", "3", "--threads", "2", "--wall",
+    ]) else {
+        return;
+    };
+    assert_eq!(out.status.code(), Some(0), "stderr:\n{}", stderr_of(&out));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("wall-clock CHIME serving"), "{stdout}");
+    assert!(stdout.contains("events/s"), "{stdout}");
+}
+
+#[test]
 fn happy_paths_still_exit_0() {
     let Some(out) = run_chime(&["info", "--models"]) else {
         return;

@@ -1,0 +1,166 @@
+//! Integration tests for the parallel serving executor (DESIGN.md §15)
+//! through the public `Session` API.
+//!
+//! Two contracts:
+//!
+//! 1. **Deterministic mode** — `Session::builder().threads(n)` with
+//!    n > 1 runs the windowed executor drain, and its `ServeOutcome`
+//!    serializes byte-identically (canonical JSON, every float in full)
+//!    to the single-thread event loop across the whole deployment
+//!    matrix: sim / dram-only / 2-package / 4-package × both memory
+//!    fidelities × steal on/off.
+//! 2. **Wall-clock mode** — `Session::serve_wall_clock` free-runs the
+//!    executor over host time; its outcome promises conservation
+//!    (admitted + rejected + shed == offered, one response per admitted
+//!    request), not bit-reproducibility, and is rejected with a typed
+//!    error on backends without a package dimension.
+
+use chime::api::{BackendKind, ServeRequest, Session, SessionBuilder};
+use chime::config::{MemoryFidelity, MllmConfig};
+use chime::coordinator::{BatchPolicy, RoutePolicy, ServeOutcome};
+use chime::util::Json;
+
+/// Canonical JSON for a serve outcome: per-response floats in full plus
+/// every order-dependent metric accumulation, so any reordering of the
+/// completion stream shows up as a byte diff.
+fn outcome_json(out: &ServeOutcome) -> String {
+    let rows: Vec<Json> = out
+        .responses
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", (r.id as i64).into()),
+                ("tokens", r.tokens.len().into()),
+                ("queue_ns", r.queue_ns.into()),
+                ("ttft_ns", r.ttft_ns.into()),
+                ("service_ns", r.service_ns.into()),
+                ("energy_j", r.energy_j.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("responses", Json::Arr(rows)),
+        ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
+        ("completed", (out.metrics.completed as i64).into()),
+        ("admitted", (out.metrics.admitted as i64).into()),
+        ("rejected", (out.metrics.rejected as i64).into()),
+        ("shed_count", (out.metrics.shed as i64).into()),
+        ("tokens", (out.metrics.tokens as i64).into()),
+        ("steals", (out.metrics.steals as i64).into()),
+        ("stolen_bytes", (out.metrics.stolen_bytes as i64).into()),
+        ("steal_delay_ns", out.metrics.steal_delay_ns.into()),
+        ("energy_j", out.metrics.energy_j.into()),
+        ("span_ns", out.metrics.span_ns().into()),
+        ("service_stddev", out.metrics.service.stddev().into()),
+        ("tokens_per_s", out.metrics.tokens_per_s().into()),
+    ])
+    .pretty()
+}
+
+fn tiny_builder() -> SessionBuilder {
+    Session::builder()
+        .model_config(MllmConfig::tiny())
+        .image_size(64)
+        .text_tokens(8)
+        .output_tokens(4)
+}
+
+/// Staggered arrivals with mixed decode budgets (including a zero-token
+/// request), so the drain crosses several arrival windows and the
+/// inline-completion path.
+fn staggered_requests(n: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            prompt: vec![],
+            image_seed: i as u64,
+            max_new_tokens: [4, 2, 0, 6, 3, 5][i % 6],
+            arrival_ns: i as f64 * 7.5e4,
+        })
+        .collect()
+}
+
+#[test]
+fn executor_outcome_is_bit_identical_across_the_deployment_matrix() {
+    // (backend, packages): sim maps 1 package onto the SimulatedServer
+    // core; 2 and 4 packages run the sharded coordinator.
+    let deployments = [
+        (BackendKind::Sim, 1usize),
+        (BackendKind::DramOnly, 1),
+        (BackendKind::Sharded, 2),
+        (BackendKind::Sharded, 4),
+    ];
+    let reqs = staggered_requests(12);
+    for (kind, packages) in deployments {
+        for fidelity in [MemoryFidelity::FirstOrder, MemoryFidelity::CycleAccurate] {
+            for steal in [false, true] {
+                if steal && packages < 2 {
+                    continue; // stealing needs sibling packages
+                }
+                let run = |threads: usize| -> String {
+                    let mut session = tiny_builder()
+                        .backend(kind)
+                        .packages(packages)
+                        .route(RoutePolicy::LeastLoaded)
+                        .batch(BatchPolicy { max_batch: 2, queue_capacity: 8 })
+                        .memory_fidelity(fidelity)
+                        .work_stealing(steal)
+                        .threads(threads)
+                        .build()
+                        .unwrap();
+                    outcome_json(&session.serve(reqs.clone()).unwrap())
+                };
+                let (seq, exec) = (run(1), run(4));
+                assert_eq!(
+                    seq, exec,
+                    "executor drain diverged: {kind:?} packages {packages} \
+                     {fidelity:?} steal {steal}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wall_clock_session_conserves_under_multi_thread_load() {
+    let mut session = tiny_builder()
+        .backend(BackendKind::Sharded)
+        .packages(4)
+        .route(RoutePolicy::LeastLoaded)
+        .batch(BatchPolicy { max_batch: 2, queue_capacity: 16 })
+        .threads(4)
+        .build()
+        .unwrap();
+    let mut reqs = staggered_requests(24);
+    reqs.push(ServeRequest {
+        id: 99,
+        prompt: vec![],
+        image_seed: 99,
+        max_new_tokens: 4,
+        arrival_ns: f64::NAN, // malformed: must be shed, not lost
+    });
+    let offered = reqs.len() as u64;
+    let report = session.serve_wall_clock(reqs, 4).unwrap();
+    let m = &report.outcome.metrics;
+    assert_eq!(m.offered(), offered, "conservation: every request accounted");
+    assert_eq!(m.admitted + m.rejected + m.shed, offered);
+    assert_eq!(m.shed, 1, "the NaN arrival is shed");
+    assert_eq!(report.outcome.responses.len() as u64, m.admitted);
+    assert_eq!(m.completed, m.admitted, "every admitted request completes");
+    assert!(report.workers >= 1 && report.workers <= 4);
+    assert!(report.wall_ns > 0.0 && report.wall_ns.is_finite());
+    assert!(report.events >= m.completed, "at least one event per completion");
+}
+
+#[test]
+fn wall_clock_mode_is_a_typed_error_on_sequential_backends() {
+    for kind in [BackendKind::Jetson, BackendKind::Facil] {
+        let mut session = Session::builder().backend(kind).build().unwrap();
+        let err = session.serve_wall_clock(ServeRequest::burst(2, 4), 2).unwrap_err();
+        assert_eq!(err.exit_code(), 1, "{kind:?}: {err}");
+        assert!(
+            err.to_string().contains("wall-clock"),
+            "{kind:?} error names the unsupported feature: {err}"
+        );
+    }
+}

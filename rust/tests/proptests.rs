@@ -797,6 +797,96 @@ fn prop_parallel_drain_is_bit_identical_to_sequential() {
     });
 }
 
+#[test]
+fn prop_exec_drain_is_bit_identical_to_sequential() {
+    // The windowed executor drain (`ShardedServer::set_threads` > 1,
+    // DESIGN.md §15) carries the same invisibility contract as the
+    // parallel per-package drain above: over random package counts,
+    // routes, batch policies, thread counts, arrival streams (NaN
+    // arrivals, tight queues, zero-token requests), and both steal modes
+    // (steal on falls back to the sequential event loop — the gate must
+    // be exact), the full `ServeOutcome` serializes to byte-identical
+    // canonical JSON against the single-thread path.
+    use chime::config::{ChimeConfig, WorkloadConfig};
+    use chime::coordinator::{BatchPolicy, RoutePolicy, ServeOutcome, ServeRequest, ShardedServer};
+
+    let model = MllmConfig::tiny();
+    let mut cfg = ChimeConfig::default();
+    cfg.workload = WorkloadConfig { image_size: 64, text_tokens: 8, output_tokens: 4 };
+
+    fn outcome_json(out: &ServeOutcome) -> String {
+        let rows: Vec<Json> = out
+            .responses
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", (r.id as i64).into()),
+                    ("tokens", r.tokens.len().into()),
+                    ("queue_ns", r.queue_ns.into()),
+                    ("ttft_ns", r.ttft_ns.into()),
+                    ("service_ns", r.service_ns.into()),
+                    ("energy_j", r.energy_j.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("responses", Json::Arr(rows)),
+            ("shed", Json::arr(out.shed.iter().map(|r| Json::from(r.id as i64)))),
+            ("completed", (out.metrics.completed as i64).into()),
+            ("rejected", (out.metrics.rejected as i64).into()),
+            ("shed_count", (out.metrics.shed as i64).into()),
+            ("tokens", (out.metrics.tokens as i64).into()),
+            ("steals", (out.metrics.steals as i64).into()),
+            ("stolen_bytes", (out.metrics.stolen_bytes as i64).into()),
+            ("steal_delay_ns", out.metrics.steal_delay_ns.into()),
+            ("energy_j", out.metrics.energy_j.into()),
+            ("span_ns", out.metrics.span_ns().into()),
+            ("service_stddev", out.metrics.service.stddev().into()),
+            ("tokens_per_s", out.metrics.tokens_per_s().into()),
+        ])
+        .pretty()
+    }
+
+    check("executor drain bit-identity", |prng| {
+        let packages = prng.range(1, 5);
+        let route = if prng.bool() { RoutePolicy::RoundRobin } else { RoutePolicy::LeastLoaded };
+        let steal = prng.bool();
+        let threads = prng.range(2, 9);
+        let policy = BatchPolicy {
+            max_batch: prng.range(1, 4),
+            queue_capacity: prng.range(1, 10),
+        };
+        let n = prng.range(1, 12);
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest {
+                id: i as u64,
+                prompt: vec![],
+                image_seed: i as u64,
+                max_new_tokens: prng.range(0, 8),
+                arrival_ns: if prng.range(0, 12) == 0 {
+                    f64::NAN
+                } else {
+                    prng.uniform(0.0, 5e8)
+                },
+            })
+            .collect();
+        let run = |threads: usize| -> String {
+            let mut srv = ShardedServer::new(&model, &cfg, policy.clone(), packages, route);
+            srv.set_work_stealing(steal);
+            srv.set_threads(threads);
+            outcome_json(&srv.serve(requests.clone()))
+        };
+        let (seq, exec) = (run(1), run(threads));
+        if seq != exec {
+            return Err(format!(
+                "executor drain diverged (packages {packages}, threads {threads}, \
+                 steal {steal}):\nsequential:\n{seq}\nexecutor:\n{exec}"
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// A random chiplet endpoint over `packages` packages.
 fn random_endpoint(prng: &mut Prng, packages: usize) -> chime::sim::fabric::Endpoint {
     use chime::sim::fabric::Endpoint;
